@@ -1,0 +1,75 @@
+"""Pallas-kernel microbenchmarks.
+
+NOTE: on this CPU container the kernels execute in interpret mode —
+timings measure the *reference semantics*, not TPU performance (TPU perf
+is modeled in §Roofline from the dry-run artifacts).  What this bench
+establishes is (i) numerical agreement at benchmark scale and (ii) the
+jnp-path throughput that the models actually use when lowering."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.conv3d import ops as conv_ops, ref as conv_ref
+from repro.kernels.ssd import ops as ssd_ops, ref as ssd_ref
+from repro.kernels.stmul import ops as stmul_ops, ref as stmul_ref
+
+
+def _time(fn, *args, iters=3) -> float:
+    jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / iters
+
+
+def run(log=print) -> list[str]:
+    rows = []
+    rng = np.random.RandomState(0)
+
+    # stmul at the paper's spectral grid (90×120×13 rfft bins, 9 kernels)
+    F = (90, 120, 13)
+    xh = jnp.asarray(
+        (rng.randn(2, 1, *F) + 1j * rng.randn(2, 1, *F)).astype(np.complex64)
+    )
+    g = jnp.asarray(
+        (rng.randn(9, 1, *F) + 1j * rng.randn(9, 1, *F)).astype(np.complex64)
+    )
+    ref_fn = jax.jit(stmul_ref.spectral_mac_ref)
+    t_ref = _time(ref_fn, xh, g)
+    err = float(
+        jnp.max(jnp.abs(stmul_ops.spectral_mac(xh, g) - ref_fn(xh, g)))
+    )
+    rows.append(f"stmul_jnp_ref,{t_ref*1e6:.0f},maxerr={err:.1e}")
+
+    # conv3d at C3D scale (3×3×3, 64ch)
+    x = jnp.asarray(rng.randn(1, 16, 14, 14, 8).astype(np.float32))
+    w = jnp.asarray(rng.randn(16, 16, 3, 3, 3).astype(np.float32))
+    ref_c = jax.jit(conv_ref.conv3d_ref)
+    t_ref = _time(ref_c, x, w)
+    err = float(jnp.max(jnp.abs(conv_ops.conv3d(x, w) - ref_c(x, w))))
+    rows.append(f"conv3d_xla_ref,{t_ref*1e6:.0f},maxerr={err:.1e}")
+
+    # ssd at mamba2-370m block scale
+    Bb, L, H, P, G, N = 1, 512, 8, 64, 1, 32
+    xs = jnp.asarray(rng.randn(Bb, L, H, P).astype(np.float32))
+    dt = jnp.asarray((np.abs(rng.randn(Bb, L, H)) * 0.1 + 0.01).astype(np.float32))
+    A = -jnp.asarray((np.abs(rng.randn(H)) + 0.5).astype(np.float32))
+    Bm = jnp.asarray(rng.randn(Bb, L, G, N).astype(np.float32))
+    Cm = jnp.asarray(rng.randn(Bb, L, G, N).astype(np.float32))
+    chunked = jax.jit(
+        lambda *a: ssd_ops.ssd(*a, chunk=64, impl="jnp")
+    )
+    seq = jax.jit(ssd_ref.ssd_scan_ref)
+    t_chunk = _time(chunked, xs, dt, A, Bm, Cm)
+    t_seq = _time(seq, xs, dt, A, Bm, Cm)
+    y1, _ = chunked(xs, dt, A, Bm, Cm)
+    y2, _ = seq(xs, dt, A, Bm, Cm)
+    err = float(jnp.max(jnp.abs(y1 - y2)))
+    rows.append(f"ssd_chunked_jnp,{t_chunk*1e6:.0f},maxerr={err:.1e}")
+    rows.append(f"ssd_sequential_scan,{t_seq*1e6:.0f},speedup={t_seq/t_chunk:.1f}x")
+    return rows

@@ -1,0 +1,28 @@
+"""Summarize the dry-run roofline records (experiments/dryrun/*.json)
+into the §Roofline table rows: one line per (arch × shape × mesh)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def run(log=print, dryrun_dir: str = "experiments/dryrun") -> list[str]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        r = json.load(open(path))
+        name = f"{r['arch']}x{r['shape']}x{r['mesh']}x{r.get('variant','baseline')}"
+        if r["status"] != "ok":
+            rows.append(f"dryrun_{name},0,skipped")
+            continue
+        rl = r["roofline"]
+        bott = rl["bottleneck"]
+        rows.append(
+            f"dryrun_{name},{rl['bottleneck_s']*1e6:.0f},"
+            f"{bott}|c{rl['compute_s']:.3f}|m{rl['memory_s']:.3f}|"
+            f"x{rl['collective_s']:.3f}|useful{rl['useful_flops_ratio']:.2f}"
+        )
+    if not rows:
+        rows.append("dryrun_missing,0,run src/repro/launch/dryrun.py first")
+    return rows

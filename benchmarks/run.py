@@ -1,0 +1,64 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness — one module per paper table/figure:
+
+  accuracy    — §4.1 + Fig. 6 (classification + confusion matrix)
+  speed       — §2/§5 fps table (measured digital vs projected optical)
+  equivalence — §4 optical-model validation (ideal + physical error)
+  kernels     — Pallas kernel micro-benches vs oracles
+  roofline    — §Roofline summary from the dry-run records
+
+``--fast`` shrinks the accuracy benchmark geometry for CI-speed runs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced geometry for the accuracy benchmark")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of benchmarks")
+    args = ap.parse_args()
+
+    from benchmarks import accuracy, equivalence, kernels_bench, roofline_bench, speed
+
+    suites = {
+        "equivalence": lambda: equivalence.run(log=_log),
+        "speed": lambda: speed.run(log=_log),
+        "kernels": lambda: kernels_bench.run(log=_log),
+        "roofline": lambda: roofline_bench.run(log=_log),
+        "accuracy": lambda: accuracy.run(
+            epochs=10 if args.fast else 30,
+            full_geometry=not args.fast,
+            log=_log,
+        ),
+    }
+    if args.only:
+        keep = set(args.only.split(","))
+        suites = {k: v for k, v in suites.items() if k in keep}
+
+    failures = 0
+    print("name,us_per_call,derived")
+    for name, fn in suites.items():
+        try:
+            for row in fn():
+                print(row, flush=True)
+        except Exception:
+            failures += 1
+            print(f"{name}_FAILED,0,error", flush=True)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+def _log(msg: str) -> None:
+    print(f"# {msg}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

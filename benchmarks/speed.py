@@ -1,0 +1,70 @@
+"""Paper §2/§5 speed table: digital conv throughput (measured, this host)
+vs the optical projections (from the paper's physical constants).
+
+Also measures the spectral-vs-direct advantage for the paper's
+large-kernel workload — the computational fact that motivates the optical
+implementation (and our FFT-based TPU mapping).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import spectral_conv as sc
+from repro.core import throughput
+from repro.core.sthc import STHC, STHCConfig
+
+
+def _time(fn, *args, iters=3) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / iters
+
+
+def run(log=print) -> list[str]:
+    rows = []
+    wl = throughput.ConvWorkload()  # paper geometry
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.rand(1, 1, wl.height, wl.width, wl.frames).astype(np.float32))
+    k = jnp.asarray(
+        rng.randn(wl.out_channels, 1, wl.k_h, wl.k_w, wl.k_t).astype(np.float32)
+    )
+
+    direct = jax.jit(lambda x, k: sc.direct_correlate3d(x, k, "valid"))
+    spectral = jax.jit(lambda x, k: sc.correlate3d_fft(x, k, "valid"))
+    t_dir = _time(direct, x, k)
+    t_spec = _time(spectral, x, k)
+    fps_dir = wl.frames / t_dir
+    fps_spec = wl.frames / t_spec
+    rows.append(f"conv3d_direct_cpu,{t_dir*1e6:.0f},{fps_dir:.1f}")
+    rows.append(f"conv3d_spectral_cpu,{t_spec*1e6:.0f},{fps_spec:.1f}")
+    rows.append(
+        f"spectral_vs_direct_speedup,0,{t_dir/t_spec:.2f}"
+    )
+    rows.append(
+        f"spectral_flops_advantage_model,0,{wl.spectral_advantage():.2f}"
+    )
+
+    # grating reuse: the optical dataflow (record once, query many)
+    fft_shape = sc.fft_shape_for(
+        (wl.height, wl.width, wl.frames), (wl.k_h, wl.k_w, wl.k_t)
+    )
+    grating = sc.make_grating(k, fft_shape)
+    out_shape = sc.valid_shape(
+        (wl.height, wl.width, wl.frames), (wl.k_h, wl.k_w, wl.k_t)
+    )
+    query = jax.jit(lambda x: sc.query_grating(x, grating, fft_shape, out_shape))
+    t_query = _time(query, x)
+    rows.append(f"sthc_query_grating_cpu,{t_query*1e6:.0f},{wl.frames/t_query:.1f}")
+
+    # paper's projected table
+    for row in throughput.throughput_table():
+        name = row["system"].replace(" ", "_").replace(",", "")
+        rows.append(f"projected_{name},0,{row['fps']:.1f}")
+    return rows

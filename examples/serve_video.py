@@ -1,0 +1,59 @@
+"""Streaming video event search — the STHC's native serving mode.
+
+Reference event clips ("what to look for") are recorded once into the
+grating; a long video stream is then pushed through the coherence-window
+segmentation (overlap-save, paper Fig. 1C) and each reference produces a
+correlation peak wherever its event occurs.
+
+Here the stream hides one 'running' clip among distractors; the server
+must localize it in time.
+
+Run:  PYTHONPATH=src python examples/serve_video.py
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import kth_synthetic as kth
+from repro.launch.serve import VideoSearchConfig, VideoSearchServer
+
+SPEC = kth.VideoSpec(height=24, width=32, frames=12)
+
+
+def main() -> None:
+    # reference events: one exemplar per action class (subject 20 — unseen)
+    refs = np.stack(
+        [kth.render_clip(label, 20, 0, SPEC) for label in range(4)]
+    )[:, None]  # (4, 1, H, W, T)
+    refs = refs - refs.mean(axis=(2, 3, 4), keepdims=True)  # zero-mean match
+
+    # a long stream: waving ... running ... boxing (subject 21, unseen)
+    segments = [kth.render_clip(1, 21, 1, SPEC), kth.render_clip(3, 21, 1, SPEC),
+                kth.render_clip(2, 21, 1, SPEC)]
+    stream = np.concatenate(segments, axis=-1)[None, None]  # (1,1,H,W,3T)
+
+    server = VideoSearchServer(
+        jnp.asarray(refs.astype(np.float32)),
+        (SPEC.height, SPEC.width),
+        VideoSearchConfig(window_frames=24),
+    )
+    out = server.search(jnp.asarray(stream.astype(np.float32)))
+    print(f"stream of {stream.shape[-1]} frames searched in "
+          f"{out['windows']} coherence windows "
+          f"({out['latency_s']*1000:.0f} ms)")
+    names = kth.CLASSES
+    scores = out["scores"][0]
+    peaks = out["peak_frame"][0]
+    for i, name in enumerate(names):
+        print(f"  reference '{name:9s}': score {scores[i]:7.2f} "
+              f"peak at frame {peaks[i]:3d}")
+    # localization check: the 'running' reference must peak inside the
+    # running segment (frames 12..23 of the stream)
+    run_peak = int(peaks[3])
+    ok = 12 - SPEC.frames // 2 <= run_peak <= 23
+    print(f"'running' reference localizes the running segment "
+          f"(frames 12-23): peak {run_peak} -> {'OK' if ok else 'MISS'}")
+
+
+if __name__ == "__main__":
+    main()

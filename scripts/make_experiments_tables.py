@@ -1,0 +1,120 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from the
+dry-run JSON records."""
+
+import glob
+import json
+import os
+import sys
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCH_ORDER = [
+    "granite-8b", "qwen2-1.5b", "llama3-405b", "nemotron-4-15b",
+    "mamba2-370m", "zamba2-2.7b", "arctic-480b", "deepseek-v2-lite-16b",
+    "whisper-tiny", "internvl2-2b",
+]
+
+PEAK = 197e12
+
+
+def load(dryrun_dir):
+    recs = {}
+    for p in glob.glob(os.path.join(dryrun_dir, "*.json")):
+        r = json.load(open(p))
+        recs[(r["arch"], r["shape"], r["mesh"], r.get("variant", "baseline"))] = r
+    return recs
+
+
+def fmt_s(x):
+    return f"{x:.4f}" if x < 1 else f"{x:.1f}"
+
+
+def roofline_table(recs, mesh="pod16x16", variant="baseline"):
+    lines = [
+        "| arch | shape | compute (s) | memory (s) | collective (s) | bottleneck "
+        "| MODEL_FLOPS | useful ratio | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape, mesh, variant))
+            if r is None:
+                continue
+            if r["status"] == "skipped":
+                lines.append(
+                    f"| {arch} | {shape} | — | — | — | *skipped: full-attention "
+                    f"arch at 500k (DESIGN.md §Arch-applicability)* | | | |"
+                )
+                continue
+            rl = r["roofline"]
+            ideal = rl["model_flops"] / (r["n_chips"] * PEAK)
+            bott = max(rl["compute_s"], rl["memory_s"], rl["collective_s"])
+            frac = ideal / bott if bott else 0.0
+            lines.append(
+                f"| {arch} | {shape} | {fmt_s(rl['compute_s'])} | "
+                f"{fmt_s(rl['memory_s'])} | {fmt_s(rl['collective_s'])} | "
+                f"**{rl['bottleneck']}** | {rl['model_flops']:.2e} | "
+                f"{rl['useful_flops_ratio']:.2f} | {frac:.1%} |"
+            )
+    return "\n".join(lines)
+
+
+def dryrun_table(recs):
+    lines = [
+        "| arch | shape | 16×16 compile | 2×16×16 compile | collectives (single-pod) |",
+        "|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r1 = recs.get((arch, shape, "pod16x16", "baseline"))
+            r2 = recs.get((arch, shape, "pod2x16x16", "baseline"))
+            if r1 is None and r2 is None:
+                continue
+            if r1 and r1["status"] == "skipped":
+                lines.append(f"| {arch} | {shape} | skip | skip | — |")
+                continue
+
+            def cstat(r):
+                if r is None:
+                    return "?"
+                return f"ok ({r['compile_s']}s)" if r["status"] == "ok" else r["status"]
+
+            coll = ""
+            if r1 and r1["status"] == "ok":
+                cc = r1["roofline"]["collective_counts"]
+                coll = ", ".join(f"{k}×{v}" for k, v in sorted(cc.items()))
+            lines.append(
+                f"| {arch} | {shape} | {cstat(r1)} | {cstat(r2)} | {coll} |"
+            )
+    return "\n".join(lines)
+
+
+def variants_table(recs, arch, shape, mesh="pod16x16"):
+    lines = [
+        "| variant | compute (s) | memory (s) | collective (s) | bottleneck | temp (CPU-f32 GB) |",
+        "|---|---|---|---|---|---|",
+    ]
+    for (a, s, m, v), r in sorted(recs.items()):
+        if (a, s, m) != (arch, shape, mesh) or r["status"] != "ok":
+            continue
+        rl = r["roofline"]
+        temp = r.get("memory_analysis", {}).get("temp_size_in_bytes", 0) / 1e9
+        lines.append(
+            f"| {v} | {fmt_s(rl['compute_s'])} | {fmt_s(rl['memory_s'])} | "
+            f"{fmt_s(rl['collective_s'])} | {rl['bottleneck']} | {temp:.0f} |"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    recs = load(sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun")
+    print("## Roofline (single-pod 16×16, baseline)\n")
+    print(roofline_table(recs))
+    print("\n## Dry-run status\n")
+    print(dryrun_table(recs))
+    for arch, shape in (
+        ("llama3-405b", "train_4k"),
+        ("qwen2-1.5b", "train_4k"),
+        ("arctic-480b", "train_4k"),
+    ):
+        print(f"\n## Variants: {arch} × {shape}\n")
+        print(variants_table(recs, arch, shape))

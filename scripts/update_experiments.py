@@ -1,0 +1,43 @@
+"""Inject the generated dry-run/roofline/variant tables into
+EXPERIMENTS.md at the <!-- TABLE:* --> markers."""
+
+import re
+import sys
+
+sys.path.insert(0, "scripts")
+from make_experiments_tables import (  # noqa: E402
+    dryrun_table,
+    load,
+    roofline_table,
+    variants_table,
+)
+
+
+def main() -> None:
+    recs = load("experiments/dryrun")
+    doc = open("EXPERIMENTS.md").read()
+    tables = {
+        "DRYRUN": dryrun_table(recs),
+        "ROOFLINE": roofline_table(recs),
+        "VAR_LLAMA": variants_table(recs, "llama3-405b", "train_4k"),
+        "VAR_ARCTIC": variants_table(recs, "arctic-480b", "train_4k"),
+        "VAR_QWEN": variants_table(recs, "qwen2-1.5b", "train_4k"),
+    }
+    for key, table in tables.items():
+        marker = f"<!-- TABLE:{key} -->"
+        block = f"{marker}\n{table}\n<!-- /TABLE:{key} -->"
+        if f"<!-- /TABLE:{key} -->" in doc:
+            doc = re.sub(
+                rf"<!-- TABLE:{key} -->.*?<!-- /TABLE:{key} -->",
+                block,
+                doc,
+                flags=re.S,
+            )
+        else:
+            doc = doc.replace(marker, block)
+    open("EXPERIMENTS.md", "w").write(doc)
+    print("EXPERIMENTS.md tables updated")
+
+
+if __name__ == "__main__":
+    main()

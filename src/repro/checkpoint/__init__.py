@@ -1,0 +1,7 @@
+from repro.checkpoint.checkpoint import (
+    CheckpointManager,
+    latest_step,
+    restore,
+    restore_resharded,
+    save,
+)

@@ -1,0 +1,189 @@
+"""Fault-tolerant checkpointing.
+
+Guarantees that matter on a 1000-node job:
+
+* **Atomicity** — write to ``<dir>/tmp.<step>`` then ``os.rename``; a
+  crash mid-write can never corrupt the latest good checkpoint, and
+  restart logic (``latest_step``) only ever sees complete directories.
+* **Async** — ``CheckpointManager(async_save=True)`` snapshots the device
+  arrays to host memory synchronously (cheap) and runs serialization on a
+  writer thread, overlapping I/O with the next training steps.
+* **Keep-K** — bounded disk usage with automatic GC of old steps.
+* **Elastic reshard** — checkpoints store the *global* logical arrays
+  (gathered), so ``restore_resharded`` can land them on ANY mesh shape:
+  resume a 256-chip checkpoint on 512 chips (or 8) without conversion.
+  At true scale one would write per-shard files + an index (the gather
+  here is the container-friendly simplification; the API is the same).
+
+Format: one ``.npz`` per pytree ("params", "opt_state", ...) + a JSON
+manifest with the step and tree structure.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+def _flatten_with_paths(tree: PyTree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten_like(template: PyTree, flat: dict[str, np.ndarray]) -> PyTree:
+    paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in paths_leaves:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = flat[key]
+        if hasattr(leaf, "shape") and tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"shape mismatch for {key}: ckpt {arr.shape} vs model {leaf.shape}"
+            )
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save(ckpt_dir: str, step: int, trees: dict[str, PyTree]) -> str:
+    """Atomic synchronous save.  trees: name → pytree."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    tmp = os.path.join(ckpt_dir, f"tmp.{step}.{os.getpid()}")
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    manifest = {"step": step, "trees": list(trees)}
+    for name, tree in trees.items():
+        flat = _flatten_with_paths(tree)
+        np.savez(os.path.join(tmp, f"{name}.npz"), **flat)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomicity boundary
+    return final
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        m = _STEP_RE.match(name)
+        if m and os.path.exists(os.path.join(ckpt_dir, name, "manifest.json")):
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, templates: dict[str, PyTree]) -> dict:
+    """Restore pytrees (host numpy) matching the given templates."""
+    base = os.path.join(ckpt_dir, f"step_{step}")
+    out = {}
+    for name, template in templates.items():
+        with np.load(os.path.join(base, f"{name}.npz")) as z:
+            flat = {k: z[k] for k in z.files}
+        out[name] = _unflatten_like(template, flat)
+    return out
+
+
+def restore_resharded(
+    ckpt_dir: str,
+    step: int,
+    templates: dict[str, PyTree],
+    shardings: dict[str, PyTree],
+) -> dict:
+    """Restore directly onto device shardings (elastic re-mesh path).
+
+    ``shardings`` mirrors ``templates`` with jax.sharding.Sharding leaves;
+    works for any mesh shape — this is how a job resumes after scaling
+    from N to M chips.
+    """
+    host = restore(ckpt_dir, step, templates)
+    out = {}
+    for name, tree in host.items():
+        shard_tree = shardings[name]
+        out[name] = jax.tree.map(
+            lambda arr, s: jax.device_put(arr, s), tree, shard_tree
+        )
+    return out
+
+
+class CheckpointManager:
+    """Keep-K async checkpointer with restart discovery."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3, async_save: bool = True):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
+
+    # -- save ----------------------------------------------------------
+
+    def save(self, step: int, trees: dict[str, PyTree]) -> None:
+        self.wait()  # one in-flight save at a time
+        # snapshot to host synchronously: the training loop may donate /
+        # overwrite device buffers right after this call returns.
+        host_trees = {
+            name: jax.tree.map(lambda x: np.asarray(x), tree)
+            for name, tree in trees.items()
+        }
+        if not self.async_save:
+            save(self.ckpt_dir, step, host_trees)
+            self._gc()
+            return
+
+        def work():
+            try:
+                save(self.ckpt_dir, step, host_trees)
+                self._gc()
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    # -- restore ---------------------------------------------------------
+
+    def restore_latest(self, templates: dict[str, PyTree]) -> tuple[int, dict] | None:
+        step = latest_step(self.ckpt_dir)
+        if step is None:
+            return None
+        return step, restore(self.ckpt_dir, step, templates)
+
+    # -- gc ---------------------------------------------------------------
+
+    def _gc(self) -> None:
+        if not os.path.isdir(self.ckpt_dir):
+            return
+        steps = sorted(
+            int(m.group(1))
+            for m in (_STEP_RE.match(n) for n in os.listdir(self.ckpt_dir))
+            if m
+        )
+        for s in steps[: -self.keep] if self.keep > 0 else []:
+            shutil.rmtree(os.path.join(self.ckpt_dir, f"step_{s}"), ignore_errors=True)

@@ -1,0 +1,71 @@
+"""Assigned-architecture configs (+ the paper's own STHC workload).
+
+Each module defines ``config()`` (the exact published configuration) and
+``smoke_config()`` (a reduced same-family config for CPU smoke tests).
+``get_config(name)`` / ``get_smoke_config(name)`` dispatch by arch id.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+ARCHS = [
+    "granite_8b",
+    "qwen2_1_5b",
+    "llama3_405b",
+    "nemotron_4_15b",
+    "mamba2_370m",
+    "zamba2_2_7b",
+    "arctic_480b",
+    "deepseek_v2_lite_16b",
+    "whisper_tiny",
+    "internvl2_2b",
+]
+
+# canonical ids as given in the assignment (hyphenated)
+CANONICAL = {a.replace("_", "-").replace("-1-5b", "-1.5b").replace("-2-7b", "-2.7b"): a
+             for a in ARCHS}
+
+
+def _normalize(name: str) -> str:
+    return (
+        name.replace("-", "_").replace(".", "_").replace("(", "").replace(")", "")
+    )
+
+
+def get_module(name: str):
+    return importlib.import_module(f"repro.configs.{_normalize(name)}")
+
+
+def get_config(name: str, **overrides):
+    cfg = get_module(name).config()
+    if overrides:
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+def get_smoke_config(name: str, **overrides):
+    cfg = get_module(name).smoke_config()
+    if overrides:
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+def arch_names() -> list[str]:
+    """Assignment-canonical ids."""
+    return [
+        "granite-8b",
+        "qwen2-1.5b",
+        "llama3-405b",
+        "nemotron-4-15b",
+        "mamba2-370m",
+        "zamba2-2.7b",
+        "arctic-480b",
+        "deepseek-v2-lite-16b",
+        "whisper-tiny",
+        "internvl2-2b",
+    ]

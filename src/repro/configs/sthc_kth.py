@@ -1,0 +1,39 @@
+"""The paper's own workload: STHC hybrid 3-D CNN on KTH-geometry clips.
+
+60×80 px, 16 frames, 9 optical kernels of 30×40×8, 4 action classes
+(§4.1).  ``smoke_config()`` shrinks everything for CPU test loops.
+"""
+
+from repro.core.hybrid import HybridConfig
+
+
+def config() -> HybridConfig:
+    return HybridConfig(
+        height=60,
+        width=80,
+        frames=16,
+        in_channels=1,
+        num_kernels=9,
+        k_h=30,
+        k_w=40,
+        k_t=8,
+        pool_window=(8, 8, 3),
+        hidden=128,
+        num_classes=4,
+    )
+
+
+def smoke_config() -> HybridConfig:
+    return HybridConfig(
+        height=20,
+        width=24,
+        frames=10,
+        in_channels=1,
+        num_kernels=3,
+        k_h=7,
+        k_w=9,
+        k_t=4,
+        pool_window=(4, 4, 2),
+        hidden=16,
+        num_classes=4,
+    )

@@ -1,0 +1,42 @@
+"""whisper-tiny — OpenAI Whisper tiny backbone (enc-dec).
+
+[arXiv:2212.04356; unverified] 4L enc + 4L dec, d_model 384, 6 heads,
+d_ff 1536, vocab 51865.  Conv/mel frontend is a STUB per the assignment
+(input_specs supplies precomputed frame embeddings).
+"""
+
+from repro.models.whisper import WhisperConfig
+
+
+def config() -> WhisperConfig:
+    return WhisperConfig(
+        name="whisper-tiny",
+        n_layers=4,
+        d_model=384,
+        n_heads=6,
+        n_kv_heads=6,
+        d_ff=1536,
+        vocab=51865,
+        n_frames=1500,
+        max_target=32768 + 1,  # decode_32k shape needs positions to 32k
+        tie_embeddings=True,
+    )
+
+
+def smoke_config() -> WhisperConfig:
+    import jax.numpy as jnp
+
+    return WhisperConfig(
+        name="whisper-tiny-smoke",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        d_ff=128,
+        vocab=512,
+        n_frames=32,
+        max_target=64,
+        tie_embeddings=True,
+        param_dtype=jnp.float32,
+        compute_dtype=jnp.float32,
+    )

@@ -1,0 +1,162 @@
+"""Hybrid optoelectronic 3-D CNN (paper §3.2, §4).
+
+Architecture exactly as the paper's proof of concept:
+
+  input clip (C=1, 60×80, 16 frames)
+    → 3-D conv layer, 9 kernels of 30×40×8, valid    ← *this* layer is the
+      STHC in the optical system; digital twin for training
+    → bias + ReLU                                     (digital)
+    → 3-D max-pool                                    (digital)
+    → flatten → FC → ReLU → FC → 4 classes            (digital)
+
+Kernels are trained fully digitally (Adam + cross-entropy, §4.1), then
+loaded into the optical layer ("record" step); at inference the conv is
+served by the STHC while everything downstream stays digital.  The
+``impl`` switch selects the conv backend:
+
+  'digital'        direct lax.conv (the PyTorch-equivalent baseline)
+  'spectral'       FFT correlator, ideal mode (numerically ≡ digital)
+  'sthc_physical'  full physical model (SLM quantization, ± channels,
+                   IHB/T2 envelopes)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import spectral_conv
+from repro.core.sthc import STHC, STHCConfig
+
+Array = jax.Array
+Params = dict[str, Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridConfig:
+    height: int = 60
+    width: int = 80
+    frames: int = 16
+    in_channels: int = 1
+    num_kernels: int = 9  # the paper's 9 parallel optical channels
+    k_h: int = 30
+    k_w: int = 40
+    k_t: int = 8
+    pool_window: tuple[int, int, int] = (8, 8, 3)
+    hidden: int = 128
+    num_classes: int = 4
+    dtype: Any = jnp.float32
+
+    @property
+    def conv_out_shape(self) -> tuple[int, int, int]:
+        return (
+            self.height - self.k_h + 1,
+            self.width - self.k_w + 1,
+            self.frames - self.k_t + 1,
+        )
+
+    @property
+    def pooled_features(self) -> int:
+        oh, ow, ot = self.conv_out_shape
+        ph, pw, pt = self.pool_window
+        n = ((oh - ph) // ph + 1) * ((ow - pw) // pw + 1) * ((ot - pt) // pt + 1)
+        return n * self.num_kernels
+
+
+def init_params(rng: jax.Array, cfg: HybridConfig) -> Params:
+    k_conv, k_fc1, k_fc2 = jax.random.split(rng, 3)
+    fan_in = cfg.in_channels * cfg.k_h * cfg.k_w * cfg.k_t
+    conv_w = jax.random.normal(
+        k_conv,
+        (cfg.num_kernels, cfg.in_channels, cfg.k_h, cfg.k_w, cfg.k_t),
+        cfg.dtype,
+    ) * jnp.sqrt(2.0 / fan_in)
+    feat = cfg.pooled_features
+    fc1_w = jax.random.normal(k_fc1, (feat, cfg.hidden), cfg.dtype) * jnp.sqrt(
+        2.0 / feat
+    )
+    fc2_w = jax.random.normal(
+        k_fc2, (cfg.hidden, cfg.num_classes), cfg.dtype
+    ) * jnp.sqrt(2.0 / cfg.hidden)
+    return {
+        "conv_w": conv_w,
+        "conv_b": jnp.zeros((cfg.num_kernels,), cfg.dtype),
+        "fc1_w": fc1_w,
+        "fc1_b": jnp.zeros((cfg.hidden,), cfg.dtype),
+        "fc2_w": fc2_w,
+        "fc2_b": jnp.zeros((cfg.num_classes,), cfg.dtype),
+    }
+
+
+def max_pool3d(x: Array, window: tuple[int, int, int]) -> Array:
+    """Valid 3-D max pooling over the trailing (H, W, T) axes of (B,O,...)."""
+    dims = (1, 1) + window
+    return lax.reduce_window(x, -jnp.inf, lax.max, dims, dims, "VALID")
+
+
+def conv_layer(
+    params: Params,
+    x: Array,
+    cfg: HybridConfig,
+    impl: str = "digital",
+    sthc: STHC | None = None,
+) -> Array:
+    """The (optionally optical) 3-D conv layer, pre-activation."""
+    w = params["conv_w"]
+    if impl == "digital":
+        y = spectral_conv.direct_correlate3d(x, w, mode="valid")
+    elif impl == "spectral":
+        y = spectral_conv.correlate3d_fft(x, w, mode="valid")
+    elif impl == "sthc_physical":
+        sthc = sthc or STHC(STHCConfig(mode="physical"))
+        y = sthc(w, x)
+    elif impl == "sthc_ideal":
+        sthc = sthc or STHC(STHCConfig(mode="ideal"))
+        y = sthc(w, x)
+    else:
+        raise ValueError(f"unknown conv impl {impl!r}")
+    return y + params["conv_b"][None, :, None, None, None]
+
+
+def forward(
+    params: Params,
+    x: Array,
+    cfg: HybridConfig,
+    impl: str = "digital",
+    sthc: STHC | None = None,
+) -> Array:
+    """Full hybrid forward pass → logits (B, num_classes)."""
+    y = conv_layer(params, x, cfg, impl=impl, sthc=sthc)
+    y = jax.nn.relu(y)
+    y = max_pool3d(y, cfg.pool_window)
+    y = y.reshape(y.shape[0], -1)
+    y = jax.nn.relu(y @ params["fc1_w"] + params["fc1_b"])
+    return y @ params["fc2_w"] + params["fc2_b"]
+
+
+def loss_fn(
+    params: Params, batch: dict[str, Array], cfg: HybridConfig, impl: str = "digital"
+) -> tuple[Array, dict[str, Array]]:
+    """Cross-entropy loss (the paper trains with Adam + cross-entropy)."""
+    logits = forward(params, batch["video"], cfg, impl=impl)
+    labels = batch["label"]
+    logp = jax.nn.log_softmax(logits)
+    loss = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+    return loss, {"loss": loss, "accuracy": acc}
+
+
+def predict(
+    params: Params,
+    x: Array,
+    cfg: HybridConfig,
+    impl: str = "sthc_physical",
+    sthc: STHC | None = None,
+) -> Array:
+    """Inference-time class prediction with the chosen conv backend."""
+    logits = forward(params, x, cfg, impl=impl, sthc=sthc)
+    return jnp.argmax(logits, axis=-1)

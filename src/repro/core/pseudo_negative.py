@@ -1,0 +1,54 @@
+"""Pseudo-negative encoding of signed kernels for intensity-only optics.
+
+The SLM can only display non-negative intensities, but trained kernels are
+signed.  Following the paper (and Chang et al. [7]), each signed kernel K
+is split into two strictly non-negative kernels
+
+    K⁺ = max(K, 0)        K⁻ = max(−K, 0)        K = K⁺ − K⁻
+
+which run in *parallel optical channels*; the signed convolution is
+recovered digitally as ``(X ⋆ K⁺) − (X ⋆ K⁻)``.  Cost: 2× channels —
+cheap given the SLM's spatial multiplexing headroom.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def split(kernel: Array) -> tuple[Array, Array]:
+    """Split a signed kernel into (K⁺, K⁻), both non-negative."""
+    k_plus = jnp.maximum(kernel, 0.0)
+    k_minus = jnp.maximum(-kernel, 0.0)
+    return k_plus, k_minus
+
+
+def combine(y_plus: Array, y_minus: Array) -> Array:
+    """Digital reconstruction of the signed correlation output."""
+    return y_plus - y_minus
+
+
+def interleave_channels(k_plus: Array, k_minus: Array) -> Array:
+    """Stack the ± kernels along a leading 'optical channel' axis.
+
+    Kernel tensors of shape ``(O, ...)`` become ``(2*O, ...)`` with the
+    positive channel of output o at ``2*o`` and the negative at ``2*o+1``
+    — mirroring the side-by-side placement on the SLM.
+    """
+    stacked = jnp.stack([k_plus, k_minus], axis=1)  # (O, 2, ...)
+    return stacked.reshape((-1,) + k_plus.shape[1:])
+
+
+def deinterleave_outputs(y: Array, axis: int = 1) -> Array:
+    """Undo :func:`interleave_channels` on correlator outputs and combine.
+
+    ``y`` has ``2*O`` channels along ``axis``; returns the O signed maps.
+    """
+    y = jnp.moveaxis(y, axis, 0)
+    o2 = y.shape[0]
+    y = y.reshape((o2 // 2, 2) + y.shape[1:])
+    signed = y[:, 0] - y[:, 1]
+    return jnp.moveaxis(signed, 0, axis)

@@ -1,0 +1,1 @@
+from repro.data import kth_synthetic, tokens

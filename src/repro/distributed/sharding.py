@@ -1,0 +1,192 @@
+"""Logical-axis sharding rules — DP / FSDP / TP / EP / SP on one mesh.
+
+Models annotate every parameter leaf with *logical* axis names; this
+module maps them onto the physical mesh (single-pod ``(data, model)`` or
+multi-pod ``(pod, data, model)``).  Changing the parallelism layout means
+changing a rules dict — never model code.
+
+Default layout (MaxText-style):
+
+  batch        → (pod, data)      pure DP across pods, DP within
+  embed        → data             FSDP: the d_model dim of every weight is
+                                  sharded over data; XLA all-gathers per
+                                  layer inside the scan and overlaps the
+                                  gather with the previous layer's compute
+  mlp/heads/kv_heads/vocab/expert → model     TP / EP
+  layers       → None             (scan axis)
+  kv_seq       → model            sequence-sharded KV cache for decode
+                                  when kv_heads doesn't divide the model
+                                  axis (XLA all-reduces the softmax stats)
+
+Axes whose dimension size does not divide the mesh-axis size are dropped
+from the spec (shape-aware resolution) rather than padded.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Sequence
+
+import jax
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+# logical axis -> mesh axis (or tuple of mesh axes)
+Rules = dict[str, Any]
+
+
+def make_rules(mode: str = "train", multi_pod: bool = False) -> Rules:
+    """Sharding rules for 'train' | 'prefill' | 'decode'."""
+    batch = ("pod", "data") if multi_pod else ("data",)
+    rules: Rules = {
+        "batch": batch,
+        "embed": "data",  # FSDP shard dim of stored weights
+        "mlp": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "vocab": "model",
+        "expert": "model",
+        "expert_mlp": None,
+        "kv_lora": None,
+        "qk_dim": None,
+        "v_dim": None,
+        "state": None,
+        "conv_dim": "model",
+        "ssm_heads": "model",
+        "head_dim": None,
+        "layers": None,
+        "norm": None,
+        "seq": None,
+        "seq_model": "model",  # Megatron-SP residual sharding
+        "kv_seq": "model",
+        "frames": None,
+    }
+    if mode == "decode":
+        # decode is latency/memory bound: keep weights FSDP-sharded (same
+        # storage layout as train → zero-copy checkpoint reuse).
+        pass
+    return rules
+
+
+def _axis_size(mesh: Mesh, mesh_axes) -> int:
+    if mesh_axes is None:
+        return 1
+    if isinstance(mesh_axes, str):
+        mesh_axes = (mesh_axes,)
+    n = 1
+    for a in mesh_axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def spec_for(
+    shape: Sequence[int],
+    logical_axes: Sequence[str | None],
+    rules: Rules,
+    mesh: Mesh,
+) -> P:
+    """Resolve logical axes → PartitionSpec, dropping non-divisible axes.
+
+    Also drops a mesh axis if it was already consumed by an earlier dim
+    (a mesh axis may appear at most once in a spec).
+    """
+    used: set[str] = set()
+    parts = []
+    for dim, lax_name in zip(shape, logical_axes):
+        mesh_axes = rules.get(lax_name) if lax_name else None
+        if mesh_axes is None:
+            parts.append(None)
+            continue
+        if isinstance(mesh_axes, str):
+            mesh_axes = (mesh_axes,)
+        # keep only axes present in the mesh, unused, and dividing the dim
+        kept = []
+        size = 1
+        for a in mesh_axes:
+            if a in mesh.shape and a not in used and dim % (size * mesh.shape[a]) == 0:
+                kept.append(a)
+                size *= mesh.shape[a]
+        if not kept:
+            parts.append(None)
+        elif len(kept) == 1:
+            parts.append(kept[0])
+            used.update(kept)
+        else:
+            parts.append(tuple(kept))
+            used.update(kept)
+    return P(*parts)
+
+
+def is_axes_leaf(x) -> bool:
+    """Logical-axes annotations are tuples of str/None — pytree *leaves*."""
+    return isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x)
+
+
+def tree_specs(params: PyTree, axes_tree: PyTree, rules: Rules, mesh: Mesh) -> PyTree:
+    """PartitionSpec tree for a params tree + parallel logical-axes tree.
+
+    The axes tree leads the map (its tuple leaves would otherwise be
+    traversed as pytree nodes).
+    """
+
+    def leaf_spec(axes, p):
+        shape = p.shape if hasattr(p, "shape") else np.shape(p)
+        return spec_for(shape, axes, rules, mesh)
+
+    return jax.tree.map(leaf_spec, axes_tree, params, is_leaf=is_axes_leaf)
+
+
+def tree_shardings(
+    params: PyTree, axes_tree: PyTree, rules: Rules, mesh: Mesh
+) -> PyTree:
+    specs = tree_specs(params, axes_tree, rules, mesh)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Activation-constraint context (models call `constrain` with logical axes)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _Active:
+    mesh: Mesh | None = None
+    rules: Rules | None = None
+
+
+_state = threading.local()
+
+
+def _active() -> _Active:
+    if not hasattr(_state, "v"):
+        _state.v = _Active()
+    return _state.v
+
+
+@contextlib.contextmanager
+def activate(mesh: Mesh, rules: Rules):
+    """Enable logical-axis activation constraints inside model code."""
+    prev = _active().mesh, _active().rules
+    _active().mesh, _active().rules = mesh, rules
+    try:
+        yield
+    finally:
+        _active().mesh, _active().rules = prev
+
+
+def constrain(x: jax.Array, logical_axes: Sequence[str | None]) -> jax.Array:
+    """with_sharding_constraint by logical axes (no-op outside activate())."""
+    st = _active()
+    if st.mesh is None or st.rules is None:
+        return x
+    spec = spec_for(x.shape, tuple(logical_axes), st.rules, st.mesh)
+    return lax.with_sharding_constraint(x, NamedSharding(st.mesh, spec))

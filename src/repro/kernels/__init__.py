@@ -1,0 +1,8 @@
+# Pallas TPU kernels for the compute hot-spots:
+#   stmul  — spectral grating multiply-accumulate (the STHC 'diffraction')
+#   conv3d — direct 3-D correlation (digital C3D baseline, small kernels)
+#   ssd    — Mamba-2 chunked state-space-dual scan (ssm/hybrid archs)
+#   flash  — VMEM-resident flash attention fwd (the §Perf structural fix
+#            for every memory-bound attention cell)
+# Each package ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+# wrapper choosing interpret mode on CPU), ref.py (pure-jnp oracle).

@@ -1,0 +1,1 @@
+from repro.kernels.conv3d import ops, ref

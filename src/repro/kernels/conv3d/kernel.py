@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: direct 3-D correlation for *small* kernels.
+
+This is the digital C3D baseline's hot spot (3×3×3-class kernels).  The
+paper's point is precisely that direct correlation scales as k_h·k_w·k_t
+taps per output — fine at 27 taps, ruinous at the 9 600-tap optical-scale
+kernels, which route to the spectral path instead (kernels/stmul).
+
+Dataflow
+--------
+grid = (B, OH/bOH, OT/bOT); the full weight stack (O, C, kh, kw, kt) is
+small (≤ a few MiB) and kept VMEM-resident across programs.  Each batch
+element's feature volume is staged through VMEM once and each program
+slices its (C, bOH+kh−1, OW+kw-1, bOT+kt−1) halo window from it; the tap
+loops (kh·kw·kt, static) unroll, and each tap contributes a C-contraction
+— a (C) × (C→O) matmul on the MXU when C ≥ 8, VPU broadcast-MAC when C
+is small.
+
+Halo note: `pl.BlockSpec` index maps address in units of whole blocks, so
+overlapping halo tiles cannot be expressed directly; we stage the padded
+per-batch volume and `dynamic_slice` the halo inside the kernel.  For the
+smoke/bench shapes used here the volume fits VMEM; production-size
+volumes would instead pre-split H into strips at the `ops.py` level
+(see `conv3d_strips`).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+BLOCK_OH = 8
+BLOCK_OT = 8
+
+
+@functools.partial(jax.jit, static_argnames=("block_oh", "block_ot", "interpret"))
+def conv3d_pallas(
+    x: Array,
+    w: Array,
+    *,
+    block_oh: int = BLOCK_OH,
+    block_ot: int = BLOCK_OT,
+    interpret: bool = False,
+) -> Array:
+    """Valid 3-D correlation.  x: (B, C, H, W, T), w: (O, C, kh, kw, kt)."""
+    B, C, H, W, T = x.shape
+    O, _, kh, kw, kt = w.shape
+    OH, OW, OT = H - kh + 1, W - kw + 1, T - kt + 1
+    bOH = min(block_oh, OH)
+    bOT = min(block_ot, OT)
+    pad_oh = (-OH) % bOH
+    pad_ot = (-OT) % bOT
+    xp = jnp.pad(x, [(0, 0), (0, 0), (0, pad_oh), (0, 0), (0, pad_ot)])
+    OHp, OTp = OH + pad_oh, OT + pad_ot
+    Hp, Tp = H + pad_oh, T + pad_ot
+
+    def kernel(x_ref, w_ref, y_ref):
+        i = pl.program_id(1)
+        tt = pl.program_id(2)
+        xfull = x_ref[0]  # (C, Hp, W, Tp)
+        w_ = w_ref[...]  # (O, C, kh, kw, kt)
+        acc = jnp.zeros((O, bOH, OW, bOT), jnp.float32)
+        for m in range(kh):
+            for n in range(kw):
+                for t in range(kt):
+                    xs = jax.lax.dynamic_slice(
+                        xfull,
+                        (0, i * bOH + m, n, tt * bOT + t),
+                        (C, bOH, OW, bOT),
+                    )
+                    acc += jnp.tensordot(w_[:, :, m, n, t], xs, axes=(1, 0))
+        y_ref[0] = acc.astype(y_ref.dtype)
+
+    y = pl.pallas_call(
+        kernel,
+        grid=(B, OHp // bOH, OTp // bOT),
+        in_specs=[
+            pl.BlockSpec((1, C, Hp, W, Tp), lambda b, i, t: (b, 0, 0, 0, 0)),
+            pl.BlockSpec((O, C, kh, kw, kt), lambda b, i, t: (0, 0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, O, bOH, OW, bOT), lambda b, i, t: (b, 0, i, 0, t)
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, O, OHp, OW, OTp), x.dtype),
+        interpret=interpret,
+    )(xp, w)
+    return y[:, :, :OH, :, :OT]

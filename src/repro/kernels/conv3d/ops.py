@@ -1,0 +1,39 @@
+"""Jit'd public wrappers for the conv3d Pallas kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.conv3d import kernel as _kernel
+
+Array = jax.Array
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def conv3d(x: Array, w: Array, **tile_kwargs) -> Array:
+    """Direct valid 3-D correlation via the Pallas kernel.
+
+    x: (B, C, H, W, T), w: (O, C, kh, kw, kt) → (B, O, OH, OW, OT).
+    """
+    return _kernel.conv3d_pallas(x, w, interpret=_use_interpret(), **tile_kwargs)
+
+
+def conv3d_strips(x: Array, w: Array, strip_h: int = 32, **tile_kwargs) -> Array:
+    """Production-size volumes: pre-split H into halo strips at the XLA
+    level, then run the kernel per strip — bounds the VMEM stage to
+    (C · (strip_h+kh−1) · W · T) regardless of H."""
+    kh = w.shape[2]
+    H = x.shape[2]
+    OH = H - kh + 1
+    outs = []
+    start = 0
+    while start < OH:
+        rows = min(strip_h, OH - start)
+        xs = jax.lax.slice_in_dim(x, start, start + rows + kh - 1, axis=2)
+        outs.append(conv3d(xs, w, **tile_kwargs))
+        start += rows
+    return jnp.concatenate(outs, axis=2)

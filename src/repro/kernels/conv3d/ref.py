@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for direct (valid) 3-D correlation.
+
+The digital-baseline operator: what C3D-style networks compute and what
+the paper's optical correlator replaces.  Cross-correlation (no kernel
+flip), NCHWT layout.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax import lax
+
+Array = jax.Array
+
+
+def conv3d_ref(x: Array, w: Array) -> Array:
+    """x: (B, C, H, W, T), w: (O, C, kh, kw, kt) → (B, O, H', W', T')."""
+    return lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(1, 1, 1),
+        padding="VALID",
+        dimension_numbers=("NCHWD", "OIHWD", "NCHWD"),
+        precision=lax.Precision.HIGHEST,
+    )

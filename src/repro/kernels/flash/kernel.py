@@ -1,0 +1,151 @@
+"""Pallas TPU kernel: flash attention forward (VMEM-resident scores).
+
+The §Perf conclusion for every memory-bound attention cell: between the
+two attention dots, pure-XLA implementations must round-trip the
+(B, H, Sq, block)-shaped score/probability tiles through HBM — S²-shaped
+traffic that dominates the memory roofline term at 4k–32k context.  This
+kernel keeps the s/p tiles in VMEM: HBM traffic collapses to q/k/v/o.
+
+Structure (standard flash-attention-v2 dataflow, GQA-native):
+
+  grid = (B, H, Sq/bq, Sk/bk)   — the kv axis innermost (sequential), so
+  VMEM scratch (m, l, acc) carries the online-softmax state across kv
+  blocks of one (batch, head, q-block); the o tile is emitted at the
+  last kv block.  Causal masking skips fully-masked blocks via
+  jnp.where on the block mask (Mosaic hoists the comparison).
+
+VMEM per program ≈ bq·d (q) + bk·d (k,v) + bq·bk (s/p) + bq·(d+2)
+(acc,m,l) floats — bq=bk=256, d=128 ⇒ ~0.8 MiB, comfortably resident.
+
+Backward: `ops.flash_attention` wraps this kernel in a jax.custom_vjp
+whose backward is the (numerically identical) jnp blockwise
+implementation's VJP — correct everywhere, and the forward (serving,
+prefill) gets the full VMEM win; a Pallas backward kernel is the
+follow-on (DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+BLOCK_Q = 256
+BLOCK_K = 256
+NEG = -1e30
+
+
+def _flash_fwd_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *, scale, causal,
+    block_q, block_k, kv_len,
+):
+    kv_i = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(kv_i == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, :, 0, :]  # (bq, d)
+    k = k_ref[0, :, 0, :]  # (bk, d)
+    v = v_ref[0, :, 0, :]  # (bk, d)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (bq, bk)
+    k_pos = kv_i * block_k + lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1
+    )
+    s = jnp.where(k_pos < kv_len, s, NEG)  # mask zero-padded keys
+    if causal:
+        q_i = pl.program_id(2)
+        q_pos = q_i * block_q + lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0
+        )
+        s = jnp.where(q_pos >= k_pos, s, NEG)
+
+    m_prev = m_scr[...]  # (bq, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)  # (bq, bk) — lives in VMEM only
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+
+    @pl.when(kv_i == nk - 1)
+    def _emit():
+        out = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, :, 0, :] = out.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "softmax_scale", "block_q", "block_k",
+                              "interpret")
+)
+def flash_fwd_pallas(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    causal: bool = True,
+    softmax_scale: float | None = None,
+    block_q: int = BLOCK_Q,
+    block_k: int = BLOCK_K,
+    interpret: bool = False,
+) -> Array:
+    """q: (B, Sq, H, D); k, v: (B, Sk, G, D) with G | H → (B, Sq, H, D).
+
+    Sq/Sk are padded to block multiples internally (mask-safe: padded k
+    positions can only appear as fully-masked causal tails when
+    Sk == Sq; for cross/cache use pass kv through `ops.flash_attention`
+    which handles explicit lengths).
+    """
+    B, Sq, H, D = q.shape
+    Sk, G = k.shape[1], k.shape[2]
+    rep = H // G
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(D)
+
+    bq = min(block_q, max(Sq, 8))
+    bk = min(block_k, max(Sk, 8))
+    pad_q = (-Sq) % bq
+    pad_k = (-Sk) % bk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        # padded keys sit at positions ≥ Sk; with causal masking and
+        # Sq ≤ Sk they are masked for all real queries
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    Sqp, Skp = Sq + pad_q, Sk + pad_k
+
+    kernel = functools.partial(
+        _flash_fwd_kernel, scale=scale, causal=causal,
+        block_q=bq, block_k=bk, kv_len=Sk,
+    )
+    o = pl.pallas_call(
+        kernel,
+        grid=(B, H, Sqp // bq, Skp // bk),
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, D), lambda b, h, qi, ki: (b, qi, h, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, qi, ki: (b, ki, h // rep, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, qi, ki: (b, ki, h // rep, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, D), lambda b, h, qi, ki: (b, qi, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Sqp, H, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return o[:, :Sq]

@@ -1,0 +1,55 @@
+"""Public flash-attention op: Pallas forward + exact jnp backward.
+
+``flash_attention`` is a jax.custom_vjp: the forward runs the VMEM-
+resident Pallas kernel (interpret=True off-TPU); the backward re-derives
+gradients through the numerically-identical jnp blockwise implementation
+(same online-softmax math), so training with the kernel is exact while
+the forward-heavy paths (serving/prefill) get the full HBM-traffic win.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash import kernel as _kernel
+from repro.models.common import blockwise_attention
+
+Array = jax.Array
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_attention(
+    q: Array, k: Array, v: Array, causal: bool = True,
+    softmax_scale: float | None = None,
+) -> Array:
+    """q: (B, Sq, H, D); k, v: (B, Sk, G, D), G | H → (B, Sq, H, D)."""
+    return _kernel.flash_fwd_pallas(
+        q, k, v, causal=causal, softmax_scale=softmax_scale,
+        interpret=_use_interpret(),
+    )
+
+
+def _fwd(q, k, v, causal, softmax_scale):
+    o = flash_attention(q, k, v, causal, softmax_scale)
+    return o, (q, k, v)
+
+
+def _bwd(causal, softmax_scale, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q, k, v: blockwise_attention(
+            q, k, v, causal=causal, softmax_scale=softmax_scale
+        ),
+        q, k, v,
+    )
+    return vjp(g)
+
+
+flash_attention.defvjp(_fwd, _bwd)

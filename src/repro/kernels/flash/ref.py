@@ -1,0 +1,10 @@
+"""Oracle for flash attention: the pure-jnp blockwise implementation
+(itself validated against naive attention in tests/test_attention.py)."""
+
+from repro.models.common import blockwise_attention
+
+
+def flash_ref(q, k, v, *, causal=True, softmax_scale=None):
+    return blockwise_attention(
+        q, k, v, causal=causal, softmax_scale=softmax_scale
+    )

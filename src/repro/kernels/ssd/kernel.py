@@ -1,0 +1,125 @@
+"""Pallas TPU kernel: Mamba-2 chunked SSD (state-space dual) scan.
+
+Mamba-2's SSD computes a selective SSM as, per chunk of Q timesteps,
+
+  intra-chunk:  Y  = [(C Bᵀ) ⊙ decay_mask] · (dt ⊙ X)       (Q×Q quadratic)
+  inter-chunk:  Y += (C ⊙ e^seg) · S_inᵀ                     (state readout)
+  state:        S' = e^total · S_in + (dt ⊙ X ⊙ e^{total−seg})ᵀ · B
+
+All three are dense matmuls — (Q,Q)·(Q,P), (Q,N)·(N,P), (P,Q)·(Q,N) — MXU
+work when Q, P, N are multiples of 128 (the production configs use
+Q=chunk=128/256, P=64/128, N=64/128; 64 maps to half-tiles, still MXU).
+
+Grid & state carry
+------------------
+grid = (B, H, n_chunks) with the *chunk axis innermost*: TPU grid steps
+execute sequentially, so a VMEM scratch S (P×N) legally carries the SSM
+state from chunk c to c+1 of the same (batch, head) — the standard Pallas
+sequential-grid accumulator pattern.  S resets at c == 0 and is emitted to
+the final-state output at c == n_chunks−1 (for decode hand-off /
+sequence-parallel composition).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, s_out_ref, s_ref):
+    nc = pl.num_programs(2)
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    q = x_ref.shape[1]
+    x = x_ref[0, :, 0, :]  # (Q, P)
+    dt = dt_ref[0, :, 0]  # (Q,)
+    a = a_ref[0]  # scalar (this head's A < 0)
+    b = b_ref[0, :, 0, :]  # (Q, N)
+    c = c_ref[0, :, 0, :]  # (Q, N)
+
+    a_log = dt * a  # (Q,) ≤ 0
+    seg = jnp.cumsum(a_log)  # within-chunk cumulative log-decay
+    total = seg[q - 1]
+
+    rows = lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    cols = lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    causal = rows >= cols
+    decay = jnp.where(causal, jnp.exp(seg[:, None] - seg[None, :]), 0.0)
+
+    xdt = x * dt[:, None]  # (Q, P)
+    scores = jnp.dot(c, b.T, preferred_element_type=jnp.float32) * decay
+    y = jnp.dot(scores, xdt, preferred_element_type=jnp.float32)
+
+    s_in = s_ref[...]  # (P, N)
+    y += jnp.dot(
+        c * jnp.exp(seg)[:, None], s_in.T, preferred_element_type=jnp.float32
+    )
+
+    carry_w = jnp.exp(total - seg)  # (Q,)
+    s_new = s_in * jnp.exp(total) + jnp.dot(
+        (xdt * carry_w[:, None]).T, b, preferred_element_type=jnp.float32
+    )
+    s_ref[...] = s_new
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == nc - 1)
+    def _emit():
+        s_out_ref[0, 0] = s_new.astype(s_out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_pallas(
+    x: Array,
+    dt: Array,
+    A: Array,
+    B: Array,
+    C: Array,
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> tuple[Array, Array]:
+    """Chunked SSD scan.  Shapes as in ref.ssd_scan_ref; L % chunk == 0.
+
+    Returns (y (Bb,L,H,P), final_state (Bb,H,P,N)).
+    """
+    Bb, L, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    assert L % chunk == 0, f"L={L} not a multiple of chunk={chunk}"
+    assert H % G == 0
+    rep = H // G
+    nc = L // chunk
+
+    grid = (Bb, H, nc)
+    y, s_final = pl.pallas_call(
+        _ssd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, chunk, 1, N), lambda b, h, c: (b, c, h // rep, 0)),
+            pl.BlockSpec((1, chunk, 1, N), lambda b, h, c: (b, c, h // rep, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bb, L, H, P), x.dtype),
+            jax.ShapeDtypeStruct((Bb, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, B, C)
+    return y, s_final

@@ -1,0 +1,85 @@
+"""Jit'd public wrappers for the SSD kernel.
+
+``ssd`` is the operator the Mamba-2 / Zamba-2 models call: it routes to
+the Pallas kernel (interpret=True off-TPU) or the pure-jnp chunked form
+(`impl='jnp'` — the shardable path used under pjit at scale), pads L to a
+chunk multiple (dt=0 padding is exact: zero contribution, unit decay),
+and crops on return.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd import kernel as _kernel
+from repro.kernels.ssd import ref as _ref
+
+Array = jax.Array
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def ssd(
+    x: Array,
+    dt: Array,
+    A: Array,
+    B: Array,
+    C: Array,
+    *,
+    chunk: int = 128,
+    impl: str = "pallas",
+    initial_state: Array | None = None,
+) -> tuple[Array, Array]:
+    """Chunked selective-SSM scan.  See ref.ssd_scan_ref for semantics.
+
+    Pads L up to a chunk multiple; padded steps use dt = 0 (unit decay,
+    zero input) so results are exact.
+    """
+    Bb, L, H, P = x.shape
+    pad = (-L) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    if impl == "pallas":
+        if initial_state is not None:
+            raise NotImplementedError(
+                "initial_state is only supported by impl='jnp' (used for "
+                "sequence-parallel composition); the kernel starts from 0."
+            )
+        y, S = _kernel.ssd_pallas(
+            x, dt, A, B, C, chunk=chunk, interpret=_use_interpret()
+        )
+    elif impl == "jnp":
+        y, S = _ref.ssd_chunked_ref(
+            x, dt, A, B, C, chunk=chunk, initial_state=initial_state
+        )
+    else:
+        raise ValueError(f"unknown impl {impl!r}")
+    return y[:, :L], S
+
+
+def ssd_decode_step(
+    S: Array, x_t: Array, dt_t: Array, A: Array, B_t: Array, C_t: Array
+) -> tuple[Array, Array]:
+    """Single-token decode: advance the SSM state by one step.
+
+    S: (Bb, H, P, N); x_t: (Bb, H, P); dt_t: (Bb, H); B_t, C_t: (Bb, G, N).
+    Returns (S', y_t (Bb, H, P)).  O(1) per token — the sub-quadratic
+    decode path used by the long_500k shapes.
+    """
+    H = x_t.shape[1]
+    G = B_t.shape[1]
+    rep = H // G
+    b_t = jnp.repeat(B_t, rep, axis=1)  # (Bb, H, N)
+    c_t = jnp.repeat(C_t, rep, axis=1)
+    a_t = jnp.exp(dt_t * A[None, :])  # (Bb, H)
+    S = S * a_t[..., None, None] + (dt_t[..., None] * x_t)[..., None] * b_t[
+        ..., None, :
+    ]
+    y_t = jnp.einsum("bhpn,bhn->bhp", S, c_t)
+    return S, y_t

@@ -1,0 +1,133 @@
+"""Oracles for the Mamba-2 SSD (state-space dual) operator.
+
+The selective state-space recurrence, per head h with state size N and
+head dim P:
+
+    a_t = exp(dt_t · A)                        (scalar per head, A < 0)
+    S_t = a_t · S_{t−1} + dt_t · x_t ⊗ B_t     (S: P×N)
+    y_t = S_t · C_t                            (P,)
+
+`ssd_scan_ref` is the exact sequential recurrence (slow, the ground
+truth).  `ssd_chunked_ref` is the pure-jnp chunked SSD algorithm — the
+same math the Pallas kernel implements (intra-chunk quadratic form +
+inter-chunk state carry) — used both as the kernel oracle and as the
+lowering-friendly implementation inside the Mamba-2 model.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Array = jax.Array
+
+
+def ssd_scan_ref(
+    x: Array, dt: Array, A: Array, B: Array, C: Array
+) -> tuple[Array, Array]:
+    """Exact sequential recurrence.
+
+    Args:
+      x: (Bb, L, H, P), dt: (Bb, L, H) positive, A: (H,) negative,
+      B, C: (Bb, L, G, N) with G | H (grouped state, GQA-style).
+
+    Returns:
+      y: (Bb, L, H, P), final_state: (Bb, H, P, N).
+    """
+    Bb, L, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(B, rep, axis=2)  # (Bb, L, H, N)
+    Ch = jnp.repeat(C, rep, axis=2)
+
+    def step(S, inp):
+        x_t, dt_t, b_t, c_t = inp  # (Bb,H,P), (Bb,H), (Bb,H,N), (Bb,H,N)
+        a_t = jnp.exp(dt_t * A[None, :])  # (Bb, H)
+        S = S * a_t[..., None, None] + (dt_t[..., None] * x_t)[..., None] * b_t[
+            ..., None, :
+        ]
+        y_t = jnp.einsum("bhpn,bhn->bhp", S, c_t)
+        return S, y_t
+
+    S0 = jnp.zeros((Bb, H, P, N), x.dtype)
+    xs = (
+        jnp.moveaxis(x, 1, 0),
+        jnp.moveaxis(dt, 1, 0),
+        jnp.moveaxis(Bh, 1, 0),
+        jnp.moveaxis(Ch, 1, 0),
+    )
+    S, ys = lax.scan(step, S0, xs)
+    return jnp.moveaxis(ys, 0, 1), S
+
+
+def ssd_chunked_ref(
+    x: Array,
+    dt: Array,
+    A: Array,
+    B: Array,
+    C: Array,
+    chunk: int = 64,
+    initial_state: Array | None = None,
+) -> tuple[Array, Array]:
+    """Chunked SSD: quadratic intra-chunk form + linear inter-chunk carry.
+
+    Same signature/semantics as :func:`ssd_scan_ref` (plus optional
+    initial state for sequence-parallel composition).  L must be a
+    multiple of ``chunk``.
+    """
+    Bb, L, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    assert L % chunk == 0, f"L={L} not a multiple of chunk={chunk}"
+    nc = L // chunk
+
+    Bh = jnp.repeat(B, rep, axis=2)
+    Ch = jnp.repeat(C, rep, axis=2)
+
+    # reshape into chunks: (Bb, nc, Q, H, ...)
+    xq = x.reshape(Bb, nc, chunk, H, P)
+    dtq = dt.reshape(Bb, nc, chunk, H)
+    bq = Bh.reshape(Bb, nc, chunk, H, N)
+    cq = Ch.reshape(Bb, nc, chunk, H, N)
+
+    a_log = dtq * A[None, None, None, :]  # (Bb, nc, Q, H) ≤ 0
+    seg = jnp.cumsum(a_log, axis=2)  # within-chunk cumulative log-decay
+    total = seg[:, :, -1:, :]  # (Bb, nc, 1, H)
+
+    # ---- intra-chunk (quadratic, causal-masked) ----
+    # decay(i←j) = exp(seg_i − seg_j) for i ≥ j
+    d = seg[:, :, :, None, :] - seg[:, :, None, :, :]  # (Bb,nc,Q,Q,H)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(mask[None, None, :, :, None], jnp.exp(d), 0.0)
+    scores = jnp.einsum("bkihn,bkjhn->bkijh", cq, bq) * decay
+    xdt = xq * dtq[..., None]
+    y_intra = jnp.einsum("bkijh,bkjhp->bkihp", scores, xdt)
+
+    # ---- inter-chunk state recurrence (scan over chunks) ----
+    # chunk-local state contribution: Σ_j exp(total − seg_j)·dt_j·x_j⊗B_j
+    carry_w = jnp.exp(total - seg)  # (Bb, nc, Q, H)
+    S_loc = jnp.einsum("bkjh,bkjhp,bkjhn->bkhpn", carry_w, xdt, bq)
+    chunk_decay = jnp.exp(total[:, :, 0, :])  # (Bb, nc, H)
+
+    def step(S, inp):
+        S_l, dec = inp  # (Bb,H,P,N), (Bb,H)
+        S_in = S  # state entering this chunk
+        S = S * dec[..., None, None] + S_l
+        return S, S_in
+
+    S0 = (
+        initial_state
+        if initial_state is not None
+        else jnp.zeros((Bb, H, P, N), x.dtype)
+    )
+    S_final, S_ins = lax.scan(
+        step, S0, (jnp.moveaxis(S_loc, 1, 0), jnp.moveaxis(chunk_decay, 1, 0))
+    )
+    S_ins = jnp.moveaxis(S_ins, 0, 1)  # (Bb, nc, H, P, N) state at chunk start
+
+    # inter-chunk output: y_i += C_i · exp(seg_i) · S_in
+    y_inter = jnp.einsum("bkihn,bkih,bkhpn->bkihp", cq, jnp.exp(seg), S_ins)
+
+    y = (y_intra + y_inter).reshape(Bb, L, H, P)
+    return y, S_final

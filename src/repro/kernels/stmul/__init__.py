@@ -1,0 +1,1 @@
+from repro.kernels.stmul import ops, ref

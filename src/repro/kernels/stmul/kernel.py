@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: spectral grating multiply-accumulate (STHC hot spot).
+
+Computes, over flattened frequency bins f,
+
+    Ŷ[b, o, f] = Σ_c  X̂[b, c, f] · G[o, c, f]        (complex)
+
+with complex values carried as separate real/imag float planes (Pallas/TPU
+has no native complex vregs).  Per frequency bin this is a tiny (O×C)·(C)
+product; across a 128-lane frequency tile it is pure VPU elementwise work
+with a C-deep accumulation — exactly the dataflow of the optical
+diffraction, where every atomic 'pixel' (frequency bin) scatters all
+channels simultaneously.
+
+Tiling
+------
+grid = (B/bB, O/bO, F/bF); each program reads
+    x tile (bB, C, bF)  +  g tile (bO, C, bF)   → writes y tile (bB, bO, bF)
+with bF a multiple of 128 (lane width) and the C loop unrolled (C is the
+CNN input-channel count — small for the paper's workload).  VMEM per
+program ≈ (bB + bO)·C·bF·4B·2(planes) + bB·bO·bF·8B; defaults keep this
+≈ 2 MiB, well inside the ~16 MiB VMEM budget.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+# Default tile sizes (see VMEM budget above).
+BLOCK_B = 4
+BLOCK_O = 8
+BLOCK_F = 512  # lanes; multiple of 128
+
+
+def _stmul_kernel(xr_ref, xi_ref, gr_ref, gi_ref, yr_ref, yi_ref):
+    """One (bB, bO, bF) output tile; accumulate over the full C axis."""
+    xr = xr_ref[...]  # (bB, C, bF)
+    xi = xi_ref[...]
+    gr = gr_ref[...]  # (bO, C, bF)
+    gi = gi_ref[...]
+    # (bB, 1, C, bF) × (1, bO, C, bF) → sum over C → (bB, bO, bF).
+    # Complex product: (xr+ixi)(gr+igi).
+    yr = jnp.sum(xr[:, None] * gr[None] - xi[:, None] * gi[None], axis=2)
+    yi = jnp.sum(xr[:, None] * gi[None] + xi[:, None] * gr[None], axis=2)
+    yr_ref[...] = yr
+    yi_ref[...] = yi
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_b", "block_o", "block_f", "interpret")
+)
+def spectral_mac_pallas(
+    xr: Array,
+    xi: Array,
+    gr: Array,
+    gi: Array,
+    *,
+    block_b: int = BLOCK_B,
+    block_o: int = BLOCK_O,
+    block_f: int = BLOCK_F,
+    interpret: bool = False,
+) -> tuple[Array, Array]:
+    """Spectral MAC on real/imag planes.
+
+    Args:
+      xr, xi: (B, C, F) float32 — query spectrum planes.
+      gr, gi: (O, C, F) float32 — grating planes.
+
+    Returns (yr, yi): (B, O, F) float32.  F, B, O are padded to tile
+    multiples internally and cropped on return.
+    """
+    B, C, F = xr.shape
+    O = gr.shape[0]
+    bB = min(block_b, B)
+    bO = min(block_o, O)
+    bF = min(block_f, F)
+
+    def pad_to(a, axis, mult):
+        n = a.shape[axis]
+        rem = (-n) % mult
+        if rem == 0:
+            return a
+        widths = [(0, 0)] * a.ndim
+        widths[axis] = (0, rem)
+        return jnp.pad(a, widths)
+
+    xr_p = pad_to(pad_to(xr, 0, bB), 2, bF)
+    xi_p = pad_to(pad_to(xi, 0, bB), 2, bF)
+    gr_p = pad_to(pad_to(gr, 0, bO), 2, bF)
+    gi_p = pad_to(pad_to(gi, 0, bO), 2, bF)
+    Bp, _, Fp = xr_p.shape
+    Op = gr_p.shape[0]
+
+    grid = (Bp // bB, Op // bO, Fp // bF)
+    x_spec = pl.BlockSpec((bB, C, bF), lambda b, o, f: (b, 0, f))
+    g_spec = pl.BlockSpec((bO, C, bF), lambda b, o, f: (o, 0, f))
+    y_spec = pl.BlockSpec((bB, bO, bF), lambda b, o, f: (b, o, f))
+
+    yr, yi = pl.pallas_call(
+        _stmul_kernel,
+        grid=grid,
+        in_specs=[x_spec, x_spec, g_spec, g_spec],
+        out_specs=[y_spec, y_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bp, Op, Fp), xr.dtype),
+            jax.ShapeDtypeStruct((Bp, Op, Fp), xr.dtype),
+        ],
+        interpret=interpret,
+    )(xr_p, xi_p, gr_p, gi_p)
+    return yr[:B, :O, :F], yi[:B, :O, :F]

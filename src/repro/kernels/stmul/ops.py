@@ -1,0 +1,60 @@
+"""Jit'd public wrappers for the stmul Pallas kernel.
+
+``spectral_mac`` accepts/returns complex arrays with arbitrary trailing
+frequency axes and handles the real/imag split, frequency flattening and
+interpret-mode selection (interpret=True on CPU — the validation path in
+this container; compiled on real TPU).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.stmul import kernel as _kernel
+
+Array = jax.Array
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def spectral_mac(xhat: Array, grating: Array, **tile_kwargs) -> Array:
+    """Complex channel-contracted spectral product via the Pallas kernel.
+
+    Args:
+      xhat: (B, C, *F) complex; grating: (O, C, *F) complex.
+
+    Returns (B, O, *F) complex64.
+    """
+    fshape = xhat.shape[2:]
+    B, C = xhat.shape[:2]
+    O = grating.shape[0]
+    f = 1
+    for n in fshape:
+        f *= n
+    xf = xhat.reshape(B, C, f)
+    gf = grating.reshape(O, C, f)
+    yr, yi = _kernel.spectral_mac_pallas(
+        jnp.real(xf).astype(jnp.float32),
+        jnp.imag(xf).astype(jnp.float32),
+        jnp.real(gf).astype(jnp.float32),
+        jnp.imag(gf).astype(jnp.float32),
+        interpret=_use_interpret(),
+        **tile_kwargs,
+    )
+    return (yr + 1j * yi).reshape(B, O, *fshape)
+
+
+def query_grating_pallas(
+    x: Array,
+    grating: Array,
+    fft_shape: tuple[int, int, int],
+    out_shape: tuple[int, int, int],
+) -> Array:
+    """Drop-in replacement for spectral_conv.query_grating using the kernel."""
+    xhat = jnp.fft.rfftn(x, s=fft_shape, axes=(-3, -2, -1))
+    yhat = spectral_mac(xhat, grating)
+    y = jnp.fft.irfftn(yhat, s=fft_shape, axes=(-3, -2, -1))
+    return y[..., : out_shape[0], : out_shape[1], : out_shape[2]]

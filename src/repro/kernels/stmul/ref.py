@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the spectral grating multiply-accumulate.
+
+The STHC 'diffraction' step: the query spectrum X̂ is multiplied pointwise
+by the stored grating G and summed over input channels,
+
+    Ŷ[b, o, f] = Σ_c  X̂[b, c, f] · G[o, c, f]        (complex)
+
+over every 3-D frequency bin f.  This is the hot inner op of the spectral
+correlator — everything else in the query path is FFTs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def spectral_mac_ref(xhat: Array, grating: Array) -> Array:
+    """Complex channel-contracted spectral product.
+
+    Args:
+      xhat: (B, C, *F) complex query spectra.
+      grating: (O, C, *F) complex grating.
+
+    Returns (B, O, *F) complex.
+    """
+    return jnp.einsum("bc...,oc...->bo...", xhat, grating)
+
+
+def spectral_mac_ref_realimag(
+    xr: Array, xi: Array, gr: Array, gi: Array
+) -> tuple[Array, Array]:
+    """Same contraction on split real/imag parts (the kernel's layout).
+
+    (xr + i·xi)(gr + i·gi) = (xr·gr − xi·gi) + i(xr·gi + xi·gr)
+    """
+    yr = jnp.einsum("bcf,ocf->bof", xr, gr) - jnp.einsum("bcf,ocf->bof", xi, gi)
+    yi = jnp.einsum("bcf,ocf->bof", xr, gi) + jnp.einsum("bcf,ocf->bof", xi, gr)
+    return yr, yi

@@ -1,0 +1,295 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this entrypoint:
+
+  1. builds the production mesh (16×16 single-pod or 2×16×16 multi-pod),
+  2. resolves logical-axis shardings for params / optimizer / cache / data,
+  3. ``jax.jit(step, in_shardings, out_shardings, donate...)``
+     ``.lower(**ShapeDtypeStructs).compile()``  — no allocation anywhere,
+  4. records memory_analysis(), cost_analysis(), the collective schedule
+     parsed from the compiled HLO, and the §Roofline three-term analysis,
+  5. writes one JSON record under experiments/dryrun/.
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-8b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both
+  python -m repro.launch.dryrun --arch llama3-405b --shape train_4k \
+      --variant remat=dots,accum=32          # perf hillclimb variants
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro import configs
+from repro.distributed import sharding as shd
+from repro.launch import mesh as mesh_lib
+from repro.launch import roofline, specs
+from repro.models import model_api
+from repro.optim import adamw
+
+
+def _shardings(mesh, rules, sds_tree, axes_tree):
+    return shd.tree_shardings(sds_tree, axes_tree, rules, mesh)
+
+
+def _apply_variant(cfg, variant: str):
+    """Parse 'key=val,key=val' hillclimb variants into config overrides."""
+    extras = {"accum": None, "gshard": False, "gdtype": jnp.float32}
+    if not variant or variant == "baseline":
+        return cfg, extras
+    overrides = {}
+    for kv in variant.split(","):
+        k, v = kv.split("=")
+        if k == "remat":
+            overrides["remat_policy"] = v
+        elif k == "accum":
+            extras["accum"] = int(v)
+        elif k == "gshard":
+            extras["gshard"] = bool(int(v))
+        elif k == "gdtype":
+            extras["gdtype"] = {"bf16": jnp.bfloat16, "f32": jnp.float32}[v]
+        elif k == "wgather":
+            overrides["fsdp_gather_weights"] = bool(int(v))
+        elif k == "lean":
+            overrides["lean_softmax"] = bool(int(v))
+        elif k == "seqshard":
+            overrides["seq_shard"] = bool(int(v))
+        elif k == "seqgather":
+            overrides["seq_gather_entry"] = bool(int(v))
+        elif k == "block_k":
+            overrides["block_k"] = int(v)
+        elif k == "chunk":
+            overrides["chunk"] = int(v)
+        elif k == "group":
+            overrides["router_group"] = int(v)
+        elif k == "capacity":
+            overrides["capacity_factor"] = float(v)
+        else:
+            raise ValueError(f"unknown variant key {k!r}")
+    return dataclasses.replace(cfg, **overrides), extras
+
+
+def run_cell(
+    arch: str,
+    shape: str,
+    multi_pod: bool,
+    variant: str = "baseline",
+    out_dir: str = "experiments/dryrun",
+) -> dict:
+    t0 = time.time()
+    cfg = configs.get_config(arch)
+    cfg, extras = _apply_variant(cfg, variant)
+    ok, why = specs.shape_applicable(cfg, shape)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    record = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": mesh_name,
+        "variant": variant,
+        "status": "skipped" if not ok else "pending",
+    }
+    if not ok:
+        record["skip_reason"] = why
+        _write(record, out_dir)
+        return record
+
+    info = specs.SHAPES[shape]
+    mode = info["mode"]
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    rules = shd.make_rules(mode, multi_pod=multi_pod)
+
+    params_sds, param_axes = specs.params_specs(cfg)
+    p_sh = _shardings(mesh, rules, params_sds, param_axes)
+    batch_sds = specs.input_specs(cfg, shape)
+    b_axes = specs.batch_logical_axes(cfg, shape)
+    b_sh = {
+        k: NamedSharding(mesh, shd.spec_for(v.shape, b_axes[k], rules, mesh))
+        for k, v in batch_sds.items()
+    }
+
+    n_tokens = info["global_batch"] * (
+        info["seq_len"] if mode != "decode" else 1
+    )
+    model_flops = model_api.model_flops_per_token(cfg, train=(mode == "train"))
+    model_flops_total = model_flops * n_tokens
+
+    with mesh, shd.activate(mesh, rules):
+        if mode == "train":
+            opt_cfg = adamw.AdamWConfig(
+                state_dtype=jnp.bfloat16
+                if arch in ("llama3-405b", "arctic-480b")
+                else jnp.float32
+            )
+            n_micro = extras["accum"] or specs.GRAD_ACCUM.get(arch, 1)
+            # each microbatch must stay divisible by the DP degree, or the
+            # batch dim silently de-shards and every chip does 2× work
+            # (found via the multi-pod llama3 cell — see EXPERIMENTS §Perf)
+            dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+            n_micro = min(n_micro, max(info["global_batch"] // dp, 1))
+            g_sh = p_sh if extras["gshard"] else None
+            step = specs.make_train_step(
+                cfg, opt_cfg, n_micro=n_micro, grad_shardings=g_sh,
+                grad_dtype=extras["gdtype"],
+            )
+            opt_sds = specs.opt_specs(opt_cfg, params_sds)
+            o_sh = _shardings(
+                mesh, rules, opt_sds, specs.opt_logical_axes(param_axes)
+            )
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_sh, o_sh, b_sh),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(params_sds, opt_sds, batch_sds)
+            record["n_micro"] = n_micro
+        elif mode == "prefill":
+            step = specs.make_serve_step(cfg, shape)
+            jitted = jax.jit(step, in_shardings=(p_sh, b_sh))
+            lowered = jitted.lower(params_sds, batch_sds)
+        else:  # decode
+            cache_sds, cache_axes = specs.decode_cache_specs(cfg, shape)
+            c_sh = _shardings(mesh, rules, cache_sds, cache_axes)
+            step = specs.make_serve_step(cfg, shape)
+            jitted = jax.jit(
+                step, in_shardings=(p_sh, c_sh, b_sh["tokens"]),
+                donate_argnums=(1,),
+            )
+            lowered = jitted.lower(params_sds, cache_sds, batch_sds["tokens"])
+
+        t_lower = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time()
+
+    # ---- analysis -------------------------------------------------------
+    try:
+        mem = compiled.memory_analysis()
+        record["memory_analysis"] = {
+            k: int(getattr(mem, k))
+            for k in (
+                "argument_size_in_bytes",
+                "output_size_in_bytes",
+                "temp_size_in_bytes",
+                "generated_code_size_in_bytes",
+            )
+            if hasattr(mem, k)
+        }
+    except Exception as e:  # CPU backend may not implement it
+        record["memory_analysis"] = {"error": str(e)}
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+    except Exception as e:
+        cost = {}
+        record["cost_error"] = str(e)
+    hlo = compiled.as_text()
+    rl = roofline.analyze(cost, hlo, n_chips, model_flops_total)
+    record["xla_cost_analysis"] = {
+        k: float(cost[k]) for k in ("flops", "bytes accessed") if k in cost
+    }
+    from repro.launch import hlo_analysis
+
+    prof = hlo_analysis.analyze_hlo(hlo)
+    record["profile_top_flops"] = dict(
+        sorted(prof.op_flops.items(), key=lambda kv: -kv[1])[:10]
+    )
+    record["profile_top_bytes"] = dict(
+        sorted(prof.op_bytes.items(), key=lambda kv: -kv[1])[:10]
+    )
+    record.update(
+        status="ok",
+        n_chips=n_chips,
+        seq_len=info["seq_len"],
+        global_batch=info["global_batch"],
+        mode=mode,
+        params=int(cfg.num_params()),
+        active_params=int(
+            cfg.active_params() if hasattr(cfg, "active_params") else cfg.num_params()
+        ),
+        lower_s=round(t_lower - t0, 2),
+        compile_s=round(t_compile - t_lower, 2),
+        roofline=rl.to_json(),
+        hlo_bytes=len(hlo),
+    )
+    # per-device param/cache byte estimates (for the fits-in-HBM check)
+    record["roofline"]["bottleneck_s"] = max(
+        rl.compute_s, rl.memory_s, rl.collective_s
+    )
+    _write(record, out_dir)
+    return record
+
+
+def _write(record: dict, out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    name = "{arch}__{shape}__{mesh}__{variant}.json".format(**record)
+    with open(os.path.join(out_dir, name), "w") as f:
+        json.dump(record, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = configs.arch_names() if args.all or not args.arch else [args.arch]
+    shapes = list(specs.SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch} × {shape} × {'2x16x16' if mp else '16x16'}"
+                mesh_name = "pod2x16x16" if mp else "pod16x16"
+                path = os.path.join(
+                    args.out,
+                    f"{arch}__{shape}__{mesh_name}__{args.variant}.json",
+                )
+                if args.skip_existing and os.path.exists(path):
+                    try:
+                        if json.load(open(path)).get("status") in ("ok", "skipped"):
+                            print(f"[cached] {tag}", flush=True)
+                            continue
+                    except Exception:
+                        pass
+                try:
+                    rec = run_cell(arch, shape, mp, args.variant, args.out)
+                    if rec["status"] == "ok":
+                        rl = rec["roofline"]
+                        print(
+                            f"[ok] {tag}: bottleneck={rl['bottleneck']} "
+                            f"({rl['bottleneck_s']:.4f}s) compile={rec['compile_s']}s",
+                            flush=True,
+                        )
+                    else:
+                        print(f"[skip] {tag}: {rec['skip_reason']}", flush=True)
+                except Exception:
+                    failures += 1
+                    print(f"[FAIL] {tag}\n{traceback.format_exc()}", flush=True)
+    if failures:
+        raise SystemExit(f"{failures} dry-run cells failed")
+
+
+if __name__ == "__main__":
+    main()

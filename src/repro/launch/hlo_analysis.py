@@ -1,0 +1,453 @@
+"""Static analysis of compiled (post-SPMD) HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE — a
+scanned 126-layer model reports ~1 layer of FLOPs.  This analyzer parses
+the HLO text into computations with per-computation symbol tables,
+recurses through calls/fusions/whiles, multiplies loop bodies by their
+trip counts (parsed from the loop-condition's comparison constant —
+exact for `lax.scan`-lowered loops), and produces:
+
+  * flops           — dot/conv/fft + cheap-elementwise FLOPs, per device
+  * hbm_bytes       — Σ (operand + result bytes) over materialized
+                      instructions (post-fusion buffers ≈ HBM traffic)
+  * collective wire bytes by kind (traffic model in roofline.py docstring)
+  * a per-opcode breakdown (the dry-run 'profile' used by §Perf)
+
+Scope/approximations (documented, consistent across variants — which is
+what hillclimbing needs):
+  - dot FLOPs are exact (2 × result elems × contraction length);
+  - elementwise FLOPs ≈ result element count;
+  - fusion-internal buffers are not HBM traffic (correct post-fusion);
+  - while trip count falls back to 1 when no constant bound is found;
+  - slice/gather/dynamic-update bytes count the slice, not the source.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "u4": 1,
+    "s4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s*([\w\-]+)\((.*)$"
+)
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_CALLEE_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shapes_in(text: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype in _DTYPE_BYTES:
+            out.append((dtype, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _bytes_of(type_text: str) -> int:
+    total = 0
+    for dtype, dims in _shapes_in(type_text):
+        total += math.prod(dims) * _DTYPE_BYTES[dtype] if dims else _DTYPE_BYTES[
+            dtype
+        ]
+    return total
+
+
+def _elems_of(type_text: str) -> int:
+    total = 0
+    for _, dims in _shapes_in(type_text):
+        total += math.prod(dims) if dims else 1
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    result_type: str
+    opcode: str
+    rest: str  # everything after the opening paren
+
+    @property
+    def args(self) -> str:
+        """Operand list text (up to the first closing paren)."""
+        return self.rest.split(")")[0]
+
+    def operand_names(self) -> list[str]:
+        return _OPERAND_RE.findall(self.args)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list[Instr]
+    symtab: dict[str, str]  # instr name -> result type text
+
+
+def parse_computations(hlo: str) -> tuple[dict[str, Computation], str | None]:
+    comps: dict[str, Computation] = {}
+    entry = None
+    cur: Computation | None = None
+    for line in hlo.splitlines():
+        if cur is None:
+            m = _COMP_HDR_RE.match(line)
+            if m:
+                cur = Computation(m.group(2), [], {})
+                if m.group(1):
+                    entry = m.group(2)
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            ins = Instr(m.group(1), m.group(2), m.group(3), m.group(4))
+            cur.instrs.append(ins)
+            cur.symtab[ins.name] = ins.result_type
+    return comps, entry
+
+
+def _operand_bytes(ins: Instr, comp: Computation) -> int:
+    total = 0
+    for name in ins.operand_names():
+        t = comp.symtab.get(name)
+        if t:
+            total += _bytes_of(t)
+    return total
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    """2 × result elems × contraction length (from the lhs operand type)."""
+    ops = ins.operand_names()
+    if not ops:
+        return 0.0
+    lhs_t = comp.symtab.get(ops[0], "")
+    shapes = _shapes_in(lhs_t)
+    if not shapes:
+        return 0.0
+    lhs_dims = shapes[0][1]
+    mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rest)
+    k = 1
+    if mc:
+        for idx in mc.group(1).split(","):
+            if idx and int(idx) < len(lhs_dims):
+                k *= lhs_dims[int(idx)]
+    return 2.0 * _elems_of(ins.result_type) * k
+
+
+def _fusion_root(callee: Computation) -> Instr | None:
+    return callee.instrs[-1] if callee.instrs else None
+
+
+def _resolve_through_converts(callee: Computation, ins: Instr) -> Instr:
+    """Follow convert/bitcast chains back to the producing instruction."""
+    seen = 0
+    cur = ins
+    by_name = {i.name: i for i in callee.instrs}
+    while cur.opcode in ("convert", "bitcast", "copy") and seen < 8:
+        ops = cur.operand_names()
+        if not ops or ops[0] not in by_name:
+            break
+        cur = by_name[ops[0]]
+        seen += 1
+    return cur
+
+
+def _dus_root_update_bytes(callee: Computation) -> int | None:
+    """If the fusion computes `buffer = DUS(buffer, update, idx)` (possibly
+    behind converts), the in-place traffic is the update window — return
+    its bytes; None if the root isn't a DUS chain."""
+    root = _fusion_root(callee)
+    if root is None:
+        return None
+    real = _resolve_through_converts(callee, root)
+    if real.opcode != "dynamic-update-slice":
+        return None
+    ops = real.operand_names()
+    if len(ops) < 2:
+        return None
+    upd = callee.symtab.get(ops[1], "")
+    return 2 * _bytes_of(upd) if upd else None
+
+
+def _fusion_operand_bytes(callee: Computation, ins: Instr, comp: Computation) -> int:
+    """Actual bytes a fusion reads from each operand.
+
+    A scan-body fusion takes the full stacked (L, ...) weight array as an
+    operand but only *reads one layer's slice* per iteration — counting
+    the whole operand would overstate HBM traffic by ~L×.  For each fused
+    parameter whose only consumers are slice-type ops, count the slice
+    result bytes; otherwise count the full operand.
+    """
+    operands = ins.operand_names()
+    # parameter index -> instr name in callee
+    param_names: dict[int, str] = {}
+    for cin in callee.instrs:
+        if cin.opcode == "parameter":
+            mi = re.match(r"(\d+)", cin.rest)
+            if mi:
+                param_names[int(mi.group(1))] = cin.name
+    total = 0
+    for i, op_name in enumerate(operands):
+        full = _bytes_of(comp.symtab.get(op_name, ""))
+        pname = param_names.get(i)
+        if pname is None:
+            total += full
+            continue
+        consumers = [
+            cin
+            for cin in callee.instrs
+            if pname in cin.operand_names() and cin.opcode != "parameter"
+        ]
+        # slice-local access pattern: pure slices, or the GSPMD sharded-dim
+        # dynamic-update-slice expansion (slice + select/convert on CPU —
+        # shard-local window updates on TPU).
+        aux_ok = {"select", "convert", "copy", "bitcast"}
+        slice_like = (
+            consumers
+            and any(c.opcode in _SLICE_OPS for c in consumers)
+            and all(c.opcode in _SLICE_OPS or c.opcode in aux_ok
+                    for c in consumers)
+        )
+        if slice_like:
+            sliced = 0
+            for c in consumers:
+                if c.opcode == "dynamic-update-slice":
+                    # in-place update: traffic = the update slice (operand 1)
+                    ops_c = c.operand_names()
+                    upd = callee.symtab.get(ops_c[1], "") if len(ops_c) > 1 else ""
+                    sliced += _bytes_of(upd) or _bytes_of(c.result_type)
+                elif c.opcode in _SLICE_OPS:
+                    sliced += _bytes_of(c.result_type)
+                # select/convert/copy consumers of the DUS pattern: no cost
+            total += min(sliced, full)
+        else:
+            total += full
+    return total
+
+
+def _only_consumer_is_bf16_convert(comp: Computation, ins: Instr) -> bool:
+    """True if every same-computation consumer of `ins` casts it to a
+    16-bit type (directly or via a convert-only fusion)."""
+    consumers = [
+        c for c in comp.instrs if ins.name in c.operand_names() and c is not ins
+    ]
+    if not consumers:
+        return False
+    for c in consumers:
+        if c.opcode == "convert" and ("bf16[" in c.result_type or
+                                      "f16[" in c.result_type):
+            continue
+        if c.opcode in ("tuple", "get-tuple-element", "bitcast"):
+            continue
+        return False
+    return True
+
+
+def _trip_count(cond: Computation) -> int:
+    best = 1
+    for ins in cond.instrs:
+        if ins.opcode == "constant":
+            m = re.match(r"(\d+)", ins.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+@dataclasses.dataclass
+class Analysis:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: dict = dataclasses.field(default_factory=dict)
+    collective_counts: dict = dataclasses.field(default_factory=dict)
+    op_flops: dict = dataclasses.field(default_factory=dict)
+    op_bytes: dict = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Analysis", mult: float = 1.0,
+            bytes_too: bool = True) -> None:
+        self.flops += other.flops * mult
+        if bytes_too:
+            self.hbm_bytes += other.hbm_bytes * mult
+        pairs = [
+            (self.collective_bytes, other.collective_bytes),
+            (self.collective_counts, other.collective_counts),
+            (self.op_flops, other.op_flops),
+        ]
+        if bytes_too:
+            pairs.append((self.op_bytes, other.op_bytes))
+        for d_self, d_o in pairs:
+            for k, v in d_o.items():
+                d_self[k] = d_self.get(k, 0.0) + v * mult
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+_ZERO_COST = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "copy-start", "copy-done",
+    "iota",
+    # XLA:CPU rewrites bf16 dots as convert(bf16→f32)+f32-dot and hoists
+    # the converts; on TPU bf16 dots are native MXU ops and these converts
+    # do not exist.  Excluding them models the TPU memory behavior.
+    "convert",
+}
+
+_CONVERT_ONLY = {"parameter", "convert", "bitcast", "reshape", "constant"}
+
+
+def _is_convert_fusion(callee: Computation) -> bool:
+    return all(i.opcode in _CONVERT_ONLY for i in callee.instrs)
+_SLICE_OPS = ("dynamic-slice", "gather", "dynamic-update-slice", "slice",
+              "scatter", "pad")
+
+
+def analyze_computation(
+    comps: dict[str, Computation],
+    name: str,
+    memo: dict[str, Analysis],
+) -> Analysis:
+    if name in memo:
+        return memo[name]
+    memo[name] = Analysis()  # cycle guard
+    comp = comps.get(name)
+    if comp is None:
+        return memo[name]
+    a = Analysis()
+    for ins in comp.instrs:
+        op = ins.opcode
+        base = op.replace("-start", "")
+        if base in COLLECTIVES and not op.endswith("-done"):
+            rb = _bytes_of(ins.result_type)
+            if base == "all-reduce":
+                # XLA:CPU float-normalizes bf16 dots to f32, so the TP
+                # all-reduce runs at f32 here; on TPU it is native bf16.
+                # Detect the f32-AR → convert-to-bf16 pattern and count
+                # the TPU wire width.
+                if "f32[" in ins.result_type and _only_consumer_is_bf16_convert(
+                    comp, ins
+                ):
+                    rb //= 2
+                wire = 2 * rb
+            elif base == "reduce-scatter":
+                wire = _operand_bytes(ins, comp) or rb
+            else:
+                wire = rb
+            a.collective_bytes[base] = a.collective_bytes.get(base, 0.0) + wire
+            a.collective_counts[base] = a.collective_counts.get(base, 0.0) + 1
+            a.hbm_bytes += rb
+            a.op_bytes[base] = a.op_bytes.get(base, 0.0) + rb
+            continue
+        if op == "while":
+            mb = re.search(r"body=%?([\w.\-]+)", ins.rest)
+            mcnd = re.search(r"condition=%?([\w.\-]+)", ins.rest)
+            body = mb.group(1) if mb else ""
+            trips = 1
+            if mcnd and mcnd.group(1) in comps:
+                trips = _trip_count(comps[mcnd.group(1)])
+            if body in comps:
+                a.add(analyze_computation(comps, body, memo), mult=max(trips, 1))
+            continue
+        if op == "conditional":
+            for mbr in re.finditer(
+                r"(?:true_computation|false_computation)=%?([\w.\-]+)", ins.rest
+            ):
+                if mbr.group(1) in comps:
+                    a.add(analyze_computation(comps, mbr.group(1), memo))
+            continue
+        if op in ("fusion", "call", "async-start"):
+            m = _CALLEE_RE.search(ins.rest)
+            callee = m.group(1) if m else None
+            if callee in comps:
+                if _is_convert_fusion(comps[callee]):
+                    continue  # backend dtype-convert artifact (see _ZERO_COST)
+                inner = analyze_computation(comps, callee, memo)
+                # fusion internals: FLOPs + collectives yes, bytes no
+                a.add(inner, bytes_too=False)
+                dus_bytes = _dus_root_update_bytes(comps[callee])
+                if dus_bytes is not None:
+                    # in-place buffer update fusion: traffic = the window,
+                    # plus whatever non-buffer operands it actually reads.
+                    a.hbm_bytes += dus_bytes
+                    a.op_bytes[op] = a.op_bytes.get(op, 0.0) + dus_bytes
+                    continue
+                ob = _fusion_operand_bytes(comps[callee], ins, comp)
+            else:
+                ob = _operand_bytes(ins, comp)
+            rb = _bytes_of(ins.result_type)
+            a.hbm_bytes += rb + ob
+            a.op_bytes[op] = a.op_bytes.get(op, 0.0) + rb + ob
+            continue
+        if op == "dot":
+            f = _dot_flops(ins, comp)
+            a.flops += f
+            a.op_flops["dot"] = a.op_flops.get("dot", 0.0) + f
+            b = _bytes_of(ins.result_type) + _operand_bytes(ins, comp)
+            a.hbm_bytes += b
+            a.op_bytes["dot"] = a.op_bytes.get("dot", 0.0) + b
+            continue
+        if op == "convolution":
+            re_elems = _elems_of(ins.result_type)
+            ops = ins.operand_names()
+            kelems = 1
+            if len(ops) > 1:
+                kt = comp.symtab.get(ops[1], "")
+                ksh = _shapes_in(kt)
+                if ksh:
+                    # taps per output = kernel elems / out-channel dim (last)
+                    kelems = max(1, math.prod(ksh[0][1]) // max(ksh[0][1][-1], 1))
+            f = 2.0 * re_elems * kelems
+            a.flops += f
+            a.op_flops["convolution"] = a.op_flops.get("convolution", 0.0) + f
+            b = _bytes_of(ins.result_type) + _operand_bytes(ins, comp)
+            a.hbm_bytes += b
+            a.op_bytes["convolution"] = a.op_bytes.get("convolution", 0.0) + b
+            continue
+        if op == "fft":
+            n = _elems_of(ins.result_type)
+            f = 5.0 * n * math.log2(max(n, 2))
+            a.flops += f
+            a.op_flops["fft"] = a.op_flops.get("fft", 0.0) + f
+            a.hbm_bytes += 2 * _bytes_of(ins.result_type)
+            continue
+        if op in _ZERO_COST:
+            continue
+        # generic elementwise / data movement
+        elems = _elems_of(ins.result_type)
+        a.flops += elems
+        a.op_flops[op] = a.op_flops.get(op, 0.0) + elems
+        rb = _bytes_of(ins.result_type)
+        if op == "dynamic-update-slice":
+            ops_n = ins.operand_names()
+            upd = comp.symtab.get(ops_n[1], "") if len(ops_n) > 1 else ""
+            b = 2 * (_bytes_of(upd) or rb)  # in-place: read+write the slice
+        elif op in _SLICE_OPS:
+            b = 2 * rb
+        else:
+            b = rb + _operand_bytes(ins, comp)
+        a.hbm_bytes += b
+        a.op_bytes[op] = a.op_bytes.get(op, 0.0) + b
+    memo[name] = a
+    return a
+
+
+def analyze_hlo(hlo: str) -> Analysis:
+    comps, entry = parse_computations(hlo)
+    if entry is None and comps:
+        entry = max(comps, key=lambda c: len(comps[c].instrs))
+    memo: dict[str, Analysis] = {}
+    return analyze_computation(comps, entry, memo) if entry else Analysis()

@@ -1,0 +1,43 @@
+"""Production meshes.
+
+Everything is a FUNCTION — importing this module never touches jax device
+state (jax locks the backend/device count on first use, and the dry-run
+must set XLA_FLAGS before that happens).
+
+  single pod : (data=16, model=16)            — 256 chips (one v5e pod)
+  multi-pod  : (pod=2, data=16, model=16)     — 512 chips across 2 pods
+
+The `pod` axis composes with `data` for pure cross-pod DP (the default
+rules map logical 'batch' → ('pod', 'data')); the TP/EP axis never
+crosses a pod boundary, keeping all-to-all / all-gather traffic on
+intra-pod ICI and only DP all-reduce on the inter-pod links — the
+standard multi-pod layout.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devices)} — the "
+            "dry-run entrypoint must set XLA_FLAGS="
+            '"--xla_force_host_platform_device_count=512" before importing jax'
+        )
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def make_local_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Tiny mesh for CPU tests (1..8 host devices)."""
+    n = data * model
+    return jax.make_mesh((data, model), ("data", "model"),
+                         devices=jax.devices()[:n])

@@ -1,0 +1,158 @@
+"""Roofline analysis from compiled dry-run artifacts (no hardware).
+
+Three terms per (arch × shape × mesh), all in seconds-per-step:
+
+  compute    = HLO_FLOPs_per_device        / peak_FLOP/s        (197e12 bf16)
+  memory     = HLO_bytes_per_device        / HBM_bandwidth      (819e9 B/s)
+  collective = collective_bytes_per_device / ICI_link_bandwidth (50e9 B/s)
+
+`cost_analysis()` of the SPMD-partitioned executable is already
+per-device.  Collective bytes are NOT in cost_analysis — we parse the
+compiled HLO text and sum the wire bytes of every collective op with a
+per-op traffic model:
+
+  all-gather          : result bytes (each device receives the gathered array)
+  reduce-scatter      : summed operand bytes (each device sends its input)
+  all-reduce          : 2 × result bytes (ring: reduce-scatter + all-gather)
+  all-to-all          : result bytes
+  collective-permute  : result bytes
+
+Async pairs (`*-start` / `*-done`) are counted once, on the start op.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+# TPU v5e constants (per chip) — supplied by the assignment.
+PEAK_FLOPS_BF16 = 197e12
+HBM_BW = 819e9
+ICI_LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\(?[^=]*?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(",
+)
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum bytes over every dtype[dims] occurrence in a type string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict[str, int]
+    bytes_by_kind: dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    counts: dict[str, int] = {}
+    byts: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.match(line)
+        if not m:
+            continue
+        result_type, kind, startdone = m.group(1), m.group(2), m.group(3)
+        if startdone == "-done":
+            continue  # counted at -start
+        result_bytes = _shape_bytes(result_type)
+        if kind == "all-reduce":
+            wire = 2 * result_bytes
+        elif kind == "reduce-scatter":
+            # each device sends its full operand; operand ≈ result × shards.
+            # The operand types appear in the arg list on the same line:
+            args = line.split("(", 1)[1]
+            wire = _shape_bytes(args) or result_bytes
+        else:
+            wire = result_bytes
+        counts[kind] = counts.get(kind, 0) + 1
+        byts[kind] = byts.get(kind, 0) + wire
+    return CollectiveStats(counts, byts)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float  # per device per step
+    hbm_bytes: float
+    collective_bytes: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float  # 6·N·D (or 2·N·D serve) across the whole job
+    useful_flops_ratio: float  # MODEL_FLOPS / (HLO_FLOPs × chips)
+    collective_counts: dict[str, int]
+    collective_bytes_by_kind: dict[str, int]
+
+    def to_json(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def analyze(
+    cost: dict,
+    hlo_text: str,
+    n_chips: int,
+    model_flops_total: float,
+) -> Roofline:
+    """Build the 3-term roofline from compiled artifacts.
+
+    FLOPs / bytes / collective wire bytes come from the trip-count-aware
+    HLO analyzer (launch/hlo_analysis.py) — XLA's own cost_analysis counts
+    while-loop (scan) bodies once and is kept only as a cross-check field.
+    model_flops_total: 6·N·D-style job-level useful FLOPs for this step.
+    """
+    from repro.launch import hlo_analysis
+
+    a = hlo_analysis.analyze_hlo(hlo_text)
+    flops = a.flops
+    hbm = a.hbm_bytes
+    compute_s = flops / PEAK_FLOPS_BF16
+    memory_s = hbm / HBM_BW
+    collective_s = a.total_collective_bytes / ICI_LINK_BW
+    terms = {
+        "compute": compute_s,
+        "memory": memory_s,
+        "collective": collective_s,
+    }
+    bottleneck = max(terms, key=terms.get)
+    hlo_total = flops * n_chips
+    ratio = model_flops_total / hlo_total if hlo_total else 0.0
+    return Roofline(
+        flops=flops,
+        hbm_bytes=hbm,
+        collective_bytes=float(a.total_collective_bytes),
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        bottleneck=bottleneck,
+        model_flops=model_flops_total,
+        useful_flops_ratio=ratio,
+        collective_counts={k: int(v) for k, v in a.collective_counts.items()},
+        collective_bytes_by_kind={
+            k: int(v) for k, v in a.collective_bytes.items()
+        },
+    )

@@ -1,0 +1,188 @@
+"""Serving drivers.
+
+Two serving modes, matching the paper's system and the LM zoo:
+
+1. **STHC video event search** (`VideoSearchServer`) — the paper's
+   deployment: kernels (reference events) are *recorded once* into the
+   grating; long query streams are pushed through the coherence-window
+   segmentation (= overlap-save), producing correlation feature maps /
+   detections per window.  Batching across concurrent streams is free
+   parallelism (the optical system's massive spatial multiplexing).
+
+2. **LM serving** (`LMServer`) — prefill + decode with the uniform cache
+   API; used by the serve smoke tests and the decode dry-run shapes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core import atomic, hybrid, spectral_conv
+from repro.core.sthc import STHC, STHCConfig
+from repro.models import model_api
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# STHC video search serving
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class VideoSearchConfig:
+    window_frames: int = 64  # coherence window T2 (frames)
+    mode: str = "ideal"  # STHC fidelity
+    physical: bool = False
+
+
+class VideoSearchServer:
+    """Record reference kernels once; stream queries through overlap-save.
+
+    The grating is the server's 'loaded model'; query throughput is
+    bounded by the frame-loading rate (`core.throughput`), not by the
+    correlation itself.
+    """
+
+    def __init__(
+        self,
+        kernels: jax.Array,  # (O, C, kh, kw, kt) trained/reference events
+        frame_hw: tuple[int, int],
+        cfg: VideoSearchConfig = VideoSearchConfig(),
+    ):
+        self.cfg = cfg
+        self.kernels = kernels
+        self.kt = kernels.shape[-1]
+        if cfg.window_frames <= self.kt - 1:
+            raise ValueError("coherence window must exceed kernel length")
+        self._correlate = jax.jit(self._correlate_impl)
+
+    def _correlate_impl(self, clip: jax.Array) -> jax.Array:
+        return spectral_conv.overlap_save_time(
+            clip, self.kernels, block_t=self.cfg.window_frames
+        )
+
+    def search(self, clip: jax.Array) -> dict:
+        """clip: (B, C, H, W, T) long stream.  Returns detections.
+
+        Detection = per-kernel max correlation over space-time + argmax
+        frame (the photon-echo peak position in the window).
+        """
+        t0 = time.time()
+        fmap = self._correlate(clip)  # (B, O, H', W', T')
+        B, O = fmap.shape[:2]
+        flat = fmap.reshape(B, O, -1)
+        peak = jnp.max(flat, axis=-1)
+        idx = jnp.argmax(flat, axis=-1)
+        t_idx = idx % fmap.shape[-1]
+        return {
+            "scores": np.asarray(peak),
+            "peak_frame": np.asarray(t_idx),
+            "latency_s": time.time() - t0,
+            "windows": len(
+                atomic.segment_database(
+                    clip.shape[-1], self.cfg.window_frames, self.kt
+                )
+            ),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Hybrid classifier serving (paper §4: conv optical, head digital)
+# ---------------------------------------------------------------------------
+
+
+class HybridClassifierServer:
+    """Serve the trained hybrid 3-D CNN with the STHC conv backend."""
+
+    def __init__(self, params: PyTree, cfg: hybrid.HybridConfig,
+                 physical: bool = True):
+        self.cfg = cfg
+        mode = "physical" if physical else "ideal"
+        self.sthc = STHC(STHCConfig(mode=mode))
+        # record once: the kernels live in the atomic medium
+        self.grating = self.sthc.record(
+            params["conv_w"], (cfg.height, cfg.width, cfg.frames)
+        )
+        self.params = params
+        self._head = jax.jit(self._head_impl)
+
+    def _head_impl(self, conv_out: jax.Array) -> jax.Array:
+        p, cfg = self.params, self.cfg
+        y = conv_out + p["conv_b"][None, :, None, None, None]
+        y = jax.nn.relu(y)
+        y = hybrid.max_pool3d(y, cfg.pool_window)
+        y = y.reshape(y.shape[0], -1)
+        y = jax.nn.relu(y @ p["fc1_w"] + p["fc1_b"])
+        return y @ p["fc2_w"] + p["fc2_b"]
+
+    def classify(self, clips: jax.Array) -> np.ndarray:
+        conv = self.sthc.correlate(self.grating, clips)  # optical layer
+        logits = self._head(conv)  # digital layers
+        return np.asarray(jnp.argmax(logits, axis=-1))
+
+
+# ---------------------------------------------------------------------------
+# LM serving
+# ---------------------------------------------------------------------------
+
+
+class LMServer:
+    def __init__(self, cfg, params: PyTree, max_len: int = 128):
+        self.cfg = cfg
+        self.mod = model_api.get_model(cfg)
+        self.params = params
+        self.max_len = max_len
+        self._decode = jax.jit(
+            lambda p, c, t: self.mod.decode_step(cfg, p, c, t),
+            donate_argnums=(1,),
+        )
+
+    def generate(self, prompts: jax.Array, n_tokens: int) -> np.ndarray:
+        """Greedy generation.  prompts: (B, S) int32."""
+        logits, cache = self.mod.prefill(
+            self.cfg, self.params, prompts, max_len=self.max_len
+        )
+        out = [jnp.argmax(logits, -1)[:, None]]
+        for _ in range(n_tokens - 1):
+            logits, cache = self._decode(self.params, cache, out[-1])
+            out.append(jnp.argmax(logits, -1)[:, None])
+        return np.asarray(jnp.concatenate(out, axis=1))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=["video", "lm"], default="video")
+    ap.add_argument("--frames", type=int, default=256)
+    args = ap.parse_args()
+    if args.mode == "video":
+        rng = np.random.RandomState(0)
+        kernels = jnp.asarray(rng.randn(4, 1, 12, 16, 8).astype(np.float32))
+        server = VideoSearchServer(kernels, (24, 32))
+        clip = jnp.asarray(rng.rand(2, 1, 24, 32, args.frames).astype(np.float32))
+        out = server.search(clip)
+        print(
+            f"searched {args.frames} frames in {out['windows']} coherence "
+            f"windows, latency {out['latency_s']:.3f}s"
+        )
+        print("scores:", np.round(out["scores"], 2))
+    else:
+        cfg = configs.get_smoke_config("qwen2-1.5b")
+        mod = model_api.get_model(cfg)
+        params, _ = mod.init_params(cfg, jax.random.PRNGKey(0))
+        server = LMServer(cfg, params)
+        toks = jnp.asarray(np.arange(8, dtype=np.int32)[None] % cfg.vocab)
+        out = server.generate(toks, 8)
+        print("generated:", out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,239 @@
+"""Input specs + step functions for every (architecture × shape) cell.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input — weak-type-correct, shardable, zero allocation — the same
+pattern the dry-run lowers against.  ``build_step`` returns the function
+the cell lowers: ``train_step`` for training shapes, ``serve_step``
+(prefill or single-token decode) for inference shapes.
+
+The assigned shape set (LM family):
+
+  train_4k     seq 4096   global_batch 256   → train_step
+  prefill_32k  seq 32768  global_batch 32    → serve_step (prefill)
+  decode_32k   KV 32768   global_batch 128   → serve_step (1 new token)
+  long_500k    KV 524288  global_batch 1     → serve_step (1 new token);
+               SSM/hybrid only (sub-quadratic requirement — see DESIGN.md)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model_api
+from repro.optim import adamw
+
+PyTree = Any
+
+SHAPES = {
+    "train_4k": dict(seq_len=4096, global_batch=256, mode="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, mode="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, mode="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, mode="decode"),
+}
+
+# Microbatch counts for training: activation memory ÷ n_micro must fit
+# 16 GB/chip next to FSDP-sharded params + optimizer state.
+GRAD_ACCUM = {
+    "llama3-405b": 16,
+    "arctic-480b": 8,
+    "nemotron-4-15b": 4,
+    "granite-8b": 2,
+    "deepseek-v2-lite-16b": 2,
+}
+
+
+def shape_applicable(cfg, shape: str) -> tuple[bool, str]:
+    """Is this (arch, shape) cell runnable?  (per the assignment rules)"""
+    if shape == "long_500k" and cfg.family not in ("ssm", "hybrid"):
+        return False, (
+            "long_500k requires sub-quadratic sequence mixing; "
+            f"{cfg.name} is full-attention → skipped (DESIGN.md §Arch-applicability)"
+        )
+    return True, ""
+
+
+def input_specs(cfg, shape: str) -> dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for the *data* inputs of the step."""
+    info = SHAPES[shape]
+    B, S = info["global_batch"], info["seq_len"]
+    mode = info["mode"]
+    f32 = jnp.float32
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+
+    if mode == "train":
+        batch = {"tokens": sds((B, S), i32), "labels": sds((B, S), i32)}
+        if cfg.family == "audio":
+            batch["frames"] = sds((B, cfg.n_frames, cfg.d_model), f32)
+        if cfg.family == "vlm":
+            batch["patches"] = sds((B, cfg.n_patches, cfg.d_model), f32)
+        return batch
+    if mode == "prefill":
+        batch = {"tokens": sds((B, S), i32)}
+        if cfg.family == "audio":
+            batch["frames"] = sds((B, cfg.n_frames, cfg.d_model), f32)
+        if cfg.family == "vlm":
+            batch["patches"] = sds((B, cfg.n_patches, cfg.d_model), f32)
+        return batch
+    # decode: one new token against a seq_len-deep cache
+    return {"tokens": sds((B, 1), i32)}
+
+
+def batch_logical_axes(cfg, shape: str) -> dict[str, tuple]:
+    """Logical axes for each data input (batch dim shards over DP)."""
+    info = SHAPES[shape]
+    mode = info["mode"]
+    out: dict[str, tuple] = {}
+    for key in input_specs(cfg, shape):
+        if key in ("tokens", "labels"):
+            out[key] = ("batch", None)
+        else:  # frames / patches
+            out[key] = ("batch", None, None)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(
+    cfg,
+    opt_cfg: adamw.AdamWConfig,
+    n_micro: int = 1,
+    grad_shardings: Any | None = None,
+    grad_dtype: Any = jnp.float32,
+) -> Callable:
+    """(params, opt_state, batch) → (params, opt_state, metrics).
+
+    Microbatched: the global batch is split into n_micro chunks scanned
+    sequentially with gradient accumulation — activation memory scales
+    with B/n_micro while arithmetic intensity per chunk stays MXU-friendly.
+
+    ``grad_shardings`` (a params-shaped tree of NamedSharding): constrains
+    the gradient accumulator (and each microbatch's gradients) to the
+    parameter layout.  Without it, XLA keeps the fp32 accumulator
+    replicated and all-reduces full-model gradients *per microbatch* —
+    the dominant collective cost of the 405B-class baselines (§Perf).
+    """
+    mod = model_api.get_model(cfg)
+
+    def constrain_grads(g):
+        if grad_shardings is None:
+            return g
+        return jax.tree.map(
+            lambda x, s: jax.lax.with_sharding_constraint(x, s),
+            g,
+            grad_shardings,
+        )
+
+    def train_step(params, opt_state, batch):
+        if n_micro == 1:
+            loss, grads = jax.value_and_grad(
+                lambda p: mod.loss_fn(cfg, p, batch)
+            )(params)
+            grads = constrain_grads(grads)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:]),
+                batch,
+            )
+
+            def accum(carry, mb):
+                loss_sum, g_sum = carry
+                loss, g = jax.value_and_grad(
+                    lambda p: mod.loss_fn(cfg, p, mb)
+                )(params)
+                g = constrain_grads(
+                    jax.tree.map(lambda x: x.astype(grad_dtype), g)
+                )
+                return (
+                    loss_sum + loss,
+                    jax.tree.map(jnp.add, g_sum, g),
+                ), None
+
+            g0 = constrain_grads(
+                jax.tree.map(lambda p: jnp.zeros(p.shape, grad_dtype), params)
+            )
+            (loss_sum, g_sum), _ = jax.lax.scan(accum, (0.0, g0), micro)
+            loss = loss_sum / n_micro
+            grads = jax.tree.map(lambda g: g / n_micro, g_sum)
+        new_params, new_opt, metrics = adamw.adamw_update(
+            opt_cfg, params, grads, opt_state
+        )
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg, shape: str) -> Callable:
+    """Prefill: (params, batch) → (logits, cache).
+    Decode:  (params, cache, tokens) → (logits, cache)."""
+    mod = model_api.get_model(cfg)
+    info = SHAPES[shape]
+
+    if info["mode"] == "prefill":
+
+        def prefill_step(params, batch):
+            if cfg.family in ("audio", "vlm"):
+                return mod.prefill(cfg, params, batch, max_len=info["seq_len"])
+            return mod.prefill(cfg, params, batch["tokens"],
+                               max_len=info["seq_len"])
+
+        return prefill_step
+
+    def decode_step(params, cache, tokens):
+        return mod.decode_step(cfg, params, cache, tokens)
+
+    return decode_step
+
+
+def decode_cache_specs(cfg, shape: str):
+    """(cache ShapeDtypeStructs, logical axes) for decode shapes."""
+    info = SHAPES[shape]
+    mod = model_api.get_model(cfg)
+    B, S = info["global_batch"], info["seq_len"]
+    captured = {}
+
+    def init():
+        cache, axes = mod.init_cache(cfg, B, S)
+        captured["axes"] = axes
+        return cache
+
+    cache_sds = jax.eval_shape(init)
+    return cache_sds, captured["axes"]
+
+
+def params_specs(cfg):
+    """(params ShapeDtypeStructs, logical axes) without allocation.
+
+    The logical-axes tree contains strings (not JAX types), so it is
+    captured as a side value during the abstract trace.
+    """
+    mod = model_api.get_model(cfg)
+    captured = {}
+
+    def init(rng):
+        params, axes = mod.init_params(cfg, rng)
+        captured["axes"] = axes
+        return params
+
+    params_sds = jax.eval_shape(init, jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return params_sds, captured["axes"]
+
+
+def opt_specs(opt_cfg: adamw.AdamWConfig, params_sds):
+    return jax.eval_shape(
+        functools.partial(adamw.adamw_init, opt_cfg), params_sds
+    )
+
+
+def opt_logical_axes(param_axes):
+    """Optimizer state inherits parameter logical axes (m, v)."""
+    return {"m": param_axes, "v": param_axes, "step": ()}

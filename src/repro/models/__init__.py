@@ -1,0 +1,3 @@
+# Assigned-architecture zoo: pure-JAX, scan-over-layers model definitions
+# with a uniform Model API (init / loss / prefill / decode_step) and
+# logical-axis shardings consumed by repro.distributed.

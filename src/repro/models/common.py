@@ -1,0 +1,316 @@
+"""Shared neural building blocks for the architecture zoo.
+
+Design rules (these are what make the 40-cell dry-run tractable and the
+sharding story uniform):
+
+* **Functional + pytree params.** No module framework; params are nested
+  dicts of arrays.  Layers of a stack are *stacked on axis 0* so the
+  forward pass is one `lax.scan` — HLO size is O(1) in depth, which keeps
+  512-device SPMD compiles fast.
+* **Logical axes.** Every parameter leaf gets a tuple of logical axis
+  names (see `repro.distributed.sharding`) mapped to the physical mesh at
+  launch time: 'embed' (d_model-like), 'mlp' (d_ff-like), 'heads',
+  'kv_heads', 'vocab', 'expert', 'layers', plus None.
+* **Blockwise attention.** Attention never materializes the S×S matrix:
+  a `lax.scan` over key/value blocks with an online-softmax carry, flash-
+  attention style.  This is both the memory-feasible path at 32k and the
+  TPU-friendly one (block sizes are MXU-shaped).
+* **bf16 compute / configurable param dtype.** Matmul inputs are cast to
+  the compute dtype; softmax/norm statistics stay fp32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Array = jax.Array
+PyTree = Any
+
+# ---------------------------------------------------------------------------
+# Parameter initialization with logical-axis metadata
+# ---------------------------------------------------------------------------
+
+# Params and their logical axes travel as two parallel pytrees; helpers
+# here build both at once.
+
+
+def dense_init(
+    rng: Array,
+    shape: tuple[int, ...],
+    dtype,
+    axes: tuple[str | None, ...],
+    scale: float | None = None,
+) -> tuple[Array, tuple[str | None, ...]]:
+    """Truncated-normal init (std = 1/sqrt(fan_in) unless given)."""
+    fan_in = shape[0] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    w = jax.random.truncated_normal(rng, -2.0, 2.0, shape, jnp.float32) * std
+    return w.astype(dtype), axes
+
+
+def zeros_init(shape, dtype, axes):
+    return jnp.zeros(shape, dtype), axes
+
+
+def ones_init(shape, dtype, axes):
+    return jnp.ones(shape, dtype), axes
+
+
+def split_tree(params_and_axes: PyTree) -> tuple[PyTree, PyTree]:
+    """Split a tree of (param, axes) leaves into (params, axes) trees."""
+    leaves_are = lambda x: isinstance(x, tuple) and len(x) == 2 and isinstance(
+        x[1], tuple
+    )
+    params = jax.tree.map(lambda pa: pa[0], params_and_axes, is_leaf=leaves_are)
+    axes = jax.tree.map(lambda pa: pa[1], params_and_axes, is_leaf=leaves_are)
+    return params, axes
+
+
+def stack_layers(layer_trees: list[PyTree]) -> PyTree:
+    """Stack per-layer param trees along a new leading 'layers' axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *layer_trees)
+
+
+def stacked_axes(axes_tree: PyTree) -> PyTree:
+    """Prepend the 'layers' logical axis to every leaf's axes tuple."""
+    return jax.tree.map(
+        lambda a: ("layers",) + a,
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: Array, weight: Array, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x: Array, weight: Array, bias: Array, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> Array:
+    """Inverse frequencies (head_dim/2,) — fp32."""
+    exps = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta**exps)
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 10000.0) -> Array:
+    """Rotary embedding.  x: (B, S, H, D); positions: (B, S) int32."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)  # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]  # (B, S, 1, D/2)
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int) -> Array:
+    """Classic transformer sinusoidal table (n, d) — whisper-style."""
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    div = jnp.exp(
+        jnp.arange(0, d, 2, dtype=jnp.float32) * (-math.log(10000.0) / d)
+    )
+    pe = jnp.zeros((n, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+# ---------------------------------------------------------------------------
+# Blockwise (flash-style) attention
+# ---------------------------------------------------------------------------
+
+
+def blockwise_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    causal: bool = True,
+    q_offset: Array | int = 0,
+    kv_len: Array | None = None,
+    block_k: int = 512,
+    softmax_scale: float | None = None,
+) -> Array:
+    """Online-softmax attention with native GQA, O(S·block) memory.
+
+    Args:
+      q: (B, Sq, H, Dq); k: (B, Sk, G, Dq); v: (B, Sk, G, Dv) with G | H —
+        grouped KV is consumed directly (never repeated/materialized).
+      causal: apply causal mask with absolute positions.
+      q_offset: absolute position of q[0] (decode: current length).
+      kv_len: optional (B,) valid KV lengths (cache masking).
+      block_k: KV block size (MXU-friendly multiples of 128).
+
+    Returns (B, Sq, H, Dv) in q.dtype.
+    """
+    B, Sq, H, Dq = q.shape
+    Sk, G = k.shape[1], k.shape[2]
+    R = H // G
+    Dv = v.shape[-1]
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(Dq)
+
+    qf = (q * scale).reshape(B, Sq, G, R, Dq)  # stays in q.dtype (bf16 dots)
+    block_k = min(block_k, Sk)
+    pad_k = (-Sk) % block_k
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    n_blocks = (Sk + pad_k) // block_k
+    kb = k.reshape(B, n_blocks, block_k, G, Dq)
+    vb = v.reshape(B, n_blocks, block_k, G, Dv)
+
+    q_pos = jnp.asarray(q_offset) + jnp.arange(Sq)  # (Sq,) absolute
+
+    def body(carry, inp):
+        m, l, acc = carry  # (B,G,R,Sq), (B,G,R,Sq), (B,G,R,Sq,Dv)
+        kblk, vblk, blk_idx = inp
+        s = jnp.einsum(
+            "bqgrd,bkgd->bgrqk", qf, kblk, preferred_element_type=jnp.float32
+        )  # (B,G,R,Sq,bk) fp32 accumulation over bf16 inputs
+        k_pos = blk_idx * block_k + jnp.arange(block_k)  # (bk,)
+        neg = jnp.float32(-1e30)
+        if causal:
+            mask = q_pos[:, None] >= k_pos[None, :]  # (Sq, bk)
+            s = jnp.where(mask[None, None, None], s, neg)
+        valid = k_pos[None, :] < (
+            kv_len[:, None] if kv_len is not None else jnp.asarray(Sk)
+        )  # (B, bk) or (1, bk)
+        s = jnp.where(valid[:, None, None, None, :], s, neg)
+        m_blk = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m, m_blk)
+        p = jnp.exp(s - m_new[..., None])  # (B,G,R,Sq,bk)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum(
+            "bgrqk,bkgd->bgrqd", p.astype(vblk.dtype), vblk,
+            preferred_element_type=jnp.float32,
+        )
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, G, R, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, G, R, Sq), jnp.float32)
+    a0 = jnp.zeros((B, G, R, Sq, Dv), jnp.float32)
+    xs = (
+        jnp.moveaxis(kb, 1, 0),
+        jnp.moveaxis(vb, 1, 0),
+        jnp.arange(n_blocks),
+    )
+    (m, l, acc), _ = lax.scan(body, (m0, l0, a0), xs)
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = jnp.moveaxis(out, 3, 1)  # (B,Sq,G,R,Dv)
+    return out.reshape(B, Sq, H, Dv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    kv_len: Array,
+    softmax_scale: float | None = None,
+) -> Array:
+    """Single-query attention over a (possibly seq-sharded) KV cache.
+
+    Unlike :func:`blockwise_attention`, there is no block reshape/scan —
+    the (B, H, 1, M) score row is tiny, and a sequence-sharded cache
+    (kv_seq → 'model') stays sharded: XLA all-reduces only the softmax
+    max/sum statistics.  This is the flash-decoding dataflow expressed in
+    pure XLA.
+
+    q: (B, 1, H, Dq); k: (B, M, G, Dq); v: (B, M, G, Dv); kv_len: (B,).
+    """
+    B, Sq, H, Dq = q.shape
+    M, G = k.shape[1], k.shape[2]
+    R = H // G
+    Dv = v.shape[-1]
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(Dq)
+    # keep dot inputs in the cache dtype (bf16) with fp32 accumulation —
+    # MXU semantics, and it stops XLA hoisting a full-cache f32 convert
+    # out of the layer scan (a 36×-cache-size materialization otherwise).
+    qf = (q * scale).reshape(B, Sq, G, R, Dq)
+    s = jnp.einsum(
+        "bqgrd,bkgd->bgrqk", qf, k, preferred_element_type=jnp.float32
+    )
+    pos = jnp.arange(M)
+    valid = pos[None, :] < kv_len[:, None]  # (B, M)
+    s = jnp.where(valid[:, None, None, None, :], s, jnp.float32(-1e30))
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum(
+        "bgrqk,bkgd->bgrqd", p.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    out = out / jnp.maximum(l, 1e-30)
+    out = jnp.moveaxis(out, 3, 1)  # (B,Sq,G,R,Dv)
+    return out.reshape(B, Sq, H, Dv).astype(q.dtype)
+
+
+def swiglu(gate: Array, up: Array) -> Array:
+    return jax.nn.silu(gate.astype(jnp.float32)).astype(gate.dtype) * up
+
+
+def squared_relu(x: Array) -> Array:
+    r = jax.nn.relu(x)
+    return r * r
+
+
+ACTIVATIONS: dict[str, Callable] = {
+    "gelu": jax.nn.gelu,
+    "relu": jax.nn.relu,
+    "squared_relu": squared_relu,
+    "silu": jax.nn.silu,
+}
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+
+def softmax_cross_entropy(
+    logits: Array, labels: Array, mask: Array | None = None
+) -> Array:
+    """Mean next-token CE; logits (B,S,V) fp-any, labels (B,S) int32.
+
+    ``mask`` (B,S) excludes positions (padding / image-prefix) from both
+    the numerator and denominator.
+    """
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is None:
+        return -jnp.mean(ll)
+    mask = mask.astype(jnp.float32)
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,342 @@
+"""Mamba-2 (SSD — state-space duality) language model.
+
+Block (faithful to the reference implementation):
+
+  in_proj → [z | x | B | C | dt]           (one fused matmul)
+  causal conv1d (width d_conv) over [x|B|C], SiLU
+  dt = softplus(dt + dt_bias);  A = −exp(A_log)
+  y  = SSD(x·dt, exp(dt·A), B, C) + D ⊙ x  (chunked scan — kernels/ssd)
+  y  = RMSNorm(y ⊙ silu(z))                (gated norm)
+  out_proj
+
+Decode carries (conv_state (B, conv_dim, d_conv−1), ssm_state (B,H,P,N)) —
+O(1) memory and FLOPs per token, which is why the long_500k shape runs
+for this family and not for full attention.
+
+The SSD op defaults to the pure-jnp chunked form (shardable under pjit;
+sequence-parallel composition is exact via the carried state) and can
+route to the Pallas kernel (`ssd_impl='pallas'`) on local runs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.sharding import constrain
+from repro.kernels.ssd import ops as ssd_ops
+from repro.models import common, transformer
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Config(transformer.TransformerConfig):
+    family: str = "ssm"
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    ssm_head_dim: int = 64
+    n_groups: int = 1
+    chunk: int = 128
+    ssd_impl: str = "jnp"  # 'jnp' (shardable) | 'pallas' (local/TPU)
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+    @property
+    def in_proj_dim(self) -> int:
+        return 2 * self.d_inner + 2 * self.n_groups * self.d_state + self.ssm_heads
+
+    def num_params(self) -> int:
+        D = self.d_model
+        per_layer = (
+            D * self.in_proj_dim
+            + self.conv_dim * self.d_conv
+            + self.conv_dim
+            + 3 * self.ssm_heads  # A_log, D, dt_bias
+            + self.d_inner  # gated-norm scale
+            + self.d_inner * D
+            + D  # ln
+        )
+        emb = self.vocab * D * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + emb + D
+
+
+def _layer_init(cfg: Mamba2Config, rng: Array) -> PyTree:
+    D = cfg.d_model
+    dt = cfg.param_dtype
+    ks = jax.random.split(rng, 4)
+    # dt_bias ~ softplus^-1 of dt in [1e-3, 1e-1] (reference init)
+    u = jax.random.uniform(ks[2], (cfg.ssm_heads,), jnp.float32)
+    dt0 = jnp.exp(u * (jnp.log(0.1) - jnp.log(1e-3)) + jnp.log(1e-3))
+    dt_bias = dt0 + jnp.log(-jnp.expm1(-dt0))
+    a_init = jnp.log(
+        jax.random.uniform(ks[3], (cfg.ssm_heads,), jnp.float32, 1.0, 16.0)
+    )
+    return {
+        "ln": common.ones_init((D,), dt, (None,)),
+        "in_proj": common.dense_init(
+            ks[0], (D, cfg.in_proj_dim), dt, ("embed", "conv_dim")
+        ),
+        "conv_w": common.zeros_init(
+            (cfg.conv_dim, cfg.d_conv), dt, ("conv_dim", None)
+        ),
+        "conv_b": common.zeros_init((cfg.conv_dim,), dt, ("conv_dim",)),
+        "A_log": (a_init, ("ssm_heads",)),
+        "D": common.ones_init((cfg.ssm_heads,), jnp.float32, ("ssm_heads",)),
+        "dt_bias": (dt_bias, ("ssm_heads",)),
+        "norm_w": common.ones_init((cfg.d_inner,), dt, ("conv_dim",)),
+        "out_proj": common.dense_init(
+            ks[1], (cfg.d_inner, D), dt, ("conv_dim", "embed")
+        ),
+    }
+
+
+def init_params(cfg: Mamba2Config, rng: Array) -> tuple[PyTree, PyTree]:
+    k_emb, k_head, k_layers, k_conv = jax.random.split(rng, 4)
+    layers_pa = [
+        _layer_init(cfg, r) for r in jax.random.split(k_layers, cfg.n_layers)
+    ]
+    layer_params = [common.split_tree(l)[0] for l in layers_pa]
+    layer_axes = common.split_tree(layers_pa[0])[1]
+    # conv weights: small random init (zeros_init placeholder above)
+    conv_rngs = jax.random.split(k_conv, cfg.n_layers)
+    for i, lp in enumerate(layer_params):
+        lp["conv_w"] = (
+            jax.random.normal(conv_rngs[i], lp["conv_w"].shape, jnp.float32)
+            * (1.0 / jnp.sqrt(cfg.d_conv))
+        ).astype(cfg.param_dtype)
+    pa = {
+        "embed": common.dense_init(
+            k_emb, (cfg.vocab, cfg.d_model), cfg.param_dtype, ("vocab", "embed"), 0.02
+        ),
+        "final_norm": common.ones_init((cfg.d_model,), cfg.param_dtype, (None,)),
+    }
+    if not cfg.tie_embeddings:
+        pa["lm_head"] = common.dense_init(
+            k_head, (cfg.d_model, cfg.vocab), cfg.param_dtype, ("embed", "vocab")
+        )
+    params, axes = common.split_tree(pa)
+    params["layers"] = common.stack_layers(layer_params)
+    axes["layers"] = common.stacked_axes(layer_axes)
+    return params, axes
+
+
+# ---------------------------------------------------------------------------
+# block forward
+# ---------------------------------------------------------------------------
+
+
+def _causal_conv(xbc: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv1d.  xbc: (B, S, Cd); w: (Cd, K) → (B, S, Cd)."""
+    K = w.shape[1]
+    pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    y = jnp.zeros_like(xbc)
+    for i in range(K):  # K = 4: unrolled shifts beat a conv op here
+        y = y + pad[:, i : i + xbc.shape[1], :] * w[None, None, :, i][0]
+    return y + b[None, None, :]
+
+
+def _split_proj(cfg: Mamba2Config, zxbcdt: Array):
+    d_in, gN, H = cfg.d_inner, cfg.n_groups * cfg.d_state, cfg.ssm_heads
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in : d_in + cfg.conv_dim]
+    dt = zxbcdt[..., d_in + cfg.conv_dim :]
+    return z, xbc, dt
+
+
+def mamba2_block(cfg: Mamba2Config, lp: PyTree, x: Array) -> Array:
+    """Full-sequence block forward (training / prefill)."""
+    B, S, D = x.shape
+    cd = cfg.compute_dtype
+    H, P, N, g = cfg.ssm_heads, cfg.ssm_head_dim, cfg.d_state, cfg.n_groups
+    h = common.rms_norm(x, lp["ln"], cfg.norm_eps)
+    zxbcdt = h @ lp["in_proj"].astype(cd)
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    xbc = jax.nn.silu(_causal_conv(xbc, lp["conv_w"].astype(cd), lp["conv_b"].astype(cd)))
+    xs = xbc[..., : cfg.d_inner]
+    Bm = xbc[..., cfg.d_inner : cfg.d_inner + g * N].reshape(B, S, g, N)
+    Cm = xbc[..., cfg.d_inner + g * N :].reshape(B, S, g, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(lp["A_log"])  # (H,)
+    xh = xs.reshape(B, S, H, P)
+    y, _ = ssd_ops.ssd(
+        xh.astype(jnp.float32), dt, A, Bm.astype(jnp.float32),
+        Cm.astype(jnp.float32), chunk=cfg.chunk, impl=cfg.ssd_impl,
+    )
+    y = y + lp["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, cfg.d_inner).astype(cd)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(cd)
+    y = common.rms_norm(y, lp["norm_w"], cfg.norm_eps)
+    y = y @ lp["out_proj"].astype(cd)
+    return x + constrain(y, ("batch", None, None))
+
+
+def forward(cfg: Mamba2Config, params: PyTree, tokens: Array) -> Array:
+    B, S = tokens.shape
+    cd = cfg.compute_dtype
+    x = params["embed"].astype(cd)[tokens]
+    x = constrain(x, ("batch", None, None))
+    block = transformer._remat(cfg, functools.partial(mamba2_block, cfg))
+
+    def body(x, lp):
+        return block(lp, x), None
+
+    x, _ = lax.scan(body, x, params["layers"])
+    x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = (
+        params["embed"].astype(cd).T
+        if cfg.tie_embeddings
+        else params["lm_head"].astype(cd)
+    )
+    logits = x @ head
+    return constrain(logits, ("batch", None, "vocab"))
+
+
+def loss_fn(cfg: Mamba2Config, params: PyTree, batch: dict) -> Array:
+    logits = forward(cfg, params, batch["tokens"])
+    return common.softmax_cross_entropy(logits, batch["labels"], batch.get("mask"))
+
+
+# ---------------------------------------------------------------------------
+# decode: O(1)/token state
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: Mamba2Config, batch: int, max_len: int):
+    """State cache (max_len-independent — SSM decode is O(1) memory)."""
+    del max_len
+    cache = {
+        "conv": jnp.zeros(
+            (cfg.n_layers, batch, cfg.d_conv - 1, cfg.conv_dim), cfg.compute_dtype
+        ),
+        "ssm": jnp.zeros(
+            (cfg.n_layers, batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.d_state),
+            jnp.float32,
+        ),
+        "length": jnp.zeros((), jnp.int32),
+    }
+    axes = {
+        "conv": ("layers", "batch", None, "conv_dim"),
+        "ssm": ("layers", "batch", "ssm_heads", None, None),
+        "length": (),
+    }
+    return cache, axes
+
+
+def _block_decode(cfg: Mamba2Config, lp: PyTree, x: Array, conv_st, ssm_st):
+    """Single-token block step.  x: (B, 1, D)."""
+    B = x.shape[0]
+    cd = cfg.compute_dtype
+    H, P, N, g = cfg.ssm_heads, cfg.ssm_head_dim, cfg.d_state, cfg.n_groups
+    h = common.rms_norm(x, lp["ln"], cfg.norm_eps)
+    zxbcdt = h @ lp["in_proj"].astype(cd)
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    xbc = xbc[:, 0]  # (B, conv_dim)
+    # conv state: window of the last d_conv-1 inputs
+    window = jnp.concatenate([conv_st, xbc[:, None, :]], axis=1)  # (B, K, Cd)
+    w = lp["conv_w"].astype(cd)  # (Cd, K)
+    conv_out = jnp.einsum("bkc,ck->bc", window, w) + lp["conv_b"].astype(cd)
+    xbc_t = jax.nn.silu(conv_out)
+    new_conv_st = window[:, 1:]
+    xs = xbc_t[..., : cfg.d_inner].reshape(B, H, P)
+    Bm = xbc_t[..., cfg.d_inner : cfg.d_inner + g * N].reshape(B, g, N)
+    Cm = xbc_t[..., cfg.d_inner + g * N :].reshape(B, g, N)
+    dt_t = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + lp["dt_bias"])  # (B,H)
+    A = -jnp.exp(lp["A_log"])
+    new_ssm, y = ssd_ops.ssd_decode_step(
+        ssm_st, xs.astype(jnp.float32), dt_t, A, Bm.astype(jnp.float32),
+        Cm.astype(jnp.float32),
+    )
+    y = y + lp["D"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, 1, cfg.d_inner).astype(cd)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(cd)
+    y = common.rms_norm(y, lp["norm_w"], cfg.norm_eps)
+    y = y @ lp["out_proj"].astype(cd)
+    return x + y, new_conv_st, new_ssm
+
+
+def decode_step(cfg: Mamba2Config, params: PyTree, cache: PyTree, tokens: Array):
+    cd = cfg.compute_dtype
+    x = params["embed"].astype(cd)[tokens]
+
+    def body(carry, li):
+        (x,) = carry
+        lp, conv_st, ssm_st = li
+        x, conv_st, ssm_st = _block_decode(cfg, lp, x, conv_st, ssm_st)
+        return (x,), (conv_st, ssm_st)
+
+    (x,), (conv_new, ssm_new) = lax.scan(
+        body, (x,), (params["layers"], cache["conv"], cache["ssm"])
+    )
+    x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = (
+        params["embed"].astype(cd).T
+        if cfg.tie_embeddings
+        else params["lm_head"].astype(cd)
+    )
+    logits = (x @ head)[:, 0]
+    return logits, {"conv": conv_new, "ssm": ssm_new, "length": cache["length"] + 1}
+
+
+def prefill(cfg: Mamba2Config, params: PyTree, tokens: Array, max_len=None):
+    """Run the full prompt, returning last logits + decode-ready state."""
+    del max_len
+    B, S = tokens.shape
+    cd = cfg.compute_dtype
+    H, P, N, g = cfg.ssm_heads, cfg.ssm_head_dim, cfg.d_state, cfg.n_groups
+    x = params["embed"].astype(cd)[tokens]
+    x = constrain(x, ("batch", None, None))
+
+    def body(x, lp):
+        # same as mamba2_block but also emits final (conv, ssm) states
+        h = common.rms_norm(x, lp["ln"], cfg.norm_eps)
+        zxbcdt = h @ lp["in_proj"].astype(cd)
+        z, xbc_pre, dt = _split_proj(cfg, zxbcdt)
+        conv_st = xbc_pre[:, S - (cfg.d_conv - 1) :]  # (B, K-1, Cd)
+        xbc = jax.nn.silu(
+            _causal_conv(xbc_pre, lp["conv_w"].astype(cd), lp["conv_b"].astype(cd))
+        )
+        xs = xbc[..., : cfg.d_inner]
+        Bm = xbc[..., cfg.d_inner : cfg.d_inner + g * N].reshape(B, S, g, N)
+        Cm = xbc[..., cfg.d_inner + g * N :].reshape(B, S, g, N)
+        dtp = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])
+        A = -jnp.exp(lp["A_log"])
+        xh = xs.reshape(B, S, H, P)
+        y, ssm_st = ssd_ops.ssd(
+            xh.astype(jnp.float32), dtp, A, Bm.astype(jnp.float32),
+            Cm.astype(jnp.float32), chunk=cfg.chunk, impl=cfg.ssd_impl,
+        )
+        y = y + lp["D"][None, None, :, None] * xh.astype(jnp.float32)
+        y = y.reshape(B, S, cfg.d_inner).astype(cd)
+        y = y * jax.nn.silu(z.astype(jnp.float32)).astype(cd)
+        y = common.rms_norm(y, lp["norm_w"], cfg.norm_eps)
+        y = y @ lp["out_proj"].astype(cd)
+        return x + y, (conv_st, ssm_st)
+
+    x, (conv_sts, ssm_sts) = lax.scan(body, x, params["layers"])
+    x = common.rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    head = (
+        params["embed"].astype(cd).T
+        if cfg.tie_embeddings
+        else params["lm_head"].astype(cd)
+    )
+    logits = (x @ head)[:, 0]
+    cache = {"conv": conv_sts, "ssm": ssm_sts, "length": jnp.asarray(S, jnp.int32)}
+    return logits, cache

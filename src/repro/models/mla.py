@@ -1,0 +1,382 @@
+"""DeepSeek-V2(-Lite) — Multi-head Latent Attention + DeepSeekMoE.
+
+MLA compresses K/V into a shared low-rank latent c_kv (kv_lora_rank = 512)
+plus a tiny shared RoPE key (64); the decode cache stores only
+(c_kv, k_rope) — 576 values/token vs 2·H·128 = 4096 for vanilla MHA.
+
+Two attention paths, both faithful to the deployed model:
+
+* **prefill/train** — decompress K,V per head (k_nope from c_kv, shared
+  k_rope broadcast), blockwise attention on (H, 192)-dim keys.
+* **decode** — *weight-absorbed* latent attention: q_nope is pulled
+  through W_uk into the 512-d latent space, scores are taken directly
+  against the cached c_kv, and the context is decompressed through W_uv
+  after the softmax.  No per-step K/V re-materialization.
+
+The FFN stack is DeepSeekMoE: first_k_dense leading dense layers, then
+64-expert top-6 routed MoE + 2 always-on shared experts (moe.moe_block).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.sharding import constrain
+from repro.models import common, moe, transformer
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig(moe.MoEConfig):
+    family: str = "moe"
+    kv_lora: int = 512
+    qk_nope: int = 128
+    qk_rope: int = 64
+    v_dim: int = 128
+
+    @property
+    def qk_dim(self) -> int:
+        return self.qk_nope + self.qk_rope
+
+    def num_params(self) -> int:
+        D, V, H = self.d_model, self.vocab, self.n_heads
+        attn = (
+            D * H * self.qk_dim  # w_q
+            + D * (self.kv_lora + self.qk_rope)  # w_dkv
+            + self.kv_lora * H * (self.qk_nope + self.v_dim)  # w_ukv
+            + H * self.v_dim * D  # w_o
+        )
+        expert = 3 * D * self.moe_d_ff
+        moe_p = self.n_experts * expert + D * self.n_experts
+        shared = 3 * D * self.moe_d_ff * self.n_shared_experts
+        dense_l = attn + 3 * D * self.d_ff + 2 * D
+        moe_l = attn + moe_p + shared + 2 * D
+        emb = V * D * (1 if self.tie_embeddings else 2)
+        return (
+            self.first_k_dense * dense_l
+            + (self.n_layers - self.first_k_dense) * moe_l
+            + emb
+            + D
+        )
+
+    def active_params(self) -> int:
+        D, V, H = self.d_model, self.vocab, self.n_heads
+        attn = (
+            D * H * self.qk_dim
+            + D * (self.kv_lora + self.qk_rope)
+            + self.kv_lora * H * (self.qk_nope + self.v_dim)
+            + H * self.v_dim * D
+        )
+        expert = 3 * D * self.moe_d_ff
+        act = self.top_k * expert + D * self.n_experts
+        act += 3 * D * self.moe_d_ff * self.n_shared_experts
+        dense_l = attn + 3 * D * self.d_ff + 2 * D
+        moe_l = attn + act + 2 * D
+        emb = V * D * (1 if self.tie_embeddings else 2)
+        return (
+            self.first_k_dense * dense_l
+            + (self.n_layers - self.first_k_dense) * moe_l
+            + emb
+            + D
+        )
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _attn_init(cfg: MLAConfig, rng: Array) -> PyTree:
+    D, H = cfg.d_model, cfg.n_heads
+    dt = cfg.param_dtype
+    ks = jax.random.split(rng, 4)
+    return {
+        "ln1": common.ones_init((D,), dt, (None,)),
+        "wq": common.dense_init(ks[0], (D, H * cfg.qk_dim), dt, ("embed", "heads")),
+        "w_dkv": common.dense_init(
+            ks[1], (D, cfg.kv_lora + cfg.qk_rope), dt, ("embed", "kv_lora")
+        ),
+        "kv_ln": common.ones_init((cfg.kv_lora,), dt, (None,)),
+        "w_ukv": common.dense_init(
+            ks[2],
+            (cfg.kv_lora, H * (cfg.qk_nope + cfg.v_dim)),
+            dt,
+            ("kv_lora", "heads"),
+        ),
+        "wo": common.dense_init(ks[3], (H * cfg.v_dim, D), dt, ("heads", "embed")),
+    }
+
+
+def _dense_layer_init(cfg: MLAConfig, rng: Array) -> PyTree:
+    k1, k2 = jax.random.split(rng)
+    p = _attn_init(cfg, k1)
+    kg, ku, kd = jax.random.split(k2, 3)
+    D, F = cfg.d_model, cfg.d_ff
+    dt = cfg.param_dtype
+    p["ln2"] = common.ones_init((D,), dt, (None,))
+    p["w_gate"] = common.dense_init(kg, (D, F), dt, ("embed", "mlp"))
+    p["w_up"] = common.dense_init(ku, (D, F), dt, ("embed", "mlp"))
+    p["w_down"] = common.dense_init(kd, (F, D), dt, ("mlp", "embed"))
+    return p
+
+
+def _moe_layer_init(cfg: MLAConfig, rng: Array) -> PyTree:
+    k1, k2 = jax.random.split(rng)
+    p = _attn_init(cfg, k1)
+    p["ln2"] = common.ones_init((cfg.d_model,), cfg.param_dtype, (None,))
+    p["moe"] = moe.moe_init(cfg, k2)
+    return p
+
+
+def init_params(cfg: MLAConfig, rng: Array) -> tuple[PyTree, PyTree]:
+    k_emb, k_head, k_dense, k_layers = jax.random.split(rng, 4)
+    n_moe = cfg.n_layers - cfg.first_k_dense
+    dense_pa = [
+        _dense_layer_init(cfg, r)
+        for r in jax.random.split(k_dense, max(cfg.first_k_dense, 1))[
+            : cfg.first_k_dense
+        ]
+    ]
+    moe_pa = [_moe_layer_init(cfg, r) for r in jax.random.split(k_layers, n_moe)]
+    pa = {
+        "embed": common.dense_init(
+            k_emb, (cfg.vocab, cfg.d_model), cfg.param_dtype, ("vocab", "embed"), 0.02
+        ),
+        "final_norm": common.ones_init((cfg.d_model,), cfg.param_dtype, (None,)),
+        "lm_head": common.dense_init(
+            k_head, (cfg.d_model, cfg.vocab), cfg.param_dtype, ("embed", "vocab")
+        ),
+    }
+    params, axes = common.split_tree(pa)
+    if cfg.first_k_dense:
+        dps = [common.split_tree(l) for l in dense_pa]
+        params["dense_layers"] = common.stack_layers([d[0] for d in dps])
+        axes["dense_layers"] = common.stacked_axes(dps[0][1])
+    mps = [common.split_tree(l) for l in moe_pa]
+    params["layers"] = common.stack_layers([m[0] for m in mps])
+    axes["layers"] = common.stacked_axes(mps[0][1])
+    return params, axes
+
+
+# ---------------------------------------------------------------------------
+# MLA attention
+# ---------------------------------------------------------------------------
+
+
+def _mla_project(cfg: MLAConfig, lp: PyTree, x: Array, positions: Array):
+    """Shared q / latent projections.  Returns (q, c_kv, k_rope)."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    cd = cfg.compute_dtype
+    h = common.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    q = (h @ lp["wq"].astype(cd)).reshape(B, S, H, cfg.qk_dim)
+    q_nope, q_rope = q[..., : cfg.qk_nope], q[..., cfg.qk_nope :]
+    q_rope = common.apply_rope(q_rope, positions, cfg.rope_theta)
+    dkv = h @ lp["w_dkv"].astype(cd)  # (B, S, kv_lora + qk_rope)
+    c_kv = common.rms_norm(dkv[..., : cfg.kv_lora], lp["kv_ln"], cfg.norm_eps)
+    k_rope = dkv[..., cfg.kv_lora :][:, :, None, :]  # (B, S, 1, rope)
+    k_rope = common.apply_rope(k_rope, positions, cfg.rope_theta)[:, :, 0]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def _mla_attention_full(cfg: MLAConfig, lp: PyTree, x: Array, positions: Array):
+    """Train/prefill path: decompress K,V, blockwise attention."""
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    cd = cfg.compute_dtype
+    q_nope, q_rope, c_kv, k_rope = _mla_project(cfg, lp, x, positions)
+    ukv = (c_kv @ lp["w_ukv"].astype(cd)).reshape(
+        B, S, H, cfg.qk_nope + cfg.v_dim
+    )
+    k_nope, v = ukv[..., : cfg.qk_nope], ukv[..., cfg.qk_nope :]
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None], (B, S, H, cfg.qk_rope))],
+        axis=-1,
+    )
+    attn = common.blockwise_attention(
+        q, k, v, causal=True, block_k=cfg.block_k,
+        softmax_scale=1.0 / math.sqrt(cfg.qk_dim),
+    )
+    o = attn.reshape(B, S, H * cfg.v_dim) @ lp["wo"].astype(cd)
+    return x + constrain(o, ("batch", None, None)), (c_kv, k_rope)
+
+
+def _mla_attention_decode(cfg: MLAConfig, lp: PyTree, x: Array, pos, ckv_c, kr_c):
+    """Absorbed decode: scores and context in the 512-d latent space."""
+    B = x.shape[0]
+    H = cfg.n_heads
+    cd = cfg.compute_dtype
+    M = ckv_c.shape[1]
+    positions = jnp.broadcast_to(pos[None, None], (B, 1))
+    q_nope, q_rope, c_kv_new, k_rope_new = _mla_project(cfg, lp, x, positions)
+    ckv_c = lax.dynamic_update_slice(ckv_c, c_kv_new, (0, pos, 0))
+    kr_c = lax.dynamic_update_slice(kr_c, k_rope_new, (0, pos, 0))
+
+    w_ukv = lp["w_ukv"].astype(cd).reshape(cfg.kv_lora, H, cfg.qk_nope + cfg.v_dim)
+    w_uk = w_ukv[..., : cfg.qk_nope]  # (Z, H, nope)
+    w_uv = w_ukv[..., cfg.qk_nope :]  # (Z, H, v)
+    # absorb: q into latent space
+    q_lat = jnp.einsum("bqhd,zhd->bqhz", q_nope, w_uk)  # (B,1,H,Z)
+    s = jnp.einsum("bqhz,bmz->bhqm", q_lat.astype(jnp.float32),
+                   ckv_c.astype(jnp.float32))
+    s += jnp.einsum("bqhd,bmd->bhqm", q_rope.astype(jnp.float32),
+                    kr_c.astype(jnp.float32))
+    s *= 1.0 / math.sqrt(cfg.qk_dim)
+    m_pos = jnp.arange(M)
+    s = jnp.where((m_pos <= pos)[None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhqm,bmz->bqhz", p, ckv_c.astype(jnp.float32))
+    v_ctx = jnp.einsum("bqhz,zhd->bqhd", ctx, w_uv.astype(jnp.float32)).astype(cd)
+    o = v_ctx.reshape(B, 1, H * cfg.v_dim) @ lp["wo"].astype(cd)
+    return x + o, ckv_c, kr_c
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+
+
+def _ffn(cfg: MLAConfig, lp: PyTree, x: Array, is_moe: bool):
+    h = common.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if is_moe:
+        y, aux = moe.moe_block(cfg, lp["moe"], h)
+    else:
+        cd = cfg.compute_dtype
+        y = common.swiglu(
+            h @ lp["w_gate"].astype(cd), h @ lp["w_up"].astype(cd)
+        ) @ lp["w_down"].astype(cd)
+        aux = jnp.zeros((), jnp.float32)
+    return x + y, aux
+
+
+def forward(cfg: MLAConfig, params: PyTree, tokens: Array) -> tuple[Array, Array]:
+    B, S = tokens.shape
+    cd = cfg.compute_dtype
+    x = params["embed"].astype(cd)[tokens]
+    x = constrain(x, ("batch", None, None))
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def dense_body(x, lp):
+        x, _ = _mla_attention_full(cfg, lp, x, positions)
+        x, aux = _ffn(cfg, lp, x, is_moe=False)
+        return x, aux
+
+    def moe_body(x, lp):
+        x, _ = _mla_attention_full(cfg, lp, x, positions)
+        x, aux = _ffn(cfg, lp, x, is_moe=True)
+        return x, aux
+
+    aux_total = jnp.zeros((), jnp.float32)
+    if cfg.first_k_dense:
+        x, auxs = lax.scan(transformer._remat(cfg, dense_body), x,
+                           params["dense_layers"])
+        aux_total += jnp.sum(auxs)
+    x, auxs = lax.scan(transformer._remat(cfg, moe_body), x, params["layers"])
+    aux_total += jnp.sum(auxs)
+    x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["lm_head"].astype(cd)
+    return constrain(logits, ("batch", None, "vocab")), aux_total / cfg.n_layers
+
+
+def loss_fn(cfg: MLAConfig, params: PyTree, batch: dict) -> Array:
+    logits, aux = forward(cfg, params, batch["tokens"])
+    ce = common.softmax_cross_entropy(logits, batch["labels"], batch.get("mask"))
+    return ce + cfg.router_aux_coef * aux
+
+
+def init_cache(cfg: MLAConfig, batch: int, max_len: int):
+    """Latent cache: (c_kv, k_rope) per layer — MLA's small-cache win."""
+    n_moe = cfg.n_layers - cfg.first_k_dense
+    mk = lambda L, d: jnp.zeros((L, batch, max_len, d), cfg.compute_dtype)
+    cache = {
+        "ckv_moe": mk(n_moe, cfg.kv_lora),
+        "kr_moe": mk(n_moe, cfg.qk_rope),
+        "length": jnp.zeros((), jnp.int32),
+    }
+    axes = {
+        "ckv_moe": ("layers", "batch", "kv_seq", None),
+        "kr_moe": ("layers", "batch", "kv_seq", None),
+        "length": (),
+    }
+    if cfg.first_k_dense:
+        cache["ckv_dense"] = mk(cfg.first_k_dense, cfg.kv_lora)
+        cache["kr_dense"] = mk(cfg.first_k_dense, cfg.qk_rope)
+        axes["ckv_dense"] = ("layers", "batch", "kv_seq", None)
+        axes["kr_dense"] = ("layers", "batch", "kv_seq", None)
+    return cache, axes
+
+
+def decode_step(cfg: MLAConfig, params: PyTree, cache: PyTree, tokens: Array):
+    cd = cfg.compute_dtype
+    x = params["embed"].astype(cd)[tokens]
+    pos = cache["length"]
+    new_cache = dict(cache)
+
+    def dense_body(carry, li):
+        x, = carry
+        lp, ckv_c, kr_c = li
+        x, ckv_c, kr_c = _mla_attention_decode(cfg, lp, x, pos, ckv_c, kr_c)
+        x, _ = _ffn(cfg, lp, x, is_moe=False)
+        return (x,), (ckv_c, kr_c)
+
+    def moe_body(carry, li):
+        x, = carry
+        lp, ckv_c, kr_c = li
+        x, ckv_c, kr_c = _mla_attention_decode(cfg, lp, x, pos, ckv_c, kr_c)
+        x, _ = _ffn(cfg, lp, x, is_moe=True)
+        return (x,), (ckv_c, kr_c)
+
+    if cfg.first_k_dense:
+        (x,), (ckv_d, kr_d) = lax.scan(
+            dense_body, (x,), (params["dense_layers"], cache["ckv_dense"],
+                               cache["kr_dense"])
+        )
+        new_cache["ckv_dense"], new_cache["kr_dense"] = ckv_d, kr_d
+    (x,), (ckv_m, kr_m) = lax.scan(
+        moe_body, (x,), (params["layers"], cache["ckv_moe"], cache["kr_moe"])
+    )
+    new_cache["ckv_moe"], new_cache["kr_moe"] = ckv_m, kr_m
+    x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["lm_head"].astype(cd))[:, 0]
+    new_cache["length"] = pos + 1
+    return logits, new_cache
+
+
+def prefill(cfg: MLAConfig, params: PyTree, tokens: Array, max_len: int | None = None):
+    B, S = tokens.shape
+    M = max_len or S
+    cd = cfg.compute_dtype
+    x = params["embed"].astype(cd)[tokens]
+    x = constrain(x, ("batch", None, None))
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def body(is_moe):
+        def f(x, lp):
+            x, (c_kv, k_rope) = _mla_attention_full(cfg, lp, x, positions)
+            x, _ = _ffn(cfg, lp, x, is_moe=is_moe)
+            if M > S:
+                c_kv = jnp.pad(c_kv, ((0, 0), (0, M - S), (0, 0)))
+                k_rope = jnp.pad(k_rope, ((0, 0), (0, M - S), (0, 0)))
+            return x, (c_kv, k_rope)
+
+        return f
+
+    cache = {"length": jnp.asarray(S, jnp.int32)}
+    if cfg.first_k_dense:
+        x, (ckv_d, kr_d) = lax.scan(body(False), x, params["dense_layers"])
+        cache["ckv_dense"], cache["kr_dense"] = ckv_d, kr_d
+    x, (ckv_m, kr_m) = lax.scan(body(True), x, params["layers"])
+    cache["ckv_moe"], cache["kr_moe"] = ckv_m, kr_m
+    x = common.rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["lm_head"].astype(cd))[:, 0]
+    return logits, cache

@@ -1,0 +1,47 @@
+"""Uniform Model API over the architecture zoo.
+
+Every architecture module exposes the same functional surface; this
+registry dispatches on the config dataclass so launch/train/serve/dryrun
+code is architecture-agnostic:
+
+    mod = get_model(cfg)
+    params, axes = mod.init_params(cfg, rng)
+    loss          = mod.loss_fn(cfg, params, batch)
+    logits, cache = mod.prefill(cfg, params, prompt_or_batch, max_len)
+    logits, cache = mod.decode_step(cfg, params, cache, tokens)
+    cache, caxes  = mod.init_cache(cfg, batch_size, max_len)
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+from repro.models import mamba2, mla, moe, transformer, vlm, whisper, zamba
+
+# most-derived first (MLAConfig < MoEConfig < TransformerConfig, etc.)
+_DISPATCH: list[tuple[type, Any]] = [
+    (mla.MLAConfig, mla),
+    (moe.MoEConfig, moe),
+    (zamba.ZambaConfig, zamba),
+    (mamba2.Mamba2Config, mamba2),
+    (whisper.WhisperConfig, whisper),
+    (vlm.VLMConfig, vlm),
+    (transformer.TransformerConfig, transformer),
+]
+
+
+def get_model(cfg) -> Any:
+    for cls, mod in _DISPATCH:
+        if isinstance(cfg, cls):
+            return mod
+    raise TypeError(f"no model registered for config type {type(cfg)!r}")
+
+
+def model_flops_per_token(cfg, train: bool = True) -> float:
+    """MODEL_FLOPS/token: 6·N (train) or 2·N (inference fwd), N = active."""
+    n = (
+        cfg.active_params()
+        if hasattr(cfg, "active_params")
+        else cfg.num_params()
+    )
+    return (6.0 if train else 2.0) * n

@@ -1,0 +1,348 @@
+"""Mixture-of-Experts models (arctic-480b, and the MoE layer reused by
+deepseek-v2-lite in mla.py).
+
+Routing is GShard/GSPMD-style **grouped dense dispatch**: tokens are
+routed within fixed-size groups so the dispatch/combine tensors are
+(groups, group_size, experts, capacity) einsums — the formulation that
+SPMD-partitions cleanly with experts sharded over the `model` axis (EP)
+and groups over `data` (DP).  Tokens beyond an expert's capacity are
+dropped (standard top-k capacity semantics); an auxiliary load-balance
+loss keeps the router honest.
+
+Arctic's block is the *Dense-MoE hybrid residual*: attention, then a
+dense FFN **and** a top-2/128-expert MoE applied in parallel residual
+branches — both implemented here.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.sharding import constrain
+from repro.models import common, transformer
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig(transformer.TransformerConfig):
+    family: str = "moe"
+    n_experts: int = 128
+    top_k: int = 2
+    moe_d_ff: int = 4864  # per-expert hidden
+    capacity_factor: float = 1.25
+    router_group: int = 1024  # tokens per routing group
+    dense_residual: bool = False  # arctic: dense FFN ∥ MoE
+    n_shared_experts: int = 0  # deepseek: always-on shared experts
+    first_k_dense: int = 0  # deepseek: leading dense layers
+    router_aux_coef: float = 0.01
+    norm_topk: bool = False
+
+    def num_params(self) -> int:
+        D, F, V = self.d_model, self.d_ff, self.vocab
+        H, G, hd = self.n_heads, self.n_kv_heads, self.hd
+        attn = D * H * hd + 2 * D * G * hd + H * hd * D
+        expert = 3 * D * self.moe_d_ff
+        moe = self.n_experts * expert + D * self.n_experts
+        shared = 3 * D * self.moe_d_ff * self.n_shared_experts
+        dense = 3 * D * F if self.dense_residual else 0
+        per_layer = attn + moe + shared + dense + 2 * D
+        emb = V * D * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + emb + D
+
+    def active_params(self) -> int:
+        """Per-token active parameters (for MODEL_FLOPS = 6·N_active·D)."""
+        D, F, V = self.d_model, self.d_ff, self.vocab
+        H, G, hd = self.n_heads, self.n_kv_heads, self.hd
+        attn = D * H * hd + 2 * D * G * hd + H * hd * D
+        expert = 3 * D * self.moe_d_ff
+        act = self.top_k * expert + D * self.n_experts
+        act += 3 * D * self.moe_d_ff * self.n_shared_experts
+        if self.dense_residual:
+            act += 3 * D * F
+        per_layer = attn + act + 2 * D
+        emb = V * D * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + emb + D
+
+
+# ---------------------------------------------------------------------------
+# MoE layer
+# ---------------------------------------------------------------------------
+
+
+def moe_init(cfg: MoEConfig, rng: Array) -> PyTree:
+    D, Fm, E = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    dt = cfg.param_dtype
+    ks = jax.random.split(rng, 5)
+    p = {
+        "router": common.dense_init(ks[0], (D, E), jnp.float32, ("embed", "expert")),
+        "we_gate": common.dense_init(
+            ks[1], (E, D, Fm), dt, ("expert", "embed", "expert_mlp")
+        ),
+        "we_up": common.dense_init(
+            ks[2], (E, D, Fm), dt, ("expert", "embed", "expert_mlp")
+        ),
+        "we_down": common.dense_init(
+            ks[3], (E, Fm, D), dt, ("expert", "expert_mlp", "embed")
+        ),
+    }
+    if cfg.n_shared_experts:
+        Fs = cfg.moe_d_ff * cfg.n_shared_experts
+        kg, ku, kd = jax.random.split(ks[4], 3)
+        p["ws_gate"] = common.dense_init(kg, (D, Fs), dt, ("embed", "mlp"))
+        p["ws_up"] = common.dense_init(ku, (D, Fs), dt, ("embed", "mlp"))
+        p["ws_down"] = common.dense_init(kd, (Fs, D), dt, ("mlp", "embed"))
+    return p
+
+
+def _topk_dispatch(
+    cfg: MoEConfig, probs: Array
+) -> tuple[Array, Array]:
+    """Build dispatch/combine tensors with capacity dropping.
+
+    probs: (G, gs, E) router probabilities.
+    Returns (dispatch (G, gs, E, C) float, combine (G, gs, E, C) float).
+    """
+    G, gs, E = probs.shape
+    k = cfg.top_k
+    C = max(int(cfg.capacity_factor * gs * k / E), 1)
+
+    gate_vals, idx = lax.top_k(probs, k)  # (G, gs, k)
+    if cfg.norm_topk:
+        gate_vals = gate_vals / jnp.maximum(
+            jnp.sum(gate_vals, -1, keepdims=True), 1e-9
+        )
+
+    # position of each (token, slot) in its expert's buffer, slot-major:
+    # slot j tokens queue behind all slot-(<j) tokens (mesh-tf convention).
+    counts = jnp.zeros((G, E), jnp.int32)
+    dispatch = jnp.zeros((G, gs, E, C), probs.dtype)
+    combine = jnp.zeros((G, gs, E, C), probs.dtype)
+    for j in range(k):
+        onehot = jax.nn.one_hot(idx[..., j], E, dtype=jnp.int32)  # (G, gs, E)
+        pos = jnp.cumsum(onehot, axis=1) - onehot + counts[:, None, :]
+        keep = (pos < C) & (onehot > 0)
+        pos_oh = jax.nn.one_hot(pos, C, dtype=probs.dtype) * keep[..., None]
+        d_j = onehot[..., None].astype(probs.dtype) * pos_oh  # (G, gs, E, C)
+        dispatch = dispatch + d_j
+        combine = combine + d_j * gate_vals[..., j][..., None, None]
+        counts = counts + jnp.sum(onehot * keep.astype(jnp.int32), axis=1)
+    return dispatch, combine
+
+
+def moe_block(cfg: MoEConfig, mp: PyTree, x: Array) -> tuple[Array, Array]:
+    """x (B, S, D) → (y, aux_loss).  Grouped dispatch; experts on 'model'."""
+    B, S, D = x.shape
+    cd = cfg.compute_dtype
+    T = B * S
+    gs = min(cfg.router_group, T)
+    while T % gs != 0:  # largest divisor of T ≤ router_group (static)
+        gs -= 1
+    xg = x.reshape(-1, gs, D)  # (G, gs, D)
+    G = xg.shape[0]
+
+    logits = xg.astype(jnp.float32) @ mp["router"]  # (G, gs, E) fp32 routing
+    probs = jax.nn.softmax(logits, axis=-1)
+    dispatch, combine = _topk_dispatch(cfg, probs)
+    dispatch = constrain(dispatch.astype(cd), ("batch", None, "expert", None))
+
+    # Switch-style load-balance aux: E · Σ_e f_e · p_e
+    frac_tokens = jnp.mean(jnp.sum(dispatch, axis=-1).astype(jnp.float32), axis=1)
+    frac_probs = jnp.mean(probs, axis=1)  # (G, E)
+    aux = cfg.n_experts * jnp.mean(jnp.sum(frac_tokens * frac_probs, -1))
+
+    xe = jnp.einsum("gsec,gsd->gecd", dispatch, xg.astype(cd))
+    xe = constrain(xe, ("batch", "expert", None, None))
+    hg = jnp.einsum("gecd,edf->gecf", xe, mp["we_gate"].astype(cd))
+    hu = jnp.einsum("gecd,edf->gecf", xe, mp["we_up"].astype(cd))
+    h = common.swiglu(hg, hu)
+    ye = jnp.einsum("gecf,efd->gecd", h, mp["we_down"].astype(cd))
+    ye = constrain(ye, ("batch", "expert", None, None))
+    y = jnp.einsum("gsec,gecd->gsd", combine.astype(cd), ye)
+    y = y.reshape(B, S, D)
+
+    if cfg.n_shared_experts:
+        hs = common.swiglu(
+            x @ mp["ws_gate"].astype(cd), x @ mp["ws_up"].astype(cd)
+        )
+        y = y + hs @ mp["ws_down"].astype(cd)
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# Arctic-style model: attention + (dense FFN ∥ MoE) residual
+# ---------------------------------------------------------------------------
+
+
+def _layer_init(cfg: MoEConfig, rng: Array) -> PyTree:
+    k_attn, k_moe, k_dense = jax.random.split(rng, 3)
+    p = transformer._layer_init(
+        dataclasses.replace(cfg, mlp="swiglu"), k_attn
+    )
+    # replace the dense MLP with MoE (keep dense branch only if residual)
+    if not cfg.dense_residual:
+        for key in ("w_gate", "w_up", "w_down"):
+            p.pop(key, None)
+    moe_pa = moe_init(cfg, k_moe)
+    p["moe"] = moe_pa
+    p["ln3"] = common.ones_init((cfg.d_model,), cfg.param_dtype, (None,))
+    return p
+
+
+def init_params(cfg: MoEConfig, rng: Array) -> tuple[PyTree, PyTree]:
+    k_emb, k_head, k_layers = jax.random.split(rng, 3)
+    layer_rngs = jax.random.split(k_layers, cfg.n_layers)
+    layers_pa = [_layer_init(cfg, r) for r in layer_rngs]
+    layer_params = [common.split_tree(l)[0] for l in layers_pa]
+    layer_axes = common.split_tree(layers_pa[0])[1]
+    pa = {
+        "embed": common.dense_init(
+            k_emb, (cfg.vocab, cfg.d_model), cfg.param_dtype, ("vocab", "embed"), 0.02
+        ),
+        "final_norm": common.ones_init((cfg.d_model,), cfg.param_dtype, (None,)),
+    }
+    if not cfg.tie_embeddings:
+        pa["lm_head"] = common.dense_init(
+            k_head, (cfg.d_model, cfg.vocab), cfg.param_dtype, ("embed", "vocab")
+        )
+    params, axes = common.split_tree(pa)
+    params["layers"] = common.stack_layers(layer_params)
+    axes["layers"] = common.stacked_axes(layer_axes)
+    return params, axes
+
+
+def _layer_train(cfg: MoEConfig, x: Array, lp: PyTree, positions: Array):
+    q, k, v = transformer._qkv(cfg, lp, x, positions)
+    attn = common.blockwise_attention(q, k, v, causal=True, block_k=cfg.block_k)
+    x = transformer._attn_out(cfg, lp, x, attn)
+    h = common.rms_norm(x, lp["ln3"], cfg.norm_eps)
+    y_moe, aux = moe_block(cfg, lp["moe"], h)
+    if cfg.dense_residual:
+        x = transformer._mlp(cfg, lp, x) + y_moe
+    else:
+        x = x + y_moe
+    return constrain(x, ("batch", None, None)), aux
+
+
+def forward(
+    cfg: MoEConfig, params: PyTree, tokens: Array
+) -> tuple[Array, Array]:
+    B, S = tokens.shape
+    cd = cfg.compute_dtype
+    x = params["embed"].astype(cd)[tokens]
+    x = constrain(x, ("batch", None, None))
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    layer = transformer._remat(
+        cfg, functools.partial(_layer_train, cfg, positions=positions)
+    )
+
+    def scan_body(x, lp):
+        x, aux = layer(x, lp)
+        return x, aux
+
+    x, auxs = lax.scan(scan_body, x, params["layers"])
+    x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = (
+        params["embed"].astype(cd).T
+        if cfg.tie_embeddings
+        else params["lm_head"].astype(cd)
+    )
+    logits = x @ head
+    return constrain(logits, ("batch", None, "vocab")), jnp.mean(auxs)
+
+
+def loss_fn(cfg: MoEConfig, params: PyTree, batch: dict) -> Array:
+    logits, aux = forward(cfg, params, batch["tokens"])
+    ce = common.softmax_cross_entropy(logits, batch["labels"], batch.get("mask"))
+    return ce + cfg.router_aux_coef * aux
+
+
+# -- decode (cache identical to the dense transformer's) --------------------
+
+init_cache = transformer.init_cache
+
+
+def _layer_decode(cfg: MoEConfig, carry, layer_in):
+    x, pos = carry
+    lp, k_cache, v_cache = layer_in
+    B = x.shape[0]
+    positions = jnp.broadcast_to(pos[None, None], (B, 1))
+    q, k_new, v_new = transformer._qkv(cfg, lp, x, positions)
+    k_cache = lax.dynamic_update_slice(k_cache, k_new, (0, pos, 0, 0))
+    v_cache = lax.dynamic_update_slice(v_cache, v_new, (0, pos, 0, 0))
+    kv_len = jnp.broadcast_to(pos + 1, (B,))
+    attn = common.decode_attention(q, k_cache, v_cache, kv_len)
+    x = transformer._attn_out(cfg, lp, x, attn)
+    h = common.rms_norm(x, lp["ln3"], cfg.norm_eps)
+    y_moe, _ = moe_block(cfg, lp["moe"], h)
+    if cfg.dense_residual:
+        x = transformer._mlp(cfg, lp, x) + y_moe
+    else:
+        x = x + y_moe
+    return (x, pos), (k_cache, v_cache)
+
+
+def decode_step(cfg: MoEConfig, params: PyTree, cache: PyTree, tokens: Array):
+    cd = cfg.compute_dtype
+    x = params["embed"].astype(cd)[tokens]
+    x = constrain(x, ("batch", None, None))
+    pos = cache["length"]
+    (x, _), (k_new, v_new) = lax.scan(
+        lambda c, li: _layer_decode(cfg, c, li),
+        (x, pos),
+        (params["layers"], cache["k"], cache["v"]),
+    )
+    x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = (
+        params["embed"].astype(cd).T
+        if cfg.tie_embeddings
+        else params["lm_head"].astype(cd)
+    )
+    logits = (x @ head)[:, 0]
+    return logits, {"k": k_new, "v": v_new, "length": pos + 1}
+
+
+def prefill(cfg: MoEConfig, params: PyTree, tokens: Array, max_len: int | None = None):
+    B, S = tokens.shape
+    M = max_len or S
+    cd = cfg.compute_dtype
+    x = params["embed"].astype(cd)[tokens]
+    x = constrain(x, ("batch", None, None))
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def layer_fn(x, lp):
+        (x, _aux) = _layer_train(cfg, x, lp, positions)
+        return x
+
+    def scan_body(x, lp):
+        q, k, v = transformer._qkv(cfg, lp, x, positions)
+        attn = common.blockwise_attention(q, k, v, causal=True, block_k=cfg.block_k)
+        x1 = transformer._attn_out(cfg, lp, x, attn)
+        h = common.rms_norm(x1, lp["ln3"], cfg.norm_eps)
+        y_moe, _ = moe_block(cfg, lp["moe"], h)
+        if cfg.dense_residual:
+            x1 = transformer._mlp(cfg, lp, x1) + y_moe
+        else:
+            x1 = x1 + y_moe
+        if M > S:
+            k = jnp.pad(k, ((0, 0), (0, M - S), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, M - S), (0, 0), (0, 0)))
+        return x1, (k, v)
+
+    x, (ks, vs) = lax.scan(scan_body, x, params["layers"])
+    x = common.rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    head = (
+        params["embed"].astype(cd).T
+        if cfg.tie_embeddings
+        else params["lm_head"].astype(cd)
+    )
+    logits = (x @ head)[:, 0]
+    return logits, {"k": ks, "v": vs, "length": jnp.asarray(S, jnp.int32)}

@@ -1,0 +1,374 @@
+"""Dense decoder-only transformer (granite, qwen2, llama3, nemotron).
+
+One scanned layer definition covers the whole dense family via config
+switches: GQA group count, QKV bias (qwen2), MLP flavor (SwiGLU vs
+nemotron's squared-ReLU), RoPE theta, tied embeddings.
+
+Uniform Model API (shared by every arch in the zoo):
+
+  init_params(cfg, rng)                 → (params, logical_axes)
+  loss_fn(cfg, params, batch)           → scalar CE loss
+  prefill(cfg, params, tokens)          → (last_logits, cache)
+  decode_step(cfg, params, cache, tok)  → (logits, cache)
+  init_cache(cfg, batch, max_len)       → cache pytree
+
+The MoE subclasses (arctic, deepseek) and the frontend-stub archs
+(whisper, internvl2) build on these pieces.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.sharding import constrain
+from repro.models import common
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str = "transformer"
+    family: str = "dense"
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_ff: int = 1024
+    vocab: int = 1024
+    head_dim: int | None = None
+    mlp: str = "swiglu"  # 'swiglu' | 'squared_relu' | 'gelu'
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    param_dtype: Any = jnp.bfloat16
+    compute_dtype: Any = jnp.bfloat16
+    remat: bool = True
+    block_k: int = 512
+    # perf-variant knobs (hillclimbing; see EXPERIMENTS.md §Perf)
+    remat_policy: str = "full"  # 'full' | 'dots' | 'none'
+    # FSDP weight handling at compute time: when True, layer weights are
+    # constrained to (None, 'model') inside the layer body, forcing one
+    # all-gather over 'data' per layer instead of per-matmul activation
+    # all-reduces (XLA's default cost-model choice at these shapes).
+    fsdp_gather_weights: bool = False
+    # fp32 softmax/CE intermediates kept in bf16 where numerically safe
+    lean_softmax: bool = False
+    # Megatron-style sequence parallelism: the between-layer residual is
+    # stored sequence-sharded over 'model'; the TP all-reduce after
+    # wo/w_down becomes a reduce-scatter (half the wire bytes) and stored
+    # activations shrink by the TP degree.
+    seq_shard: bool = False
+    # gather the sequence once at layer entry (full-seq compute region)
+    # vs computing every per-token matmul sequence-sharded
+    seq_gather_entry: bool = False
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def num_params(self) -> int:
+        D, F, V, H, G, hd = (
+            self.d_model,
+            self.d_ff,
+            self.vocab,
+            self.n_heads,
+            self.n_kv_heads,
+            self.hd,
+        )
+        attn = D * H * hd + 2 * D * G * hd + H * hd * D
+        mlp = 3 * D * F if self.mlp == "swiglu" else 2 * D * F
+        per_layer = attn + mlp + 2 * D
+        emb = V * D * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + emb + D
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _layer_init(cfg: TransformerConfig, rng: Array) -> PyTree:
+    D, F, H, G, hd = cfg.d_model, cfg.d_ff, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(rng, 8)
+    dt = cfg.param_dtype
+    p = {
+        "ln1": common.ones_init((D,), dt, (None,)),
+        "wq": common.dense_init(ks[0], (D, H * hd), dt, ("embed", "heads")),
+        "wk": common.dense_init(ks[1], (D, G * hd), dt, ("embed", "kv_heads")),
+        "wv": common.dense_init(ks[2], (D, G * hd), dt, ("embed", "kv_heads")),
+        "wo": common.dense_init(ks[3], (H * hd, D), dt, ("heads", "embed")),
+        "ln2": common.ones_init((D,), dt, (None,)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = common.zeros_init((H * hd,), dt, ("heads",))
+        p["bk"] = common.zeros_init((G * hd,), dt, ("kv_heads",))
+        p["bv"] = common.zeros_init((G * hd,), dt, ("kv_heads",))
+    if cfg.mlp == "swiglu":
+        p["w_gate"] = common.dense_init(ks[4], (D, F), dt, ("embed", "mlp"))
+        p["w_up"] = common.dense_init(ks[5], (D, F), dt, ("embed", "mlp"))
+        p["w_down"] = common.dense_init(ks[6], (F, D), dt, ("mlp", "embed"))
+    else:
+        p["w_up"] = common.dense_init(ks[4], (D, F), dt, ("embed", "mlp"))
+        p["w_down"] = common.dense_init(ks[5], (F, D), dt, ("mlp", "embed"))
+    return p
+
+
+def init_params(cfg: TransformerConfig, rng: Array) -> tuple[PyTree, PyTree]:
+    """Returns (params, logical_axes) — layers stacked for lax.scan."""
+    k_emb, k_head, k_layers = jax.random.split(rng, 3)
+    layer_rngs = jax.random.split(k_layers, cfg.n_layers)
+    layers_pa = [_layer_init(cfg, r) for r in layer_rngs]
+    layer_params = [common.split_tree(l)[0] for l in layers_pa]
+    layer_axes = common.split_tree(layers_pa[0])[1]
+    pa = {
+        "embed": common.dense_init(
+            k_emb, (cfg.vocab, cfg.d_model), cfg.param_dtype, ("vocab", "embed"), 0.02
+        ),
+        "final_norm": common.ones_init((cfg.d_model,), cfg.param_dtype, (None,)),
+    }
+    if not cfg.tie_embeddings:
+        pa["lm_head"] = common.dense_init(
+            k_head, (cfg.d_model, cfg.vocab), cfg.param_dtype, ("embed", "vocab")
+        )
+    params, axes = common.split_tree(pa)
+    params["layers"] = common.stack_layers(layer_params)
+    axes["layers"] = common.stacked_axes(layer_axes)
+    return params, axes
+
+
+# ---------------------------------------------------------------------------
+# layer forward (shared by train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+
+def _w(cfg: TransformerConfig, w: Array, *spec):
+    """Weight as consumed by a matmul.  With fsdp_gather_weights, pin the
+    FSDP ('data'-sharded) dim unsharded at compute time — one explicit
+    all-gather over 'data' per layer, keeping only the inherent TP
+    ('model') sharding on the contraction/output dims."""
+    if not cfg.fsdp_gather_weights:
+        return w
+    return constrain(w, spec)
+
+
+def _qkv(cfg: TransformerConfig, lp: PyTree, x: Array, positions: Array):
+    B, S, D = x.shape
+    H, G, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    cd = cfg.compute_dtype
+    h = common.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    q = h @ _w(cfg, lp["wq"].astype(cd), None, "heads")
+    k = h @ _w(cfg, lp["wk"].astype(cd), None, "kv_heads")
+    v = h @ _w(cfg, lp["wv"].astype(cd), None, "kv_heads")
+    if cfg.qkv_bias:
+        q = q + lp["bq"].astype(cd)
+        k = k + lp["bk"].astype(cd)
+        v = v + lp["bv"].astype(cd)
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, G, hd)
+    v = v.reshape(B, S, G, hd)
+    q = common.apply_rope(q, positions, cfg.rope_theta)
+    k = common.apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, ("batch", None, "heads", None))
+    k = constrain(k, ("batch", None, "kv_heads", None))
+    return q, k, v
+
+
+def _attn_out(cfg: TransformerConfig, lp: PyTree, x: Array, attn: Array) -> Array:
+    B, S = x.shape[:2]
+    wo = _w(cfg, lp["wo"].astype(cfg.compute_dtype), "heads", None)
+    o = attn.reshape(B, S, cfg.n_heads * cfg.hd) @ wo
+    return x + constrain(o, ("batch", None, None))
+
+
+def _mlp(cfg: TransformerConfig, lp: PyTree, x: Array) -> Array:
+    cd = cfg.compute_dtype
+    h = common.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.mlp == "swiglu":
+        g = h @ _w(cfg, lp["w_gate"].astype(cd), None, "mlp")
+        u = h @ _w(cfg, lp["w_up"].astype(cd), None, "mlp")
+        z = common.swiglu(g, u)
+    else:
+        act = common.ACTIVATIONS[
+            "squared_relu" if cfg.mlp == "squared_relu" else cfg.mlp
+        ]
+        z = act(h @ _w(cfg, lp["w_up"].astype(cd), None, "mlp"))
+    z = constrain(z, ("batch", None, "mlp"))
+    return x + (z @ _w(cfg, lp["w_down"].astype(cd), "mlp", None))
+
+
+def _layer_train(cfg: TransformerConfig, x: Array, lp: PyTree, positions: Array):
+    if cfg.seq_shard and cfg.seq_gather_entry:
+        # gather the seq-sharded residual ONCE at layer entry; the layer
+        # computes on the full sequence and reshards once at exit — one
+        # AG + one RS per layer per pass (Megatron-SP), while the stored
+        # (checkpointed) carry stays sequence-sharded.
+        x = constrain(x, ("batch", None, None))
+    q, k, v = _qkv(cfg, lp, x, positions)
+    attn = common.blockwise_attention(q, k, v, causal=True, block_k=cfg.block_k)
+    x = _attn_out(cfg, lp, x, attn)
+    x = _mlp(cfg, lp, x)
+    seq_axis = "seq_model" if cfg.seq_shard else None
+    return constrain(x, ("batch", seq_axis, None))
+
+
+def _remat(cfg: TransformerConfig, fn):
+    if not cfg.remat or cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+
+def trunk(
+    cfg: TransformerConfig, params: PyTree, x: Array, positions: Array
+) -> Array:
+    """Embedded input (B, S, D) → final hidden states (pre-head)."""
+    layer = _remat(cfg, functools.partial(_layer_train, cfg, positions=positions))
+
+    def scan_body(x, lp):
+        return layer(x, lp), None
+
+    x, _ = lax.scan(scan_body, x, params["layers"])
+    return common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def unembed(cfg: TransformerConfig, params: PyTree, x: Array) -> Array:
+    cd = cfg.compute_dtype
+    head = (
+        params["embed"].astype(cd).T
+        if cfg.tie_embeddings
+        else params["lm_head"].astype(cd)
+    )
+    return x @ head
+
+
+def forward(cfg: TransformerConfig, params: PyTree, tokens: Array) -> Array:
+    """tokens (B, S) → logits (B, S, V)."""
+    B, S = tokens.shape
+    cd = cfg.compute_dtype
+    x = params["embed"].astype(cd)[tokens]
+    x = constrain(x, ("batch", None, None))
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x = trunk(cfg, params, x, positions)
+    logits = unembed(cfg, params, x)
+    return constrain(logits, ("batch", None, "vocab"))
+
+
+def loss_fn(cfg: TransformerConfig, params: PyTree, batch: dict) -> Array:
+    logits = forward(cfg, params, batch["tokens"])
+    return common.softmax_cross_entropy(logits, batch["labels"], batch.get("mask"))
+
+
+# ---------------------------------------------------------------------------
+# KV cache: prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(
+    cfg: TransformerConfig, batch: int, max_len: int
+) -> tuple[PyTree, PyTree]:
+    """Returns (cache, logical_axes).  K/V stacked over layers."""
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.hd)
+    axes = ("layers", "batch", "kv_seq", "kv_heads", None)
+    cache = {
+        "k": jnp.zeros(shape, cfg.compute_dtype),
+        "v": jnp.zeros(shape, cfg.compute_dtype),
+        "length": jnp.zeros((), jnp.int32),
+    }
+    cache_axes = {"k": axes, "v": axes, "length": ()}
+    return cache, cache_axes
+
+
+def _layer_decode(cfg: TransformerConfig, carry, layer_in):
+    """One scanned decode layer.  carry = (x, pos); layer_in = (lp, k_c, v_c)."""
+    x, pos = carry
+    lp, k_cache, v_cache = layer_in  # caches (B, M, G, hd)
+    B = x.shape[0]
+    positions = jnp.broadcast_to(pos[None, None], (B, 1))
+    q, k_new, v_new = _qkv(cfg, lp, x, positions)
+    k_cache = lax.dynamic_update_slice(k_cache, k_new, (0, pos, 0, 0))
+    v_cache = lax.dynamic_update_slice(v_cache, v_new, (0, pos, 0, 0))
+    kv_len = jnp.broadcast_to(pos + 1, (B,))
+    attn = common.decode_attention(q, k_cache, v_cache, kv_len)
+    x = _attn_out(cfg, lp, x, attn)
+    x = _mlp(cfg, lp, x)
+    return (x, pos), (k_cache, v_cache)
+
+
+def decode_step(
+    cfg: TransformerConfig, params: PyTree, cache: PyTree, tokens: Array
+) -> tuple[Array, PyTree]:
+    """One greedy decode step.  tokens (B, 1) → (logits (B, V), new cache)."""
+    cd = cfg.compute_dtype
+    x = params["embed"].astype(cd)[tokens]  # (B, 1, D)
+    x = constrain(x, ("batch", None, None))
+    pos = cache["length"]
+
+    def scan_body(carry, layer_in):
+        return _layer_decode(cfg, carry, layer_in)
+
+    (x, _), (k_new, v_new) = lax.scan(
+        scan_body, (x, pos), (params["layers"], cache["k"], cache["v"])
+    )
+    x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = (
+        params["embed"].astype(cd).T
+        if cfg.tie_embeddings
+        else params["lm_head"].astype(cd)
+    )
+    logits = (x @ head)[:, 0]
+    new_cache = {"k": k_new, "v": v_new, "length": pos + 1}
+    return logits, new_cache
+
+
+def prefill(
+    cfg: TransformerConfig, params: PyTree, tokens: Array, max_len: int | None = None
+) -> tuple[Array, PyTree]:
+    """Process a full prompt, building the cache.  tokens (B, S).
+
+    Returns (last-position logits (B, V), cache with length = S).
+    """
+    B, S = tokens.shape
+    M = max_len or S
+    cd = cfg.compute_dtype
+    x = params["embed"].astype(cd)[tokens]
+    x = constrain(x, ("batch", None, None))
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def layer_fn(x, lp):
+        q, k, v = _qkv(cfg, lp, x, positions)
+        attn = common.blockwise_attention(q, k, v, causal=True, block_k=cfg.block_k)
+        x = _attn_out(cfg, lp, x, attn)
+        x = _mlp(cfg, lp, x)
+        if M > S:
+            k = jnp.pad(k, ((0, 0), (0, M - S), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, M - S), (0, 0), (0, 0)))
+        return x, (k, v)
+
+    x, (ks, vs) = lax.scan(
+        lambda x, lp: layer_fn(x, lp), x, params["layers"]
+    )
+    x = common.rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    head = (
+        params["embed"].astype(cd).T
+        if cfg.tie_embeddings
+        else params["lm_head"].astype(cd)
+    )
+    logits = (x @ head)[:, 0]
+    cache = {"k": ks, "v": vs, "length": jnp.asarray(S, jnp.int32)}
+    return logits, cache

@@ -1,0 +1,95 @@
+"""InternVL2-2B backbone: InternLM2-1.8B LM consuming vision-patch
+embeddings.
+
+Per the assignment the InternViT frontend is a **stub**: `input_specs()`
+supplies precomputed patch embeddings (B, n_patches, d_model) which are
+*prepended* to the token embeddings; the LM (standard SwiGLU/RMSNorm/GQA
+decoder — transformer.py) runs causally over [patches ; tokens].  The LM
+loss masks the patch prefix.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.sharding import constrain
+from repro.models import common, transformer
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class VLMConfig(transformer.TransformerConfig):
+    family: str = "vlm"
+    n_patches: int = 256  # one 448×448 tile → 256 visual tokens
+
+    def num_params(self) -> int:
+        return super().num_params()
+
+
+init_params = transformer.init_params
+init_cache = transformer.init_cache
+decode_step = transformer.decode_step
+
+
+def forward(cfg: VLMConfig, params: PyTree, batch: dict) -> Array:
+    """batch: {patches (B, Np, D), tokens (B, S)} → logits (B, Np+S, V)."""
+    tokens = batch["tokens"]
+    patches = batch["patches"]
+    B, S = tokens.shape
+    Np = patches.shape[1]
+    cd = cfg.compute_dtype
+    x_tok = params["embed"].astype(cd)[tokens]
+    x = jnp.concatenate([patches.astype(cd), x_tok], axis=1)
+    x = constrain(x, ("batch", None, None))
+    positions = jnp.broadcast_to(jnp.arange(Np + S)[None], (B, Np + S))
+    x = transformer.trunk(cfg, params, x, positions)
+    logits = transformer.unembed(cfg, params, x)
+    return constrain(logits, ("batch", None, "vocab"))
+
+
+def loss_fn(cfg: VLMConfig, params: PyTree, batch: dict) -> Array:
+    """CE over text positions only (patch prefix masked out)."""
+    logits = forward(cfg, params, batch)
+    Np = batch["patches"].shape[1]
+    text_logits = logits[:, Np:]
+    return common.softmax_cross_entropy(
+        text_logits, batch["labels"], batch.get("mask")
+    )
+
+
+def prefill(cfg: VLMConfig, params: PyTree, batch: dict, max_len=None):
+    """Prefill over [patches ; prompt tokens], returning cache."""
+    tokens = batch["tokens"]
+    patches = batch["patches"]
+    B, S = tokens.shape
+    Np = patches.shape[1]
+    total = Np + S
+    M = max_len or total
+    cd = cfg.compute_dtype
+    x_tok = params["embed"].astype(cd)[tokens]
+    x = jnp.concatenate([patches.astype(cd), x_tok], axis=1)
+    x = constrain(x, ("batch", None, None))
+    positions = jnp.broadcast_to(jnp.arange(total)[None], (B, total))
+
+    def layer_fn(x, lp):
+        q, k, v = transformer._qkv(cfg, lp, x, positions)
+        attn = common.blockwise_attention(q, k, v, causal=True, block_k=cfg.block_k)
+        x = transformer._attn_out(cfg, lp, x, attn)
+        x = transformer._mlp(cfg, lp, x)
+        if M > total:
+            k = jnp.pad(k, ((0, 0), (0, M - total), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, M - total), (0, 0), (0, 0)))
+        return x, (k, v)
+
+    x, (ks, vs) = lax.scan(lambda c, lp: layer_fn(c, lp), x, params["layers"])
+    x = common.rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = transformer.unembed(cfg, params, x)[:, 0]
+    cache = {"k": ks, "v": vs, "length": jnp.asarray(total, jnp.int32)}
+    return logits, cache

@@ -1,0 +1,333 @@
+"""Whisper-tiny backbone: transformer encoder-decoder.
+
+Per the assignment, the conv/mel frontend is a **stub**: `input_specs()`
+supplies precomputed frame embeddings (B, n_frames, d_model) — the
+encoder consumes them directly (sinusoidal positions added).  The decoder
+is a standard causal transformer with cross-attention into the encoder
+output, learned positions, LayerNorm + GELU, tied unembedding.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.sharding import constrain
+from repro.models import common, transformer
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class WhisperConfig(transformer.TransformerConfig):
+    family: str = "audio"
+    n_frames: int = 1500  # encoder positions (30 s @ 50 Hz)
+    max_target: int = 4096  # decoder learned-position table
+    tie_embeddings: bool = True
+
+    def num_params(self) -> int:
+        D, F, V, H, hd = self.d_model, self.d_ff, self.vocab, self.n_heads, self.hd
+        attn = 4 * D * H * hd
+        mlp = 2 * D * F
+        enc_l = attn + mlp + 4 * D
+        dec_l = 2 * attn + mlp + 6 * D
+        return (
+            self.n_layers * (enc_l + dec_l)
+            + V * D
+            + self.max_target * D
+            + 4 * D
+        )
+
+
+def _ln_init(D, dt):
+    return {
+        "w": common.ones_init((D,), dt, (None,)),
+        "b": common.zeros_init((D,), dt, (None,)),
+    }
+
+
+def _attn_init(cfg: WhisperConfig, rng: Array) -> PyTree:
+    D, H, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    dt = cfg.param_dtype
+    ks = jax.random.split(rng, 4)
+    return {
+        "wq": common.dense_init(ks[0], (D, H * hd), dt, ("embed", "heads")),
+        "wk": common.dense_init(ks[1], (D, H * hd), dt, ("embed", "heads")),
+        "wv": common.dense_init(ks[2], (D, H * hd), dt, ("embed", "heads")),
+        "wo": common.dense_init(ks[3], (H * hd, D), dt, ("heads", "embed")),
+        "bq": common.zeros_init((H * hd,), dt, ("heads",)),
+        "bv": common.zeros_init((H * hd,), dt, ("heads",)),
+        "bo": common.zeros_init((D,), dt, (None,)),
+    }
+
+
+def _mlp_init(cfg: WhisperConfig, rng: Array) -> PyTree:
+    D, F = cfg.d_model, cfg.d_ff
+    dt = cfg.param_dtype
+    k1, k2 = jax.random.split(rng)
+    return {
+        "w1": common.dense_init(k1, (D, F), dt, ("embed", "mlp")),
+        "b1": common.zeros_init((F,), dt, ("mlp",)),
+        "w2": common.dense_init(k2, (F, D), dt, ("mlp", "embed")),
+        "b2": common.zeros_init((D,), dt, (None,)),
+    }
+
+
+def init_params(cfg: WhisperConfig, rng: Array) -> tuple[PyTree, PyTree]:
+    D = cfg.d_model
+    dt = cfg.param_dtype
+    k_emb, k_pos, k_enc, k_dec = jax.random.split(rng, 4)
+
+    def enc_layer(r):
+        k1, k2 = jax.random.split(r)
+        return {
+            "ln1": _ln_init(D, dt),
+            "attn": _attn_init(cfg, k1),
+            "ln2": _ln_init(D, dt),
+            "mlp": _mlp_init(cfg, k2),
+        }
+
+    def dec_layer(r):
+        k1, k2, k3 = jax.random.split(r, 3)
+        return {
+            "ln1": _ln_init(D, dt),
+            "self_attn": _attn_init(cfg, k1),
+            "ln2": _ln_init(D, dt),
+            "cross_attn": _attn_init(cfg, k2),
+            "ln3": _ln_init(D, dt),
+            "mlp": _mlp_init(cfg, k3),
+        }
+
+    enc_pa = [enc_layer(r) for r in jax.random.split(k_enc, cfg.n_layers)]
+    dec_pa = [dec_layer(r) for r in jax.random.split(k_dec, cfg.n_layers)]
+    enc_split = [common.split_tree(l) for l in enc_pa]
+    dec_split = [common.split_tree(l) for l in dec_pa]
+    pa = {
+        "embed": common.dense_init(k_emb, (cfg.vocab, D), dt, ("vocab", "embed"), 0.02),
+        "dec_pos": common.dense_init(
+            k_pos, (cfg.max_target, D), dt, (None, "embed"), 0.01
+        ),
+        "enc_ln_post": _ln_init(D, dt),
+        "dec_ln_post": _ln_init(D, dt),
+    }
+    params, axes = common.split_tree(pa)
+    params["enc_layers"] = common.stack_layers([e[0] for e in enc_split])
+    axes["enc_layers"] = common.stacked_axes(enc_split[0][1])
+    params["dec_layers"] = common.stack_layers([d[0] for d in dec_split])
+    axes["dec_layers"] = common.stacked_axes(dec_split[0][1])
+    return params, axes
+
+
+# ---------------------------------------------------------------------------
+# attention helper (MHA with whisper's bias pattern, optional cross inputs)
+# ---------------------------------------------------------------------------
+
+
+def _mha(cfg, ap, xq, xkv, causal, q_offset=0, kv_len=None):
+    B, Sq, D = xq.shape
+    H, hd = cfg.n_heads, cfg.hd
+    cd = cfg.compute_dtype
+    q = (xq @ ap["wq"].astype(cd) + ap["bq"].astype(cd)).reshape(B, Sq, H, hd)
+    k = (xkv @ ap["wk"].astype(cd)).reshape(B, -1, H, hd)
+    v = (xkv @ ap["wv"].astype(cd) + ap["bv"].astype(cd)).reshape(B, -1, H, hd)
+    o = common.blockwise_attention(
+        q, k, v, causal=causal, q_offset=q_offset, kv_len=kv_len,
+        block_k=cfg.block_k,
+    )
+    return o.reshape(B, Sq, H * hd) @ ap["wo"].astype(cd) + ap["bo"].astype(cd)
+
+
+def _mha_cached(cfg, ap, xq, k, v, q_offset, kv_len):
+    """Cross/self attention against precomputed K/V (decode path)."""
+    B, Sq, D = xq.shape
+    H, hd = cfg.n_heads, cfg.hd
+    cd = cfg.compute_dtype
+    q = (xq @ ap["wq"].astype(cd) + ap["bq"].astype(cd)).reshape(B, Sq, H, hd)
+    if Sq == 1:  # single-token decode: sharded-KV friendly path
+        if kv_len is None:
+            kv_len = jnp.full((B,), k.shape[1], jnp.int32)
+        o = common.decode_attention(q, k, v, kv_len)
+    else:
+        o = common.blockwise_attention(
+            q, k, v, causal=False, q_offset=q_offset, kv_len=kv_len,
+            block_k=cfg.block_k,
+        )
+    return o.reshape(B, Sq, H * hd) @ ap["wo"].astype(cd) + ap["bo"].astype(cd)
+
+
+def _kv(cfg, ap, xkv):
+    B = xkv.shape[0]
+    H, hd = cfg.n_heads, cfg.hd
+    cd = cfg.compute_dtype
+    k = (xkv @ ap["wk"].astype(cd)).reshape(B, -1, H, hd)
+    v = (xkv @ ap["wv"].astype(cd) + ap["bv"].astype(cd)).reshape(B, -1, H, hd)
+    return k, v
+
+
+def _ln(x, p, eps):
+    return common.layer_norm(x, p["w"], p["b"], eps)
+
+
+def _mlp(cfg, mp, x):
+    cd = cfg.compute_dtype
+    h = jax.nn.gelu(x @ mp["w1"].astype(cd) + mp["b1"].astype(cd))
+    return h @ mp["w2"].astype(cd) + mp["b2"].astype(cd)
+
+
+# ---------------------------------------------------------------------------
+# encoder / decoder
+# ---------------------------------------------------------------------------
+
+
+def encode(cfg: WhisperConfig, params: PyTree, frames: Array) -> Array:
+    """frames: (B, n_frames, D) precomputed embeddings (frontend stub)."""
+    B, T, D = frames.shape
+    cd = cfg.compute_dtype
+    x = frames.astype(cd) + common.sinusoidal_positions(T, D).astype(cd)[None]
+    x = constrain(x, ("batch", None, None))
+
+    def body(x, lp):
+        h = _ln(x, lp["ln1"], cfg.norm_eps)
+        x = x + _mha(cfg, lp["attn"], h, h, causal=False)
+        h = _ln(x, lp["ln2"], cfg.norm_eps)
+        x = x + _mlp(cfg, lp["mlp"], h)
+        return x, None
+
+    body = transformer._remat(cfg, body)
+    x, _ = lax.scan(lambda c, lp: body(c, lp), x, params["enc_layers"])
+    return _ln(x, params["enc_ln_post"], cfg.norm_eps)
+
+
+def decode_train(
+    cfg: WhisperConfig, params: PyTree, tokens: Array, enc_out: Array
+) -> Array:
+    B, S = tokens.shape
+    cd = cfg.compute_dtype
+    x = params["embed"].astype(cd)[tokens] + params["dec_pos"].astype(cd)[:S][None]
+    x = constrain(x, ("batch", None, None))
+
+    def body(x, lp):
+        h = _ln(x, lp["ln1"], cfg.norm_eps)
+        x = x + _mha(cfg, lp["self_attn"], h, h, causal=True)
+        h = _ln(x, lp["ln2"], cfg.norm_eps)
+        x = x + _mha(cfg, lp["cross_attn"], h, enc_out, causal=False)
+        h = _ln(x, lp["ln3"], cfg.norm_eps)
+        x = x + _mlp(cfg, lp["mlp"], h)
+        return x, None
+
+    body = transformer._remat(cfg, body)
+    x, _ = lax.scan(lambda c, lp: body(c, lp), x, params["dec_layers"])
+    x = _ln(x, params["dec_ln_post"], cfg.norm_eps)
+    return x @ params["embed"].astype(cd).T  # tied
+
+
+def forward(cfg: WhisperConfig, params: PyTree, batch: dict) -> Array:
+    enc_out = encode(cfg, params, batch["frames"])
+    return decode_train(cfg, params, batch["tokens"], enc_out)
+
+
+def loss_fn(cfg: WhisperConfig, params: PyTree, batch: dict) -> Array:
+    logits = forward(cfg, params, batch)
+    return common.softmax_cross_entropy(logits, batch["labels"], batch.get("mask"))
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill builds self-KV + cross-KV; decode_step extends self-KV
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: WhisperConfig, batch: int, max_len: int):
+    L, H, hd = cfg.n_layers, cfg.n_heads, cfg.hd
+    cd = cfg.compute_dtype
+    cache = {
+        "self_k": jnp.zeros((L, batch, max_len, H, hd), cd),
+        "self_v": jnp.zeros((L, batch, max_len, H, hd), cd),
+        "cross_k": jnp.zeros((L, batch, cfg.n_frames, H, hd), cd),
+        "cross_v": jnp.zeros((L, batch, cfg.n_frames, H, hd), cd),
+        "length": jnp.zeros((), jnp.int32),
+    }
+    kv_axes = ("layers", "batch", "kv_seq", "heads", None)
+    axes = {
+        "self_k": kv_axes,
+        "self_v": kv_axes,
+        "cross_k": kv_axes,
+        "cross_v": kv_axes,
+        "length": (),
+    }
+    return cache, axes
+
+
+def prefill(cfg: WhisperConfig, params: PyTree, batch: dict, max_len=None):
+    """Encode frames + run the decoder prompt. batch: {frames, tokens}."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    M = max_len or S
+    cd = cfg.compute_dtype
+    enc_out = encode(cfg, params, batch["frames"])
+    x = params["embed"].astype(cd)[tokens] + params["dec_pos"].astype(cd)[:S][None]
+
+    def body(x, lp):
+        h = _ln(x, lp["ln1"], cfg.norm_eps)
+        k, v = _kv(cfg, lp["self_attn"], h)
+        x = x + _mha(cfg, lp["self_attn"], h, h, causal=True)
+        h = _ln(x, lp["ln2"], cfg.norm_eps)
+        ck, cv = _kv(cfg, lp["cross_attn"], enc_out)
+        x = x + _mha_cached(cfg, lp["cross_attn"], h, ck, cv, 0, None)
+        h = _ln(x, lp["ln3"], cfg.norm_eps)
+        x = x + _mlp(cfg, lp["mlp"], h)
+        if M > S:
+            k = jnp.pad(k, ((0, 0), (0, M - S), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, M - S), (0, 0), (0, 0)))
+        return x, (k, v, ck, cv)
+
+    x, (ks, vs, cks, cvs) = lax.scan(lambda c, lp: body(c, lp), x,
+                                     params["dec_layers"])
+    x = _ln(x[:, -1:], params["dec_ln_post"], cfg.norm_eps)
+    logits = (x @ params["embed"].astype(cd).T)[:, 0]
+    cache = {
+        "self_k": ks, "self_v": vs, "cross_k": cks, "cross_v": cvs,
+        "length": jnp.asarray(S, jnp.int32),
+    }
+    return logits, cache
+
+
+def decode_step(cfg: WhisperConfig, params: PyTree, cache: PyTree, tokens: Array):
+    B = tokens.shape[0]
+    cd = cfg.compute_dtype
+    pos = cache["length"]
+    pos_emb = lax.dynamic_slice_in_dim(
+        params["dec_pos"].astype(cd), pos, 1, axis=0
+    )  # (1, D)
+    x = params["embed"].astype(cd)[tokens] + pos_emb[None]  # (B, 1, D)
+
+    def body(carry, li):
+        (x,) = carry
+        lp, k_c, v_c, ck, cv = li
+        h = _ln(x, lp["ln1"], cfg.norm_eps)
+        k_new, v_new = _kv(cfg, lp["self_attn"], h)
+        k_c = lax.dynamic_update_slice(k_c, k_new, (0, pos, 0, 0))
+        v_c = lax.dynamic_update_slice(v_c, v_new, (0, pos, 0, 0))
+        kv_len = jnp.broadcast_to(pos + 1, (B,))
+        x = x + _mha_cached(cfg, lp["self_attn"], h, k_c, v_c, pos, kv_len)
+        h = _ln(x, lp["ln2"], cfg.norm_eps)
+        x = x + _mha_cached(cfg, lp["cross_attn"], h, ck, cv, 0, None)
+        h = _ln(x, lp["ln3"], cfg.norm_eps)
+        x = x + _mlp(cfg, lp["mlp"], h)
+        return (x,), (k_c, v_c)
+
+    (x,), (k_new, v_new) = lax.scan(
+        body, (x,),
+        (params["dec_layers"], cache["self_k"], cache["self_v"],
+         cache["cross_k"], cache["cross_v"]),
+    )
+    x = _ln(x, params["dec_ln_post"], cfg.norm_eps)
+    logits = (x @ params["embed"].astype(cd).T)[:, 0]
+    new_cache = dict(cache)
+    new_cache.update({"self_k": k_new, "self_v": v_new, "length": pos + 1})
+    return logits, new_cache

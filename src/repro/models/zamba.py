@@ -1,0 +1,335 @@
+"""Zamba-2 hybrid: Mamba-2 backbone + one *shared* attention block.
+
+Zamba's signature trick: a single full-attention transformer block whose
+weights are **reused at every application site** (here: before every
+`shared_every`-th group of Mamba layers), fed the concatenation of the
+current hidden state and the original embedding, and projected back into
+the residual stream.  One attention block's worth of parameters buys
+periodic global mixing over the otherwise attention-free backbone.
+
+Simplifications vs the released checkpoints (noted in DESIGN.md):
+per-site LoRA deltas on the shared block are omitted; rotary is applied
+inside the shared block at full width.
+
+Structure: n_layers = n_segments × shared_every; the forward pass is a
+two-level scan (segments outer, Mamba layers inner) so HLO stays O(1) in
+depth.  Decode keeps a per-site KV cache (sites attend independently)
+plus the per-layer Mamba (conv, ssm) states.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.sharding import constrain
+from repro.models import common, mamba2, transformer
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ZambaConfig(mamba2.Mamba2Config):
+    family: str = "hybrid"
+    shared_every: int = 6  # one shared-attention site per this many mamba layers
+    attn_heads: int = 32
+    attn_kv_heads: int = 32
+    attn_d_ff: int = 10240
+
+    @property
+    def n_segments(self) -> int:
+        return self.n_layers // self.shared_every
+
+    @property
+    def attn_width(self) -> int:
+        return 2 * self.d_model  # concat(x, x0)
+
+    @property
+    def attn_head_dim(self) -> int:
+        return self.attn_width // self.attn_heads
+
+    def num_params(self) -> int:
+        base = super().num_params()
+        W, F = self.attn_width, self.attn_d_ff
+        H, G, hd = self.attn_heads, self.attn_kv_heads, self.attn_head_dim
+        shared = (
+            W * H * hd + 2 * W * G * hd + H * hd * W  # attn
+            + 2 * W * F  # mlp (gelu)
+            + W * self.d_model  # down-proj to residual
+            + 3 * W  # norms
+        )
+        return base + shared
+
+
+def init_params(cfg: ZambaConfig, rng: Array) -> tuple[PyTree, PyTree]:
+    k_mamba, k_shared = jax.random.split(rng)
+    params, axes = mamba2.init_params(cfg, k_mamba)
+    # regroup stacked mamba layers (L, ...) → (segments, per_segment, ...)
+    S, E = cfg.n_segments, cfg.shared_every
+    params["layers"] = jax.tree.map(
+        lambda x: x.reshape((S, E) + x.shape[1:]), params["layers"]
+    )
+    axes["layers"] = jax.tree.map(
+        lambda a: ("segments",) + a,
+        axes["layers"],
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(e, (str, type(None))) for e in x),
+    )
+
+    W, F = cfg.attn_width, cfg.attn_d_ff
+    H, G, hd = cfg.attn_heads, cfg.attn_kv_heads, cfg.attn_head_dim
+    dt = cfg.param_dtype
+    ks = jax.random.split(k_shared, 7)
+    shared_pa = {
+        "ln1": common.ones_init((W,), dt, (None,)),
+        "wq": common.dense_init(ks[0], (W, H * hd), dt, ("embed", "heads")),
+        "wk": common.dense_init(ks[1], (W, G * hd), dt, ("embed", "kv_heads")),
+        "wv": common.dense_init(ks[2], (W, G * hd), dt, ("embed", "kv_heads")),
+        "wo": common.dense_init(ks[3], (H * hd, W), dt, ("heads", "embed")),
+        "ln2": common.ones_init((W,), dt, (None,)),
+        "w_up": common.dense_init(ks[4], (W, F), dt, ("embed", "mlp")),
+        "w_down": common.dense_init(ks[5], (F, W), dt, ("mlp", "embed")),
+        "proj_out": common.dense_init(ks[6], (W, cfg.d_model), dt, ("embed", None)),
+    }
+    sp, sa = common.split_tree(shared_pa)
+    params["shared"] = sp
+    axes["shared"] = sa
+    return params, axes
+
+
+# ---------------------------------------------------------------------------
+# shared attention block
+# ---------------------------------------------------------------------------
+
+
+def _shared_qkv(cfg: ZambaConfig, sp: PyTree, xc: Array, positions: Array):
+    B, S, W = xc.shape
+    H, G, hd = cfg.attn_heads, cfg.attn_kv_heads, cfg.attn_head_dim
+    cd = cfg.compute_dtype
+    h = common.rms_norm(xc, sp["ln1"], cfg.norm_eps)
+    q = (h @ sp["wq"].astype(cd)).reshape(B, S, H, hd)
+    k = (h @ sp["wk"].astype(cd)).reshape(B, S, G, hd)
+    v = (h @ sp["wv"].astype(cd)).reshape(B, S, G, hd)
+    q = common.apply_rope(q, positions, cfg.rope_theta)
+    k = common.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _shared_block(
+    cfg: ZambaConfig, sp: PyTree, x: Array, x0: Array, positions: Array
+) -> tuple[Array, tuple[Array, Array]]:
+    """Apply the shared block; returns (x + proj(block(concat)), (k, v))."""
+    cd = cfg.compute_dtype
+    xc = jnp.concatenate([x, x0], axis=-1)  # (B, S, 2D)
+    q, k, v = _shared_qkv(cfg, sp, xc, positions)
+    attn = common.blockwise_attention(q, k, v, causal=True, block_k=cfg.block_k)
+    B, S = x.shape[:2]
+    o = attn.reshape(B, S, -1) @ sp["wo"].astype(cd)
+    xc = xc + o
+    h = common.rms_norm(xc, sp["ln2"], cfg.norm_eps)
+    m = jax.nn.gelu(h @ sp["w_up"].astype(cd)) @ sp["w_down"].astype(cd)
+    xc = xc + m
+    out = xc @ sp["proj_out"].astype(cd)
+    return x + constrain(out, ("batch", None, None)), (k, v)
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+
+def forward(cfg: ZambaConfig, params: PyTree, tokens: Array) -> Array:
+    B, S = tokens.shape
+    cd = cfg.compute_dtype
+    x0 = params["embed"].astype(cd)[tokens]
+    x0 = constrain(x0, ("batch", None, None))
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    sp = params["shared"]
+
+    block = transformer._remat(cfg, functools.partial(mamba2.mamba2_block, cfg))
+
+    def segment(x, seg_lp):
+        x, _ = _shared_block(cfg, sp, x, x0, positions)
+
+        def inner(x, lp):
+            return block(lp, x), None
+
+        x, _ = lax.scan(inner, x, seg_lp)
+        return x, None
+
+    x, _ = lax.scan(segment, x0, params["layers"])
+    x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = (
+        params["embed"].astype(cd).T
+        if cfg.tie_embeddings
+        else params["lm_head"].astype(cd)
+    )
+    logits = x @ head
+    return constrain(logits, ("batch", None, "vocab"))
+
+
+def loss_fn(cfg: ZambaConfig, params: PyTree, batch: dict) -> Array:
+    logits = forward(cfg, params, batch["tokens"])
+    return common.softmax_cross_entropy(logits, batch["labels"], batch.get("mask"))
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ZambaConfig, batch: int, max_len: int):
+    Sg, E = cfg.n_segments, cfg.shared_every
+    G, hd = cfg.attn_kv_heads, cfg.attn_head_dim
+    cache = {
+        "attn_k": jnp.zeros((Sg, batch, max_len, G, hd), cfg.compute_dtype),
+        "attn_v": jnp.zeros((Sg, batch, max_len, G, hd), cfg.compute_dtype),
+        "conv": jnp.zeros(
+            (Sg, E, batch, cfg.d_conv - 1, cfg.conv_dim), cfg.compute_dtype
+        ),
+        "ssm": jnp.zeros(
+            (Sg, E, batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.d_state),
+            jnp.float32,
+        ),
+        "x0": jnp.zeros((batch, 1, cfg.d_model), cfg.compute_dtype),
+        "length": jnp.zeros((), jnp.int32),
+    }
+    axes = {
+        "attn_k": ("segments", "batch", "kv_seq", "kv_heads", None),
+        "attn_v": ("segments", "batch", "kv_seq", "kv_heads", None),
+        "conv": ("segments", "layers", "batch", None, "conv_dim"),
+        "ssm": ("segments", "layers", "batch", "ssm_heads", None, None),
+        "x0": ("batch", None, None),
+        "length": (),
+    }
+    return cache, axes
+
+
+def decode_step(cfg: ZambaConfig, params: PyTree, cache: PyTree, tokens: Array):
+    cd = cfg.compute_dtype
+    x0 = params["embed"].astype(cd)[tokens]  # (B, 1, D)
+    pos = cache["length"]
+    B = tokens.shape[0]
+    positions = jnp.broadcast_to(pos[None, None], (B, 1))
+    sp = params["shared"]
+
+    def segment(carry, li):
+        (x,) = carry
+        seg_lp, k_c, v_c, conv_c, ssm_c = li
+        # shared attention with KV cache for this site
+        xc = jnp.concatenate([x, x0], axis=-1)
+        q, k_new, v_new = _shared_qkv(cfg, sp, xc, positions)
+        k_c = lax.dynamic_update_slice(k_c, k_new, (0, pos, 0, 0))
+        v_c = lax.dynamic_update_slice(v_c, v_new, (0, pos, 0, 0))
+        kv_len = jnp.broadcast_to(pos + 1, (B,))
+        attn = common.decode_attention(q, k_c, v_c, kv_len)
+        o = attn.reshape(B, 1, -1) @ sp["wo"].astype(cd)
+        xc = xc + o
+        h = common.rms_norm(xc, sp["ln2"], cfg.norm_eps)
+        m = jax.nn.gelu(h @ sp["w_up"].astype(cd)) @ sp["w_down"].astype(cd)
+        xc = xc + m
+        x = x + xc @ sp["proj_out"].astype(cd)
+
+        def inner(carry, li2):
+            (x,) = carry
+            lp, conv_st, ssm_st = li2
+            x, conv_st, ssm_st = mamba2._block_decode(cfg, lp, x, conv_st, ssm_st)
+            return (x,), (conv_st, ssm_st)
+
+        (x,), (conv_c, ssm_c) = lax.scan(inner, (x,), (seg_lp, conv_c, ssm_c))
+        return (x,), (k_c, v_c, conv_c, ssm_c)
+
+    (x,), (k_new, v_new, conv_new, ssm_new) = lax.scan(
+        segment,
+        (x0,),
+        (params["layers"], cache["attn_k"], cache["attn_v"], cache["conv"],
+         cache["ssm"]),
+    )
+    x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = (
+        params["embed"].astype(cd).T
+        if cfg.tie_embeddings
+        else params["lm_head"].astype(cd)
+    )
+    logits = (x @ head)[:, 0]
+    new_cache = {
+        "attn_k": k_new,
+        "attn_v": v_new,
+        "conv": conv_new,
+        "ssm": ssm_new,
+        "x0": cache["x0"],
+        "length": pos + 1,
+    }
+    return logits, new_cache
+
+
+def prefill(cfg: ZambaConfig, params: PyTree, tokens: Array, max_len=None):
+    B, S = tokens.shape
+    M = max_len or S
+    cd = cfg.compute_dtype
+    x0 = params["embed"].astype(cd)[tokens]
+    x0 = constrain(x0, ("batch", None, None))
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    sp = params["shared"]
+    g, N = cfg.n_groups, cfg.d_state
+    H, P = cfg.ssm_heads, cfg.ssm_head_dim
+
+    def mamba_with_state(x, lp):
+        h = common.rms_norm(x, lp["ln"], cfg.norm_eps)
+        zxbcdt = h @ lp["in_proj"].astype(cd)
+        z, xbc_pre, dt = mamba2._split_proj(cfg, zxbcdt)
+        conv_st = xbc_pre[:, S - (cfg.d_conv - 1) :]
+        xbc = jax.nn.silu(
+            mamba2._causal_conv(xbc_pre, lp["conv_w"].astype(cd),
+                                lp["conv_b"].astype(cd))
+        )
+        xs = xbc[..., : cfg.d_inner]
+        Bm = xbc[..., cfg.d_inner : cfg.d_inner + g * N].reshape(B, S, g, N)
+        Cm = xbc[..., cfg.d_inner + g * N :].reshape(B, S, g, N)
+        dtp = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])
+        A = -jnp.exp(lp["A_log"])
+        xh = xs.reshape(B, S, H, P)
+        from repro.kernels.ssd import ops as ssd_ops
+
+        y, ssm_st = ssd_ops.ssd(
+            xh.astype(jnp.float32), dtp, A, Bm.astype(jnp.float32),
+            Cm.astype(jnp.float32), chunk=cfg.chunk, impl=cfg.ssd_impl,
+        )
+        y = y + lp["D"][None, None, :, None] * xh.astype(jnp.float32)
+        y = y.reshape(B, S, cfg.d_inner).astype(cd)
+        y = y * jax.nn.silu(z.astype(jnp.float32)).astype(cd)
+        y = common.rms_norm(y, lp["norm_w"], cfg.norm_eps)
+        y = y @ lp["out_proj"].astype(cd)
+        return x + y, (conv_st, ssm_st)
+
+    def segment(x, seg_lp):
+        x, (k, v) = _shared_block(cfg, sp, x, x0, positions)
+        if M > S:
+            k = jnp.pad(k, ((0, 0), (0, M - S), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, M - S), (0, 0), (0, 0)))
+        x, (conv_sts, ssm_sts) = lax.scan(mamba_with_state, x, seg_lp)
+        return x, (k, v, conv_sts, ssm_sts)
+
+    x, (ks, vs, conv_sts, ssm_sts) = lax.scan(segment, x0, params["layers"])
+    x = common.rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    head = (
+        params["embed"].astype(cd).T
+        if cfg.tie_embeddings
+        else params["lm_head"].astype(cd)
+    )
+    logits = (x @ head)[:, 0]
+    cache = {
+        "attn_k": ks,
+        "attn_v": vs,
+        "conv": conv_sts,
+        "ssm": ssm_sts,
+        "x0": x0[:, -1:],
+        "length": jnp.asarray(S, jnp.int32),
+    }
+    return logits, cache

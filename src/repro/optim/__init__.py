@@ -1,0 +1,8 @@
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, global_norm
+from repro.optim.compression import (
+    CompressionConfig,
+    CompressionState,
+    compress_gradients,
+    compression_init,
+)
+from repro.optim.schedule import cosine_schedule, linear_warmup

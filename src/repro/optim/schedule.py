@@ -1,0 +1,21 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(step, warmup_steps: int):
+    s = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    return jnp.minimum(1.0, (s + 1.0) / max(warmup_steps, 1))
+
+
+def cosine_schedule(step, total_steps: int, warmup_steps: int = 0, min_frac=0.1):
+    """Warmup → cosine decay to min_frac.  Returns a multiplier in (0, 1]."""
+    s = jnp.asarray(step, jnp.float32)
+    warm = linear_warmup(s, warmup_steps)
+    prog = jnp.clip(
+        (s - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0
+    )
+    cos = min_frac + (1.0 - min_frac) * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return warm * cos

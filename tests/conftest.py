@@ -1,0 +1,10 @@
+# NOTE: deliberately NO XLA_FLAGS device-count override here — smoke tests
+# and benches must see the real single CPU device.  Multi-device tests
+# (sharding/elastic) spawn subprocesses that set their own XLA_FLAGS.
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.RandomState(0)

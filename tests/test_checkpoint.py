@@ -1,0 +1,77 @@
+"""Checkpoint substrate: atomicity, roundtrip, keep-K GC, async writer."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, latest_step, restore, save
+
+
+def _tree(seed=0):
+    rng = np.random.RandomState(seed)
+    return {
+        "layers": {"w": jnp.asarray(rng.randn(4, 8).astype(np.float32))},
+        "bias": jnp.asarray(rng.randn(8).astype(np.float32)),
+        "step_scalar": jnp.asarray(7, jnp.int32),
+    }
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    save(str(tmp_path), 5, {"params": t})
+    assert latest_step(str(tmp_path)) == 5
+    out = restore(str(tmp_path), 5, {"params": t})
+    for a, b in zip(jax.tree.leaves(out["params"]), jax.tree.leaves(t)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    save(str(tmp_path), 1, {"params": _tree()})
+    bad = _tree()
+    bad["bias"] = jnp.zeros(9)
+    with pytest.raises(ValueError):
+        restore(str(tmp_path), 1, {"params": bad})
+
+
+def test_no_partial_checkpoint_visible(tmp_path):
+    """tmp dirs must never be discovered as valid checkpoints."""
+    os.makedirs(tmp_path / "tmp.3.123")
+    os.makedirs(tmp_path / "step_x")
+    assert latest_step(str(tmp_path)) is None
+    save(str(tmp_path), 3, {"params": _tree()})
+    assert latest_step(str(tmp_path)) == 3
+
+
+def test_keep_k_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, {"params": _tree(s)})
+    steps = sorted(
+        int(n.split("_")[1]) for n in os.listdir(tmp_path) if n.startswith("step_")
+    )
+    assert steps == [3, 4]
+
+
+def test_async_save_then_restore(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=True)
+    t = _tree(9)
+    mgr.save(11, {"params": t})
+    mgr.wait()
+    got = mgr.restore_latest({"params": _tree(0)})
+    assert got is not None
+    step, trees = got
+    assert step == 11
+    np.testing.assert_array_equal(
+        np.asarray(trees["params"]["bias"]), np.asarray(t["bias"])
+    )
+
+
+def test_async_overlapping_saves_serialize(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=5, async_save=True)
+    for s in range(5):
+        mgr.save(s, {"params": _tree(s)})  # each save waits for previous
+    mgr.wait()
+    assert latest_step(str(tmp_path)) == 4

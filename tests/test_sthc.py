@@ -1,0 +1,163 @@
+"""STHC correlator: ideal-mode exactness, physical-mode graceful
+degradation, pseudo-negative encoding, atomic-physics envelopes,
+coherence-window segmentation."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import atomic, optics, pseudo_negative, spectral_conv as sc
+from repro.core.sthc import STHC, STHCConfig
+
+
+def _data(rng, B=2, C=1, H=20, W=24, T=10, O=3, kh=7, kw=9, kt=4):
+    x = jnp.asarray(rng.rand(B, C, H, W, T).astype(np.float32))
+    k = jnp.asarray(rng.randn(O, C, kh, kw, kt).astype(np.float32))
+    return x, k
+
+
+def test_ideal_mode_is_exact(rng):
+    x, k = _data(rng)
+    y = STHC(STHCConfig(mode="ideal"))(k, x)
+    ref = sc.direct_correlate3d(x, k, "valid")
+    np.testing.assert_allclose(y, ref, atol=1e-4 * float(jnp.max(jnp.abs(ref))))
+
+
+def test_ideal_mode_pallas_path(rng):
+    x, k = _data(rng)
+    y = STHC(STHCConfig(mode="ideal", use_pallas=True))(k, x)
+    ref = sc.direct_correlate3d(x, k, "valid")
+    np.testing.assert_allclose(y, ref, atol=1e-4 * float(jnp.max(jnp.abs(ref))))
+
+
+def test_physical_mode_bounded_error(rng):
+    x, k = _data(rng)
+    ref = sc.direct_correlate3d(x, k, "valid")
+    y = STHC(STHCConfig(mode="physical"))(k, x)
+    rel = float(jnp.linalg.norm(y - ref) / jnp.linalg.norm(ref))
+    assert rel < 0.10, rel  # design-point physics ⇒ small degradation
+
+
+def test_physical_error_monotone_in_coverage(rng):
+    """More IHB coverage ⇒ closer to ideal (the design regime)."""
+    x, k = _data(rng)
+    ref = sc.direct_correlate3d(x, k, "valid")
+    errs = []
+    for cov in (1.0, 2.0, 4.0, 8.0):
+        s = STHC(STHCConfig(mode="physical", atoms=atomic.AtomicConfig(coverage=cov)))
+        y = s(k, x)
+        errs.append(float(jnp.linalg.norm(y - ref) / jnp.linalg.norm(ref)))
+    assert errs == sorted(errs, reverse=True), errs
+
+
+def test_short_t2_degrades(rng):
+    x, k = _data(rng)
+    ref = sc.direct_correlate3d(x, k, "valid")
+    good = STHC(STHCConfig(mode="physical"))(k, x)
+    bad = STHC(
+        STHCConfig(
+            mode="physical",
+            atoms=atomic.AtomicConfig(t2_s=3 * atomic.FRAME_LOAD_TIME_S),
+        )
+    )(k, x)
+    e = lambda y: float(jnp.linalg.norm(y - ref) / jnp.linalg.norm(ref))
+    assert e(bad) > 3 * e(good)
+
+
+# -- pseudo-negative encoding ------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_pseudo_negative_identity(seed):
+    """(X ⋆ K⁺) − (X ⋆ K⁻) ≡ X ⋆ K exactly (linearity of correlation)."""
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.rand(1, 1, 12, 12, 8).astype(np.float32))
+    k = jnp.asarray(rng.randn(2, 1, 4, 5, 3).astype(np.float32))
+    kp, km = pseudo_negative.split(k)
+    assert float(jnp.min(kp)) >= 0 and float(jnp.min(km)) >= 0
+    np.testing.assert_allclose(kp - km, k, atol=1e-7)
+    yp = sc.direct_correlate3d(x, kp, "valid")
+    ym = sc.direct_correlate3d(x, km, "valid")
+    ref = sc.direct_correlate3d(x, k, "valid")
+    np.testing.assert_allclose(
+        pseudo_negative.combine(yp, ym), ref,
+        atol=2e-4 * float(jnp.max(jnp.abs(ref))) + 1e-6,
+    )
+
+
+def test_interleave_roundtrip(rng):
+    k = jnp.asarray(rng.randn(3, 2, 4, 4, 2).astype(np.float32))
+    kp, km = pseudo_negative.split(k)
+    inter = pseudo_negative.interleave_channels(kp, km)
+    assert inter.shape[0] == 6
+    y = jnp.asarray(rng.randn(2, 6, 5, 5, 3).astype(np.float32))
+    signed = pseudo_negative.deinterleave_outputs(y)
+    ref = y[:, 0::2] - y[:, 1::2]
+    np.testing.assert_allclose(signed, ref, atol=1e-6)
+
+
+# -- optics / atomic models ---------------------------------------------------
+
+
+def test_slm_quantization_error_scales_with_bits(rng):
+    x = jnp.asarray(rng.rand(8, 8).astype(np.float32))
+    errs = [
+        float(jnp.max(jnp.abs(optics.quantize_unit(x, b) - x))) for b in (4, 8, 12)
+    ]
+    assert errs[0] > errs[1] > errs[2]
+    assert errs[1] <= 1.0 / 255 + 1e-6
+
+
+def test_recording_pulse_is_flat(rng):
+    spec = optics.recording_pulse_spectrum((64, 64), radius_px=1.5)
+    # small disc ⇒ near-flat spatial spectrum over the *signal* band
+    # (the Airy rolloff lives at high frequencies, outside the video band)
+    central = jnp.fft.fftshift(spec)[24:40, 24:40]  # |f| ≤ Nyquist/4
+    assert float(jnp.min(central)) > 0.8
+    assert abs(float(jnp.max(spec)) - 1.0) < 1e-6  # unit peak at DC
+
+
+def test_ihb_envelope_unit_peak_and_symmetry():
+    env = atomic.ihb_envelope(16, atomic.AtomicConfig())
+    assert abs(float(jnp.max(env)) - 1.0) < 1e-6
+    np.testing.assert_allclose(env[1:9], env[-1:-9:-1][::1], atol=1e-6)
+
+
+def test_t2_tap_weights_design_regime():
+    w = atomic.t2_tap_weights(8, atomic.AtomicConfig())
+    assert float(jnp.min(w)) > 0.999  # ms T2, ns frames ⇒ ≈ 1
+    short = atomic.t2_tap_weights(
+        8, atomic.AtomicConfig(t2_s=4 * atomic.FRAME_LOAD_TIME_S)
+    )
+    assert float(short[0]) < float(short[-1])  # earlier taps decay more
+
+
+def test_echo_time():
+    assert atomic.echo_time(1.0, 3.0, 7.0) == 9.0
+
+
+# -- segmentation (paper Fig. 1C) ---------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    total=st.integers(10, 500),
+    window=st.integers(4, 64),
+    query=st.integers(1, 20),
+)
+def test_segmentation_covers_every_query_position(total, window, query):
+    """Every query-length interval must fit inside some window — the
+    overlap-by-T1 property that makes boundary events detectable."""
+    if window <= query:
+        with pytest.raises(ValueError):
+            atomic.segment_database(total, window, query)
+        return
+    segs = atomic.segment_database(total, window, query)
+    assert segs[0][0] == 0 and segs[-1][1] >= min(total, segs[-1][1])
+    for start in range(0, max(total - query, 0) + 1):
+        assert any(s <= start and start + query <= e for s, e in segs), (
+            start,
+            segs,
+        )

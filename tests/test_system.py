@@ -1,0 +1,103 @@
+"""End-to-end behaviour of the paper's system (reduced scale for CPU):
+
+train the hybrid 3-D CNN digitally on synthetic-KTH clips, then swap the
+conv layer to the STHC simulation at test time (the paper's §4.1
+protocol) and check (i) training learns, (ii) the optical layer degrades
+accuracy only mildly, (iii) the serving path agrees."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hybrid
+from repro.data import kth_synthetic as kth
+from repro.launch.serve import HybridClassifierServer
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+@pytest.fixture(scope="module")
+def trained():
+    """Train the reduced hybrid model for a few dozen steps (digital)."""
+    spec = kth.VideoSpec(height=20, width=24, frames=10)
+    cfg = hybrid.HybridConfig(
+        height=20, width=24, frames=10, k_h=7, k_w=9, k_t=4,
+        num_kernels=4, pool_window=(4, 4, 2), hidden=32,
+    )
+    x_train, y_train = kth.make_split("train", spec)
+    x_val, y_val = kth.make_split("val", spec)
+    params = hybrid.init_params(jax.random.PRNGKey(0), cfg)
+    opt_cfg = AdamWConfig(lr=3e-3, weight_decay=0.01)
+    opt = adamw_init(opt_cfg, params)
+
+    @jax.jit
+    def step(params, opt, batch):
+        (loss, aux), g = jax.value_and_grad(
+            lambda p: hybrid.loss_fn(p, batch, cfg), has_aux=True
+        )(params)
+        params, opt, _ = adamw_update(opt_cfg, params, g, opt)
+        return params, opt, aux
+
+    rng = np.random.RandomState(0)
+    losses = []
+    for epoch_batch in kth.batches(x_train, y_train, 32, rng, epochs=8):
+        batch = {k: jnp.asarray(v) for k, v in epoch_batch.items()}
+        params, opt, aux = step(params, opt, batch)
+        losses.append(float(aux["loss"]))
+    return cfg, params, (x_val, y_val), losses
+
+
+def _accuracy(cfg, params, xs, ys, impl):
+    preds = []
+    for i in range(0, len(ys), 32):
+        preds.append(
+            np.asarray(
+                hybrid.predict(params, jnp.asarray(xs[i : i + 32]), cfg, impl=impl)
+            )
+        )
+    return float(np.mean(np.concatenate(preds) == ys))
+
+
+def test_digital_training_learns(trained):
+    _, _, _, losses = trained
+    assert losses[-1] < 0.8 * losses[0], (losses[0], losses[-1])
+
+
+def test_digital_accuracy_above_chance(trained):
+    cfg, params, (xv, yv), _ = trained
+    acc = _accuracy(cfg, params, xv, yv, "digital")
+    assert acc > 0.45, acc  # 4 classes, chance = 0.25
+
+
+def test_hybrid_optical_matches_digital(trained):
+    """The paper's core claim: swapping the conv layer to the optical
+    correlator preserves classification (small degradation)."""
+    cfg, params, (xv, yv), _ = trained
+    acc_dig = _accuracy(cfg, params, xv, yv, "digital")
+    acc_spec = _accuracy(cfg, params, xv, yv, "spectral")
+    acc_phys = _accuracy(cfg, params, xv, yv, "sthc_physical")
+    assert abs(acc_spec - acc_dig) < 1e-6  # ideal spectral ≡ digital
+    assert acc_phys >= acc_dig - 0.15, (acc_dig, acc_phys)
+
+
+def test_serving_path_agrees(trained):
+    cfg, params, (xv, yv), _ = trained
+    server = HybridClassifierServer(params, cfg, physical=False)
+    preds_srv = server.classify(jnp.asarray(xv[:32]))
+    preds_ref = np.asarray(
+        hybrid.predict(params, jnp.asarray(xv[:32]), cfg, impl="spectral")
+    )
+    np.testing.assert_array_equal(preds_srv, preds_ref)
+
+
+def test_confusion_matrix_structure(trained):
+    """Running (global motion) should be the best-separated class — the
+    qualitative structure of the paper's Fig. 6B."""
+    cfg, params, (xv, yv), _ = trained
+    preds = np.asarray(
+        hybrid.predict(params, jnp.asarray(xv), cfg, impl="digital")
+    )
+    run_mask = yv == 3
+    run_recall = float(np.mean(preds[run_mask] == 3))
+    other_recall = float(np.mean(preds[~run_mask] == yv[~run_mask]))
+    assert run_recall >= other_recall - 0.05, (run_recall, other_recall)
