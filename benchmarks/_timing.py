@@ -1,0 +1,24 @@
+"""Shared wall-clock timing helper for the benchmark suites.
+
+The seed had two divergent private ``_time`` copies; the one in
+``speed.py`` additionally invoked its warmup call twice on the first
+line.  This is the single canonical version: ``warmup`` full calls
+(compile + first dispatch) excluded from timing, then ``iters`` timed
+calls, blocking on the full output pytree each time.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_fn(fn, *args, iters: int = 3, warmup: int = 1) -> float:
+    """Mean seconds per call of ``fn(*args)`` over ``iters`` timed runs."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters

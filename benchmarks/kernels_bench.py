@@ -8,23 +8,14 @@ jnp-path throughput that the models actually use when lowering."""
 
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks._timing import time_fn as _time
 from repro.kernels.conv3d import ops as conv_ops, ref as conv_ref
 from repro.kernels.ssd import ops as ssd_ops, ref as ssd_ref
 from repro.kernels.stmul import ops as stmul_ops, ref as stmul_ref
-
-
-def _time(fn, *args, iters=3) -> float:
-    jax.block_until_ready(fn(*args))
-    t0 = time.time()
-    for _ in range(iters):
-        jax.block_until_ready(fn(*args))
-    return (time.time() - t0) / iters
 
 
 def run(log=print) -> list[str]:
@@ -45,6 +36,17 @@ def run(log=print) -> list[str]:
         jnp.max(jnp.abs(stmul_ops.spectral_mac(xh, g) - ref_fn(xh, g)))
     )
     rows.append(f"stmul_jnp_ref,{t_ref*1e6:.0f},maxerr={err:.1e}")
+
+    # kernel generations against the oracle (interpret-mode semantics on
+    # CPU; the v1-vs-v2 delta is only meaningful on real TPU, but the
+    # trajectory is recorded here so regressions are visible).
+    times = {}
+    for ver in (1, 2):
+        fn = lambda a, b, v=ver: stmul_ops.spectral_mac(a, b, version=v)
+        times[ver] = _time(fn, xh, g)
+        err = float(jnp.max(jnp.abs(fn(xh, g) - ref_fn(xh, g))))
+        rows.append(f"stmul_pallas_v{ver},{times[ver]*1e6:.0f},maxerr={err:.1e}")
+    rows.append(f"stmul_v1_vs_v2_speedup,0,{times[1]/times[2]:.2f}")
 
     # conv3d at C3D scale (3×3×3, 64ch)
     x = jnp.asarray(rng.randn(1, 16, 14, 14, 8).astype(np.float32))

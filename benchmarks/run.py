@@ -8,13 +8,28 @@
   roofline    — §Roofline summary from the dry-run records
 
 ``--fast`` shrinks the accuracy benchmark geometry for CI-speed runs.
+``--json`` additionally writes one ``BENCH_<suite>.json`` artifact per
+suite (into ``--json-dir``, default CWD) so the perf trajectory — e.g.
+fused vs unfused query latency, stmul v1 vs v2 — is recorded per PR.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import traceback
+
+
+def _parse_row(row: str) -> dict:
+    """Split a ``name,us_per_call,derived`` CSV row into a JSON record."""
+    name, us, derived = row.split(",", 2)
+    try:
+        us_val: float | str = float(us)
+    except ValueError:
+        us_val = us
+    return {"name": name, "us_per_call": us_val, "derived": derived}
 
 
 def main() -> None:
@@ -23,6 +38,10 @@ def main() -> None:
                     help="reduced geometry for the accuracy benchmark")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of benchmarks")
+    ap.add_argument("--json", action="store_true",
+                    help="also write BENCH_<suite>.json artifacts")
+    ap.add_argument("--json-dir", default=".",
+                    help="directory for the BENCH_*.json artifacts")
     args = ap.parse_args()
 
     from benchmarks import accuracy, equivalence, kernels_bench, roofline_bench, speed
@@ -40,14 +59,32 @@ def main() -> None:
     }
     if args.only:
         keep = set(args.only.split(","))
+        unknown = keep - suites.keys()
+        if unknown:
+            ap.error(
+                f"unknown suite(s) {sorted(unknown)}; "
+                f"available: {sorted(suites)}"
+            )
         suites = {k: v for k, v in suites.items() if k in keep}
+    if args.json:
+        os.makedirs(args.json_dir, exist_ok=True)
 
     failures = 0
     print("name,us_per_call,derived")
     for name, fn in suites.items():
         try:
-            for row in fn():
+            rows = list(fn())
+            for row in rows:
                 print(row, flush=True)
+            if args.json:
+                path = os.path.join(args.json_dir, f"BENCH_{name}.json")
+                with open(path, "w") as f:
+                    json.dump(
+                        {"suite": name, "rows": [_parse_row(r) for r in rows]},
+                        f,
+                        indent=2,
+                    )
+                _log(f"wrote {path}")
         except Exception:
             failures += 1
             print(f"{name}_FAILED,0,error", flush=True)

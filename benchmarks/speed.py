@@ -3,28 +3,21 @@ vs the optical projections (from the paper's physical constants).
 
 Also measures the spectral-vs-direct advantage for the paper's
 large-kernel workload — the computational fact that motivates the optical
-implementation (and our FFT-based TPU mapping).
+implementation (and our FFT-based TPU mapping) — and the fused
+single-FFT physical query against the unfused two-query ± reference
+(the dataflow win of the query engine).
 """
 
 from __future__ import annotations
-
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks._timing import time_fn as _time
 from repro.core import spectral_conv as sc
 from repro.core import throughput
 from repro.core.sthc import STHC, STHCConfig
-
-
-def _time(fn, *args, iters=3) -> float:
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
-    t0 = time.time()
-    for _ in range(iters):
-        jax.block_until_ready(fn(*args))
-    return (time.time() - t0) / iters
 
 
 def run(log=print) -> list[str]:
@@ -62,6 +55,22 @@ def run(log=print) -> list[str]:
     query = jax.jit(lambda x: sc.query_grating(x, grating, fft_shape, out_shape))
     t_query = _time(query, x)
     rows.append(f"sthc_query_grating_cpu,{t_query*1e6:.0f},{wl.frames/t_query:.1f}")
+
+    # fused vs unfused physical query: the engine's single-FFT ± path
+    # against the seed's two-query reference, same recorded grating.
+    sthc = STHC(STHCConfig(mode="physical"))
+    fused_g = sthc.record(k, (wl.height, wl.width, wl.frames))
+    fused = jax.jit(lambda x: sthc.engine.query(fused_g, x))
+    unfused = jax.jit(lambda x: sthc.engine.query_unfused(fused_g, x))
+    t_fused = _time(fused, x)
+    t_unfused = _time(unfused, x)
+    rows.append(
+        f"sthc_query_fused_physical,{t_fused*1e6:.0f},{wl.frames/t_fused:.1f}"
+    )
+    rows.append(
+        f"sthc_query_unfused_physical,{t_unfused*1e6:.0f},{wl.frames/t_unfused:.1f}"
+    )
+    rows.append(f"sthc_fused_vs_unfused_speedup,0,{t_unfused/t_fused:.2f}")
 
     # paper's projected table
     for row in throughput.throughput_table():

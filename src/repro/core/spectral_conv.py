@@ -219,6 +219,7 @@ def overlap_save_time(
     block_t: int,
     *,
     temporal_transfer_fn=None,
+    chunk_windows: int | None = None,
 ) -> Array:
     """Streaming 3-D correlation over a long time axis via overlap-save.
 
@@ -234,35 +235,76 @@ def overlap_save_time(
       block_t: frames per coherence window (must exceed kt − 1).
       temporal_transfer_fn: optional callable n_t -> H(f_t) envelope,
         applied per window (physical mode).
+      chunk_windows: windows correlated per step as one vmap'd batch
+        (batched FFTs); 1/None = strictly sequential, minimum peak
+        memory — the serving default.
 
     Returns:
       (B, O, H−kh+1, W−kw+1, T−kt+1) — identical to one-shot valid
       correlation (tested property).
     """
     kh, kw, kt = kernels.shape[-3:]
+    H, W = x.shape[-3:-1]
+    fft_shape = fft_shape_for((H, W, block_t), (kh, kw, kt))
+    tt = temporal_transfer_fn(fft_shape[2]) if temporal_transfer_fn else None
+    grating = make_grating(kernels, fft_shape, temporal_transfer=tt)
+    return overlap_save_query(
+        x,
+        grating,
+        (kh, kw, kt),
+        block_t,
+        fft_shape,
+        chunk_windows=chunk_windows,
+    )
+
+
+def overlap_save_query(
+    x: Array,
+    grating: Array,
+    ker_shape: tuple[int, int, int],
+    block_t: int,
+    fft_shape: tuple[int, int, int],
+    *,
+    chunk_windows: int | None = None,
+) -> Array:
+    """Overlap-save against a *precomputed* grating (record-once serving).
+
+    Separated from :func:`overlap_save_time` so servers can hold the
+    grating stationary across requests instead of re-deriving it from the
+    kernels inside every jitted call.
+
+    ``chunk_windows > 1`` correlates that many coherence windows per step
+    as a single vmap'd batch — the window FFTs and spectral MACs fuse
+    into batched ops (higher throughput), at ``chunk_windows ×`` the peak
+    activation memory of the sequential mode.
+    """
+    kh, kw, kt = ker_shape
     B, C, H, W, T = x.shape
     if block_t <= kt - 1:
         raise ValueError(f"block_t ({block_t}) must exceed kt-1 ({kt - 1})")
     step = block_t - (kt - 1)  # valid outputs per window
     n_valid = T - kt + 1
     n_blocks = -(-n_valid // step)  # ceil
-    # Pad the tail so every window is full-length (extra outputs cropped).
-    pad_t = (n_blocks - 1) * step + block_t - T
+    chunk = max(1, min(int(chunk_windows or 1), n_blocks))
+    n_padded = -(-n_blocks // chunk) * chunk  # round up to whole chunks
+    # Pad the tail so every window (incl. chunk-fill windows) is full-length;
+    # the extra outputs are cropped below.
+    pad_t = (n_padded - 1) * step + block_t - T
     xp = jnp.pad(x, [(0, 0)] * 4 + [(0, max(pad_t, 0))])
-
-    fft_shape = fft_shape_for((H, W, block_t), (kh, kw, kt))
-    tt = temporal_transfer_fn(fft_shape[2]) if temporal_transfer_fn else None
-    grating = make_grating(kernels, fft_shape, temporal_transfer=tt)
     out_shape = (H - kh + 1, W - kw + 1, step)
 
-    starts = jnp.arange(n_blocks) * step
+    starts = (jnp.arange(n_padded) * step).reshape(-1, chunk)
 
     def one_window(start):
         win = lax.dynamic_slice_in_dim(xp, start, block_t, axis=-1)
         return query_grating(win, grating, fft_shape, out_shape)
 
-    # map (sequential) keeps peak memory at one window — the serving mode.
-    blocks = lax.map(one_window, starts)  # (n_blocks, B, O, H', W', step)
-    blocks = jnp.moveaxis(blocks, 0, -2)  # (B, O, H', W', n_blocks, step)
-    y = blocks.reshape(blocks.shape[:-2] + (n_blocks * step,))
+    def one_chunk(chunk_starts):
+        return jax.vmap(one_window)(chunk_starts)
+
+    # Sequential over chunks (peak memory = one chunk), batched within.
+    blocks = lax.map(one_chunk, starts)  # (n_outer, chunk, B, O, H', W', step)
+    blocks = blocks.reshape((n_padded,) + blocks.shape[2:])
+    blocks = jnp.moveaxis(blocks, 0, -2)  # (B, O, H', W', n_padded, step)
+    y = blocks.reshape(blocks.shape[:-2] + (n_padded * step,))
     return y[..., :n_valid]

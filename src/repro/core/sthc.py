@@ -1,14 +1,25 @@
 """The Spatio-Temporal Holographic Correlator, end to end.
 
-`STHC` packages the record/query cycle of the optical system:
+`STHC` packages the record/query cycle of the optical system around the
+fused :class:`~repro.core.engine.QueryEngine` (the single hot path for
+all STHC consumers):
 
   1. **record** — project the (pseudo-negative-encoded, SLM-quantized)
-     kernel stack; store its 3-D spectrum as the atomic grating, shaped by
-     the medium's temporal transfer function.
-  2. **query** — project video clips; their spectra diffract off the
-     grating (pointwise complex MAC over channels — the compute hot spot,
-     optionally served by the Pallas `stmul` kernel); the photon echo +
-     output lens return the correlation feature maps.
+     kernel stack; store its 3-D spectrum as the atomic grating, shaped
+     by the medium's temporal transfer function.  The engine packs the
+     ± gratings into one stacked tensor and *folds* everything static —
+     the ``G⁺ − G⁻`` combine, the kernel de-quantization scale, the
+     photon-echo gain — into a single effective grating.  Recording is
+     memoized in a content-hash cache, so repeated calls with the same
+     kernels (``__call__``, hybrid layers, serving) write the medium
+     once, exactly like the physical system.
+  2. **query** — project video clips; one forward ``rfftn`` per clip,
+     one channel-contracted spectral MAC against the effective grating
+     (the compute hot spot, optionally served by the Pallas ``stmul``
+     kernel), one inverse FFT.  The only per-query epilogue left is the
+     clip's own de-scaling.  In physical mode this is half the FFTs and
+     kernel launches of the unfused ± path (which survives as
+     ``QueryEngine.query_unfused``, the tested reference).
 
 Two fidelity modes:
 
@@ -16,22 +27,25 @@ Two fidelity modes:
   kernels used directly).  Must match direct correlation to float tolerance
   (tested); this is the numerical 'spec' of the machine.
 * ``physical`` — SLM bit-depth quantization, pseudo-negative ± channels,
-  IHB bandwidth envelope, T2 Lorentzian apodization, echo efficiency.
-  The paper's reported accuracy drop (69.84 % digital val → 59.72 % hybrid
-  test) comes from this class of effects.
+  IHB bandwidth envelope, T2 Lorentzian apodization, echo efficiency,
+  recording-pulse deconvolution.  The paper's reported accuracy drop
+  (69.84 % digital val → 59.72 % hybrid test) comes from this class of
+  effects.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import atomic, optics, pseudo_negative, spectral_conv
+from repro.core import atomic, optics, spectral_conv
+from repro.core.engine import FusedGrating, GratingCache, QueryEngine, default_cache
 
 Array = jax.Array
+
+# Backward-compatible name: the recorded state of the medium.
+Grating = FusedGrating
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,67 +54,39 @@ class STHCConfig:
     slm: optics.SLMConfig = dataclasses.field(default_factory=optics.SLMConfig)
     atoms: atomic.AtomicConfig = dataclasses.field(default_factory=atomic.AtomicConfig)
     use_pallas: bool = False  # route the spectral MAC through kernels/stmul
+    stmul_version: int = 2  # Pallas stmul kernel generation (1 = legacy VPU)
     storage_interval_s: float = 0.0  # T_Q − T_P (echo-efficiency factor)
     compensate_pulse: bool = True  # divide out the recording-pulse spectrum
-
-
-@dataclasses.dataclass
-class Grating:
-    """Recorded state of the atomic medium (+ digital bookkeeping)."""
-
-    plus: Array  # (O, C, FH, FW, FTr) complex
-    minus: Array | None  # physical mode only
-    fft_shape: tuple[int, int, int]
-    out_shape: tuple[int, int, int]
-    kernel_scale: Array  # (O, 1, 1, 1, 1) de-quantization scale
-    echo_gain: Array  # scalar echo-efficiency factor
+    fused: bool = True  # single-FFT fused query (False = two-query reference)
+    cache_gratings: bool = True  # memoize record() by kernel content hash
+    # Overlap-save streaming: windows correlated per chunk (vmap'd batch).
+    # 1 = strictly sequential (lowest peak memory, the seed behavior).
+    osave_chunk_windows: int = 1
 
 
 class STHC:
     """Stateless correlator: ``record`` returns a Grating, ``correlate``
     consumes one.  Both are jit-friendly pure functions of their inputs."""
 
-    def __init__(self, config: STHCConfig | None = None):
+    def __init__(self, config: STHCConfig | None = None,
+                 cache: GratingCache | None = None):
         self.config = config or STHCConfig()
+        self.engine = QueryEngine(self.config)
+        self._cache = cache if cache is not None else default_cache()
 
     # -- record -----------------------------------------------------------
 
     def record(
         self, kernels: Array, signal_shape: tuple[int, int, int]
     ) -> Grating:
-        """Store a kernel stack (O, C, kh, kw, kt) for signals (H, W, T)."""
-        cfg = self.config
-        ker_shape = kernels.shape[-3:]
-        fft_shape = spectral_conv.fft_shape_for(signal_shape, ker_shape)
-        out_shape = spectral_conv.valid_shape(signal_shape, ker_shape)
+        """Store a kernel stack (O, C, kh, kw, kt) for signals (H, W, T).
 
-        if cfg.mode == "ideal":
-            grating = spectral_conv.make_grating(kernels, fft_shape)
-            one = jnp.ones((kernels.shape[0], 1, 1, 1, 1), kernels.dtype)
-            return Grating(grating, None, fft_shape, out_shape, one, jnp.asarray(1.0))
-
-        # --- physical mode ---
-        k_plus, k_minus = pseudo_negative.split(kernels)
-        # shared per-output-channel scale so the ± channels subtract exactly
-        scale = jnp.max(jnp.abs(kernels), axis=(1, 2, 3, 4), keepdims=True)
-        scale = jnp.where(scale > 0, scale, 1.0)
-        # T2 decay: stored reference frames written earlier have decayed
-        # more by readout — time-domain tap weights on the kernel.
-        decay = atomic.t2_tap_weights(
-            ker_shape[-1], cfg.atoms, cfg.storage_interval_s
-        )
-        q = lambda k: optics.quantize_unit(k / scale, cfg.slm.bits) * decay
-        n_t = fft_shape[2]
-        h_t = atomic.photon_echo_transfer(n_t, cfg.atoms)
-        if cfg.compensate_pulse:
-            # the recorded grating is P*·K̂; ideal readout divides by the
-            # (near-flat) pulse spectrum — residual error is the rolloff.
-            p_t = optics.temporal_pulse_spectrum(n_t)
-            h_t = h_t * p_t / jnp.maximum(p_t, 1e-3)
-        g_plus = spectral_conv.make_grating(q(k_plus), fft_shape, temporal_transfer=h_t)
-        g_minus = spectral_conv.make_grating(q(k_minus), fft_shape, temporal_transfer=h_t)
-        gain = atomic.echo_efficiency(cfg.atoms, cfg.storage_interval_s)
-        return Grating(g_plus, g_minus, fft_shape, out_shape, scale, gain)
+        Cached by kernel content when ``cache_gratings`` is set and the
+        kernels are concrete (i.e. not traced under ``jit``).
+        """
+        if self.config.cache_gratings:
+            return self._cache.get_or_record(self.engine, kernels, signal_shape)
+        return self.engine.record(kernels, signal_shape)
 
     # -- query ------------------------------------------------------------
 
@@ -109,36 +95,35 @@ class STHC:
 
         Returns (B, O, H', W', T') signed feature maps (valid region).
         """
-        cfg = self.config
-        query = self._query_fn()
-        if cfg.mode == "ideal":
-            return query(x, grating.plus, grating.fft_shape, grating.out_shape)
+        if self.config.fused:
+            return self.engine.query(grating, x)
+        return self.engine.query_unfused(grating, x)
 
-        # physical: project the (non-negative) video through the SLM.
-        # One scale per *example* — the channel sum at the detector means a
-        # per-channel scale could not be undone digitally.
-        x = jnp.maximum(x, 0.0)
-        x_scale = jnp.max(x, axis=(1, 2, 3, 4), keepdims=True)  # (B,1,1,1,1)
-        x_scale = jnp.where(x_scale > 0, x_scale, 1.0)
-        enc = optics.quantize_unit(x / x_scale, cfg.slm.bits)
-        y_plus = query(enc, grating.plus, grating.fft_shape, grating.out_shape)
-        y_minus = query(enc, grating.minus, grating.fft_shape, grating.out_shape)
-        y = pseudo_negative.combine(y_plus, y_minus)
-        # undo the digital encodings; echo gain is a pure amplitude factor
-        k_scale = grating.kernel_scale[:, 0, 0, 0, 0]  # (O,)
-        y = y * k_scale[None, :, None, None, None]
-        y = y * x_scale  # (B,1,1,1,1) broadcasts over (B,O,H',W',T')
-        return y * grating.echo_gain
+    def correlate_stream(self, kernels: Array, x: Array, block_t: int) -> Array:
+        """Streaming (overlap-save) correlation over a long time axis.
+
+        Records the grating once (cached) at the coherence-window FFT
+        geometry and pushes ``x`` (B, C, H, W, T) through chunked
+        overlap-save; ``osave_chunk_windows`` windows are correlated per
+        step as one vmap'd batch.  Ideal mode only — the physical SLM
+        per-example scaling is not well-defined across windows.
+        """
+        if self.config.mode != "ideal":
+            raise NotImplementedError(
+                "streaming correlation is served in ideal mode; physical "
+                "per-window encoding is not modeled"
+            )
+        H, W = x.shape[-3:-1]
+        grating = self.record(kernels, (H, W, block_t))
+        return spectral_conv.overlap_save_query(
+            x,
+            grating.effective,
+            kernels.shape[-3:],
+            block_t,
+            grating.fft_shape,
+            chunk_windows=self.config.osave_chunk_windows,
+        )
 
     def __call__(self, kernels: Array, x: Array) -> Array:
         grating = self.record(kernels, x.shape[-3:])
         return self.correlate(grating, x)
-
-    # -- internals ---------------------------------------------------------
-
-    def _query_fn(self) -> Callable:
-        if not self.config.use_pallas:
-            return spectral_conv.query_grating
-        from repro.kernels.stmul import ops as stmul_ops  # lazy import
-
-        return stmul_ops.query_grating_pallas

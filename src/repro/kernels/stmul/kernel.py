@@ -5,20 +5,36 @@ Computes, over flattened frequency bins f,
     Ŷ[b, o, f] = Σ_c  X̂[b, c, f] · G[o, c, f]        (complex)
 
 with complex values carried as separate real/imag float planes (Pallas/TPU
-has no native complex vregs).  Per frequency bin this is a tiny (O×C)·(C)
-product; across a 128-lane frequency tile it is pure VPU elementwise work
-with a C-deep accumulation — exactly the dataflow of the optical
+has no native complex vregs).  In the fused query engine this runs once
+per clip against the *effective* grating (± combine and static scales
+pre-folded at record time) — the digital analogue of the optical
 diffraction, where every atomic 'pixel' (frequency bin) scatters all
 channels simultaneously.
+
+Two kernel generations:
+
+* **v1** (legacy, kept as a secondary oracle): the direct 4-real-multiply
+  complex product as a VPU broadcast-MAC — ``(bB,1,C,bF)·(1,bO,C,bF)``
+  elementwise, summed over C.
+* **v2** (default): the 3-real-multiply (Karatsuba) complex trick
+
+      t1 = Re(X)·Re(G),  t2 = Im(X)·Im(G),  t3 = (Re+Im)(X)·(Re+Im)(G)
+      Re(Y) = t1 − t2,   Im(Y) = t3 − t1 − t2
+
+  cutting real multiplies 4 → 3 (the adds ride the VPU for free), and —
+  when C ≥ ``MIN_MXU_C`` — each ``tᵢ`` C-contraction is expressed as an
+  f-batched ``jax.lax.dot_general`` over ``(bO, C) × (C, bB)`` tiles so
+  Mosaic can route the contraction to the MXU instead of unrolling C on
+  the VPU.  For small C (the paper's C=1 workload) the broadcast-MAC
+  form is kept: a 1-deep matmul would waste the systolic array.
 
 Tiling
 ------
 grid = (B/bB, O/bO, F/bF); each program reads
     x tile (bB, C, bF)  +  g tile (bO, C, bF)   → writes y tile (bB, bO, bF)
-with bF a multiple of 128 (lane width) and the C loop unrolled (C is the
-CNN input-channel count — small for the paper's workload).  VMEM per
-program ≈ (bB + bO)·C·bF·4B·2(planes) + bB·bO·bF·8B; defaults keep this
-≈ 2 MiB, well inside the ~16 MiB VMEM budget.
+with bF a multiple of 128 (lane width).  VMEM per program ≈
+(bB + bO)·C·bF·4B·2(planes) + bB·bO·bF·8B; defaults keep this ≈ 2 MiB,
+well inside the ~16 MiB VMEM budget.
 """
 
 from __future__ import annotations
@@ -36,9 +52,15 @@ BLOCK_B = 4
 BLOCK_O = 8
 BLOCK_F = 512  # lanes; multiple of 128
 
+# Contraction depth at which the MXU beats an unrolled VPU MAC.
+MIN_MXU_C = 8
 
-def _stmul_kernel(xr_ref, xi_ref, gr_ref, gi_ref, yr_ref, yi_ref):
-    """One (bB, bO, bF) output tile; accumulate over the full C axis."""
+
+def _stmul_kernel_v1(xr_ref, xi_ref, gr_ref, gi_ref, yr_ref, yi_ref):
+    """One (bB, bO, bF) output tile; accumulate over the full C axis.
+
+    Direct complex product: 4 real multiplies per (b, o, c, f).
+    """
     xr = xr_ref[...]  # (bB, C, bF)
     xi = xi_ref[...]
     gr = gr_ref[...]  # (bO, C, bF)
@@ -51,8 +73,39 @@ def _stmul_kernel(xr_ref, xi_ref, gr_ref, gi_ref, yr_ref, yi_ref):
     yi_ref[...] = yi
 
 
+def _contract_c(x, g, use_mxu: bool):
+    """Σ_c x[b, c, f] · g[o, c, f] → (bB, bO, bF) real contraction."""
+    if use_mxu:
+        # f-batched matmul: for every lane f, (bB, C) × (C, bO) — deep
+        # enough C keeps the systolic array busy across the 128-lane batch.
+        out = jax.lax.dot_general(
+            x,
+            g,
+            dimension_numbers=(((1,), (1,)), ((2,), (2,))),
+            preferred_element_type=jnp.float32,
+        )  # (bF, bB, bO)
+        return jnp.transpose(out, (1, 2, 0))
+    # shallow C: broadcast-MAC on the VPU (no systolic fill/drain cost)
+    return jnp.sum(x[:, None] * g[None], axis=2)
+
+
+def _stmul_kernel_v2(xr_ref, xi_ref, gr_ref, gi_ref, yr_ref, yi_ref,
+                     *, use_mxu: bool):
+    """Karatsuba complex MAC: 3 real contractions instead of 4."""
+    xr = xr_ref[...]  # (bB, C, bF)
+    xi = xi_ref[...]
+    gr = gr_ref[...]  # (bO, C, bF)
+    gi = gi_ref[...]
+    t1 = _contract_c(xr, gr, use_mxu)
+    t2 = _contract_c(xi, gi, use_mxu)
+    t3 = _contract_c(xr + xi, gr + gi, use_mxu)
+    yr_ref[...] = t1 - t2
+    yi_ref[...] = t3 - t1 - t2
+
+
 @functools.partial(
-    jax.jit, static_argnames=("block_b", "block_o", "block_f", "interpret")
+    jax.jit,
+    static_argnames=("block_b", "block_o", "block_f", "version", "interpret"),
 )
 def spectral_mac_pallas(
     xr: Array,
@@ -63,6 +116,7 @@ def spectral_mac_pallas(
     block_b: int = BLOCK_B,
     block_o: int = BLOCK_O,
     block_f: int = BLOCK_F,
+    version: int = 2,
     interpret: bool = False,
 ) -> tuple[Array, Array]:
     """Spectral MAC on real/imag planes.
@@ -70,6 +124,8 @@ def spectral_mac_pallas(
     Args:
       xr, xi: (B, C, F) float32 — query spectrum planes.
       gr, gi: (O, C, F) float32 — grating planes.
+      version: 1 = legacy 4-multiply VPU broadcast-MAC;
+               2 = Karatsuba 3-multiply, MXU-routed contraction for C ≥ 8.
 
     Returns (yr, yi): (B, O, F) float32.  F, B, O are padded to tile
     multiples internally and cropped on return.
@@ -96,13 +152,20 @@ def spectral_mac_pallas(
     Bp, _, Fp = xr_p.shape
     Op = gr_p.shape[0]
 
+    if version == 1:
+        kernel = _stmul_kernel_v1
+    elif version == 2:
+        kernel = functools.partial(_stmul_kernel_v2, use_mxu=C >= MIN_MXU_C)
+    else:
+        raise ValueError(f"unknown stmul kernel version {version!r}")
+
     grid = (Bp // bB, Op // bO, Fp // bF)
     x_spec = pl.BlockSpec((bB, C, bF), lambda b, o, f: (b, 0, f))
     g_spec = pl.BlockSpec((bO, C, bF), lambda b, o, f: (o, 0, f))
     y_spec = pl.BlockSpec((bB, bO, bF), lambda b, o, f: (b, o, f))
 
     yr, yi = pl.pallas_call(
-        _stmul_kernel,
+        kernel,
         grid=grid,
         in_specs=[x_spec, x_spec, g_spec, g_spec],
         out_specs=[y_spec, y_spec],

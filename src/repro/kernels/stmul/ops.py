@@ -3,7 +3,8 @@
 ``spectral_mac`` accepts/returns complex arrays with arbitrary trailing
 frequency axes and handles the real/imag split, frequency flattening and
 interpret-mode selection (interpret=True on CPU — the validation path in
-this container; compiled on real TPU).
+this container; compiled on real TPU).  ``version`` selects the kernel
+generation (2 = Karatsuba/MXU, the default; 1 = legacy broadcast-MAC).
 """
 
 from __future__ import annotations
@@ -20,11 +21,14 @@ def _use_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def spectral_mac(xhat: Array, grating: Array, **tile_kwargs) -> Array:
+def spectral_mac(
+    xhat: Array, grating: Array, *, version: int = 2, **tile_kwargs
+) -> Array:
     """Complex channel-contracted spectral product via the Pallas kernel.
 
     Args:
       xhat: (B, C, *F) complex; grating: (O, C, *F) complex.
+      version: stmul kernel generation (see kernel.py).
 
     Returns (B, O, *F) complex64.
     """
@@ -41,6 +45,7 @@ def spectral_mac(xhat: Array, grating: Array, **tile_kwargs) -> Array:
         jnp.imag(xf).astype(jnp.float32),
         jnp.real(gf).astype(jnp.float32),
         jnp.imag(gf).astype(jnp.float32),
+        version=version,
         interpret=_use_interpret(),
         **tile_kwargs,
     )
@@ -52,9 +57,11 @@ def query_grating_pallas(
     grating: Array,
     fft_shape: tuple[int, int, int],
     out_shape: tuple[int, int, int],
+    *,
+    version: int = 2,
 ) -> Array:
     """Drop-in replacement for spectral_conv.query_grating using the kernel."""
     xhat = jnp.fft.rfftn(x, s=fft_shape, axes=(-3, -2, -1))
-    yhat = spectral_mac(xhat, grating)
+    yhat = spectral_mac(xhat, grating, version=version)
     y = jnp.fft.irfftn(yhat, s=fft_shape, axes=(-3, -2, -1))
     return y[..., : out_shape[0], : out_shape[1], : out_shape[2]]

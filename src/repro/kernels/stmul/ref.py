@@ -7,6 +7,9 @@ by the stored grating G and summed over input channels,
 
 over every 3-D frequency bin f.  This is the hot inner op of the spectral
 correlator — everything else in the query path is FFTs.
+
+These jnp oracles (plus the retained v1 kernel in ``kernel.py``) are the
+references the Karatsuba/MXU v2 kernel is validated against.
 """
 
 from __future__ import annotations

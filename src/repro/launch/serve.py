@@ -42,14 +42,20 @@ class VideoSearchConfig:
     window_frames: int = 64  # coherence window T2 (frames)
     mode: str = "ideal"  # STHC fidelity
     physical: bool = False
+    # coherence windows correlated per step as one vmap'd batch (batched
+    # FFTs); 1 = strictly sequential, minimum peak memory.
+    chunk_windows: int = 4
 
 
 class VideoSearchServer:
     """Record reference kernels once; stream queries through overlap-save.
 
-    The grating is the server's 'loaded model'; query throughput is
-    bounded by the frame-loading rate (`core.throughput`), not by the
-    correlation itself.
+    The grating is recorded *once at construction* (through the engine's
+    content-hash cache) and held stationary across every query — the
+    server's 'loaded model'.  Query throughput is bounded by the
+    frame-loading rate (`core.throughput`), not by the correlation
+    itself; ``chunk_windows`` trades peak activation memory for batched
+    window FFTs.
     """
 
     def __init__(
@@ -61,13 +67,40 @@ class VideoSearchServer:
         self.cfg = cfg
         self.kernels = kernels
         self.kt = kernels.shape[-1]
+        self.frame_hw = tuple(frame_hw)
         if cfg.window_frames <= self.kt - 1:
             raise ValueError("coherence window must exceed kernel length")
+        if cfg.mode != "ideal" or cfg.physical:
+            # the streaming encoder has no physical-mode semantics (see
+            # STHC.correlate_stream); fail loudly rather than serve
+            # silently-ideal scores.
+            raise NotImplementedError(
+                "VideoSearchServer serves ideal mode only"
+            )
+        self.sthc = STHC(
+            STHCConfig(mode="ideal", osave_chunk_windows=cfg.chunk_windows)
+        )
+        # record once: the kernels live in the atomic medium from now on
+        self.grating = self.sthc.record(
+            kernels, (frame_hw[0], frame_hw[1], cfg.window_frames)
+        )
         self._correlate = jax.jit(self._correlate_impl)
 
     def _correlate_impl(self, clip: jax.Array) -> jax.Array:
-        return spectral_conv.overlap_save_time(
-            clip, self.kernels, block_t=self.cfg.window_frames
+        if tuple(clip.shape[-3:-1]) != self.frame_hw:
+            # the grating's FFT grid is baked for frame_hw at record time;
+            # a different spatial size would correlate silently wrong.
+            raise ValueError(
+                f"clip spatial dims {tuple(clip.shape[-3:-1])} do not match "
+                f"the recorded frame size {self.frame_hw}"
+            )
+        return spectral_conv.overlap_save_query(
+            clip,
+            self.grating.effective,
+            self.kernels.shape[-3:],
+            self.cfg.window_frames,
+            self.grating.fft_shape,
+            chunk_windows=self.cfg.chunk_windows,
         )
 
     def search(self, clip: jax.Array) -> dict:

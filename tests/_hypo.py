@@ -1,0 +1,99 @@
+"""Optional-dependency guard for ``hypothesis``.
+
+The seed container does not ship ``hypothesis``; importing it at module
+scope killed test *collection* for the whole suite.  Test modules now do
+
+    from _hypo import given, settings, st
+
+which re-exports the real library when available and otherwise falls
+back to a tiny deterministic stand-in: each ``@given`` test runs
+``max_examples`` times (capped) with values drawn from a fixed-seed RNG.
+The fallback covers exactly the strategy surface this suite uses
+(``integers``, ``sampled_from``, ``booleans``, ``sets``) — it is not a
+property-testing engine, just enough to keep the properties exercised
+on a deterministic sample when the real engine is absent.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    _MAX_EXAMPLES_CAP = 10  # keep the fallback fast; hypothesis shrinks anyway
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    class _St:
+        """Deterministic stand-ins for the strategies this suite uses."""
+
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(options):
+            options = list(options)
+            return _Strategy(lambda rng: options[rng.randrange(len(options))])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def sets(elements, min_size=0, max_size=8):
+            def draw(rng):
+                size = rng.randint(min_size, max_size)
+                out = set()
+                for _ in range(size * 4):  # retry duplicates a few times
+                    if len(out) >= size:
+                        break
+                    out.add(elements.example(rng))
+                return out
+
+            return _Strategy(draw)
+
+    st = _St()
+
+    def settings(max_examples=10, **_kwargs):
+        def deco(fn):
+            fn._hypo_max_examples = min(max_examples, _MAX_EXAMPLES_CAP)
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                # @settings sits *above* @given, so the budget lands on this
+                # wrapper — read it at call time.
+                n = getattr(wrapper, "_hypo_max_examples", _MAX_EXAMPLES_CAP)
+                rng = random.Random(0xC0FFEE)
+                for _ in range(max(min(n, _MAX_EXAMPLES_CAP), 1)):
+                    drawn = {k: s.example(rng) for k, s in strategies.items()}
+                    fn(*args, **drawn, **kwargs)
+
+            # Hide the drawn parameters from pytest's fixture resolution:
+            # only genuine fixtures (e.g. ``rng``) may remain visible.
+            sig = inspect.signature(fn)
+            kept = [
+                p for name, p in sig.parameters.items() if name not in strategies
+            ]
+            wrapper.__signature__ = sig.replace(parameters=kept)
+            del wrapper.__wrapped__  # or inspect follows it back to fn
+            return wrapper
+
+        return deco

@@ -2,7 +2,7 @@
 deterministic LM token stream (fault-tolerance contract)."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypo import given, settings, st  # hypothesis, or deterministic fallback
 
 from repro.data import kth_synthetic as kth
 from repro.data import tokens as tok

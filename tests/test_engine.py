@@ -1,0 +1,290 @@
+"""Fused spectral query engine: single-FFT dataflow, fused-vs-unfused
+equivalence at paper geometry, grating cache semantics, stmul v2 vs the
+v1 kernel / jnp oracle, and batched overlap-save equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import spectral_conv as sc
+from repro.core.engine import GratingCache, QueryEngine
+from repro.core.sthc import STHC, STHCConfig
+from repro.kernels.stmul import ops as stmul_ops, ref as stmul_ref
+
+
+def _clips(rng, B=2, C=1, H=20, W=24, T=10):
+    return jnp.asarray(rng.rand(B, C, H, W, T).astype(np.float32))
+
+
+def _kernels(rng, O=3, C=1, kh=7, kw=9, kt=4):
+    return jnp.asarray(rng.randn(O, C, kh, kw, kt).astype(np.float32))
+
+
+# -- fused query ≡ unfused two-query reference --------------------------------
+
+
+def test_fused_equals_unfused_reference(rng):
+    x = _clips(rng)
+    k = _kernels(rng)
+    sthc = STHC(STHCConfig(mode="physical"))
+    grating = sthc.record(k, x.shape[-3:])
+    y_fused = sthc.engine.query(grating, x)
+    y_ref = sthc.engine.query_unfused(grating, x)
+    rel = float(jnp.linalg.norm(y_fused - y_ref) / jnp.linalg.norm(y_ref))
+    assert rel <= 1e-4, rel
+
+
+def test_fused_equals_unfused_paper_geometry(rng):
+    """Acceptance geometry: the paper's 30×40×8 kernels on 60×80×16 clips."""
+    x = _clips(rng, B=1, H=60, W=80, T=16)
+    k = _kernels(rng, O=9, kh=30, kw=40, kt=8)
+    sthc = STHC(STHCConfig(mode="physical"))
+    grating = sthc.record(k, x.shape[-3:])
+    y_fused = sthc.engine.query(grating, x)
+    y_ref = sthc.engine.query_unfused(grating, x)
+    rel = float(jnp.linalg.norm(y_fused - y_ref) / jnp.linalg.norm(y_ref))
+    assert rel <= 1e-4, rel
+
+
+def test_fused_pallas_path_matches(rng):
+    x = _clips(rng)
+    k = _kernels(rng)
+    ref = STHC(STHCConfig(mode="physical"))(k, x)
+    got = STHC(STHCConfig(mode="physical", use_pallas=True))(k, x)
+    rel = float(jnp.linalg.norm(got - ref) / jnp.linalg.norm(ref))
+    assert rel <= 1e-4, rel
+
+
+def test_ideal_fused_is_exact(rng):
+    x = _clips(rng)
+    k = _kernels(rng)
+    y = STHC(STHCConfig(mode="ideal"))(k, x)
+    ref = sc.direct_correlate3d(x, k, "valid")
+    np.testing.assert_allclose(y, ref, atol=1e-4 * float(jnp.max(jnp.abs(ref))))
+
+
+# -- the dataflow claim itself: exactly one forward FFT per clip --------------
+
+
+def _count_ffts(jaxpr, kind: str) -> int:
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "fft" and eqn.params["fft_type"].name == kind:
+            n += 1
+        for v in eqn.params.values():
+            if hasattr(v, "jaxpr"):  # ClosedJaxpr (e.g. pjit)
+                n += _count_ffts(v.jaxpr, kind)
+            elif hasattr(v, "eqns"):  # raw Jaxpr
+                n += _count_ffts(v, kind)
+    return n
+
+
+def test_fused_physical_query_computes_one_forward_fft(rng):
+    x = _clips(rng)
+    k = _kernels(rng)
+    sthc = STHC(STHCConfig(mode="physical"))
+    grating = sthc.record(k, x.shape[-3:])
+    fused = jax.make_jaxpr(lambda x: sthc.engine.query(grating, x))(x)
+    assert _count_ffts(fused.jaxpr, "RFFT") == 1
+    assert _count_ffts(fused.jaxpr, "IRFFT") == 1
+    unfused = jax.make_jaxpr(lambda x: sthc.engine.query_unfused(grating, x))(x)
+    assert _count_ffts(unfused.jaxpr, "RFFT") == 2  # the cost being removed
+    assert _count_ffts(unfused.jaxpr, "IRFFT") == 2
+
+
+# -- grating cache -------------------------------------------------------------
+
+
+def test_cache_hits_on_identical_kernels(rng):
+    cache = GratingCache()
+    x = _clips(rng)
+    k = _kernels(rng)
+    sthc = STHC(STHCConfig(mode="physical"), cache=cache)
+    y1 = sthc(k, x)
+    y2 = sthc(k, x)
+    assert cache.misses == 1 and cache.hits == 1
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+    # same bytes in a fresh array still hits (content addressing) ...
+    sthc(jnp.array(np.asarray(k)), x)
+    assert cache.hits == 2
+    # ... different kernel content misses
+    sthc(k + 1.0, x)
+    assert cache.misses == 2
+
+
+def test_cache_key_separates_configs(rng):
+    cache = GratingCache()
+    x = _clips(rng)
+    k = _kernels(rng)
+    y_phys = STHC(STHCConfig(mode="physical"), cache=cache)(k, x)
+    y_ideal = STHC(STHCConfig(mode="ideal"), cache=cache)(k, x)
+    assert cache.misses == 2 and cache.hits == 0
+    assert float(jnp.max(jnp.abs(y_phys - y_ideal))) > 0
+
+
+def test_cache_ignores_query_only_knobs(rng):
+    """Query-side config (chunking, kernel routing) doesn't change what
+    was recorded — physically identical gratings must share one entry."""
+    cache = GratingCache()
+    x = _clips(rng)
+    k = _kernels(rng)
+    STHC(STHCConfig(mode="physical"), cache=cache)(k, x)
+    STHC(
+        STHCConfig(mode="physical", use_pallas=True, osave_chunk_windows=4),
+        cache=cache,
+    )(k, x)
+    assert cache.misses == 1 and cache.hits == 1
+
+
+def test_ideal_grating_holds_single_tensor(rng):
+    """Ideal mode has no ± stack; long-lived serving gratings must not
+    retain redundant copies (stacked is None, plus aliases effective)."""
+    k = _kernels(rng)
+    g = QueryEngine(STHCConfig(mode="ideal")).record(k, (20, 24, 10))
+    assert g.stacked is None and g.minus is None
+    assert g.plus is g.effective
+
+
+def test_cache_bypassed_under_tracing(rng):
+    cache = GratingCache()
+    x = _clips(rng)
+    k = _kernels(rng)
+    sthc = STHC(STHCConfig(mode="physical"), cache=cache)
+
+    @jax.jit
+    def run(k, x):
+        return sthc(k, x)
+
+    y = run(k, x)
+    assert cache.misses == 0 and cache.hits == 0 and len(cache) == 0
+    ref = STHC(STHCConfig(mode="physical"))(k, x)
+    np.testing.assert_allclose(y, ref, rtol=0, atol=1e-5 * float(jnp.max(jnp.abs(ref))))
+
+
+def test_cache_lru_eviction(rng):
+    cache = GratingCache(max_entries=2)
+    x = _clips(rng)
+    sthc = STHC(STHCConfig(mode="ideal"), cache=cache)
+    ks = [_kernels(np.random.RandomState(i)) for i in range(3)]
+    for k in ks:
+        sthc(k, x)
+    assert len(cache) == 2 and cache.misses == 3
+    sthc(ks[0], x)  # evicted → miss again
+    assert cache.misses == 4
+
+
+# -- stmul v2 ≡ v1 ≡ oracle -----------------------------------------------------
+
+
+@pytest.mark.parametrize("C", [1, 3, 8, 9])  # spans the VPU/MXU routing split
+def test_stmul_v2_matches_v1_and_oracle(C):
+    rng = np.random.RandomState(C)
+    sh = (6, 7, 5)
+    xh = jnp.asarray(
+        (rng.randn(2, C, *sh) + 1j * rng.randn(2, C, *sh)).astype(np.complex64)
+    )
+    g = jnp.asarray(
+        (rng.randn(4, C, *sh) + 1j * rng.randn(4, C, *sh)).astype(np.complex64)
+    )
+    ref = stmul_ref.spectral_mac_ref(xh, g)
+    tol = 1e-4 * float(jnp.max(jnp.abs(ref))) + 1e-6
+    v1 = stmul_ops.spectral_mac(xh, g, version=1)
+    v2 = stmul_ops.spectral_mac(xh, g, version=2)
+    np.testing.assert_allclose(v1, ref, atol=tol)
+    np.testing.assert_allclose(v2, ref, atol=tol)
+    np.testing.assert_allclose(v2, v1, atol=tol)
+
+
+def test_stmul_v2_tile_boundary():
+    """F at / off the 512-lane tile boundary through the v2 kernel."""
+    rng = np.random.RandomState(0)
+    for F in (511, 512, 513):
+        xh = jnp.asarray(
+            (rng.randn(2, 1, F) + 1j * rng.randn(2, 1, F)).astype(np.complex64)
+        )
+        g = jnp.asarray(
+            (rng.randn(3, 1, F) + 1j * rng.randn(3, 1, F)).astype(np.complex64)
+        )
+        got = stmul_ops.spectral_mac(xh, g, version=2)
+        ref = stmul_ref.spectral_mac_ref(xh, g)
+        np.testing.assert_allclose(got, ref, atol=1e-4)
+
+
+def test_stmul_unknown_version_raises():
+    xh = jnp.zeros((1, 1, 4, 4, 3), jnp.complex64)
+    g = jnp.zeros((1, 1, 4, 4, 3), jnp.complex64)
+    with pytest.raises(ValueError):
+        stmul_ops.spectral_mac(xh, g, version=3)
+
+
+# -- batched overlap-save --------------------------------------------------------
+
+
+@pytest.mark.parametrize("T", [9, 23, 37])  # ragged vs window/chunk grids
+@pytest.mark.parametrize("chunk", [1, 2, 3, 8])
+def test_batched_overlap_save_equals_one_shot(T, chunk, rng):
+    x = jnp.asarray(rng.rand(1, 1, 10, 12, T).astype(np.float32))
+    k = jnp.asarray(rng.randn(2, 1, 3, 4, 3).astype(np.float32))
+    ref = sc.direct_correlate3d(x, k, mode="valid")
+    got = sc.overlap_save_time(x, k, block_t=7, chunk_windows=chunk)
+    np.testing.assert_allclose(
+        got, ref, atol=2e-4 * float(jnp.max(jnp.abs(ref))) + 1e-5
+    )
+
+
+def test_correlate_stream_uses_cache_and_chunks(rng):
+    cache = GratingCache()
+    x = jnp.asarray(rng.rand(1, 1, 10, 12, 29).astype(np.float32))
+    k = jnp.asarray(rng.randn(2, 1, 3, 4, 3).astype(np.float32))
+    sthc = STHC(STHCConfig(mode="ideal", osave_chunk_windows=3), cache=cache)
+    ref = sc.direct_correlate3d(x, k, mode="valid")
+    got = sthc.correlate_stream(k, x, block_t=8)
+    np.testing.assert_allclose(
+        got, ref, atol=2e-4 * float(jnp.max(jnp.abs(ref))) + 1e-5
+    )
+    sthc.correlate_stream(k, x, block_t=8)
+    assert cache.hits == 1 and cache.misses == 1
+
+
+def test_correlate_stream_physical_not_served(rng):
+    sthc = STHC(STHCConfig(mode="physical"))
+    x = jnp.zeros((1, 1, 10, 12, 20), jnp.float32)
+    k = jnp.zeros((2, 1, 3, 4, 3), jnp.float32)
+    with pytest.raises(NotImplementedError):
+        sthc.correlate_stream(k, x, block_t=8)
+
+
+def test_video_server_rejects_mismatched_frame_size(rng):
+    from repro.launch.serve import VideoSearchConfig, VideoSearchServer
+
+    k = jnp.asarray(rng.randn(2, 1, 3, 4, 3).astype(np.float32))
+    server = VideoSearchServer(k, (12, 12), VideoSearchConfig(window_frames=8))
+    with pytest.raises(ValueError, match="spatial dims"):
+        server.search(jnp.zeros((1, 1, 16, 16, 20), jnp.float32))
+
+
+def test_video_server_rejects_physical_mode(rng):
+    from repro.launch.serve import VideoSearchConfig, VideoSearchServer
+
+    k = jnp.asarray(rng.randn(2, 1, 3, 4, 3).astype(np.float32))
+    with pytest.raises(NotImplementedError):
+        VideoSearchServer(
+            k, (12, 12), VideoSearchConfig(window_frames=8, mode="physical")
+        )
+
+
+# -- engine as a pure function ----------------------------------------------------
+
+
+def test_engine_record_query_jit_friendly(rng):
+    """record + query compose under jit (grating as closed-over constant)."""
+    x = _clips(rng)
+    k = _kernels(rng)
+    engine = QueryEngine(STHCConfig(mode="physical"))
+    grating = engine.record(k, x.shape[-3:])
+    eager = engine.query(grating, x)
+    jitted = jax.jit(lambda x: engine.query(grating, x))(x)
+    np.testing.assert_allclose(
+        eager, jitted, atol=1e-5 * float(jnp.max(jnp.abs(eager))) + 1e-6
+    )

@@ -8,7 +8,7 @@ import sys
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypo import given, settings, st  # hypothesis, or deterministic fallback
 
 from repro import configs
 from repro.distributed.fault import (

@@ -4,7 +4,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypo import given, settings, st  # hypothesis, or deterministic fallback
 
 from repro.kernels.flash import ops, ref
 

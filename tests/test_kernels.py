@@ -4,7 +4,7 @@ pure-jnp oracles, with hypothesis shape/dtype sweeps."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypo import given, settings, st  # hypothesis, or deterministic fallback
 
 from repro.kernels.conv3d import ops as conv_ops, ref as conv_ref
 from repro.kernels.ssd import ops as ssd_ops, ref as ssd_ref

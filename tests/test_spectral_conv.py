@@ -4,7 +4,7 @@ mode, plus overlap-save streaming equivalence (paper Fig. 1C)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypo import given, settings, st  # hypothesis, or deterministic fallback
 
 from repro.core import spectral_conv as sc
 
