@@ -48,6 +48,38 @@ def run(log=print) -> list[str]:
         rows.append(f"stmul_pallas_v{ver},{times[ver]*1e6:.0f},maxerr={err:.1e}")
     rows.append(f"stmul_v1_vs_v2_speedup,0,{times[1]/times[2]:.2f}")
 
+    # v2 MXU-routing threshold sweep around the shipped default (C=8):
+    # at each contraction depth straddling the boundary, force *both*
+    # paths — min_mxu_c=1 routes to the f-batched dot_general (MXU), the
+    # huge value to the VPU broadcast-MAC — so every row is a distinct
+    # code-path measurement and the MXU/VPU crossover is read directly
+    # off the table.  On this CPU container the timings are
+    # interpret-mode semantics only — the sweep exists so a real-TPU run
+    # can pick `STHCConfig.stmul_min_mxu_c` straight from these rows
+    # (ROADMAP tuning item) with no code change.
+    Fs = (45, 60, 7)
+    for C in (4, 8):
+        xhC = jnp.asarray(
+            (rng.randn(2, C, *Fs) + 1j * rng.randn(2, C, *Fs)).astype(
+                np.complex64
+            )
+        )
+        gC = jnp.asarray(
+            (rng.randn(9, C, *Fs) + 1j * rng.randn(9, C, *Fs)).astype(
+                np.complex64
+            )
+        )
+        refC = ref_fn(xhC, gC)
+        for label, m in (("mxu", 1), ("vpu", 10**9)):
+            fn = lambda a, b, m=m: stmul_ops.spectral_mac(
+                a, b, version=2, min_mxu_c=m
+            )
+            t = _time(fn, xhC, gC)
+            err = float(jnp.max(jnp.abs(fn(xhC, gC) - refC)))
+            rows.append(
+                f"stmul_v2_minmxu_{label}_C{C},{t*1e6:.0f},maxerr={err:.1e}"
+            )
+
     # conv3d at C3D scale (3×3×3, 64ch)
     x = jnp.asarray(rng.randn(1, 16, 14, 14, 8).astype(np.float32))
     w = jnp.asarray(rng.randn(16, 16, 3, 3, 3).astype(np.float32))

@@ -72,6 +72,20 @@ def run(log=print) -> list[str]:
     )
     rows.append(f"sthc_fused_vs_unfused_speedup,0,{t_unfused/t_fused:.2f}")
 
+    # streaming physical: the serving dataflow — grating recorded once at
+    # the coherence-window geometry, a long clip streamed through the
+    # engine's overlap-save path with stream-global SLM encoding.
+    t_long = 64
+    stream = STHC(STHCConfig(mode="physical", osave_chunk_windows=4))
+    g_stream = stream.record(k, (wl.height, wl.width, 2 * wl.frames))
+    x_long = jnp.asarray(
+        rng.rand(1, 1, wl.height, wl.width, t_long).astype(np.float32)
+    )
+    t_stream = _time(lambda x: stream.engine.query_stream(g_stream, x), x_long)
+    rows.append(
+        f"sthc_stream_physical,{t_stream*1e6:.0f},{t_long/t_stream:.1f}"
+    )
+
     # paper's projected table
     for row in throughput.throughput_table():
         name = row["system"].replace(" ", "_").replace(",", "")

@@ -24,11 +24,25 @@ grating), recomputing the identical ``rfftn(x)`` both times, and
   path.  The only epilogue left at query time is the per-example query
   de-scaling, which depends on the clip itself.
 
+* **Stream** — ``query_stream`` is the same fused path per coherence
+  window (paper Fig. 1C): the grating is recorded once at the *window*
+  FFT geometry and a long clip is pushed through overlap-save with the
+  windowing math from :mod:`repro.core.spectral_conv`.  The window
+  geometry fixes only the FFT numerics: the recorded *physics* (IHB and
+  recording-pulse envelopes) live on the reference's own kt-point grid,
+  so the grating is a pure function of the reference, independent of
+  any query geometry.  Physical encoding uses a **stream-global** SLM
+  scale — the modulator has one dynamic range for the whole stream, not
+  one per window.  Together these make the streaming output equal to
+  the one-shot physical correlation (tested property).
+
 * **Cache** — ``GratingCache`` memoizes recorded gratings under a
   content hash (kernel bytes + fft geometry + config), so repeated
   ``STHC.__call__`` / ``hybrid`` / serving invocations with the same
-  kernels stop re-recording.  Tracer inputs (inside ``jit``) bypass the
-  cache transparently.
+  kernels stop re-recording.  The LRU budget is sized both in entries
+  and in grating *bytes* (multi-tenant serving), with hit/miss/eviction
+  counters surfaced via :meth:`GratingCache.stats`.  Tracer inputs
+  (inside ``jit``) bypass the cache transparently.
 
 The unfused two-query path is kept as ``query_unfused`` — it is the
 reference the fused path is tested against, and the baseline the speed
@@ -46,6 +60,7 @@ from typing import TYPE_CHECKING
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
 from repro.core import atomic, optics, pseudo_negative, spectral_conv
 
@@ -76,6 +91,9 @@ class FusedGrating:
       encode: whether queries must pass through the SLM model
         (non-negativity + per-example scale + quantization).
       slm_bits: SLM bit depth used for query encoding.
+      ker_shape: (kh, kw, kt) of the recorded kernels — with
+        ``out_shape`` this pins the record-time signal geometry, which
+        the streaming path needs to derive its window length.
     """
 
     stacked: Array | None
@@ -86,6 +104,15 @@ class FusedGrating:
     echo_gain: Array
     encode: bool = False
     slm_bits: int = 8
+    ker_shape: tuple[int, int, int] | None = None
+
+    @property
+    def nbytes(self) -> int:
+        """HBM footprint of the recorded state (cache byte accounting)."""
+        n = int(self.effective.nbytes)
+        if self.stacked is not None:
+            n += int(self.stacked.nbytes)
+        return n
 
     # -- backward-compatible views of the seed `Grating` layout ----------
 
@@ -103,6 +130,13 @@ class QueryEngine:
 
     def __init__(self, config: "STHCConfig"):
         self.config = config
+        # jitted overlap-save driver; built eagerly (wrapper creation is
+        # free, tracing happens on first call) so concurrent first
+        # queries from server threads can't race a lazy init
+        self._stream_fn = jax.jit(
+            self._stream_impl,
+            static_argnames=("ker_shape", "fft_shape", "plan", "encode"),
+        )
 
     # -- record -----------------------------------------------------------
 
@@ -127,6 +161,7 @@ class QueryEngine:
                 echo_gain=jnp.asarray(1.0),
                 encode=False,
                 slm_bits=cfg.slm.bits,
+                ker_shape=tuple(int(n) for n in ker_shape),
             )
 
         # --- physical mode ---
@@ -140,25 +175,40 @@ class QueryEngine:
             ker_shape[-1], cfg.atoms, cfg.storage_interval_s
         )
         q = lambda k: optics.quantize_unit(k / scale, cfg.slm.bits) * decay
-        n_t = fft_shape[2]
-        h_t = atomic.photon_echo_transfer(n_t, cfg.atoms)
+        # Temporal physics of the write, on the *reference's own* kt-point
+        # grid.  The medium is written before any query exists, so the
+        # recorded state must be a pure function of the reference — it
+        # cannot depend on the FFT grid of a query that arrives later.
+        # (The seed applied the envelopes at the query FFT grid, which
+        # made the "same" grating differ between a 16-frame one-shot
+        # query and a 16-frame coherence window of a longer stream; that
+        # grid dependence is exactly why streaming physical mode was
+        # previously undefined.)  Band-limiting the stored reference here
+        # keeps its support within kt frames, so windowed (overlap-save)
+        # and one-shot queries diffract off identical physics.
+        kt = int(ker_shape[-1])
+        h_t = atomic.photon_echo_transfer(kt, cfg.atoms)
         # The recording pulse is the temporal reference of the write: its
         # spectrum P(f_t) is burned into the grating (recorded ∝ P*·K̂).
-        p_t = optics.temporal_pulse_spectrum(n_t)
+        p_t = optics.temporal_pulse_spectrum(kt)
         h_t = h_t * p_t
         if cfg.compensate_pulse:
             # digital deconvolution at readout: divide the (near-flat,
             # known) pulse spectrum back out — residual error is only the
             # clamped region where P < 1e-3.
             h_t = h_t / jnp.maximum(p_t, 1e-3)
-        g_plus = spectral_conv.make_grating(
-            q(k_plus), fft_shape, temporal_transfer=h_t
-        )
-        g_minus = spectral_conv.make_grating(
-            q(k_minus), fft_shape, temporal_transfer=h_t
-        )
+
+        def band(k):  # IHB/pulse envelope on the reference's temporal grid
+            spec = jnp.fft.fft(k, axis=-1) * h_t
+            return jnp.real(jnp.fft.ifft(spec, axis=-1))
+
+        g_plus = spectral_conv.make_grating(band(q(k_plus)), fft_shape)
+        g_minus = spectral_conv.make_grating(band(q(k_minus)), fft_shape)
         gain = atomic.echo_efficiency(cfg.atoms, cfg.storage_interval_s)
-        stacked = jnp.stack([g_plus, g_minus])
+        # The ± stack only feeds the unfused reference path; serving
+        # configs drop it so cached gratings cost their hot-path bytes.
+        keep_stacked = getattr(cfg, "keep_stacked", True)
+        stacked = jnp.stack([g_plus, g_minus]) if keep_stacked else None
         # Fold the ± combine, kernel de-scaling and echo gain into one
         # effective grating — all static, all linear in the grating.
         effective = (g_plus - g_minus) * scale * gain
@@ -171,6 +221,7 @@ class QueryEngine:
             echo_gain=gain,
             encode=True,
             slm_bits=cfg.slm.bits,
+            ker_shape=tuple(int(n) for n in ker_shape),
         )
 
     # -- query (fused hot path) --------------------------------------------
@@ -222,6 +273,120 @@ class QueryEngine:
         y = y * x_scale
         return y * grating.echo_gain
 
+    # -- query (streaming / overlap-save) ----------------------------------
+
+    def query_stream(
+        self,
+        grating: FusedGrating,
+        x: Array,
+        *,
+        chunk_windows: int | None = None,
+    ) -> Array:
+        """Stream clips x (B, C, H, W, T) through a window-geometry grating.
+
+        The overlap-save driver for every streaming consumer —
+        ``STHC.correlate_stream``, hybrid long-clip inference, and the
+        video-search server.  The grating must have been recorded at the
+        coherence-window geometry ``(H, W, block_t)``, which fixes the
+        FFT grid each window rides through the fused single-FFT
+        effective-grating path; the recorded physics themselves (IHB and
+        pulse envelopes) live on the reference's own kt-point grid and
+        are independent of this (or any) query geometry — see
+        :meth:`record`.
+
+        Per-window physical semantics: the SLM has **one** dynamic range
+        for the whole stream, so encoding uses a *stream-global*
+        per-example scale (max over the full clip), not one scale per
+        window.  Quantization is pointwise, so encoding the stream once
+        and then windowing it is exactly displaying every window at that
+        shared scale — and makes streaming output equal the one-shot
+        physical correlation (record-time envelopes live on the
+        reference's own kt-grid, so the equality is exact to float
+        tolerance; tested at the paper geometry).
+
+        Args:
+          grating: recorded at ``(H, W, block_t)``; ``block_t`` and the
+            kernel shape are derived from it.
+          x: (B, C, H, W, T) stream, T ≥ kt, spatial dims matching the
+            record-time frame size.
+          chunk_windows: windows correlated per step as one vmap'd batch
+            (default: ``config.osave_chunk_windows``).
+
+        Returns (B, O, H−kh+1, W−kw+1, T−kt+1).
+        """
+        if grating.ker_shape is None:
+            raise ValueError(
+                "grating lacks ker_shape (recorded by an older engine); "
+                "re-record before streaming queries"
+            )
+        kh, kw, kt = grating.ker_shape
+        oh, ow, ot = grating.out_shape
+        frame_hw = (oh + kh - 1, ow + kw - 1)
+        if tuple(x.shape[-3:-1]) != frame_hw:
+            # the grating's FFT grid is baked for frame_hw at record time;
+            # a different spatial size would correlate silently wrong.
+            raise ValueError(
+                f"clip spatial dims {tuple(x.shape[-3:-1])} do not match "
+                f"the recorded frame size {frame_hw}"
+            )
+        plan = self.stream_plan_for(grating, x.shape[-1], chunk_windows)
+        return self._stream_fn(
+            x,
+            grating.effective,
+            ker_shape=grating.ker_shape,
+            fft_shape=grating.fft_shape,
+            plan=plan,
+            encode=grating.encode,
+        )
+
+    def stream_plan_for(
+        self,
+        grating: FusedGrating,
+        n_frames: int,
+        chunk_windows: int | None = None,
+    ) -> spectral_conv.StreamPlan:
+        """The overlap-save plan a streaming query of ``n_frames`` frames
+        runs under — the one source of truth for window accounting
+        (``query_stream`` uses it; serving metrics must report the same
+        plan, derived from the grating's recorded geometry, never from a
+        possibly-mutated live config)."""
+        kt = grating.ker_shape[-1]
+        block_t = grating.out_shape[-1] + kt - 1  # record-time window
+        if chunk_windows is None:
+            chunk_windows = getattr(self.config, "osave_chunk_windows", 1)
+        # Pure windowing arithmetic — static ints, validated eagerly so
+        # geometry errors surface outside the traced driver.
+        return spectral_conv.stream_plan(n_frames, kt, block_t, chunk_windows)
+
+    def _stream_impl(self, x, effective, *, ker_shape, fft_shape, plan, encode):
+        """Overlap-save body (jitted; shapes/plan static, arrays traced)."""
+        kh, kw, kt = ker_shape
+        H, W = x.shape[-3:-1]
+        x_scale = None
+        if encode:
+            # stream-global SLM scale: one dynamic range per example for
+            # the entire stream (see query_stream docstring).
+            x, x_scale = self._encode(x)
+        xp = jnp.pad(x, [(0, 0)] * 4 + [(0, plan.pad_t)])
+        win_out = (H - kh + 1, W - kw + 1, plan.step)
+        query = self._query_fn()
+
+        def one_window(start):
+            win = lax.dynamic_slice_in_dim(xp, start, plan.block_t, axis=-1)
+            return query(win, effective, fft_shape, win_out)
+
+        starts = spectral_conv.window_starts(plan)
+        # Sequential over chunks (peak memory = one chunk), batched within:
+        # chunk_windows > 1 fuses that many window FFTs + spectral MACs
+        # into one vmap'd batch.
+        blocks = lax.map(lambda cs: jax.vmap(one_window)(cs), starts)
+        y = spectral_conv.stitch_windows(blocks, plan)
+        if x_scale is not None:
+            # fused epilogue, as in `query`: only the per-example
+            # de-scaling is left at query time.
+            y = y * x_scale
+        return y
+
     # -- internals ---------------------------------------------------------
 
     def _encode(self, x: Array) -> tuple[Array, Array]:
@@ -240,10 +405,16 @@ class QueryEngine:
         from repro.kernels.stmul import ops as stmul_ops  # lazy import
 
         version = getattr(cfg, "stmul_version", 2)
+        min_mxu_c = getattr(cfg, "stmul_min_mxu_c", None)
 
         def query(x, grating, fft_shape, out_shape):
             return stmul_ops.query_grating_pallas(
-                x, grating, fft_shape, out_shape, version=version
+                x,
+                grating,
+                fft_shape,
+                out_shape,
+                version=version,
+                min_mxu_c=min_mxu_c,
             )
 
         return query
@@ -252,6 +423,19 @@ class QueryEngine:
 # ---------------------------------------------------------------------------
 # Grating cache — record once across calls, not just inside one call
 # ---------------------------------------------------------------------------
+
+
+class _InFlight:
+    """Per-key record-in-progress marker: waiters block on ``event`` and
+    pick up ``grating`` even when the result was not admitted to the
+    cache (oversized / tenant discarded), so a cold key never records
+    more than once per concurrent burst."""
+
+    __slots__ = ("event", "grating")
+
+    def __init__(self):
+        self.event = threading.Event()
+        self.grating: FusedGrating | None = None
 
 
 class GratingCache:
@@ -267,14 +451,31 @@ class GratingCache:
     ``jit`` the kernels are tracers with no bytes to hash; those calls
     bypass the cache (the grating computation is traced inline, exactly
     as before).
+
+    The LRU budget is two-dimensional: ``max_entries`` recorded kernel
+    sets *and* (optionally) ``max_bytes`` of grating storage — the
+    multi-tenant serving knobs.  Least-recently-used entries are evicted
+    until both budgets hold; a single grating larger than ``max_bytes``
+    is never admitted at all (the cache cannot hold it, so it is served
+    uncached rather than flushing every resident peer).  Counters
+    (``hits`` / ``misses`` / ``evictions``) and the live byte footprint
+    are exposed via :meth:`stats` for the serving metrics.
     """
 
-    def __init__(self, max_entries: int = 8):
+    def __init__(self, max_entries: int = 8, max_bytes: int | None = None):
         self.max_entries = max_entries
+        self.max_bytes = max_bytes
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
+        self.shared = 0  # waiter served an in-flight result never admitted
         self._entries: OrderedDict[tuple, FusedGrating] = OrderedDict()
+        self._nbytes = 0
         self._lock = threading.Lock()
+        # per-key in-flight record markers: concurrent misses for one key
+        # wait on the first recorder instead of each re-running the
+        # expensive device-side record (thundering herd on a cold tenant)
+        self._inflight: dict[tuple, _InFlight] = {}
 
     @staticmethod
     def key_for(
@@ -291,6 +492,15 @@ class GratingCache:
             config.atoms,
             config.storage_interval_s,
             config.compensate_pulse,
+            # record-side: changes what object is stored (± stack or not),
+            # so stripped serving gratings never alias full ones — but
+            # only in physical mode; ideal gratings have no stack, and
+            # splitting on the knob would double-record identical ones.
+            (
+                getattr(config, "keep_stacked", True)
+                if config.mode != "ideal"
+                else True
+            ),
         )
         return (digest, arr.shape, str(arr.dtype), tuple(signal_shape), record_cfg)
 
@@ -299,23 +509,120 @@ class GratingCache:
         engine: QueryEngine,
         kernels: Array,
         signal_shape: tuple[int, int, int],
+        key: tuple | None = None,
+        admit=None,
     ) -> FusedGrating:
-        key = self.key_for(kernels, signal_shape, engine.config)
+        """Fetch the grating for ``kernels``, recording on a miss.
+
+        ``key`` lets long-lived callers (the video-search server) hash
+        the kernel bytes once at registration instead of on every query;
+        when omitted it is derived here via :meth:`key_for`.
+
+        ``admit`` (optional, ``() -> bool``) is consulted under the cache
+        lock just before a freshly-recorded grating is inserted: when it
+        returns False the grating is served uncached and no resident
+        peer is evicted to make room for it — the server uses this so a
+        record in flight for a just-removed tenant cannot flush live
+        entries.  The callback must not acquire locks ordered before
+        this cache's.
+        """
         if key is None:
+            key = self.key_for(kernels, signal_shape, engine.config)
+        if key is None:  # tracer kernels: nothing to address by
             return engine.record(kernels, signal_shape)
-        with self._lock:
-            hit = self._entries.get(key)
-            if hit is not None:
-                self.hits += 1
-                self._entries.move_to_end(key)
-                return hit
-        grating = engine.record(kernels, signal_shape)
-        with self._lock:
-            self.misses += 1
-            self._entries[key] = grating
-            while len(self._entries) > self.max_entries:
-                self._entries.popitem(last=False)
+        while True:
+            with self._lock:
+                hit = self._entries.get(key)
+                if hit is not None:
+                    self.hits += 1
+                    self._entries.move_to_end(key)
+                    return hit
+                pending = self._inflight.get(key)
+                if pending is None:
+                    self._inflight[key] = pending = _InFlight()
+                    break  # this thread records
+            # another thread is recording this key: wait, then either
+            # take the cached entry (re-check above), share the
+            # recorder's result even when it wasn't admitted (oversized /
+            # discarded — identical content, no point re-recording), or
+            # become the recorder ourselves if it raised.
+            pending.event.wait()
+            if pending.grating is not None:
+                with self._lock:
+                    if key in self._entries:
+                        self.hits += 1
+                        self._entries.move_to_end(key)
+                    else:
+                        # shared from the recorder but never admitted
+                        # (oversized / discarded): don't inflate the hit
+                        # rate the byte-budget stats exist to diagnose
+                        self.shared += 1
+                return pending.grating
+        try:
+            grating = engine.record(kernels, signal_shape)
+            pending.grating = grating  # share with waiters even if not admitted
+            with self._lock:
+                self.misses += 1
+                if admit is not None and not admit():
+                    return grating  # caller lost interest mid-record
+                if (
+                    self.max_bytes is not None
+                    and grating.nbytes > self.max_bytes
+                ):
+                    # larger than the whole byte budget: the cache cannot
+                    # hold it — serve it uncached instead of flushing
+                    # every resident peer trying to make room that cannot
+                    # exist.
+                    return grating
+                if key in self._entries:  # raced with another recorder
+                    self._nbytes -= self._entries.pop(key).nbytes
+                self._entries[key] = grating
+                self._nbytes += grating.nbytes
+                while self._entries and self._over_budget():
+                    _, evicted = self._entries.popitem(last=False)
+                    self._nbytes -= evicted.nbytes
+                    self.evictions += 1
+        finally:
+            with self._lock:
+                self._inflight.pop(key, None)
+            pending.event.set()
         return grating
+
+    def discard(self, key: tuple | None) -> bool:
+        """Explicitly invalidate one entry (tenant removal) — frees its
+        bytes without touching the eviction counter or any peer."""
+        if key is None:
+            return False
+        with self._lock:
+            grating = self._entries.pop(key, None)
+            if grating is None:
+                return False
+            self._nbytes -= grating.nbytes
+            return True
+
+    def _over_budget(self) -> bool:
+        if len(self._entries) > self.max_entries:
+            return True
+        return self.max_bytes is not None and self._nbytes > self.max_bytes
+
+    @property
+    def nbytes(self) -> int:
+        """Current grating storage held by the cache, in bytes."""
+        return self._nbytes
+
+    def stats(self) -> dict:
+        """Counter/footprint snapshot for serving metrics dashboards."""
+        with self._lock:
+            return {
+                "hits": self.hits,
+                "misses": self.misses,
+                "evictions": self.evictions,
+                "shared": self.shared,
+                "entries": len(self._entries),
+                "bytes": self._nbytes,
+                "max_entries": self.max_entries,
+                "max_bytes": self.max_bytes,
+            }
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -323,8 +630,11 @@ class GratingCache:
     def clear(self) -> None:
         with self._lock:
             self._entries.clear()
+            self._nbytes = 0
             self.hits = 0
             self.misses = 0
+            self.evictions = 0
+            self.shared = 0
 
 
 _DEFAULT_CACHE = GratingCache()

@@ -128,6 +128,40 @@ def conv_layer(
     return y + params["conv_b"][None, :, None, None, None]
 
 
+def conv_layer_stream(
+    params: Params,
+    x: Array,
+    cfg: HybridConfig,
+    impl: str = "sthc_physical",
+    block_t: int | None = None,
+    sthc: STHC | None = None,
+) -> Array:
+    """Long-clip conv layer: T may exceed ``cfg.frames`` arbitrarily.
+
+    STHC backends stream through the engine's coherence-window
+    (overlap-save) path — the paper's record-once / stream-forever
+    deployment; ``'digital'`` is the one-shot reference the streaming
+    output is tested against.  ``block_t`` is the coherence window T2 in
+    frames (default: ``cfg.frames``, the training clip length).
+    """
+    w = params["conv_w"]
+    # None (not falsy 0) is the default sentinel: an explicit invalid
+    # block_t must reach stream_plan's validation, not be remapped
+    bt = cfg.frames if block_t is None else int(block_t)
+    if impl == "digital":
+        y = spectral_conv.direct_correlate3d(x, w, mode="valid")
+    elif impl == "spectral":
+        # exact ideal path, matching conv_layer's pure-FFT 'spectral':
+        # a caller-supplied sthc (possibly physical) is deliberately
+        # ignored here — pass impl='sthc_*' to stream through it
+        y = _DEFAULT_STHC["sthc_ideal"].correlate_stream(w, x, bt)
+    elif impl in _DEFAULT_STHC:
+        y = (sthc or _DEFAULT_STHC[impl]).correlate_stream(w, x, bt)
+    else:
+        raise ValueError(f"unknown conv impl {impl!r}")
+    return y + params["conv_b"][None, :, None, None, None]
+
+
 def forward(
     params: Params,
     x: Array,

@@ -75,6 +75,15 @@ def slm_encode(frames: Array, cfg: SLMConfig) -> tuple[Array, Array]:
     physical field amplitude presented to the optics.  ``scale`` is a
     per-example scalar (max of the frame block) so that quantization noise
     is relative, as on real hardware.
+
+    Streaming semantics: the modulator has **one** dynamic range, so a
+    long stream pushed through coherence windows (paper Fig. 1C) is
+    encoded with a single *stream-global* scale — not one scale per
+    window.  Quantization is pointwise, so encoding the whole stream
+    once and then windowing it is exactly displaying every window at
+    that shared scale; this is what makes the engine's overlap-save
+    physical path (``QueryEngine.query_stream``) equal to the one-shot
+    physical correlation.
     """
     frames = jnp.maximum(frames, 0.0)
     # normalize per leading example so quantization step matches hardware

@@ -25,7 +25,7 @@ Conventions
 
 from __future__ import annotations
 
-import functools
+import dataclasses
 from typing import Sequence
 
 import jax
@@ -79,32 +79,31 @@ def valid_shape(sig_shape: Sequence[int], ker_shape: Sequence[int]) -> tuple[int
 def make_grating(
     kernels: Array,
     fft_shape: tuple[int, int, int],
-    temporal_transfer: Array | None = None,
     spatial_transfer: Array | None = None,
 ) -> Array:
     """Record kernels into a frequency-domain grating.
 
+    Temporal medium envelopes (IHB/pulse, physical mode) are *not*
+    applied here: the engine applies them on the kernel's own kt-point
+    grid at record time so the grating is query-geometry-independent —
+    an envelope sampled on this query FFT grid would make the recorded
+    medium depend on the clip being searched.
+
     Args:
       kernels: (O, C, kh, kw, kt) real kernel stack.
       fft_shape: 3-D FFT grid (from :func:`fft_shape_for`).
-      temporal_transfer: optional H(f_t) envelope of the atomic medium
-        (physical mode), shape (fft_shape[2],) *in full-FFT order*; it is
-        sliced to the rfft half-spectrum here.
       spatial_transfer: optional lens/aperture transfer over (f_y, f_x),
         shape fft_shape[:2].
 
     Returns:
-      Complex grating (O, C, FH, FW, FT//2+1) — ``conj(rfftn(K))`` with
-      physical envelopes applied.  This is the tensor held stationary in
-      HBM (the analogue of the stored atomic coherence).
+      Complex grating (O, C, FH, FW, FT//2+1) — ``conj(rfftn(K))``.
+      This is the tensor held stationary in HBM (the analogue of the
+      stored atomic coherence).
     """
     spec = jnp.fft.rfftn(kernels, s=fft_shape, axes=_FFT_AXES)
     grating = jnp.conj(spec)
     if spatial_transfer is not None:
         grating = grating * spatial_transfer[..., :, :, None]
-    if temporal_transfer is not None:
-        n_rfft = fft_shape[2] // 2 + 1
-        grating = grating * temporal_transfer[:n_rfft]
     return grating
 
 
@@ -143,7 +142,6 @@ def correlate3d_fft(
     x: Array,
     kernels: Array,
     mode: str = "valid",
-    temporal_transfer: Array | None = None,
     spatial_transfer: Array | None = None,
 ) -> Array:
     """FFT-based multi-channel 3-D correlation.
@@ -157,7 +155,7 @@ def correlate3d_fft(
     sig = x.shape[-3:]
     ker = kernels.shape[-3:]
     fft_shape = fft_shape_for(sig, ker)
-    grating = make_grating(kernels, fft_shape, temporal_transfer, spatial_transfer)
+    grating = make_grating(kernels, fft_shape, spatial_transfer)
     full = tuple(n + k - 1 for n, k in zip(sig, ker))
     if mode == "valid":
         out = valid_shape(sig, ker)
@@ -209,102 +207,82 @@ def direct_correlate3d(x: Array, kernels: Array, mode: str = "valid") -> Array:
 
 
 # ---------------------------------------------------------------------------
-# Overlap-save streaming correlation (paper Fig. 1C as an algorithm)
+# Overlap-save windowing math (paper Fig. 1C as arithmetic)
 # ---------------------------------------------------------------------------
+# The paper segments a T3-long database into coherence windows of T2 frames
+# overlapping by the query length T1 (Fig. 1C).  That scheme *is* overlap-save
+# block convolution: each block of ``block_t`` frames overlaps the previous by
+# ``kt − 1`` frames and contributes ``block_t − kt + 1`` valid outputs.
+#
+# The driver that actually slides windows over a stream lives in
+# :meth:`repro.core.engine.QueryEngine.query_stream` — the one streaming path
+# shared by ``STHC.correlate_stream``, hybrid long-clip inference and the
+# video-search server.  This module keeps only the pure windowing arithmetic
+# (plan + reassembly), so the geometry is testable in isolation and the
+# engine owns the dataflow (and its physical-encoding semantics).
 
 
-def overlap_save_time(
-    x: Array,
-    kernels: Array,
-    block_t: int,
-    *,
-    temporal_transfer_fn=None,
-    chunk_windows: int | None = None,
-) -> Array:
-    """Streaming 3-D correlation over a long time axis via overlap-save.
+@dataclasses.dataclass(frozen=True)
+class StreamPlan:
+    """Window arithmetic of one overlap-save pass.
 
-    The paper segments a T3-long database into coherence windows of T2
-    frames overlapping by the query length T1 (Fig. 1C).  That scheme *is*
-    overlap-save block convolution: each block of ``block_t`` frames
-    overlaps the previous by ``kt − 1`` frames and contributes
-    ``block_t − kt + 1`` valid outputs.
+    All fields are Python ints, so a plan is hashable and can be a static
+    argument of a jitted driver.
 
-    Args:
-      x: (B, C, H, W, T) long clip, T arbitrary (≥ kt).
-      kernels: (O, C, kh, kw, kt).
-      block_t: frames per coherence window (must exceed kt − 1).
-      temporal_transfer_fn: optional callable n_t -> H(f_t) envelope,
-        applied per window (physical mode).
-      chunk_windows: windows correlated per step as one vmap'd batch
-        (batched FFTs); 1/None = strictly sequential, minimum peak
-        memory — the serving default.
-
-    Returns:
-      (B, O, H−kh+1, W−kw+1, T−kt+1) — identical to one-shot valid
-      correlation (tested property).
+    Attributes:
+      block_t: frames per coherence window (T2).
+      step: valid outputs contributed per window (= block_t − kt + 1).
+      n_valid: total valid outputs (= T − kt + 1).
+      n_blocks: windows actually required to cover the stream.
+      chunk: windows correlated per step as one vmap'd batch.
+      n_padded: n_blocks rounded up to whole chunks.
+      pad_t: zero frames appended to the stream tail so every window
+        (including chunk-fill windows) is full length; the surplus
+        outputs are cropped by :func:`stitch_windows`.
     """
-    kh, kw, kt = kernels.shape[-3:]
-    H, W = x.shape[-3:-1]
-    fft_shape = fft_shape_for((H, W, block_t), (kh, kw, kt))
-    tt = temporal_transfer_fn(fft_shape[2]) if temporal_transfer_fn else None
-    grating = make_grating(kernels, fft_shape, temporal_transfer=tt)
-    return overlap_save_query(
-        x,
-        grating,
-        (kh, kw, kt),
-        block_t,
-        fft_shape,
-        chunk_windows=chunk_windows,
-    )
+
+    block_t: int
+    step: int
+    n_valid: int
+    n_blocks: int
+    chunk: int
+    n_padded: int
+    pad_t: int
 
 
-def overlap_save_query(
-    x: Array,
-    grating: Array,
-    ker_shape: tuple[int, int, int],
-    block_t: int,
-    fft_shape: tuple[int, int, int],
-    *,
-    chunk_windows: int | None = None,
-) -> Array:
-    """Overlap-save against a *precomputed* grating (record-once serving).
-
-    Separated from :func:`overlap_save_time` so servers can hold the
-    grating stationary across requests instead of re-deriving it from the
-    kernels inside every jitted call.
-
-    ``chunk_windows > 1`` correlates that many coherence windows per step
-    as a single vmap'd batch — the window FFTs and spectral MACs fuse
-    into batched ops (higher throughput), at ``chunk_windows ×`` the peak
-    activation memory of the sequential mode.
-    """
-    kh, kw, kt = ker_shape
-    B, C, H, W, T = x.shape
+def stream_plan(
+    T: int, kt: int, block_t: int, chunk_windows: int | None = None
+) -> StreamPlan:
+    """Plan an overlap-save pass over a T-frame stream (pure arithmetic)."""
+    T, kt, block_t = int(T), int(kt), int(block_t)
     if block_t <= kt - 1:
         raise ValueError(f"block_t ({block_t}) must exceed kt-1 ({kt - 1})")
-    step = block_t - (kt - 1)  # valid outputs per window
+    if T < kt:
+        raise ValueError(f"stream length ({T}) is shorter than kt ({kt})")
+    step = block_t - (kt - 1)
     n_valid = T - kt + 1
     n_blocks = -(-n_valid // step)  # ceil
     chunk = max(1, min(int(chunk_windows or 1), n_blocks))
     n_padded = -(-n_blocks // chunk) * chunk  # round up to whole chunks
-    # Pad the tail so every window (incl. chunk-fill windows) is full-length;
-    # the extra outputs are cropped below.
-    pad_t = (n_padded - 1) * step + block_t - T
-    xp = jnp.pad(x, [(0, 0)] * 4 + [(0, max(pad_t, 0))])
-    out_shape = (H - kh + 1, W - kw + 1, step)
+    pad_t = max((n_padded - 1) * step + block_t - T, 0)
+    return StreamPlan(block_t, step, n_valid, n_blocks, chunk, n_padded, pad_t)
 
-    starts = (jnp.arange(n_padded) * step).reshape(-1, chunk)
 
-    def one_window(start):
-        win = lax.dynamic_slice_in_dim(xp, start, block_t, axis=-1)
-        return query_grating(win, grating, fft_shape, out_shape)
+def window_starts(plan: StreamPlan) -> Array:
+    """First-frame indices of every window, grouped (n_outer, chunk)."""
+    return (jnp.arange(plan.n_padded) * plan.step).reshape(-1, plan.chunk)
 
-    def one_chunk(chunk_starts):
-        return jax.vmap(one_window)(chunk_starts)
 
-    # Sequential over chunks (peak memory = one chunk), batched within.
-    blocks = lax.map(one_chunk, starts)  # (n_outer, chunk, B, O, H', W', step)
-    blocks = blocks.reshape((n_padded,) + blocks.shape[2:])
+def stitch_windows(blocks: Array, plan: StreamPlan) -> Array:
+    """Reassemble per-window valid outputs into the stream's time axis.
+
+    Args:
+      blocks: (n_outer, chunk, B, O, H', W', step) window outputs, in
+        :func:`window_starts` order.
+
+    Returns (B, O, H', W', n_valid) — the one-shot valid correlation.
+    """
+    blocks = blocks.reshape((plan.n_padded,) + blocks.shape[2:])
     blocks = jnp.moveaxis(blocks, 0, -2)  # (B, O, H', W', n_padded, step)
-    y = blocks.reshape(blocks.shape[:-2] + (n_padded * step,))
-    return y[..., :n_valid]
+    y = blocks.reshape(blocks.shape[:-2] + (plan.n_padded * plan.step,))
+    return y[..., : plan.n_valid]

@@ -39,7 +39,7 @@ import dataclasses
 
 import jax
 
-from repro.core import atomic, optics, spectral_conv
+from repro.core import atomic, optics
 from repro.core.engine import FusedGrating, GratingCache, QueryEngine, default_cache
 
 Array = jax.Array
@@ -55,13 +55,32 @@ class STHCConfig:
     atoms: atomic.AtomicConfig = dataclasses.field(default_factory=atomic.AtomicConfig)
     use_pallas: bool = False  # route the spectral MAC through kernels/stmul
     stmul_version: int = 2  # Pallas stmul kernel generation (1 = legacy VPU)
+    # stmul v2 MXU routing threshold: contract on the MXU when C >= this.
+    # None = kernel default (MIN_MXU_C); tune from the kernels_bench sweep
+    # on real TPU without touching kernel code.
+    stmul_min_mxu_c: int | None = None
     storage_interval_s: float = 0.0  # T_Q − T_P (echo-efficiency factor)
     compensate_pulse: bool = True  # divide out the recording-pulse spectrum
     fused: bool = True  # single-FFT fused query (False = two-query reference)
     cache_gratings: bool = True  # memoize record() by kernel content hash
+    # Keep the raw ± gratings alongside the effective one at record time.
+    # Only the unfused reference path reads them; serving sets False so a
+    # cached physical grating charges 1x (not 3x) its hot-path bytes
+    # against the cache byte budget.
+    keep_stacked: bool = True
     # Overlap-save streaming: windows correlated per chunk (vmap'd batch).
     # 1 = strictly sequential (lowest peak memory, the seed behavior).
     osave_chunk_windows: int = 1
+
+    def __post_init__(self):
+        # The engine branches `mode == "ideal"` / else-physical, so an
+        # unrecognized string would silently serve the full physical
+        # model — fail loudly at construction instead.
+        if self.mode not in ("ideal", "physical"):
+            raise ValueError(
+                f"STHCConfig.mode must be 'ideal' or 'physical', "
+                f"got {self.mode!r}"
+            )
 
 
 class STHC:
@@ -103,26 +122,19 @@ class STHC:
         """Streaming (overlap-save) correlation over a long time axis.
 
         Records the grating once (cached) at the coherence-window FFT
-        geometry and pushes ``x`` (B, C, H, W, T) through chunked
-        overlap-save; ``osave_chunk_windows`` windows are correlated per
-        step as one vmap'd batch.  Ideal mode only — the physical SLM
-        per-example scaling is not well-defined across windows.
+        geometry — only the FFT numerics; the recorded physics (IHB and
+        pulse envelopes) live on the kernel's own kt-point grid and are
+        query-geometry-independent — then pushes ``x`` (B, C, H, W, T)
+        through the engine's overlap-save driver;
+        ``osave_chunk_windows`` windows are correlated per step as one
+        vmap'd batch.  Physical encoding uses a stream-global SLM scale
+        (one modulator dynamic range for the whole stream), which makes
+        the streaming output match the one-shot physical correlation
+        (tested at the paper geometry).
         """
-        if self.config.mode != "ideal":
-            raise NotImplementedError(
-                "streaming correlation is served in ideal mode; physical "
-                "per-window encoding is not modeled"
-            )
         H, W = x.shape[-3:-1]
         grating = self.record(kernels, (H, W, block_t))
-        return spectral_conv.overlap_save_query(
-            x,
-            grating.effective,
-            kernels.shape[-3:],
-            block_t,
-            grating.fft_shape,
-            chunk_windows=self.config.osave_chunk_windows,
-        )
+        return self.engine.query_stream(grating, x)
 
     def __call__(self, kernels: Array, x: Array) -> Array:
         grating = self.record(kernels, x.shape[-3:])

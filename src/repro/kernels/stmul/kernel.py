@@ -52,7 +52,11 @@ BLOCK_B = 4
 BLOCK_O = 8
 BLOCK_F = 512  # lanes; multiple of 128
 
-# Contraction depth at which the MXU beats an unrolled VPU MAC.
+# Contraction depth at which the MXU beats an unrolled VPU MAC.  This is
+# the *default* routing threshold; callers tune it per deployment via the
+# ``min_mxu_c`` argument (surfaced as ``STHCConfig.stmul_min_mxu_c`` and
+# swept in ``benchmarks/kernels_bench.py``), so re-tuning on real TPU
+# needs no code change.
 MIN_MXU_C = 8
 
 
@@ -105,7 +109,9 @@ def _stmul_kernel_v2(xr_ref, xi_ref, gr_ref, gi_ref, yr_ref, yi_ref,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("block_b", "block_o", "block_f", "version", "interpret"),
+    static_argnames=(
+        "block_b", "block_o", "block_f", "version", "min_mxu_c", "interpret",
+    ),
 )
 def spectral_mac_pallas(
     xr: Array,
@@ -117,6 +123,7 @@ def spectral_mac_pallas(
     block_o: int = BLOCK_O,
     block_f: int = BLOCK_F,
     version: int = 2,
+    min_mxu_c: int | None = None,
     interpret: bool = False,
 ) -> tuple[Array, Array]:
     """Spectral MAC on real/imag planes.
@@ -125,7 +132,11 @@ def spectral_mac_pallas(
       xr, xi: (B, C, F) float32 — query spectrum planes.
       gr, gi: (O, C, F) float32 — grating planes.
       version: 1 = legacy 4-multiply VPU broadcast-MAC;
-               2 = Karatsuba 3-multiply, MXU-routed contraction for C ≥ 8.
+               2 = Karatsuba 3-multiply, MXU-routed contraction for
+               C ≥ ``min_mxu_c``.
+      min_mxu_c: v2 MXU routing threshold (None = module default
+        ``MIN_MXU_C``); 1 forces the MXU path, a huge value forces the
+        VPU broadcast-MAC — the tuning sweep knob for real-TPU runs.
 
     Returns (yr, yi): (B, O, F) float32.  F, B, O are padded to tile
     multiples internally and cropped on return.
@@ -152,10 +163,11 @@ def spectral_mac_pallas(
     Bp, _, Fp = xr_p.shape
     Op = gr_p.shape[0]
 
+    threshold = MIN_MXU_C if min_mxu_c is None else int(min_mxu_c)
     if version == 1:
         kernel = _stmul_kernel_v1
     elif version == 2:
-        kernel = functools.partial(_stmul_kernel_v2, use_mxu=C >= MIN_MXU_C)
+        kernel = functools.partial(_stmul_kernel_v2, use_mxu=C >= threshold)
     else:
         raise ValueError(f"unknown stmul kernel version {version!r}")
 

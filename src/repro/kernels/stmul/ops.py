@@ -22,13 +22,20 @@ def _use_interpret() -> bool:
 
 
 def spectral_mac(
-    xhat: Array, grating: Array, *, version: int = 2, **tile_kwargs
+    xhat: Array,
+    grating: Array,
+    *,
+    version: int = 2,
+    min_mxu_c: int | None = None,
+    **tile_kwargs,
 ) -> Array:
     """Complex channel-contracted spectral product via the Pallas kernel.
 
     Args:
       xhat: (B, C, *F) complex; grating: (O, C, *F) complex.
       version: stmul kernel generation (see kernel.py).
+      min_mxu_c: v2 MXU routing threshold override (None = kernel
+        default) — the real-TPU tuning knob.
 
     Returns (B, O, *F) complex64.
     """
@@ -46,6 +53,7 @@ def spectral_mac(
         jnp.real(gf).astype(jnp.float32),
         jnp.imag(gf).astype(jnp.float32),
         version=version,
+        min_mxu_c=min_mxu_c,
         interpret=_use_interpret(),
         **tile_kwargs,
     )
@@ -59,9 +67,10 @@ def query_grating_pallas(
     out_shape: tuple[int, int, int],
     *,
     version: int = 2,
+    min_mxu_c: int | None = None,
 ) -> Array:
     """Drop-in replacement for spectral_conv.query_grating using the kernel."""
     xhat = jnp.fft.rfftn(x, s=fft_shape, axes=(-3, -2, -1))
-    yhat = spectral_mac(xhat, grating, version=version)
+    yhat = spectral_mac(xhat, grating, version=version, min_mxu_c=min_mxu_c)
     y = jnp.fft.irfftn(yhat, s=fft_shape, axes=(-3, -2, -1))
     return y[..., : out_shape[0], : out_shape[1], : out_shape[2]]

@@ -2,12 +2,22 @@
 
 Two serving modes, matching the paper's system and the LM zoo:
 
-1. **STHC video event search** (`VideoSearchServer`) — the paper's
-   deployment: kernels (reference events) are *recorded once* into the
-   grating; long query streams are pushed through the coherence-window
-   segmentation (= overlap-save), producing correlation feature maps /
-   detections per window.  Batching across concurrent streams is free
-   parallelism (the optical system's massive spatial multiplexing).
+1. **Multi-tenant STHC video event search** (`VideoSearchServer`) — the
+   paper's deployment (Fig. 1C), record-once / stream-forever: each
+   *tenant* is a named reference kernel set ("what to look for"),
+   recorded into one shared content-hash :class:`GratingCache` with an
+   LRU budget in entries *and* grating bytes.  Long query streams are
+   pushed through the engine's coherence-window overlap-save path
+   (``QueryEngine.query_stream``) in either fidelity mode — ``ideal``
+   or ``physical`` (SLM quantization, ± channels, IHB/T2 envelopes,
+   stream-global SLM scale).  Evicted tenants re-record transparently
+   on their next query (a cache miss), exactly like re-writing the
+   atomic medium.  Concurrent streams batch two ways: same-shape
+   requests stack on the batch axis (`search_batch`), and each stream's
+   coherence windows run ``chunk_windows`` at a time as one vmap'd
+   batch.  `metrics()` reports cache hits/misses/evictions/bytes and
+   measured windows/s + frames/s against the paper's projected loader
+   rates (`core.throughput`).
 
 2. **LM serving** (`LMServer`) — prefill + decode with the uniform cache
    API; used by the serve smoke tests and the decode dry-run shapes.
@@ -17,15 +27,17 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import threading
 import time
-from typing import Any
+from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.core import atomic, hybrid, spectral_conv
+from repro.core import hybrid, throughput
+from repro.core.engine import GratingCache
 from repro.core.sthc import STHC, STHCConfig
 from repro.models import model_api
 
@@ -33,98 +45,365 @@ PyTree = Any
 
 
 # ---------------------------------------------------------------------------
-# STHC video search serving
+# STHC video search serving (multi-tenant)
 # ---------------------------------------------------------------------------
 
 
 @dataclasses.dataclass
 class VideoSearchConfig:
-    window_frames: int = 64  # coherence window T2 (frames)
-    mode: str = "ideal"  # STHC fidelity
-    physical: bool = False
-    # coherence windows correlated per step as one vmap'd batch (batched
-    # FFTs); 1 = strictly sequential, minimum peak memory.
+    """Multi-tenant video-search serving knobs.
+
+    Attributes:
+      window_frames: coherence window T2 (frames) — the streaming FFT
+        geometry every tenant is recorded at.
+      mode: STHC fidelity, ``'ideal'`` or ``'physical'`` (SLM
+        quantization, ± channels, IHB/T2 envelopes; queries encoded with
+        a stream-global SLM scale).
+      chunk_windows: coherence windows correlated per step as one vmap'd
+        batch (batched FFTs); 1 = strictly sequential, minimum peak
+        memory.
+      cache_entries / cache_bytes: LRU budget of the shared grating
+        cache, in recorded kernel sets and in grating bytes (None = no
+        byte cap).  Eviction re-records on the next query.
+      use_pallas: route the spectral MAC through the stmul kernel.
+    """
+
+    window_frames: int = 64
+    mode: str = "ideal"
     chunk_windows: int = 4
+    cache_entries: int = 8
+    cache_bytes: int | None = None
+    use_pallas: bool = False
+
+
+@dataclasses.dataclass
+class _Tenant:
+    """Per-tenant kernels + serving counters."""
+
+    # (O, C, kh, kw, kt) reference events, held host-side: device
+    # residency stays bounded by the cache byte budget — the array is
+    # only shipped back to the accelerator on a re-record (cache miss)
+    kernels: np.ndarray | None
+    kt: int
+    channels: int = 1  # C, pinned so mismatched clips fail upfront
+    # record geometry snapshotted at registration: the live cfg is a
+    # mutable dataclass, and a re-record must reproduce the geometry the
+    # key was hashed for, not whatever cfg says now
+    signal_shape: tuple[int, int, int] | None = None
+    key: tuple | None = None  # cache key, hashed once at registration
+    queries: int = 0
+    windows: int = 0
+    frames: int = 0
+    seconds: float = 0.0
 
 
 class VideoSearchServer:
-    """Record reference kernels once; stream queries through overlap-save.
+    """Record reference kernel sets once; stream queries through the
+    engine's overlap-save path — one shared grating cache, many tenants.
 
-    The grating is recorded *once at construction* (through the engine's
-    content-hash cache) and held stationary across every query — the
-    server's 'loaded model'.  Query throughput is bounded by the
-    frame-loading rate (`core.throughput`), not by the correlation
-    itself; ``chunk_windows`` trades peak activation memory for batched
-    window FFTs.
+    Gratings are *not* pinned on the server: every search fetches the
+    tenant's grating through the cache, so a tenant evicted under the
+    entry/byte budget is transparently re-recorded on its next query
+    (miss), exactly like re-writing the medium.  Query throughput is
+    bounded by the frame-loading rate (`core.throughput`), not by the
+    correlation itself; ``chunk_windows`` trades peak activation memory
+    for batched window FFTs.
     """
 
     def __init__(
         self,
-        kernels: jax.Array,  # (O, C, kh, kw, kt) trained/reference events
-        frame_hw: tuple[int, int],
-        cfg: VideoSearchConfig = VideoSearchConfig(),
+        kernels: jax.Array | None = None,  # optional bootstrap tenant
+        frame_hw: tuple[int, int] = (60, 80),
+        cfg: VideoSearchConfig | None = None,
     ):
-        self.cfg = cfg
-        self.kernels = kernels
-        self.kt = kernels.shape[-1]
+        # `None` + default-factory: a shared mutable default instance
+        # would leak cfg mutations across every server construction.
+        self.cfg = cfg = cfg if cfg is not None else VideoSearchConfig()
         self.frame_hw = tuple(frame_hw)
-        if cfg.window_frames <= self.kt - 1:
-            raise ValueError("coherence window must exceed kernel length")
-        if cfg.mode != "ideal" or cfg.physical:
-            # the streaming encoder has no physical-mode semantics (see
-            # STHC.correlate_stream); fail loudly rather than serve
-            # silently-ideal scores.
-            raise NotImplementedError(
-                "VideoSearchServer serves ideal mode only"
-            )
+        self.cache = GratingCache(
+            max_entries=cfg.cache_entries, max_bytes=cfg.cache_bytes
+        )
         self.sthc = STHC(
-            STHCConfig(mode="ideal", osave_chunk_windows=cfg.chunk_windows)
+            STHCConfig(
+                mode=cfg.mode,
+                use_pallas=cfg.use_pallas,
+                osave_chunk_windows=cfg.chunk_windows,
+                # serving never runs the unfused ± reference path: drop
+                # the raw stack so each cached grating charges only its
+                # hot-path bytes against cache_bytes.
+                keep_stacked=False,
+            ),
+            cache=self.cache,
         )
-        # record once: the kernels live in the atomic medium from now on
-        self.grating = self.sthc.record(
-            kernels, (frame_hw[0], frame_hw[1], cfg.window_frames)
-        )
-        self._correlate = jax.jit(self._correlate_impl)
+        self._tenants: dict[str, _Tenant] = {}
+        # traffic from removed/replaced tenants — server-wide totals and
+        # the measured-vs-projected rates must survive tenant churn
+        self._retired = _Tenant(kernels=None, kt=0)
+        # guards _tenants membership and the per-tenant counters; the
+        # correlation itself runs outside (the cache has its own lock)
+        self._lock = threading.Lock()
+        if kernels is not None:
+            self.add_tenant("default", kernels)
 
-    def _correlate_impl(self, clip: jax.Array) -> jax.Array:
-        if tuple(clip.shape[-3:-1]) != self.frame_hw:
-            # the grating's FFT grid is baked for frame_hw at record time;
-            # a different spatial size would correlate silently wrong.
+    # -- tenant management -------------------------------------------------
+
+    def add_tenant(
+        self, name: str, kernels: jax.Array | np.ndarray
+    ) -> "VideoSearchServer":
+        """Register a reference kernel set and record it into the cache."""
+        kt = int(kernels.shape[-1])
+        if self.cfg.window_frames <= kt - 1:
             raise ValueError(
-                f"clip spatial dims {tuple(clip.shape[-3:-1])} do not match "
-                f"the recorded frame size {self.frame_hw}"
+                f"coherence window ({self.cfg.window_frames}) must be at "
+                f"least the kernel length ({kt}) for tenant {name!r}"
             )
-        return spectral_conv.overlap_save_query(
-            clip,
-            self.grating.effective,
-            self.kernels.shape[-3:],
-            self.cfg.window_frames,
-            self.grating.fft_shape,
-            chunk_windows=self.cfg.chunk_windows,
+        kh, kw = int(kernels.shape[-3]), int(kernels.shape[-2])
+        if kh > self.frame_hw[0] or kw > self.frame_hw[1]:
+            # an oversized kernel would slip through to a negative valid
+            # output shape and silently garbage correlation maps
+            raise ValueError(
+                f"kernel spatial size ({kh}x{kw}) exceeds the server frame "
+                f"size ({self.frame_hw[0]}x{self.frame_hw[1]}) for tenant "
+                f"{name!r}"
+            )
+        # hash the kernel bytes once here, not per query; keep the copy
+        # host-side so per-tenant device residency isn't charged outside
+        # the cache byte budget
+        # np.array (not asarray): force a copy so a caller mutating its
+        # buffer afterwards can't desync the stored bytes from the
+        # content-hash key computed below
+        kernels = np.array(kernels)
+        signal_shape = self._signal_shape()
+        key = GratingCache.key_for(kernels, signal_shape, self.sthc.config)
+        ten = _Tenant(
+            kernels=kernels,
+            kt=kt,
+            channels=int(kernels.shape[1]),
+            signal_shape=signal_shape,
+            key=key,
         )
+        with self._lock:
+            old = self._tenants.pop(name, None)
+            self._tenants[name] = ten
+            if old is not None:
+                # replacing a name must not leak the old grating — but
+                # keys are content-addressed, so only drop it when no
+                # surviving tenant shares the same kernel bytes
+                self._discard_if_unreferenced(old.key)
+                self._retire(old)
+        # warm the shared cache (may evict LRU peers); recorded off the
+        # local tenant object so a racing remove_tenant(name) can't
+        # invalidate the lookup mid-warm
+        self._fetch_grating(name, ten)
+        return self
 
-    def search(self, clip: jax.Array) -> dict:
+    def remove_tenant(self, name: str) -> None:
+        """Drop a tenant; free its grating unless another tenant (with
+        byte-identical kernels) still references the shared entry."""
+        with self._lock:
+            if name not in self._tenants:
+                raise KeyError(
+                    f"unknown tenant {name!r}; have {list(self._tenants)}"
+                )
+            ten = self._tenants.pop(name)
+            self._discard_if_unreferenced(ten.key)
+            self._retire(ten)
+
+    def _retire(self, ten: _Tenant) -> None:
+        # caller holds self._lock; fold a departing tenant's traffic into
+        # the server-wide totals so metrics() rates don't rewind
+        self._retired.queries += ten.queries
+        self._retired.windows += ten.windows
+        self._retired.frames += ten.frames
+        self._retired.seconds += ten.seconds
+
+    def _discard_if_unreferenced(self, key: tuple | None) -> None:
+        # caller holds self._lock
+        if key is not None and all(
+            t.key != key for t in self._tenants.values()
+        ):
+            self.cache.discard(key)
+
+    @property
+    def tenants(self) -> list[str]:
+        return list(self._tenants)
+
+    def _signal_shape(self) -> tuple[int, int, int]:
+        return (self.frame_hw[0], self.frame_hw[1], self.cfg.window_frames)
+
+    def _grating(self, name: str):
+        return self._fetch_grating(name, self._tenants[name])
+
+    def _fetch_grating(self, name: str, ten: _Tenant):
+        """The one grating-fetch path (warm-up and queries): hit while
+        resident, re-record on miss.  If ``name`` was removed/replaced
+        while we recorded, drop the now-unreferenced entry — a raced
+        fetch must not leave an orphan grating charged against the
+        shared LRU budget."""
+        grating = self.cache.get_or_record(
+            self.sthc.engine,
+            ten.kernels,
+            # re-record at the geometry the key was hashed for, not the
+            # live (mutable) cfg's current value
+            ten.signal_shape or self._signal_shape(),
+            key=ten.key,
+            # checked under the *cache* lock just before insertion, so a
+            # record in flight for a just-removed tenant never evicts
+            # live peers to cache itself; deliberately lock-free (taking
+            # self._lock there would invert the server->cache lock order)
+            admit=lambda: self._tenants.get(name) is ten,
+        )
+        with self._lock:
+            if self._tenants.get(name) is not ten:
+                # the admit check races removal by a hair: sweep any
+                # entry that still slipped in
+                self._discard_if_unreferenced(ten.key)
+        return grating
+
+    # -- query -------------------------------------------------------------
+
+    def search(self, clip: jax.Array, tenant: str = "default") -> dict:
         """clip: (B, C, H, W, T) long stream.  Returns detections.
 
         Detection = per-kernel max correlation over space-time + argmax
         frame (the photon-echo peak position in the window).
         """
-        t0 = time.time()
-        fmap = self._correlate(clip)  # (B, O, H', W', T')
-        B, O = fmap.shape[:2]
-        flat = fmap.reshape(B, O, -1)
-        peak = jnp.max(flat, axis=-1)
-        idx = jnp.argmax(flat, axis=-1)
-        t_idx = idx % fmap.shape[-1]
-        return {
-            "scores": np.asarray(peak),
-            "peak_frame": np.asarray(t_idx),
-            "latency_s": time.time() - t0,
-            "windows": len(
-                atomic.segment_database(
-                    clip.shape[-1], self.cfg.window_frames, self.kt
+        (out,) = self.search_batch([(tenant, clip)])
+        return out
+
+    def search_batch(
+        self, requests: Sequence[tuple[str, jax.Array]]
+    ) -> list[dict]:
+        """Schedule concurrent stream searches.
+
+        Requests — ``(tenant, clip)`` pairs — are grouped by tenant and
+        stream shape; each group stacks on the batch axis and runs as
+        *one* streaming correlation, whose coherence windows ride the
+        ``chunk_windows`` vmap machinery.  Results come back in request
+        order; latency is attributed per group.
+        """
+        groups: dict[tuple, list[int]] = {}
+        with self._lock:  # snapshot: a racing remove_tenant can't break
+            tenants = dict(self._tenants)
+        for i, (tenant, clip) in enumerate(requests):
+            if tenant not in tenants:
+                raise KeyError(
+                    f"unknown tenant {tenant!r}; have {list(tenants)}"
                 )
-            ),
+            # validate geometry upfront too, so one bad request fails the
+            # batch before any group has burned device time
+            if tuple(clip.shape[-3:-1]) != self.frame_hw:
+                raise ValueError(
+                    f"request {i}: clip frames {clip.shape[-3:-1]} do not "
+                    f"match the server frame size {self.frame_hw}"
+                )
+            if clip.shape[-1] < tenants[tenant].kt:
+                raise ValueError(
+                    f"request {i}: stream of {clip.shape[-1]} frames is "
+                    f"shorter than tenant {tenant!r}'s kernel length "
+                    f"({tenants[tenant].kt})"
+                )
+            if clip.shape[1] != tenants[tenant].channels:
+                raise ValueError(
+                    f"request {i}: clip has {clip.shape[1]} channels; "
+                    f"tenant {tenant!r} was recorded with "
+                    f"{tenants[tenant].channels}"
+                )
+            # dtype is part of the group key: stacking f32 with f64 would
+            # silently promote and change the f32 requests' scores
+            key = (tenant, clip.shape[1:], jnp.dtype(clip.dtype))
+            groups.setdefault(key, []).append(i)
+
+        results: list[dict | None] = [None] * len(requests)
+        for (tenant, *_), idxs in groups.items():
+            ten = tenants[tenant]
+            clips = (
+                requests[idxs[0]][1]  # single request: no device copy
+                if len(idxs) == 1
+                else jnp.concatenate([requests[i][1] for i in idxs], axis=0)
+            )
+            t0 = time.time()
+            grating = self._fetch_grating(tenant, ten)
+            fmap = self.sthc.engine.query_stream(grating, clips)
+            fmap = jax.block_until_ready(fmap)  # honest serving latency
+            dt = time.time() - t0
+            # the exact plan the correlation ran under (derived from the
+            # grating's recorded geometry, not the live cfg)
+            plan = self.sthc.engine.stream_plan_for(grating, clips.shape[-1])
+            n_streams = clips.shape[0]
+            with self._lock:
+                # the snapshot tenant may have been removed/retired during
+                # the correlation — credit its traffic to the server-wide
+                # totals instead so metrics() never undercounts
+                tgt = ten if self._tenants.get(tenant) is ten else self._retired
+                tgt.queries += len(idxs)
+                tgt.windows += plan.n_blocks * n_streams
+                tgt.frames += int(clips.shape[-1]) * n_streams
+                tgt.seconds += dt
+            flat = fmap.reshape(fmap.shape[0], fmap.shape[1], -1)
+            peak = np.asarray(jnp.max(flat, axis=-1))
+            idx = np.asarray(jnp.argmax(flat, axis=-1))
+            t_idx = idx % fmap.shape[-1]
+            b = 0
+            for i in idxs:
+                nb = requests[i][1].shape[0]
+                results[i] = {
+                    "tenant": tenant,
+                    "scores": peak[b : b + nb],
+                    "peak_frame": t_idx[b : b + nb],
+                    "latency_s": dt,
+                    "windows": plan.n_blocks,
+                }
+                b += nb
+        return results  # type: ignore[return-value]
+
+    # -- observability -----------------------------------------------------
+
+    def metrics(self) -> dict:
+        """Serving metrics: cache counters + measured vs projected rates.
+
+        Rates divide by summed per-group *busy* seconds, not elapsed
+        wall time — with searches running concurrently from several
+        threads the overlapping intervals double-count and the reported
+        frames/s / windows/s are a lower bound on the true rate.
+        """
+        with self._lock:
+            per_tenant = {
+                name: {
+                    "queries": t.queries,
+                    "windows": t.windows,
+                    "frames": t.frames,
+                    "seconds": t.seconds,
+                }
+                for name, t in self._tenants.items()
+            }
+            retired = self._retired
+            queries = retired.queries + sum(
+                t["queries"] for t in per_tenant.values()
+            )
+            windows = retired.windows + sum(
+                t["windows"] for t in per_tenant.values()
+            )
+            frames = retired.frames + sum(
+                t["frames"] for t in per_tenant.values()
+            )
+            seconds = retired.seconds + sum(
+                t["seconds"] for t in per_tenant.values()
+            )
+        fps = frames / seconds if seconds > 0 else 0.0
+        return {
+            "cache": self.cache.stats(),
+            "tenants": per_tenant,
+            "queries": queries,
+            "windows_total": windows,
+            "frames_total": frames,
+            "windows_per_s": windows / seconds if seconds > 0 else 0.0,
+            "frames_per_s": fps,
+            # measured digital-twin rate vs the paper's projected loaders
+            "projected_slm_fps": throughput.SLM_FPS,
+            "projected_hmd_fps": throughput.HMD_FPS,
+            "frames_per_s_vs_slm": fps / throughput.SLM_FPS,
+            "frames_per_s_vs_hmd": fps / throughput.HMD_FPS,
         }
 
 
@@ -162,6 +441,47 @@ class HybridClassifierServer:
         logits = self._head(conv)  # digital layers
         return np.asarray(jnp.argmax(logits, axis=-1))
 
+    def classify_stream(
+        self, clips: jax.Array, block_t: int | None = None
+    ) -> np.ndarray:
+        """Long-clip inference (paper Fig. 1C): conv streams through the
+        engine's coherence-window overlap-save path, then the digital
+        head classifies each ``cfg.frames``-long segment of the stream.
+
+        ``clips`` is (B, C, H, W, T) with arbitrary T ≥ ``cfg.frames``;
+        returns (B, n_segments) class predictions, one per training-
+        length window at stride ``ot = frames − k_t + 1`` (consecutive
+        input windows overlap by k_t − 1 frames; their *conv outputs*
+        tile the stream disjointly).  Segment s of the streamed conv
+        output is exactly the one-shot conv of input frames
+        ``[s·ot, s·ot + cfg.frames)``, so each prediction matches
+        `classify` on that sub-clip (physical mode differs only in the
+        stream-global vs per-segment SLM scale).
+        """
+        cfg = self.cfg
+        if clips.shape[-1] < cfg.frames:
+            # reject before any device work: a T >= kt stream would
+            # stream-correlate fine yet still yield zero segments
+            raise ValueError(
+                f"stream of {clips.shape[-1]} frames is shorter than one "
+                f"classification window ({cfg.frames} frames)"
+            )
+        conv = self.sthc.correlate_stream(
+            self.params["conv_w"],
+            clips,
+            cfg.frames if block_t is None else int(block_t),
+        )
+        ot = cfg.conv_out_shape[2]
+        n_seg = conv.shape[-1] // ot
+        # fold the equal-shape segments into the batch axis: one head
+        # dispatch + one host transfer regardless of stream length
+        segs = conv[..., : n_seg * ot].reshape(conv.shape[:-1] + (n_seg, ot))
+        segs = jnp.moveaxis(segs, -2, 0)  # segment-major
+        segs = segs.reshape((n_seg * conv.shape[0],) + conv.shape[1:-1] + (ot,))
+        logits = self._head(segs)
+        preds = jnp.argmax(logits, axis=-1).reshape(n_seg, -1)
+        return np.asarray(preds.T)  # (B, n_seg)
+
 
 # ---------------------------------------------------------------------------
 # LM serving
@@ -198,15 +518,28 @@ def main() -> None:
     args = ap.parse_args()
     if args.mode == "video":
         rng = np.random.RandomState(0)
-        kernels = jnp.asarray(rng.randn(4, 1, 12, 16, 8).astype(np.float32))
-        server = VideoSearchServer(kernels, (24, 32))
+        server = VideoSearchServer(frame_hw=(24, 32))
+        for name in ("events-a", "events-b"):
+            server.add_tenant(
+                name, jnp.asarray(rng.randn(4, 1, 12, 16, 8).astype(np.float32))
+            )
         clip = jnp.asarray(rng.rand(2, 1, 24, 32, args.frames).astype(np.float32))
-        out = server.search(clip)
+        outs = server.search_batch([("events-a", clip), ("events-b", clip)])
+        for out in outs:
+            print(
+                f"[{out['tenant']}] searched {args.frames} frames in "
+                f"{out['windows']} coherence windows, "
+                f"latency {out['latency_s']:.3f}s"
+            )
+            print("  scores:", np.round(out["scores"], 2))
+        m = server.metrics()
         print(
-            f"searched {args.frames} frames in {out['windows']} coherence "
-            f"windows, latency {out['latency_s']:.3f}s"
+            f"cache: {m['cache']['hits']} hits / {m['cache']['misses']} misses"
+            f" / {m['cache']['evictions']} evictions, "
+            f"{m['cache']['bytes']/1e6:.1f} MB resident; "
+            f"{m['frames_per_s']:.0f} frames/s measured "
+            f"(SLM projection {m['projected_slm_fps']:.0f} fps)"
         )
-        print("scores:", np.round(out["scores"], 2))
     else:
         cfg = configs.get_smoke_config("qwen2-1.5b")
         mod = model_api.get_model(cfg)

@@ -174,6 +174,39 @@ def test_cache_lru_eviction(rng):
     assert cache.misses == 4
 
 
+def test_cache_inflight_dedup_concurrent_misses(rng):
+    """Concurrent misses for one key run engine.record exactly once —
+    the losers wait on the in-flight recorder instead of thundering."""
+    import threading
+    import time as _time
+
+    cache = GratingCache(max_entries=4)
+    eng = QueryEngine(STHCConfig(mode="ideal"))
+    k = _kernels(rng)
+    calls = []
+    orig = eng.record
+
+    def slow_record(kernels, signal_shape):
+        calls.append(1)
+        _time.sleep(0.05)  # widen the race window
+        return orig(kernels, signal_shape)
+
+    eng.record = slow_record
+    results = []
+
+    def worker():
+        results.append(cache.get_or_record(eng, k, (20, 24, 10)))
+
+    threads = [threading.Thread(target=worker) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(calls) == 1
+    assert cache.misses == 1 and cache.hits == 3
+    assert all(r is results[0] for r in results)
+
+
 # -- stmul v2 ≡ v1 ≡ oracle -----------------------------------------------------
 
 
@@ -218,7 +251,7 @@ def test_stmul_unknown_version_raises():
         stmul_ops.spectral_mac(xh, g, version=3)
 
 
-# -- batched overlap-save --------------------------------------------------------
+# -- streaming (engine-owned overlap-save) ------------------------------------
 
 
 @pytest.mark.parametrize("T", [9, 23, 37])  # ragged vs window/chunk grids
@@ -227,7 +260,8 @@ def test_batched_overlap_save_equals_one_shot(T, chunk, rng):
     x = jnp.asarray(rng.rand(1, 1, 10, 12, T).astype(np.float32))
     k = jnp.asarray(rng.randn(2, 1, 3, 4, 3).astype(np.float32))
     ref = sc.direct_correlate3d(x, k, mode="valid")
-    got = sc.overlap_save_time(x, k, block_t=7, chunk_windows=chunk)
+    sthc = STHC(STHCConfig(mode="ideal", osave_chunk_windows=chunk))
+    got = sthc.correlate_stream(k, x, block_t=7)
     np.testing.assert_allclose(
         got, ref, atol=2e-4 * float(jnp.max(jnp.abs(ref))) + 1e-5
     )
@@ -247,12 +281,43 @@ def test_correlate_stream_uses_cache_and_chunks(rng):
     assert cache.hits == 1 and cache.misses == 1
 
 
-def test_correlate_stream_physical_not_served(rng):
-    sthc = STHC(STHCConfig(mode="physical"))
-    x = jnp.zeros((1, 1, 10, 12, 20), jnp.float32)
-    k = jnp.zeros((2, 1, 3, 4, 3), jnp.float32)
-    with pytest.raises(NotImplementedError):
-        sthc.correlate_stream(k, x, block_t=8)
+@pytest.mark.parametrize("T", [33, 40])  # ragged vs window/chunk grids
+@pytest.mark.parametrize("chunk", [1, 4])
+def test_streaming_physical_equals_one_shot_paper_geometry(T, chunk, rng):
+    """The pinned acceptance property: streaming physical correlation ==
+    one-shot physical correlation at the paper geometry (30×40×8 kernels
+    on 60×80 frames).  Record-time physics live on the reference's own
+    temporal grid and query encoding uses a stream-global SLM scale, so
+    the coherence-window decomposition is exactly lossless — the
+    deployment of Fig. 1C serves the *same* physical model the accuracy
+    experiments validate."""
+    x = jnp.asarray(rng.rand(1, 1, 60, 80, T).astype(np.float32))
+    k = jnp.asarray(rng.randn(9, 1, 30, 40, 8).astype(np.float32))
+    ref = STHC(STHCConfig(mode="physical"))(k, x)
+    sthc = STHC(STHCConfig(mode="physical", osave_chunk_windows=chunk))
+    got = sthc.correlate_stream(k, x, block_t=16)
+    rel = float(jnp.linalg.norm(got - ref) / jnp.linalg.norm(ref))
+    assert rel <= 1e-4, rel
+
+
+def test_streaming_physical_small_geometry_ragged(rng):
+    """Same property off the paper grid: ragged T vs block, odd shapes."""
+    x = jnp.asarray(rng.rand(2, 1, 20, 24, 29).astype(np.float32))
+    k = jnp.asarray(rng.randn(3, 1, 7, 9, 4).astype(np.float32))
+    ref = STHC(STHCConfig(mode="physical"))(k, x)
+    got = STHC(
+        STHCConfig(mode="physical", osave_chunk_windows=3)
+    ).correlate_stream(k, x, block_t=11)
+    rel = float(jnp.linalg.norm(got - ref) / jnp.linalg.norm(ref))
+    assert rel <= 1e-4, rel
+
+
+def test_query_stream_rejects_mismatched_frame_size(rng):
+    k = jnp.asarray(rng.randn(2, 1, 3, 4, 3).astype(np.float32))
+    sthc = STHC(STHCConfig(mode="ideal"))
+    grating = sthc.record(k, (12, 12, 8))
+    with pytest.raises(ValueError, match="spatial dims"):
+        sthc.engine.query_stream(grating, jnp.zeros((1, 1, 16, 16, 20)))
 
 
 def test_video_server_rejects_mismatched_frame_size(rng):
@@ -260,18 +325,61 @@ def test_video_server_rejects_mismatched_frame_size(rng):
 
     k = jnp.asarray(rng.randn(2, 1, 3, 4, 3).astype(np.float32))
     server = VideoSearchServer(k, (12, 12), VideoSearchConfig(window_frames=8))
-    with pytest.raises(ValueError, match="spatial dims"):
+    # the server pre-validates geometry upfront (before any device work)
+    with pytest.raises(ValueError, match="server frame size"):
         server.search(jnp.zeros((1, 1, 16, 16, 20), jnp.float32))
 
 
-def test_video_server_rejects_physical_mode(rng):
+def test_video_server_serves_physical_mode(rng):
+    """The old NotImplementedError path is gone: physical-mode serving
+    scores equal the one-shot physical correlator's peak responses."""
     from repro.launch.serve import VideoSearchConfig, VideoSearchServer
 
     k = jnp.asarray(rng.randn(2, 1, 3, 4, 3).astype(np.float32))
-    with pytest.raises(NotImplementedError):
-        VideoSearchServer(
-            k, (12, 12), VideoSearchConfig(window_frames=8, mode="physical")
-        )
+    clip = jnp.asarray(rng.rand(1, 1, 12, 12, 20).astype(np.float32))
+    server = VideoSearchServer(
+        k, (12, 12), VideoSearchConfig(window_frames=8, mode="physical")
+    )
+    out = server.search(clip)
+    ref = STHC(STHCConfig(mode="physical"))(k, clip)
+    want = np.asarray(jnp.max(ref.reshape(1, 2, -1), axis=-1))
+    np.testing.assert_allclose(out["scores"], want, rtol=1e-4)
+
+
+# -- stmul MXU-routing knob ---------------------------------------------------
+
+
+@pytest.mark.parametrize("min_mxu_c", [1, 99])  # force MXU / force VPU
+@pytest.mark.parametrize("C", [3, 8])
+def test_stmul_min_mxu_c_routing_matches_oracle(min_mxu_c, C):
+    """Both contraction routes agree with the oracle at any threshold —
+    the real-TPU tuning knob changes routing, never semantics."""
+    rng = np.random.RandomState(C)
+    sh = (6, 7, 5)
+    xh = jnp.asarray(
+        (rng.randn(2, C, *sh) + 1j * rng.randn(2, C, *sh)).astype(np.complex64)
+    )
+    g = jnp.asarray(
+        (rng.randn(4, C, *sh) + 1j * rng.randn(4, C, *sh)).astype(np.complex64)
+    )
+    ref = stmul_ref.spectral_mac_ref(xh, g)
+    got = stmul_ops.spectral_mac(xh, g, version=2, min_mxu_c=min_mxu_c)
+    np.testing.assert_allclose(
+        got, ref, atol=1e-4 * float(jnp.max(jnp.abs(ref))) + 1e-6
+    )
+
+
+def test_stmul_min_mxu_c_routed_from_config(rng):
+    """STHCConfig.stmul_min_mxu_c reaches the kernel: forcing the MXU
+    route through the engine still matches the jnp path."""
+    x = _clips(rng, C=3)
+    k = _kernels(rng, C=3)
+    ref = STHC(STHCConfig(mode="physical"))(k, x)
+    got = STHC(
+        STHCConfig(mode="physical", use_pallas=True, stmul_min_mxu_c=1)
+    )(k, x)
+    rel = float(jnp.linalg.norm(got - ref) / jnp.linalg.norm(ref))
+    assert rel <= 1e-4, rel
 
 
 # -- engine as a pure function ----------------------------------------------------

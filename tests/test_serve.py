@@ -1,0 +1,275 @@
+"""Multi-tenant video-search serving: shared grating cache with
+entry/byte-budget LRU eviction, per-tenant routing, batched scheduling of
+concurrent streams, serving metrics, and hybrid long-clip inference."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hybrid
+from repro.core.engine import GratingCache, QueryEngine
+from repro.core.sthc import STHC, STHCConfig
+from repro.launch.serve import (
+    HybridClassifierServer,
+    VideoSearchConfig,
+    VideoSearchServer,
+)
+
+
+def _kernels(seed, O=2, kt=3):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(rng.randn(O, 1, 3, 4, kt).astype(np.float32))
+
+
+def _clip(seed, B=1, T=20, H=12, W=12):
+    rng = np.random.RandomState(100 + seed)
+    return jnp.asarray(rng.rand(B, 1, H, W, T).astype(np.float32))
+
+
+def test_cfg_default_is_not_shared():
+    """Regression for the shared mutable default: each server must own a
+    fresh VideoSearchConfig instance."""
+    a = VideoSearchServer(_kernels(0), (12, 12))
+    b = VideoSearchServer(_kernels(1), (12, 12))
+    assert a.cfg is not b.cfg
+    a.cfg.window_frames = 7
+    assert b.cfg.window_frames == VideoSearchConfig().window_frames
+
+
+def test_multi_tenant_shared_cache_eviction_and_rerecord():
+    """Record N+1 tenants into an N-entry cache: the LRU tenant is
+    evicted (in registration order), and querying it re-records on a
+    cache miss — the medium is transparently re-written."""
+    cfg = VideoSearchConfig(window_frames=8, cache_entries=2)
+    server = VideoSearchServer(frame_hw=(12, 12), cfg=cfg)
+    for i, name in enumerate(["a", "b", "c"]):
+        server.add_tenant(name, _kernels(i))
+    stats = server.cache.stats()
+    assert stats["entries"] == 2 and stats["evictions"] == 1
+    assert stats["misses"] == 3  # one record per tenant
+
+    # 'a' was least-recently used -> evicted; searching it re-records
+    out = server.search(_clip(0), tenant="a")
+    assert out["tenant"] == "a"
+    stats = server.cache.stats()
+    assert stats["misses"] == 4 and stats["evictions"] == 2  # 'b' now out
+    # 'c' stayed resident through all of this -> pure hit
+    server.search(_clip(0), tenant="c")
+    assert server.cache.stats()["hits"] >= 1
+
+
+def test_cache_byte_budget_evicts():
+    """The byte-sized budget evicts independently of the entry budget."""
+    engine = QueryEngine(STHCConfig(mode="ideal"))
+    probe = engine.record(_kernels(0), (12, 12, 8))
+    # room for exactly one grating, many entries allowed
+    cache = GratingCache(max_entries=64, max_bytes=int(probe.nbytes * 1.5))
+    sthc = STHC(STHCConfig(mode="ideal"), cache=cache)
+    sthc.record(_kernels(1), (12, 12, 8))
+    sthc.record(_kernels(2), (12, 12, 8))
+    stats = cache.stats()
+    assert stats["entries"] == 1 and stats["evictions"] == 1
+    assert stats["bytes"] <= cache.max_bytes
+    # re-recording the evicted set is a miss, not a hit
+    sthc.record(_kernels(1), (12, 12, 8))
+    assert cache.stats()["misses"] == 3
+
+
+def test_oversized_grating_served_uncached_without_flushing_peers():
+    """A grating larger than the whole byte budget must not evict the
+    resident tenants while failing to fit — it is served uncached."""
+    engine = QueryEngine(STHCConfig(mode="ideal"))
+    small = engine.record(_kernels(0), (12, 12, 8))
+    cache = GratingCache(max_entries=64, max_bytes=int(small.nbytes * 1.5))
+    sthc = STHC(STHCConfig(mode="ideal"), cache=cache)
+    sthc.record(_kernels(1), (12, 12, 8))  # resident
+    big = sthc.record(_kernels(2, O=8), (16, 16, 16))  # exceeds budget alone
+    assert big.nbytes > cache.max_bytes
+    stats = cache.stats()
+    assert stats["entries"] == 1 and stats["evictions"] == 0
+    # the small resident grating is still a hit
+    sthc.record(_kernels(1), (12, 12, 8))
+    assert cache.stats()["hits"] == 1
+
+
+def test_remove_tenant_frees_cache_entry():
+    """Removing a tenant invalidates its grating so it stops consuming
+    the shared entry/byte budget (no phantom LRU pressure)."""
+    cfg = VideoSearchConfig(window_frames=8, cache_entries=2)
+    server = VideoSearchServer(frame_hw=(12, 12), cfg=cfg)
+    server.add_tenant("a", _kernels(0)).add_tenant("b", _kernels(1))
+    server.remove_tenant("a")
+    assert server.cache.stats()["entries"] == 1
+    server.add_tenant("c", _kernels(2))  # fits beside 'b' — no eviction
+    stats = server.cache.stats()
+    assert stats["entries"] == 2 and stats["evictions"] == 0
+    assert server.tenants == ["b", "c"]
+
+
+def test_search_does_not_rehash_kernels(monkeypatch):
+    """The tenant's kernel bytes are hashed once at registration; a
+    search must not re-derive the cache key per request."""
+    server = VideoSearchServer(
+        _kernels(0), (12, 12), VideoSearchConfig(window_frames=8)
+    )
+    monkeypatch.setattr(
+        GratingCache,
+        "key_for",
+        staticmethod(lambda *a, **k: pytest.fail("key re-derived at query time")),
+    )
+    out = server.search(_clip(0))
+    assert out["scores"].shape == (1, 2)
+    assert server.cache.stats()["hits"] >= 1
+
+
+def test_add_tenant_replacement_discards_old_grating():
+    """Re-registering a tenant name swaps its grating instead of leaking
+    the old one into the shared entry/byte budget."""
+    cfg = VideoSearchConfig(window_frames=8, cache_entries=4)
+    server = VideoSearchServer(frame_hw=(12, 12), cfg=cfg)
+    server.add_tenant("a", _kernels(0))
+    bytes_one = server.cache.stats()["bytes"]
+    server.add_tenant("a", _kernels(1))
+    stats = server.cache.stats()
+    assert stats["entries"] == 1 and stats["bytes"] == bytes_one
+    assert server.tenants == ["a"]
+
+
+def test_remove_tenant_keeps_entry_shared_with_identical_kernels():
+    """Content-addressed keys: two tenants with byte-identical kernels
+    share one cache entry; removing one must not cold-start the other."""
+    cfg = VideoSearchConfig(window_frames=8, cache_entries=4)
+    server = VideoSearchServer(frame_hw=(12, 12), cfg=cfg)
+    k = _kernels(0)
+    server.add_tenant("a", k).add_tenant("b", jnp.array(np.asarray(k)))
+    assert server.cache.stats()["entries"] == 1  # shared entry
+    server.remove_tenant("a")
+    assert server.cache.stats()["entries"] == 1  # 'b' still holds it
+    misses = server.cache.stats()["misses"]
+    server.search(_clip(0), tenant="b")  # pure hit, no re-record
+    assert server.cache.stats()["misses"] == misses
+    server.remove_tenant("b")
+    assert server.cache.stats()["entries"] == 0  # last reference freed
+
+
+def test_physical_serving_grating_drops_stacked():
+    """Serving configs strip the raw ± stack: a cached physical grating
+    charges only its hot-path (effective) bytes against cache_bytes,
+    and still scores identically to the full-fidelity correlator."""
+    server = VideoSearchServer(
+        _kernels(0), (12, 12),
+        VideoSearchConfig(window_frames=8, mode="physical"),
+    )
+    g = server._grating("default")
+    assert g.encode and g.stacked is None
+    assert g.nbytes == int(g.effective.nbytes)
+    assert server.cache.stats()["bytes"] == g.nbytes
+
+
+def test_search_batch_groups_and_matches_individual():
+    """Concurrent streams stack on the batch axis per (tenant, shape)
+    group; results equal one-at-a-time searches, in request order."""
+    cfg = VideoSearchConfig(window_frames=8, chunk_windows=2)
+    server = VideoSearchServer(frame_hw=(12, 12), cfg=cfg)
+    server.add_tenant("a", _kernels(0)).add_tenant("b", _kernels(1, O=3))
+    reqs = [("a", _clip(1)), ("b", _clip(2)), ("a", _clip(3))]
+    batched = server.search_batch(reqs)
+    for (tenant, clip), out in zip(reqs, batched):
+        solo = server.search(clip, tenant=tenant)
+        assert out["tenant"] == tenant
+        np.testing.assert_allclose(out["scores"], solo["scores"], rtol=1e-5)
+        np.testing.assert_array_equal(out["peak_frame"], solo["peak_frame"])
+
+
+def test_search_batch_unknown_tenant():
+    server = VideoSearchServer(_kernels(0), (12, 12))
+    with pytest.raises(KeyError, match="unknown tenant"):
+        server.search(_clip(0), tenant="nope")
+
+
+def test_server_metrics_counters():
+    server = VideoSearchServer(
+        _kernels(0), (12, 12), VideoSearchConfig(window_frames=8)
+    )
+    server.search(_clip(0, B=2, T=20))
+    m = server.metrics()
+    assert m["queries"] == 1
+    assert m["frames_total"] == 2 * 20  # both concurrent streams count
+    assert m["windows_total"] >= 2
+    assert m["frames_per_s"] > 0 and m["windows_per_s"] > 0
+    assert m["frames_per_s_vs_slm"] == pytest.approx(
+        m["frames_per_s"] / m["projected_slm_fps"]
+    )
+    cache = m["cache"]
+    for key in ("hits", "misses", "evictions", "entries", "bytes"):
+        assert key in cache
+    assert cache["bytes"] > 0
+
+
+def test_server_metrics_survive_tenant_churn():
+    """Server-wide traffic totals must not rewind when a tenant is
+    removed or its name re-registered with new kernels."""
+    server = VideoSearchServer(
+        _kernels(0), (12, 12), VideoSearchConfig(window_frames=8)
+    )
+    server.search(_clip(0, B=2, T=20))
+    before = server.metrics()
+    server.remove_tenant("default")
+    server.add_tenant("default", _kernels(1))
+    server.search(_clip(1, T=20))
+    m = server.metrics()
+    assert m["queries"] == before["queries"] + 1
+    assert m["frames_total"] == before["frames_total"] + 20
+    assert m["windows_total"] > before["windows_total"]
+
+
+def test_spatially_oversized_kernels_rejected():
+    server = VideoSearchServer(frame_hw=(12, 12))
+    big = jnp.zeros((2, 1, 30, 40, 3), jnp.float32)
+    with pytest.raises(ValueError, match="spatial size"):
+        server.add_tenant("big", big)
+
+
+def test_invalid_mode_rejected():
+    with pytest.raises(ValueError, match="mode"):
+        VideoSearchServer(
+            _kernels(0), (12, 12), VideoSearchConfig(mode="Ideal")
+        )
+
+
+def test_hybrid_classify_stream_matches_per_segment():
+    """Long-clip hybrid inference: each training-length segment of the
+    streamed conv output classifies identically to a one-shot classify
+    of that sub-clip (ideal mode; physical differs only in SLM scale)."""
+    cfg = hybrid.HybridConfig(
+        height=16, width=18, frames=8, num_kernels=2,
+        k_h=5, k_w=6, k_t=3, pool_window=(4, 4, 2), hidden=8,
+    )
+    rng = np.random.RandomState(0)
+    params = hybrid.init_params(jax.random.PRNGKey(0), cfg)
+    server = HybridClassifierServer(params, cfg, physical=False)
+    ot = cfg.conv_out_shape[2]
+    n_seg = 3
+    T = cfg.frames + (n_seg - 1) * ot
+    clips = jnp.asarray(rng.rand(2, 1, 16, 18, T).astype(np.float32))
+    preds = server.classify_stream(clips)
+    assert preds.shape == (2, n_seg)
+    for s in range(n_seg):
+        sub = clips[..., s * ot : s * ot + cfg.frames]
+        np.testing.assert_array_equal(preds[:, s], server.classify(sub))
+
+
+def test_hybrid_conv_layer_stream_matches_digital():
+    cfg = hybrid.HybridConfig(
+        height=16, width=18, frames=8, num_kernels=2,
+        k_h=5, k_w=6, k_t=3, pool_window=(4, 4, 2), hidden=8,
+    )
+    rng = np.random.RandomState(1)
+    params = hybrid.init_params(jax.random.PRNGKey(1), cfg)
+    x = jnp.asarray(rng.rand(1, 1, 16, 18, 25).astype(np.float32))
+    ref = hybrid.conv_layer_stream(params, x, cfg, impl="digital")
+    got = hybrid.conv_layer_stream(params, x, cfg, impl="spectral")
+    np.testing.assert_allclose(
+        got, ref, atol=2e-4 * float(jnp.max(jnp.abs(ref))) + 1e-5
+    )

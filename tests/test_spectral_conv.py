@@ -54,14 +54,50 @@ def test_fft_matches_direct_property(h, w, t, kh, kw, kt, c, o):
 )
 def test_overlap_save_equals_one_shot(t, kt, extra):
     """Streaming (coherence-window) correlation ≡ one-shot correlation for
-    every window size > kt−1 — the paper's segmentation is lossless."""
+    every window size > kt−1 — the paper's segmentation is lossless.
+    Runs through the engine's streaming driver (the one overlap-save
+    path; spectral_conv holds only the windowing arithmetic)."""
+    from repro.core.sthc import STHC, STHCConfig
+
     rng = np.random.RandomState(t * 7 + kt)
     x = _rand((1, 1, 10, 12, t), rng)
     k = _rand((2, 1, 3, 4, kt), rng)
     block_t = kt - 1 + extra
     ref = sc.direct_correlate3d(x, k, mode="valid")
-    got = sc.overlap_save_time(x, k, block_t=block_t)
+    got = STHC(STHCConfig(mode="ideal")).correlate_stream(k, x, block_t)
     np.testing.assert_allclose(got, ref, atol=TOL * float(jnp.max(jnp.abs(ref))) + 1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    t=st.integers(5, 80),
+    kt=st.integers(2, 5),
+    extra=st.integers(1, 12),
+    chunk=st.integers(1, 6),
+)
+def test_stream_plan_arithmetic(t, kt, extra, chunk):
+    """The pure windowing math: full coverage, whole chunks, minimal pad."""
+    if t < kt:
+        with pytest.raises(ValueError):
+            sc.stream_plan(t, kt, kt - 1 + extra, chunk)
+        return
+    plan = sc.stream_plan(t, kt, kt - 1 + extra, chunk)
+    assert plan.step == plan.block_t - kt + 1
+    assert plan.n_valid == t - kt + 1
+    # windows cover every valid output exactly once after cropping
+    assert (plan.n_blocks - 1) * plan.step < plan.n_valid <= plan.n_blocks * plan.step
+    assert plan.n_padded % plan.chunk == 0 and plan.n_padded >= plan.n_blocks
+    assert plan.n_padded - plan.n_blocks < plan.chunk
+    # padded stream is exactly long enough for the last window
+    assert (plan.n_padded - 1) * plan.step + plan.block_t == t + plan.pad_t
+    starts = np.asarray(sc.window_starts(plan))
+    assert starts.shape == (plan.n_padded // plan.chunk, plan.chunk)
+    assert starts.flatten()[-1] == (plan.n_padded - 1) * plan.step
+
+
+def test_stream_plan_rejects_short_window():
+    with pytest.raises(ValueError, match="block_t"):
+        sc.stream_plan(20, 4, 3)
 
 
 def test_grating_reuse(rng):
