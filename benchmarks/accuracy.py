@@ -52,10 +52,17 @@ def train_hybrid(cfg: hybrid.HybridConfig, epochs: int = 30, lr: float = 3e-3,
     return params
 
 
-def evaluate(cfg, params, split: str, impl: str, batch=16):
+def evaluate(cfg, params, split: str, impl: str, batch=16, sthc=None):
+    """Accuracy + confusion matrix of one conv backend.
+
+    ``sthc`` (with ``impl='sthc'``) evaluates through an arbitrary
+    fidelity pipeline — the ablation benchmark's stage-subset sweep.
+    """
     xs, ys = kth.make_split(split, kth.VideoSpec(cfg.height, cfg.width, cfg.frames))
     preds = []
-    pred_fn = jax.jit(lambda x: hybrid.predict(params, x, cfg, impl=impl))
+    pred_fn = jax.jit(
+        lambda x: hybrid.predict(params, x, cfg, impl=impl, sthc=sthc)
+    )
     for i in range(0, len(ys), batch):
         preds.append(np.asarray(pred_fn(jnp.asarray(xs[i : i + batch]))))
     preds = np.concatenate(preds)

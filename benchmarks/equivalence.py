@@ -7,7 +7,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import atomic, spectral_conv as sc
+from repro.core import atomic, fidelity, spectral_conv as sc
 from repro.core.sthc import STHC, STHCConfig
 
 
@@ -19,13 +19,16 @@ def run(log=print) -> list[str]:
     nref = float(jnp.linalg.norm(ref))
     rows = []
 
-    y_ideal = STHC(STHCConfig(mode="ideal"))(k, x)
+    y_ideal = STHC(STHCConfig(fidelity=fidelity.ideal()))(k, x)
     rel = float(jnp.linalg.norm(y_ideal - ref)) / nref
     rows.append(f"sthc_ideal_rel_error,0,{rel:.2e}")
 
     for cov in (1.0, 2.0, 4.0):
         s = STHC(
-            STHCConfig(mode="physical", atoms=atomic.AtomicConfig(coverage=cov))
+            STHCConfig(
+                fidelity=fidelity.physical(),
+                atoms=atomic.AtomicConfig(coverage=cov),
+            )
         )
         rel = float(jnp.linalg.norm(s(k, x) - ref)) / nref
         rows.append(f"sthc_physical_coverage{cov:g}_rel_error,0,{rel:.3f}")
@@ -34,7 +37,9 @@ def run(log=print) -> list[str]:
         from repro.core import optics
 
         s = STHC(
-            STHCConfig(mode="physical", slm=optics.SLMConfig(bits=bits))
+            STHCConfig(
+                fidelity=fidelity.physical(), slm=optics.SLMConfig(bits=bits)
+            )
         )
         rel = float(jnp.linalg.norm(s(k, x) - ref)) / nref
         rows.append(f"sthc_physical_slm{bits}bit_rel_error,0,{rel:.3f}")

@@ -80,6 +80,28 @@ def run(log=print) -> list[str]:
                 f"stmul_v2_minmxu_{label}_C{C},{t*1e6:.0f},maxerr={err:.1e}"
             )
 
+    # v2 tile-size sweep (block_b, block_o, block_f) around the shipped
+    # defaults (4, 8, 512) at the small grid.  Like the min_mxu_c sweep,
+    # interpret-mode timings here are semantics checks; the rows exist so
+    # a real-TPU run can pick `STHCConfig.stmul_block_*` straight from
+    # this table (the tile sizes are config knobs now, no code change).
+    xhT = jnp.asarray(
+        (rng.randn(2, 1, *Fs) + 1j * rng.randn(2, 1, *Fs)).astype(np.complex64)
+    )
+    gT = jnp.asarray(
+        (rng.randn(9, 1, *Fs) + 1j * rng.randn(9, 1, *Fs)).astype(np.complex64)
+    )
+    refT = ref_fn(xhT, gT)
+    for bB, bO, bF in ((4, 8, 512), (2, 4, 256), (1, 2, 128)):
+        fn = lambda a, b, t=(bB, bO, bF): stmul_ops.spectral_mac(
+            a, b, version=2, block_b=t[0], block_o=t[1], block_f=t[2]
+        )
+        t = _time(fn, xhT, gT)
+        err = float(jnp.max(jnp.abs(fn(xhT, gT) - refT)))
+        rows.append(
+            f"stmul_v2_tiles_b{bB}o{bO}f{bF},{t*1e6:.0f},maxerr={err:.1e}"
+        )
+
     # conv3d at C3D scale (3×3×3, 64ch)
     x = jnp.asarray(rng.randn(1, 16, 14, 14, 8).astype(np.float32))
     w = jnp.asarray(rng.randn(16, 16, 3, 3, 3).astype(np.float32))

@@ -6,6 +6,8 @@
   equivalence — §4 optical-model validation (ideal + physical error)
   kernels     — Pallas kernel micro-benches vs oracles
   roofline    — §Roofline summary from the dry-run records
+  ablation    — §4 degradation decomposition, one fidelity stage at a
+                time (also standalone: benchmarks/ablation.py --smoke)
 
 ``--fast`` shrinks the accuracy benchmark geometry for CI-speed runs.
 ``--json`` additionally writes one ``BENCH_<suite>.json`` artifact per
@@ -44,7 +46,14 @@ def main() -> None:
                     help="directory for the BENCH_*.json artifacts")
     args = ap.parse_args()
 
-    from benchmarks import accuracy, equivalence, kernels_bench, roofline_bench, speed
+    from benchmarks import (
+        ablation,
+        accuracy,
+        equivalence,
+        kernels_bench,
+        roofline_bench,
+        speed,
+    )
 
     suites = {
         "equivalence": lambda: equivalence.run(log=_log),
@@ -53,6 +62,11 @@ def main() -> None:
         "roofline": lambda: roofline_bench.run(log=_log),
         "accuracy": lambda: accuracy.run(
             epochs=10 if args.fast else 30,
+            full_geometry=not args.fast,
+            log=_log,
+        ),
+        "ablation": lambda: ablation.run(
+            epochs=2 if args.fast else 30,
             full_geometry=not args.fast,
             log=_log,
         ),
@@ -98,4 +112,8 @@ def _log(msg: str) -> None:
 
 
 if __name__ == "__main__":
+    # allow `python benchmarks/run.py` from the repo root: sys.path[0]
+    # is the script's own directory, so the intra-suite imports
+    # (`from benchmarks import ...`) need the root added explicitly
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
     main()

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks._timing import time_fn as _time
+from repro.core import fidelity
 from repro.core import spectral_conv as sc
 from repro.core import throughput
 from repro.core.sthc import STHC, STHCConfig
@@ -58,7 +59,7 @@ def run(log=print) -> list[str]:
 
     # fused vs unfused physical query: the engine's single-FFT ± path
     # against the seed's two-query reference, same recorded grating.
-    sthc = STHC(STHCConfig(mode="physical"))
+    sthc = STHC(STHCConfig(fidelity=fidelity.physical()))
     fused_g = sthc.record(k, (wl.height, wl.width, wl.frames))
     fused = jax.jit(lambda x: sthc.engine.query(fused_g, x))
     unfused = jax.jit(lambda x: sthc.engine.query_unfused(fused_g, x))
@@ -76,7 +77,9 @@ def run(log=print) -> list[str]:
     # the coherence-window geometry, a long clip streamed through the
     # engine's overlap-save path with stream-global SLM encoding.
     t_long = 64
-    stream = STHC(STHCConfig(mode="physical", osave_chunk_windows=4))
+    stream = STHC(
+        STHCConfig(fidelity=fidelity.physical(), osave_chunk_windows=4)
+    )
     g_stream = stream.record(k, (wl.height, wl.width, 2 * wl.frames))
     x_long = jnp.asarray(
         rng.rand(1, 1, wl.height, wl.width, t_long).astype(np.float32)

@@ -1,8 +1,9 @@
 """Quickstart: the STHC in five minutes.
 
 1. build a correlator, record kernels into the atomic grating,
-2. correlate a video clip — ideal mode matches digital convolution,
-3. physical mode shows the (small) cost of real atoms + SLM,
+2. correlate a video clip — the ideal pipeline matches digital convolution,
+3. the physical pipeline shows the (small) cost of real atoms + SLM —
+   and any *subset* of its stages isolates one effect,
 4. one hybrid-CNN training step.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
@@ -12,7 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import hybrid, spectral_conv
+from repro.core import fidelity, hybrid, spectral_conv
 from repro.core.sthc import STHC, STHCConfig
 
 rng = np.random.RandomState(0)
@@ -22,19 +23,30 @@ clip = jnp.asarray(rng.rand(2, 1, 36, 48, 12).astype(np.float32))
 kernels = jnp.asarray(rng.randn(4, 1, 12, 16, 6).astype(np.float32))
 
 # --- 1+2: ideal correlator ≡ digital 3-D convolution -----------------
-sthc = STHC(STHCConfig(mode="ideal"))
+sthc = STHC(STHCConfig(fidelity=fidelity.ideal()))
 grating = sthc.record(kernels, clip.shape[-3:])  # 'store' in the atoms
 feature_maps = sthc.correlate(grating, clip)  # 'diffract' the query
 ref = spectral_conv.direct_correlate3d(clip, kernels, "valid")
 print(f"feature maps {feature_maps.shape}, "
       f"ideal-vs-digital max err {float(jnp.max(jnp.abs(feature_maps - ref))):.2e}")
 
-# --- 3: physical mode (8-bit SLM, ± channels, IHB envelope, T2) -------
-phys = STHC(STHCConfig(mode="physical"))
+# --- 3: the physical pipeline (8-bit SLM, ± channels, IHB, T2, echo) --
+phys = STHC(STHCConfig(fidelity=fidelity.physical()))
 y_phys = phys(kernels, clip)
 rel = float(jnp.linalg.norm(y_phys - ref) / jnp.linalg.norm(ref))
-print(f"physical-mode relative error: {rel:.1%}  (the paper's accuracy "
-      "drop comes from effects like these)")
+print(f"physical-pipeline relative error: {rel:.1%}  (the paper's "
+      "accuracy drop comes from effects like these)")
+
+# ... and fidelity is composable: any stage subset isolates one effect.
+# Here, SLM quantization alone — the first rung of the paper's
+# degradation decomposition (benchmarks/ablation.py sweeps them all).
+quant_only = STHC(STHCConfig(
+    fidelity=fidelity.pipeline(fidelity.SLMQuantize(), name="slm-only")
+))
+y_q = quant_only(kernels, clip)
+rel_q = float(jnp.linalg.norm(y_q - ref) / jnp.linalg.norm(ref))
+print(f"SLM-quantization-only relative error: {rel_q:.2%} "
+      "(one stage of the stack above)")
 
 # --- 4: one hybrid-CNN training step ----------------------------------
 cfg = hybrid.HybridConfig(height=36, width=48, frames=12, k_h=12, k_w=16,

@@ -5,14 +5,16 @@ grating; a long video stream is then pushed through the coherence-window
 segmentation (overlap-save, paper Fig. 1C) and each reference produces a
 correlation peak wherever its event occurs.
 
-The server is multi-tenant: every named reference kernel set shares one
-grating cache with an LRU budget in entries and bytes, and each query
-routes to its tenant's grating (re-recorded transparently if evicted).
-Fidelity mode is a per-server property (one STHC config per server), so
-the demo runs two tenants — action-class references plus their negation
-— on one *ideal*-mode server sharing a cache, then repeats the search
-through the full *physical* model on a second server; the stream hides
-one 'running' clip among distractors that both must localize.
+The server is multi-tenant *and mixed-fidelity*: every named reference
+kernel set (tenant) registers with its own fidelity pipeline — the
+ordered stack of physics stages from :mod:`repro.core.fidelity` — and
+all of them share one grating cache with an LRU budget in entries and
+bytes (each query routes to its tenant's grating, re-recorded
+transparently if evicted; the cache key's pipeline fingerprint keeps
+fidelities apart).  The demo registers the same action-class references
+three times on ONE server: through the exact *ideal* correlator, the
+full *physical* model, and a quantization-only stage subset; the stream
+hides one 'running' clip among distractors all three must localize.
 
 Run:  PYTHONPATH=src python examples/serve_video.py
 """
@@ -20,6 +22,7 @@ Run:  PYTHONPATH=src python examples/serve_video.py
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import fidelity
 from repro.data import kth_synthetic as kth
 from repro.launch.serve import VideoSearchConfig, VideoSearchServer
 
@@ -41,16 +44,24 @@ def main() -> None:
     stream = jnp.asarray(stream.astype(np.float32))
 
     # The references are recorded into the shared grating cache once, at
-    # add_tenant time; every subsequent search diffracts off the same
+    # registration time; every subsequent search diffracts off the same
     # stored spectrum (record-once / stream-forever).  chunk_windows
     # batches the coherence windows through vmap'd FFTs instead of a
-    # strictly sequential scan.
+    # strictly sequential scan.  Fidelity is per *kernel set*: one
+    # server, one cache, three pipelines — the cache key's pipeline
+    # fingerprint keeps the gratings apart even though the kernel bytes
+    # are identical.
     server = VideoSearchServer(
         frame_hw=(SPEC.height, SPEC.width),
         cfg=VideoSearchConfig(window_frames=24, chunk_windows=2),
     )
-    server.add_tenant("actions", refs)
-    server.add_tenant("actions-negated", -refs)  # a second reference set
+    server.add_kernel_set("actions", refs)  # server default: ideal()
+    server.add_kernel_set("actions-physical", refs,
+                          fidelity=fidelity.physical())
+    server.add_kernel_set(
+        "actions-slm-only", refs,
+        fidelity=fidelity.pipeline(fidelity.SLMQuantize(), name="slm-only"),
+    )
 
     out = server.search(stream, tenant="actions")
     print(f"stream of {stream.shape[-1]} frames searched in "
@@ -69,25 +80,23 @@ def main() -> None:
     print(f"'running' reference localizes the running segment "
           f"(frames 12-23): peak {run_peak} -> {'OK' if ok else 'MISS'}")
 
-    # the same search through the full physical model (SLM quantization,
-    # ± channels, IHB/T2 envelopes, stream-global SLM scale) — the
-    # engine's one streaming path serves both fidelity modes.
-    phys = VideoSearchServer(
-        frame_hw=(SPEC.height, SPEC.width),
-        cfg=VideoSearchConfig(window_frames=24, chunk_windows=2,
-                              mode="physical"),
-    )
-    phys.add_tenant("actions", refs)
-    pout = phys.search(stream, tenant="actions")
-    print(f"physical-mode 'running' score {pout['scores'][0][3]:7.2f} "
-          f"(ideal {scores[3]:7.2f}), peak at frame {pout['peak_frame'][0][3]}")
+    # the same stream through the other two fidelities — same server,
+    # same shared cache, per-tenant physics (one streaming engine path).
+    for tenant in ("actions-physical", "actions-slm-only"):
+        tout = server.search(stream, tenant=tenant)
+        fid_name = server.metrics()["tenants"][tenant]["fidelity"]
+        print(f"[{fid_name:9s}] 'running' score {tout['scores'][0][3]:7.2f} "
+              f"(ideal {scores[3]:7.2f}), "
+              f"peak at frame {tout['peak_frame'][0][3]}")
 
     # serving metrics: cache behavior + measured vs projected rates
     m = server.metrics()
     c = m["cache"]
     print(f"cache: {c['hits']} hits / {c['misses']} misses / "
           f"{c['evictions']} evictions, {c['entries']} gratings "
-          f"({c['bytes']/1e6:.2f} MB resident)")
+          f"({c['bytes']/1e6:.2f} MB resident) — "
+          f"{len(set(t['fidelity'] for t in m['tenants'].values()))} "
+          f"fidelities on one server")
     print(f"throughput: {m['frames_per_s']:.0f} frames/s measured on this "
           f"host vs {m['projected_slm_fps']:.0f} fps (SLM) / "
           f"{m['projected_hmd_fps']:.0f} fps (HMD) projected loaders")

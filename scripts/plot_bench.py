@@ -1,0 +1,177 @@
+"""Plot the perf trajectory recorded in ``BENCH_*.json`` artifacts.
+
+``benchmarks/run.py --json`` (and CI's bench-smoke job) writes one
+``BENCH_<suite>.json`` per suite per run.  Point this script at any
+number of those files — or at directories holding them, e.g. one
+downloaded CI artifact dir per PR — and it renders the headline
+trajectories the ROADMAP tracks:
+
+  * fused vs unfused physical query latency (``BENCH_speed.json``)
+  * stmul kernel v1 vs v2 latency (``BENCH_kernels.json``)
+
+plus the derived speedup rows and, when present, the ablation
+decomposition (``BENCH_ablation.json``).
+
+A text table is always printed; if matplotlib is importable a PNG is
+written too (``--out``, default ``bench_trajectory.png``).  With a
+single snapshot the "trajectory" is one point per metric — still useful
+as the at-a-glance table; with several labeled runs the PNG shows the
+per-PR evolution.
+
+Run:  PYTHONPATH=src python scripts/plot_bench.py [paths...] [--out f.png]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+# metric -> (suite, row name); the headline trajectories
+TRACKED = {
+    "fused_query_us": ("speed", "sthc_query_fused_physical"),
+    "unfused_query_us": ("speed", "sthc_query_unfused_physical"),
+    "fused_vs_unfused_x": ("speed", "sthc_fused_vs_unfused_speedup"),
+    "stream_query_us": ("speed", "sthc_stream_physical"),
+    "stmul_v1_us": ("kernels", "stmul_pallas_v1"),
+    "stmul_v2_us": ("kernels", "stmul_pallas_v2"),
+    "stmul_v1_vs_v2_x": ("kernels", "stmul_v1_vs_v2_speedup"),
+}
+
+# latency pairs plotted together (left panel) and speedups (right panel)
+LATENCY_PAIRS = [
+    ("fused_query_us", "unfused_query_us"),
+    ("stmul_v2_us", "stmul_v1_us"),
+]
+SPEEDUPS = ["fused_vs_unfused_x", "stmul_v1_vs_v2_x"]
+
+
+def collect(paths: list[str]) -> list[tuple[str, dict]]:
+    """(label, {suite: {row_name: record}}) per run.
+
+    A path that is a directory contributes one labeled run holding all
+    its BENCH_*.json; a bare file joins the run labeled by its parent
+    directory.
+    """
+    runs: dict[str, dict] = {}
+    files: list[tuple[str, str]] = []
+    for p in paths:
+        if os.path.isdir(p):
+            for f in sorted(glob.glob(os.path.join(p, "BENCH_*.json"))):
+                files.append((p, f))
+        elif os.path.isfile(p):
+            files.append((os.path.dirname(p) or ".", p))
+        else:
+            raise FileNotFoundError(f"no such file or directory: {p}")
+    if not files:
+        raise FileNotFoundError(
+            f"no BENCH_*.json found under {paths} — run "
+            "`benchmarks/run.py --json` first"
+        )
+    for label, f in files:
+        with open(f) as fh:
+            data = json.load(fh)
+        suite = data.get("suite", os.path.basename(f))
+        rows = {r["name"]: r for r in data.get("rows", [])}
+        runs.setdefault(label, {})[suite] = rows
+    return sorted(runs.items())
+
+
+def _value(run: dict, metric: str) -> float | None:
+    suite, row_name = TRACKED[metric]
+    row = run.get(suite, {}).get(row_name)
+    if row is None:
+        return None
+    if metric.endswith("_us"):
+        v = row["us_per_call"]
+        return float(v) if not isinstance(v, str) else None
+    # speedup rows carry the value in the derived column
+    try:
+        return float(str(row["derived"]).rstrip("x"))
+    except ValueError:
+        return None
+
+
+def text_table(runs: list[tuple[str, dict]]) -> None:
+    metrics = list(TRACKED)
+    width = max(len(m) for m in metrics) + 2
+    header = "metric".ljust(width) + "".join(
+        f"{label[-18:]:>20}" for label, _ in runs
+    )
+    print(header)
+    print("-" * len(header))
+    for m in metrics:
+        cells = []
+        for _, run in runs:
+            v = _value(run, m)
+            cells.append(f"{v:>20.2f}" if v is not None else f"{'—':>20}")
+        print(m.ljust(width) + "".join(cells))
+    # ablation decomposition, when an artifact carries it
+    for label, run in runs:
+        abl = run.get("ablation")
+        if not abl:
+            continue
+        print(f"\nablation decomposition [{label}]:")
+        for name, row in abl.items():
+            if name.startswith("ablation_") and "acc=" in str(row["derived"]):
+                print(f"  {name[len('ablation_'):]:24s} {row['derived']}")
+
+
+def plot(runs: list[tuple[str, dict]], out: str) -> bool:
+    try:
+        import matplotlib
+
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+    except Exception:  # matplotlib optional: the text table is the fallback
+        return False
+    labels = [label for label, _ in runs]
+    x = range(len(runs))
+    fig, (ax_lat, ax_spd) = plt.subplots(1, 2, figsize=(11, 4.2))
+    for new, old in LATENCY_PAIRS:
+        for metric, style in ((new, "-o"), (old, "--s")):
+            ys = [_value(run, metric) for _, run in runs]
+            if any(y is not None for y in ys):
+                ax_lat.plot(x, ys, style, label=metric)
+    ax_lat.set_title("query / kernel latency")
+    ax_lat.set_ylabel("µs per call")
+    ax_lat.set_yscale("log")
+    for metric in SPEEDUPS:
+        ys = [_value(run, metric) for _, run in runs]
+        if any(y is not None for y in ys):
+            ax_spd.plot(x, ys, "-o", label=metric)
+    ax_spd.axhline(1.0, color="gray", lw=0.8, ls=":")
+    ax_spd.set_title("speedups (×)")
+    for ax in (ax_lat, ax_spd):
+        ax.set_xticks(list(x))
+        ax.set_xticklabels(labels, rotation=30, ha="right", fontsize=8)
+        ax.legend(fontsize=8)
+        ax.grid(alpha=0.3)
+    fig.tight_layout()
+    fig.savefig(out, dpi=120)
+    return True
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument(
+        "paths",
+        nargs="*",
+        default=None,
+        help="BENCH_*.json files or directories of them (one run per "
+        "directory); default: the current directory",
+    )
+    ap.add_argument("--out", default="bench_trajectory.png",
+                    help="PNG path (written only when matplotlib exists)")
+    args = ap.parse_args()
+    runs = collect(args.paths or ["."])
+    text_table(runs)
+    if plot(runs, args.out):
+        print(f"\nwrote {args.out}")
+    else:
+        print("\n(matplotlib unavailable — text table only)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,9 +1,13 @@
 """The paper's own workload: STHC hybrid 3-D CNN on KTH-geometry clips.
 
 60×80 px, 16 frames, 9 optical kernels of 30×40×8, 4 action classes
-(§4.1).  ``smoke_config()`` shrinks everything for CPU test loops.
+(§4.1).  ``smoke_config()`` shrinks everything for CPU test loops;
+``fidelity_stacks()`` names this workload's degradation-decomposition
+sweep (the stage stacks behind the paper's 69.84 % digital →
+59.72 % hybrid accuracy drop, swept by ``benchmarks/ablation.py``).
 """
 
+from repro.core import fidelity
 from repro.core.hybrid import HybridConfig
 
 
@@ -21,6 +25,18 @@ def config() -> HybridConfig:
         hidden=128,
         num_classes=4,
     )
+
+
+def fidelity_stacks() -> list[tuple[str, fidelity.FidelityPipeline]]:
+    """The §4 decomposition sweep: cumulative paper stacks (digital →
+    full physical, one stage at a time) plus an uncompensated-pulse
+    variant — what readout looks like without the digital deconvolution,
+    the final stage's contribution seen from the other side."""
+    stacks = list(fidelity.ablation_stacks())
+    stacks.append(
+        ("pulse_uncompensated", fidelity.physical(compensate_pulse=False))
+    )
+    return stacks
 
 
 def smoke_config() -> HybridConfig:

@@ -1,20 +1,23 @@
 # The paper's primary contribution: the Spatio-Temporal Holographic
 # Correlator (STHC) as a TPU-native spectral 3-D correlation engine, plus
 # the hybrid optoelectronic CNN built on it.
-from repro.core import atomic, engine, hybrid, optics, pseudo_negative, spectral_conv, throughput
+from repro.core import atomic, engine, fidelity, hybrid, optics, pseudo_negative, spectral_conv, throughput
 from repro.core.engine import FusedGrating, GratingCache, QueryEngine, default_cache
+from repro.core.fidelity import FidelityPipeline
 from repro.core.sthc import STHC, Grating, STHCConfig
 
 __all__ = [
     "STHC",
     "STHCConfig",
     "Grating",
+    "FidelityPipeline",
     "FusedGrating",
     "GratingCache",
     "QueryEngine",
     "default_cache",
     "atomic",
     "engine",
+    "fidelity",
     "hybrid",
     "optics",
     "pseudo_negative",

@@ -21,9 +21,15 @@ model (following the paper and its refs [10, 13]):
   the IHB bandwidth: ``t_frame ≈ 1 / Γ_IHB`` ≈ 1.6 ns at 100 MHz
   (Γ = 6.28e8 rad/s).
 
-All envelopes are returned normalized to unit peak so the *ideal* mode
-(envelope ≡ 1) is the exact FFT correlator and the physical mode is a
-graceful degradation of it.
+All envelopes are returned normalized to unit peak so the *ideal*
+pipeline (envelope ≡ 1) is the exact FFT correlator and the physical
+pipeline is a graceful degradation of it.
+
+These functions are the raw physics; the engine reaches them through
+the typed stages of :mod:`repro.core.fidelity` — ``IHBEnvelope`` wraps
+:func:`photon_echo_transfer`, ``T2Apodize`` wraps
+:func:`t2_tap_weights`, ``EchoGain`` wraps :func:`echo_efficiency` — so
+each effect can be ablated or served independently per tenant.
 """
 
 from __future__ import annotations

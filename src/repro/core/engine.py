@@ -36,10 +36,21 @@ grating), recomputing the identical ``rfftn(x)`` both times, and
   one per window.  Together these make the streaming output equal to
   the one-shot physical correlation (tested property).
 
+* **Fidelity** — the engine is *mode-agnostic*: it consumes the
+  record-time and query-time transforms of the config's
+  :class:`~repro.core.fidelity.FidelityPipeline` (an ordered stack of
+  typed physics stages) instead of branching on a mode string.  An
+  empty pipeline (``fidelity.ideal()``) records the exact kernel
+  spectrum and skips the encode epilogue entirely; the full
+  ``fidelity.physical()`` stack reproduces the paper's effect chain
+  bit-for-bit against the pre-pipeline implementation (pinned tests);
+  arbitrary subsets power the ablation benchmark and per-tenant
+  mixed-fidelity serving.
+
 * **Cache** — ``GratingCache`` memoizes recorded gratings under a
-  content hash (kernel bytes + fft geometry + config), so repeated
-  ``STHC.__call__`` / ``hybrid`` / serving invocations with the same
-  kernels stop re-recording.  The LRU budget is sized both in entries
+  content hash (kernel bytes + fft geometry + the pipeline fingerprint
+  and device configs), so repeated ``STHC.__call__`` / ``hybrid`` /
+  serving invocations with the same kernels stop re-recording.  The LRU budget is sized both in entries
   and in grating *bytes* (multi-tenant serving), with hit/miss/eviction
   counters surfaced via :meth:`GratingCache.stats`.  Tracer inputs
   (inside ``jit``) bypass the cache transparently.
@@ -62,7 +73,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from repro.core import atomic, optics, pseudo_negative, spectral_conv
+from repro.core import fidelity as fidelity_mod
+from repro.core import optics, pseudo_negative, spectral_conv
 
 if TYPE_CHECKING:  # avoid a circular import; sthc imports this module
     from repro.core.sthc import STHCConfig
@@ -89,11 +101,18 @@ class FusedGrating:
         folded into ``effective``; kept for the reference path).
       echo_gain: scalar echo-efficiency factor (likewise folded).
       encode: whether queries must pass through the SLM model
-        (non-negativity + per-example scale + quantization).
-      slm_bits: SLM bit depth used for query encoding.
+        (non-negativity + per-example scale + quantization) — i.e. the
+        record-time pipeline had query-encoding stages.
+      slm_bits: SLM bit depth used for query encoding (resolved from
+        the pipeline's quantize stage / the SLM config at record time).
       ker_shape: (kh, kw, kt) of the recorded kernels — with
         ``out_shape`` this pins the record-time signal geometry, which
         the streaming path needs to derive its window length.
+      pseudo_negative: the recording ± split signed kernels and folded
+        ``G⁺ − G⁻`` — i.e. a stacked pair existed at record time even
+        if ``keep_stacked=False`` dropped it.  The unfused reference
+        path uses this to distinguish "nothing to unfuse" from "the ±
+        stack was discarded".
     """
 
     stacked: Array | None
@@ -105,6 +124,7 @@ class FusedGrating:
     encode: bool = False
     slm_bits: int = 8
     ker_shape: tuple[int, int, int] | None = None
+    pseudo_negative: bool = False
 
     @property
     def nbytes(self) -> int:
@@ -135,7 +155,9 @@ class QueryEngine:
         # queries from server threads can't race a lazy init
         self._stream_fn = jax.jit(
             self._stream_impl,
-            static_argnames=("ker_shape", "fft_shape", "plan", "encode"),
+            static_argnames=(
+                "ker_shape", "fft_shape", "plan", "encode", "slm_bits",
+            ),
         )
 
     # -- record -----------------------------------------------------------
@@ -143,85 +165,107 @@ class QueryEngine:
     def record(
         self, kernels: Array, signal_shape: tuple[int, int, int]
     ) -> FusedGrating:
-        """Write a kernel stack (O, C, kh, kw, kt) for signals (H, W, T)."""
+        """Write a kernel stack (O, C, kh, kw, kt) for signals (H, W, T).
+
+        Mode-agnostic: the config's fidelity pipeline supplies every
+        record-time transform —
+
+        * ``prepare_kernels`` hooks (SLM quantization, T2 tap weights)
+          run in stack order on the time-domain kernels;
+        * ``shape_spectrum`` hooks build the temporal transfer function
+          on the *reference's own* kt-point grid (IHB coverage, the
+          recording-pulse spectrum and its compensation).  The medium is
+          written before any query exists, so the recorded state must be
+          a pure function of the reference — it cannot depend on the FFT
+          grid of a query that arrives later; band-limiting here keeps
+          the stored reference's support within kt frames, so windowed
+          (overlap-save) and one-shot queries diffract off identical
+          physics.
+        * ``fold_gain`` hooks (echo efficiency) and the quantizer's
+          per-output-channel scale are folded into the effective
+          grating, diffraction being linear in the grating.
+
+        A :class:`~repro.core.fidelity.PseudoNegative` stage is
+        structural: signed kernels split into non-negative ± halves,
+        both recorded, ``G⁺ − G⁻`` folded back.  An empty pipeline
+        reduces exactly to the ideal FFT correlator (no prep, no
+        band-limit, no encode).
+        """
         cfg = self.config
+        pipe = cfg.fidelity
         ker_shape = kernels.shape[-3:]
         fft_shape = spectral_conv.fft_shape_for(signal_shape, ker_shape)
         out_shape = spectral_conv.valid_shape(signal_shape, ker_shape)
-
-        if cfg.mode == "ideal":
-            grating = spectral_conv.make_grating(kernels, fft_shape)
-            one = jnp.ones((kernels.shape[0], 1, 1, 1, 1), kernels.dtype)
-            return FusedGrating(
-                stacked=None,
-                effective=grating,
-                fft_shape=fft_shape,
-                out_shape=out_shape,
-                kernel_scale=one,
-                echo_gain=jnp.asarray(1.0),
-                encode=False,
-                slm_bits=cfg.slm.bits,
-                ker_shape=tuple(int(n) for n in ker_shape),
-            )
-
-        # --- physical mode ---
-        k_plus, k_minus = pseudo_negative.split(kernels)
-        # shared per-output-channel scale so the ± channels subtract exactly
-        scale = jnp.max(jnp.abs(kernels), axis=(1, 2, 3, 4), keepdims=True)
-        scale = jnp.where(scale > 0, scale, 1.0)
-        # T2 decay: stored reference frames written earlier have decayed
-        # more by readout — time-domain tap weights on the kernel.
-        decay = atomic.t2_tap_weights(
-            ker_shape[-1], cfg.atoms, cfg.storage_interval_s
-        )
-        q = lambda k: optics.quantize_unit(k / scale, cfg.slm.bits) * decay
-        # Temporal physics of the write, on the *reference's own* kt-point
-        # grid.  The medium is written before any query exists, so the
-        # recorded state must be a pure function of the reference — it
-        # cannot depend on the FFT grid of a query that arrives later.
-        # (The seed applied the envelopes at the query FFT grid, which
-        # made the "same" grating differ between a 16-frame one-shot
-        # query and a 16-frame coherence window of a longer stream; that
-        # grid dependence is exactly why streaming physical mode was
-        # previously undefined.)  Band-limiting the stored reference here
-        # keeps its support within kt frames, so windowed (overlap-save)
-        # and one-shot queries diffract off identical physics.
         kt = int(ker_shape[-1])
-        h_t = atomic.photon_echo_transfer(kt, cfg.atoms)
-        # The recording pulse is the temporal reference of the write: its
-        # spectrum P(f_t) is burned into the grating (recorded ∝ P*·K̂).
-        p_t = optics.temporal_pulse_spectrum(kt)
-        h_t = h_t * p_t
-        if cfg.compensate_pulse:
-            # digital deconvolution at readout: divide the (near-flat,
-            # known) pulse spectrum back out — residual error is only the
-            # clamped region where P < 1e-3.
-            h_t = h_t / jnp.maximum(p_t, 1e-3)
 
-        def band(k):  # IHB/pulse envelope on the reference's temporal grid
+        quant = pipe.get(fidelity_mod.SLMQuantize)
+        pn = pipe.has(fidelity_mod.PseudoNegative)
+        bits = pipe.resolved_bits(cfg.slm)
+        if quant is not None:
+            # shared per-output-channel quantizer range; for ± channels a
+            # shared scale makes the halves subtract exactly
+            scale = jnp.max(jnp.abs(kernels), axis=(1, 2, 3, 4), keepdims=True)
+            scale = jnp.where(scale > 0, scale, 1.0)
+        else:
+            scale = jnp.ones((kernels.shape[0], 1, 1, 1, 1), kernels.dtype)
+        ctx = fidelity_mod.StageContext(
+            kt=kt,
+            slm=cfg.slm,
+            atoms=cfg.atoms,
+            storage_interval_s=cfg.storage_interval_s,
+            bits=bits,
+            signed=not pn,
+            kernel_scale=scale,
+        )
+
+        h_t = None  # None ≡ all-ones transfer: skip the band-limit FFTs
+        for stage in pipe:
+            h_t = stage.shape_spectrum(h_t, ctx)
+
+        def prep(k):  # time-domain kernel transforms, in stack order
+            for stage in pipe:
+                k = stage.prepare_kernels(k, ctx)
+            return k
+
+        def band(k):  # temporal transfer on the reference's own grid
+            if h_t is None:
+                return k
             spec = jnp.fft.fft(k, axis=-1) * h_t
             return jnp.real(jnp.fft.ifft(spec, axis=-1))
 
-        g_plus = spectral_conv.make_grating(band(q(k_plus)), fft_shape)
-        g_minus = spectral_conv.make_grating(band(q(k_minus)), fft_shape)
-        gain = atomic.echo_efficiency(cfg.atoms, cfg.storage_interval_s)
-        # The ± stack only feeds the unfused reference path; serving
-        # configs drop it so cached gratings cost their hot-path bytes.
-        keep_stacked = getattr(cfg, "keep_stacked", True)
-        stacked = jnp.stack([g_plus, g_minus]) if keep_stacked else None
-        # Fold the ± combine, kernel de-scaling and echo gain into one
-        # effective grating — all static, all linear in the grating.
-        effective = (g_plus - g_minus) * scale * gain
+        if pn:
+            k_plus, k_minus = pseudo_negative.split(kernels)
+            g_plus = spectral_conv.make_grating(band(prep(k_plus)), fft_shape)
+            g_minus = spectral_conv.make_grating(band(prep(k_minus)), fft_shape)
+            # The ± stack only feeds the unfused reference path; serving
+            # configs drop it so cached gratings cost their hot-path bytes.
+            keep_stacked = getattr(cfg, "keep_stacked", True)
+            stacked = jnp.stack([g_plus, g_minus]) if keep_stacked else None
+            # Fold the ± combine into one effective grating — static,
+            # linear in the grating.
+            effective = g_plus - g_minus
+        else:
+            stacked = None
+            effective = spectral_conv.make_grating(band(prep(kernels)), fft_shape)
+
+        if quant is not None:
+            effective = effective * scale  # undo the quantizer range, once
+        gain = None
+        for stage in pipe:
+            gain = stage.fold_gain(gain, ctx)
+        if gain is not None:
+            effective = effective * gain
         return FusedGrating(
             stacked=stacked,
             effective=effective,
             fft_shape=fft_shape,
             out_shape=out_shape,
             kernel_scale=scale,
-            echo_gain=gain,
-            encode=True,
-            slm_bits=cfg.slm.bits,
+            echo_gain=jnp.asarray(1.0) if gain is None else gain,
+            encode=pipe.encodes_query,
+            slm_bits=bits,
             ker_shape=tuple(int(n) for n in ker_shape),
+            pseudo_negative=pn,
         )
 
     # -- query (fused hot path) --------------------------------------------
@@ -236,7 +280,7 @@ class QueryEngine:
             return self._query_fn()(
                 x, grating.effective, grating.fft_shape, grating.out_shape
             )
-        enc, x_scale = self._encode(x)
+        enc, x_scale = self._encode(x, grating.slm_bits)
         y = self._query_fn()(
             enc, grating.effective, grating.fft_shape, grating.out_shape
         )
@@ -249,18 +293,23 @@ class QueryEngine:
     def query_unfused(self, grating: FusedGrating, x: Array) -> Array:
         """The seed's two-query ± path, kept as the tested/benchmarked
         reference: one ``rfftn`` + MAC + ``irfftn`` *per pseudo-negative
-        grating*, digital combine and de-scaling in the epilogue."""
+        grating*, digital combine and de-scaling in the epilogue.
+
+        Pipelines without a ``PseudoNegative`` stage have nothing to
+        unfuse — a single grating was recorded, so the fused path *is*
+        the reference and is served directly (encoded or not)."""
         query = self._query_fn()
-        if not grating.encode:
-            return query(
-                x, grating.plus, grating.fft_shape, grating.out_shape
-            )
+        if not grating.pseudo_negative:
+            return self.query(grating, x)
         if grating.stacked is None:
             raise ValueError(
                 "grating was recorded without the stacked ± tensors; the "
                 "unfused reference path needs them"
             )
-        enc, x_scale = self._encode(x)
+        if grating.encode:
+            enc, x_scale = self._encode(x, grating.slm_bits)
+        else:  # ± split without an SLM model (ablation pipelines)
+            enc, x_scale = x, None
         y_plus = query(
             enc, grating.stacked[0], grating.fft_shape, grating.out_shape
         )
@@ -270,7 +319,8 @@ class QueryEngine:
         y = pseudo_negative.combine(y_plus, y_minus)
         k_scale = grating.kernel_scale[:, 0, 0, 0, 0]  # (O,)
         y = y * k_scale[None, :, None, None, None]
-        y = y * x_scale
+        if x_scale is not None:
+            y = y * x_scale
         return y * grating.echo_gain
 
     # -- query (streaming / overlap-save) ----------------------------------
@@ -337,6 +387,7 @@ class QueryEngine:
             fft_shape=grating.fft_shape,
             plan=plan,
             encode=grating.encode,
+            slm_bits=grating.slm_bits,
         )
 
     def stream_plan_for(
@@ -358,7 +409,9 @@ class QueryEngine:
         # geometry errors surface outside the traced driver.
         return spectral_conv.stream_plan(n_frames, kt, block_t, chunk_windows)
 
-    def _stream_impl(self, x, effective, *, ker_shape, fft_shape, plan, encode):
+    def _stream_impl(
+        self, x, effective, *, ker_shape, fft_shape, plan, encode, slm_bits
+    ):
         """Overlap-save body (jitted; shapes/plan static, arrays traced)."""
         kh, kw, kt = ker_shape
         H, W = x.shape[-3:-1]
@@ -366,7 +419,7 @@ class QueryEngine:
         if encode:
             # stream-global SLM scale: one dynamic range per example for
             # the entire stream (see query_stream docstring).
-            x, x_scale = self._encode(x)
+            x, x_scale = self._encode(x, slm_bits)
         xp = jnp.pad(x, [(0, 0)] * 4 + [(0, plan.pad_t)])
         win_out = (H - kh + 1, W - kw + 1, plan.step)
         query = self._query_fn()
@@ -389,14 +442,16 @@ class QueryEngine:
 
     # -- internals ---------------------------------------------------------
 
-    def _encode(self, x: Array) -> tuple[Array, Array]:
+    def _encode(self, x: Array, bits: int) -> tuple[Array, Array]:
         """SLM front end: non-negative clip, one scale per *example* — the
         channel sum at the detector means a per-channel scale could not
-        be undone digitally.  Returns (encoded, x_scale)."""
+        be undone digitally.  ``bits`` is the grating's record-time
+        resolved depth (pipeline stage override or SLM config).
+        Returns (encoded, x_scale)."""
         x = jnp.maximum(x, 0.0)
         x_scale = jnp.max(x, axis=(1, 2, 3, 4), keepdims=True)  # (B,1,1,1,1)
         x_scale = jnp.where(x_scale > 0, x_scale, 1.0)
-        return optics.quantize_unit(x / x_scale, self.config.slm.bits), x_scale
+        return optics.quantize_unit(x / x_scale, bits), x_scale
 
     def _query_fn(self):
         cfg = self.config
@@ -406,6 +461,11 @@ class QueryEngine:
 
         version = getattr(cfg, "stmul_version", 2)
         min_mxu_c = getattr(cfg, "stmul_min_mxu_c", None)
+        tiles = dict(
+            block_b=getattr(cfg, "stmul_block_b", None),
+            block_o=getattr(cfg, "stmul_block_o", None),
+            block_f=getattr(cfg, "stmul_block_f", None),
+        )
 
         def query(x, grating, fft_shape, out_shape):
             return stmul_ops.query_grating_pallas(
@@ -415,6 +475,7 @@ class QueryEngine:
                 out_shape,
                 version=version,
                 min_mxu_c=min_mxu_c,
+                **tiles,
             )
 
         return query
@@ -443,8 +504,12 @@ class GratingCache:
 
     Keyed on the kernel *bytes* (SHA-1), kernel shape/dtype, the signal
     shape (which fixes the FFT grid) and the *record-relevant* subset of
-    ``STHCConfig`` — mode, SLM, atoms, storage interval, pulse
-    compensation.  Query-side knobs (``use_pallas``, ``stmul_version``,
+    ``STHCConfig`` — the fidelity pipeline's stable fingerprint plus the
+    device configs it reads (SLM, atoms, storage interval).  The
+    fingerprint is what lets one shared cache serve tenants at
+    different fidelities: same kernels under two pipelines occupy two
+    entries, and a lookup can never cross-hit another fidelity's
+    grating.  Query-side knobs (``use_pallas``, ``stmul_version``,
     ``fused``, ``osave_chunk_windows``, …) deliberately do not key:
     they don't change what was written into the medium, and splitting
     on them would re-record physically identical gratings.  Inside
@@ -487,18 +552,18 @@ class GratingCache:
         arr = np.asarray(kernels)
         digest = hashlib.sha1(arr.tobytes()).hexdigest()
         record_cfg = (
-            config.mode,
+            config.fidelity.fingerprint(),
             config.slm,
             config.atoms,
             config.storage_interval_s,
-            config.compensate_pulse,
             # record-side: changes what object is stored (± stack or not),
             # so stripped serving gratings never alias full ones — but
-            # only in physical mode; ideal gratings have no stack, and
-            # splitting on the knob would double-record identical ones.
+            # only when the pipeline splits ± channels at all; other
+            # gratings have no stack, and splitting on the knob would
+            # double-record identical ones.
             (
                 getattr(config, "keep_stacked", True)
-                if config.mode != "ideal"
+                if config.fidelity.has(fidelity_mod.PseudoNegative)
                 else True
             ),
         )

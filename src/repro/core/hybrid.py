@@ -15,9 +15,12 @@ served by the STHC while everything downstream stays digital.  The
 ``impl`` switch selects the conv backend:
 
   'digital'        direct lax.conv (the PyTorch-equivalent baseline)
-  'spectral'       FFT correlator, ideal mode (numerically ≡ digital)
-  'sthc_physical'  full physical model (SLM quantization, ± channels,
-                   IHB/T2 envelopes)
+  'spectral'       FFT correlator, ideal fidelity (numerically ≡ digital)
+  'sthc_physical'  full physical model (the fidelity.physical() stage
+                   stack: SLM quantization, ± channels, IHB/T2
+                   envelopes, echo gain, pulse compensation)
+  'sthc'           caller-supplied STHC — any fidelity pipeline (the
+                   ablation benchmark sweeps stage subsets this way)
 """
 
 from __future__ import annotations
@@ -29,7 +32,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import spectral_conv
+from repro.core import fidelity, spectral_conv
 from repro.core.sthc import STHC, STHCConfig
 
 Array = jax.Array
@@ -103,9 +106,19 @@ def max_pool3d(x: Array, window: tuple[int, int, int]) -> Array:
 # trained kernels records the medium once (the paper's dataflow) instead
 # of once per call.
 _DEFAULT_STHC = {
-    "sthc_physical": STHC(STHCConfig(mode="physical")),
-    "sthc_ideal": STHC(STHCConfig(mode="ideal")),
+    "sthc_physical": STHC(STHCConfig(fidelity=fidelity.physical())),
+    "sthc_ideal": STHC(STHCConfig(fidelity=fidelity.ideal())),
 }
+
+
+def _sthc_required(sthc: STHC | None) -> STHC:
+    if sthc is None:
+        raise ValueError(
+            "impl='sthc' requires an explicit STHC correlator (pass "
+            "sthc=STHC(STHCConfig(fidelity=...)) with the pipeline to "
+            "evaluate)"
+        )
+    return sthc
 
 
 def conv_layer(
@@ -121,6 +134,8 @@ def conv_layer(
         y = spectral_conv.direct_correlate3d(x, w, mode="valid")
     elif impl == "spectral":
         y = spectral_conv.correlate3d_fft(x, w, mode="valid")
+    elif impl == "sthc":
+        y = _sthc_required(sthc)(w, x)
     elif impl in _DEFAULT_STHC:
         y = (sthc or _DEFAULT_STHC[impl])(w, x)
     else:
@@ -155,6 +170,8 @@ def conv_layer_stream(
         # a caller-supplied sthc (possibly physical) is deliberately
         # ignored here — pass impl='sthc_*' to stream through it
         y = _DEFAULT_STHC["sthc_ideal"].correlate_stream(w, x, bt)
+    elif impl == "sthc":
+        y = _sthc_required(sthc).correlate_stream(w, x, bt)
     elif impl in _DEFAULT_STHC:
         y = (sthc or _DEFAULT_STHC[impl]).correlate_stream(w, x, bt)
     else:

@@ -66,6 +66,21 @@ def quantize_unit(x: Array, bits: int) -> Array:
     return xc + jax.lax.stop_gradient(q - xc)
 
 
+def quantize_signed(x: Array, bits: int) -> Array:
+    """Sign-preserving quantization of values in [-1, 1].
+
+    ``2**bits − 1`` magnitude levels per sign, zero mapped exactly to
+    zero.  This is the bipolar-SLM idealization used when a fidelity
+    pipeline quantizes kernels *without* pseudo-negative ± encoding
+    (:class:`repro.core.fidelity.SLMQuantize` on a signed display) — a
+    physical SLM cannot do this, but the ablation needs quantization's
+    accuracy cost isolated from the ± split's.
+    """
+    if bits <= 0:
+        return x
+    return jnp.sign(x) * quantize_unit(jnp.abs(x), bits)
+
+
 def slm_encode(frames: Array, cfg: SLMConfig) -> tuple[Array, Array]:
     """Encode (possibly signed-free, i.e. already non-negative) frames for
     the SLM.

@@ -4,43 +4,50 @@
 fused :class:`~repro.core.engine.QueryEngine` (the single hot path for
 all STHC consumers):
 
-  1. **record** — project the (pseudo-negative-encoded, SLM-quantized)
-     kernel stack; store its 3-D spectrum as the atomic grating, shaped
-     by the medium's temporal transfer function.  The engine packs the
-     ± gratings into one stacked tensor and *folds* everything static —
-     the ``G⁺ − G⁻`` combine, the kernel de-quantization scale, the
-     photon-echo gain — into a single effective grating.  Recording is
-     memoized in a content-hash cache, so repeated calls with the same
-     kernels (``__call__``, hybrid layers, serving) write the medium
-     once, exactly like the physical system.
+  1. **record** — project the reference kernels through the pipeline's
+     record-time stages (± encoding, SLM quantization, IHB/pulse
+     envelopes, T2 apodization); store the 3-D spectrum as the atomic
+     grating.  The engine folds everything static — the ``G⁺ − G⁻``
+     combine, the kernel de-quantization scale, the photon-echo gain —
+     into a single effective grating.  Recording is memoized in a
+     content-hash cache keyed on the kernel bytes *and* the pipeline
+     fingerprint, so repeated calls with the same kernels write the
+     medium once, exactly like the physical system.
   2. **query** — project video clips; one forward ``rfftn`` per clip,
      one channel-contracted spectral MAC against the effective grating
      (the compute hot spot, optionally served by the Pallas ``stmul``
      kernel), one inverse FFT.  The only per-query epilogue left is the
-     clip's own de-scaling.  In physical mode this is half the FFTs and
-     kernel launches of the unfused ± path (which survives as
-     ``QueryEngine.query_unfused``, the tested reference).
+     pipeline's query-time de-scaling (when it encodes at all).
 
-Two fidelity modes:
+Fidelity is a first-class, per-correlator object — an ordered stack of
+typed physics stages (:mod:`repro.core.fidelity`):
 
-* ``ideal``   — exact FFT correlator (envelope ≡ 1, no quantization, signed
-  kernels used directly).  Must match direct correlation to float tolerance
-  (tested); this is the numerical 'spec' of the machine.
-* ``physical`` — SLM bit-depth quantization, pseudo-negative ± channels,
-  IHB bandwidth envelope, T2 Lorentzian apodization, echo efficiency,
+* ``fidelity.ideal()``     — exact FFT correlator (no stages).  Must match
+  direct correlation to float tolerance (tested); the numerical 'spec'.
+* ``fidelity.physical()``  — SLM bit-depth quantization, pseudo-negative ±
+  channels, IHB bandwidth envelope, T2 apodization, echo efficiency,
   recording-pulse deconvolution.  The paper's reported accuracy drop
-  (69.84 % digital val → 59.72 % hybrid test) comes from this class of
-  effects.
+  (69.84 % digital val → 59.72 % hybrid test) comes from this stack.
+* arbitrary named subsets — ``fidelity.pipeline(SLMQuantize(), ...)`` —
+  power the ablation benchmark's stage-by-stage decomposition and
+  per-tenant mixed-fidelity serving.
+
+Migration: ``STHCConfig(mode="ideal"|"physical")`` survives as a thin
+deprecated alias mapping to the matching preset (with a
+``DeprecationWarning``); outputs are bit-identical (pinned tests).  New
+code passes ``STHCConfig(fidelity=...)``.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import jax
 
-from repro.core import atomic, optics
+from repro.core import atomic, fidelity as fidelity_mod, optics
 from repro.core.engine import FusedGrating, GratingCache, QueryEngine, default_cache
+from repro.core.fidelity import FidelityPipeline
 
 Array = jax.Array
 
@@ -50,7 +57,13 @@ Grating = FusedGrating
 
 @dataclasses.dataclass(frozen=True)
 class STHCConfig:
-    mode: str = "ideal"  # 'ideal' | 'physical'
+    # DEPRECATED: the two-way fidelity switch.  Maps to the matching
+    # pipeline preset with a DeprecationWarning; use ``fidelity=``.
+    mode: str | None = None
+    # The fidelity pipeline — an ordered stack of typed physics stages
+    # (repro.core.fidelity).  None resolves to fidelity.ideal() (or to
+    # the preset named by the deprecated ``mode``).
+    fidelity: FidelityPipeline | None = None
     slm: optics.SLMConfig = dataclasses.field(default_factory=optics.SLMConfig)
     atoms: atomic.AtomicConfig = dataclasses.field(default_factory=atomic.AtomicConfig)
     use_pallas: bool = False  # route the spectral MAC through kernels/stmul
@@ -59,8 +72,17 @@ class STHCConfig:
     # None = kernel default (MIN_MXU_C); tune from the kernels_bench sweep
     # on real TPU without touching kernel code.
     stmul_min_mxu_c: int | None = None
+    # stmul tile sizes (None = kernel defaults BLOCK_B/BLOCK_O/BLOCK_F).
+    # block_f must stay a multiple of 128 (lane width); tune from the
+    # kernels_bench tile sweep on real TPU without touching kernel code.
+    stmul_block_b: int | None = None
+    stmul_block_o: int | None = None
+    stmul_block_f: int | None = None
     storage_interval_s: float = 0.0  # T_Q − T_P (echo-efficiency factor)
-    compensate_pulse: bool = True  # divide out the recording-pulse spectrum
+    # DEPRECATED alongside ``mode``: with the deprecated alias it selects
+    # the physical preset's PulseCompensate(compensate=...) stage; with an
+    # explicit ``fidelity`` pipeline, pass the stage parameter instead.
+    compensate_pulse: bool = True
     fused: bool = True  # single-FFT fused query (False = two-query reference)
     cache_gratings: bool = True  # memoize record() by kernel content hash
     # Keep the raw ± gratings alongside the effective one at record time.
@@ -73,14 +95,40 @@ class STHCConfig:
     osave_chunk_windows: int = 1
 
     def __post_init__(self):
-        # The engine branches `mode == "ideal"` / else-physical, so an
-        # unrecognized string would silently serve the full physical
-        # model — fail loudly at construction instead.
-        if self.mode not in ("ideal", "physical"):
-            raise ValueError(
-                f"STHCConfig.mode must be 'ideal' or 'physical', "
-                f"got {self.mode!r}"
+        if self.mode is not None:
+            # validate first (raises on unknown strings), then warn
+            preset = fidelity_mod.from_mode(
+                self.mode, compensate_pulse=self.compensate_pulse
             )
+            warnings.warn(
+                "STHCConfig(mode=...) is deprecated; pass "
+                "fidelity=fidelity.ideal() / fidelity.physical() (or an "
+                "arbitrary stage pipeline) instead",
+                DeprecationWarning,
+                stacklevel=3,
+            )
+            if (
+                self.fidelity is not None
+                and self.fidelity.fingerprint() != preset.fingerprint()
+            ):
+                raise ValueError(
+                    "pass either the deprecated mode or an explicit "
+                    "fidelity pipeline, not two that disagree "
+                    f"(mode={self.mode!r} vs {self.fidelity.describe()!r})"
+                )
+            object.__setattr__(self, "fidelity", preset)
+        else:
+            if not self.compensate_pulse:
+                # loud, not silent: the legacy knob only acts through the
+                # deprecated mode alias — whether a pipeline was given
+                # explicitly or defaulted, the stage parameter governs
+                raise ValueError(
+                    "compensate_pulse only applies to the deprecated mode "
+                    "alias; pass a fidelity pipeline with "
+                    "PulseCompensate(compensate=False) instead"
+                )
+            if self.fidelity is None:
+                object.__setattr__(self, "fidelity", fidelity_mod.ideal())
 
 
 class STHC:
@@ -100,8 +148,9 @@ class STHC:
     ) -> Grating:
         """Store a kernel stack (O, C, kh, kw, kt) for signals (H, W, T).
 
-        Cached by kernel content when ``cache_gratings`` is set and the
-        kernels are concrete (i.e. not traced under ``jit``).
+        Cached by kernel content + pipeline fingerprint when
+        ``cache_gratings`` is set and the kernels are concrete (i.e. not
+        traced under ``jit``).
         """
         if self.config.cache_gratings:
             return self._cache.get_or_record(self.engine, kernels, signal_shape)
@@ -122,14 +171,14 @@ class STHC:
         """Streaming (overlap-save) correlation over a long time axis.
 
         Records the grating once (cached) at the coherence-window FFT
-        geometry — only the FFT numerics; the recorded physics (IHB and
-        pulse envelopes) live on the kernel's own kt-point grid and are
-        query-geometry-independent — then pushes ``x`` (B, C, H, W, T)
-        through the engine's overlap-save driver;
+        geometry — only the FFT numerics; the recorded physics (the
+        pipeline's record-time stages) live on the kernel's own kt-point
+        grid and are query-geometry-independent — then pushes ``x``
+        (B, C, H, W, T) through the engine's overlap-save driver;
         ``osave_chunk_windows`` windows are correlated per step as one
-        vmap'd batch.  Physical encoding uses a stream-global SLM scale
-        (one modulator dynamic range for the whole stream), which makes
-        the streaming output match the one-shot physical correlation
+        vmap'd batch.  Query-time encoding uses a stream-global SLM
+        scale (one modulator dynamic range for the whole stream), which
+        makes the streaming output match the one-shot correlation
         (tested at the paper geometry).
         """
         H, W = x.shape[-3:-1]

@@ -21,12 +21,29 @@ def _use_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _tile_kwargs(
+    block_b: int | None, block_o: int | None, block_f: int | None
+) -> dict:
+    """Translate None (= kernel default) tile overrides into kwargs."""
+    tiles = {}
+    if block_b is not None:
+        tiles["block_b"] = int(block_b)
+    if block_o is not None:
+        tiles["block_o"] = int(block_o)
+    if block_f is not None:
+        tiles["block_f"] = int(block_f)
+    return tiles
+
+
 def spectral_mac(
     xhat: Array,
     grating: Array,
     *,
     version: int = 2,
     min_mxu_c: int | None = None,
+    block_b: int | None = None,
+    block_o: int | None = None,
+    block_f: int | None = None,
     **tile_kwargs,
 ) -> Array:
     """Complex channel-contracted spectral product via the Pallas kernel.
@@ -36,9 +53,19 @@ def spectral_mac(
       version: stmul kernel generation (see kernel.py).
       min_mxu_c: v2 MXU routing threshold override (None = kernel
         default) — the real-TPU tuning knob.
+      block_b / block_o / block_f: tile-size overrides (None = kernel
+        defaults ``BLOCK_B``/``BLOCK_O``/``BLOCK_F``); ``block_f`` must
+        stay a multiple of 128 (lane width).  Surfaced as
+        ``STHCConfig.stmul_block_*`` and swept in
+        ``benchmarks/kernels_bench.py`` so real-TPU tile tuning needs no
+        code change.
 
     Returns (B, O, *F) complex64.
     """
+    tile_kwargs = {
+        **_tile_kwargs(block_b, block_o, block_f),
+        **tile_kwargs,
+    }
     fshape = xhat.shape[2:]
     B, C = xhat.shape[:2]
     O = grating.shape[0]
@@ -68,9 +95,20 @@ def query_grating_pallas(
     *,
     version: int = 2,
     min_mxu_c: int | None = None,
+    block_b: int | None = None,
+    block_o: int | None = None,
+    block_f: int | None = None,
 ) -> Array:
     """Drop-in replacement for spectral_conv.query_grating using the kernel."""
     xhat = jnp.fft.rfftn(x, s=fft_shape, axes=(-3, -2, -1))
-    yhat = spectral_mac(xhat, grating, version=version, min_mxu_c=min_mxu_c)
+    yhat = spectral_mac(
+        xhat,
+        grating,
+        version=version,
+        min_mxu_c=min_mxu_c,
+        block_b=block_b,
+        block_o=block_o,
+        block_f=block_f,
+    )
     y = jnp.fft.irfftn(yhat, s=fft_shape, axes=(-3, -2, -1))
     return y[..., : out_shape[0], : out_shape[1], : out_shape[2]]

@@ -8,14 +8,21 @@ Two serving modes, matching the paper's system and the LM zoo:
    recorded into one shared content-hash :class:`GratingCache` with an
    LRU budget in entries *and* grating bytes.  Long query streams are
    pushed through the engine's coherence-window overlap-save path
-   (``QueryEngine.query_stream``) in either fidelity mode — ``ideal``
-   or ``physical`` (SLM quantization, ± channels, IHB/T2 envelopes,
-   stream-global SLM scale).  Evicted tenants re-record transparently
-   on their next query (a cache miss), exactly like re-writing the
-   atomic medium.  Concurrent streams batch two ways: same-shape
-   requests stack on the batch axis (`search_batch`), and each stream's
-   coherence windows run ``chunk_windows`` at a time as one vmap'd
-   batch.  `metrics()` reports cache hits/misses/evictions/bytes and
+   (``QueryEngine.query_stream``).  Fidelity is **per tenant**: each
+   kernel set registers with its own
+   :class:`~repro.core.fidelity.FidelityPipeline` (``add_tenant`` /
+   ``add_kernel_set``, default = the server's
+   ``VideoSearchConfig.fidelity``), the server keeps one mode-agnostic
+   engine per distinct pipeline fingerprint, and the shared cache keys
+   every grating on that fingerprint — so one server instance serves
+   e.g. an ``ideal()`` tenant next to a full ``physical()`` tenant (or
+   any stage subset) with no cross-fidelity cache hits.  Evicted
+   tenants re-record transparently on their next query (a cache miss),
+   exactly like re-writing the atomic medium.  Concurrent streams
+   batch two ways: same-shape requests stack on the batch axis
+   (`search_batch`), and each stream's coherence windows run
+   ``chunk_windows`` at a time as one vmap'd batch.  `metrics()`
+   reports cache hits/misses/evictions/bytes, per-tenant fidelity, and
    measured windows/s + frames/s against the paper's projected loader
    rates (`core.throughput`).
 
@@ -29,6 +36,7 @@ import argparse
 import dataclasses
 import threading
 import time
+import warnings
 from typing import Any, Sequence
 
 import jax
@@ -36,8 +44,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
+from repro.core import fidelity as fidelity_mod
 from repro.core import hybrid, throughput
 from repro.core.engine import GratingCache
+from repro.core.fidelity import FidelityPipeline
 from repro.core.sthc import STHC, STHCConfig
 from repro.models import model_api
 
@@ -56,20 +66,27 @@ class VideoSearchConfig:
     Attributes:
       window_frames: coherence window T2 (frames) — the streaming FFT
         geometry every tenant is recorded at.
-      mode: STHC fidelity, ``'ideal'`` or ``'physical'`` (SLM
-        quantization, ± channels, IHB/T2 envelopes; queries encoded with
-        a stream-global SLM scale).
+      mode: DEPRECATED two-way fidelity switch (``'ideal'`` |
+        ``'physical'``); maps to the matching pipeline preset with a
+        ``DeprecationWarning``.  Use ``fidelity=``.
+      fidelity: the server's *default* fidelity pipeline — the stack of
+        typed physics stages (:mod:`repro.core.fidelity`) tenants record
+        and query through unless they register with their own
+        (``add_tenant(..., fidelity=...)``).  None = ``ideal()``.
       chunk_windows: coherence windows correlated per step as one vmap'd
         batch (batched FFTs); 1 = strictly sequential, minimum peak
         memory.
       cache_entries / cache_bytes: LRU budget of the shared grating
         cache, in recorded kernel sets and in grating bytes (None = no
-        byte cap).  Eviction re-records on the next query.
+        byte cap).  Eviction re-records on the next query.  The cache is
+        shared *across fidelities*: keys include the pipeline
+        fingerprint, so mixed-fidelity tenants never cross-hit.
       use_pallas: route the spectral MAC through the stmul kernel.
     """
 
     window_frames: int = 64
-    mode: str = "ideal"
+    mode: str | None = None
+    fidelity: FidelityPipeline | None = None
     chunk_windows: int = 4
     cache_entries: int = 8
     cache_bytes: int | None = None
@@ -91,6 +108,14 @@ class _Tenant:
     # key was hashed for, not whatever cfg says now
     signal_shape: tuple[int, int, int] | None = None
     key: tuple | None = None  # cache key, hashed once at registration
+    # the tenant's correlator: one per fidelity fingerprint, pooled on
+    # the server, all sharing the server's grating cache
+    sthc: STHC | None = None
+    # display label of the pipeline *as registered* — engines pool by
+    # fingerprint (names excluded), so metrics must not read a label off
+    # the shared engine: two same-physics pipelines with different names
+    # would report the first registrant's name for both
+    fidelity_label: str = ""
     queries: int = 0
     windows: int = 0
     frames: int = 0
@@ -123,18 +148,14 @@ class VideoSearchServer:
         self.cache = GratingCache(
             max_entries=cfg.cache_entries, max_bytes=cfg.cache_bytes
         )
-        self.sthc = STHC(
-            STHCConfig(
-                mode=cfg.mode,
-                use_pallas=cfg.use_pallas,
-                osave_chunk_windows=cfg.chunk_windows,
-                # serving never runs the unfused ± reference path: drop
-                # the raw stack so each cached grating charges only its
-                # hot-path bytes against cache_bytes.
-                keep_stacked=False,
-            ),
-            cache=self.cache,
-        )
+        # one mode-agnostic engine per distinct pipeline fingerprint, all
+        # sharing the one grating cache (mixed-fidelity serving)
+        self._sthcs: dict[str, STHC] = {}
+        self._pool_lock = threading.Lock()
+        self._default_fidelity = self._resolve_cfg_fidelity(cfg)
+        # the default-fidelity correlator, kept as an attribute for
+        # introspection and the LM/video demo drivers
+        self.sthc = self._sthc_for(self._default_fidelity)
         self._tenants: dict[str, _Tenant] = {}
         # traffic from removed/replaced tenants — server-wide totals and
         # the measured-vs-projected rates must survive tenant churn
@@ -145,12 +166,67 @@ class VideoSearchServer:
         if kernels is not None:
             self.add_tenant("default", kernels)
 
+    # -- engine pool (one per fidelity fingerprint) -------------------------
+
+    @staticmethod
+    def _resolve_cfg_fidelity(cfg: VideoSearchConfig) -> FidelityPipeline:
+        if cfg.fidelity is not None:
+            if cfg.mode is not None:
+                raise ValueError(
+                    "pass either the deprecated VideoSearchConfig.mode or "
+                    "fidelity, not both"
+                )
+            return cfg.fidelity
+        if cfg.mode is not None:
+            pipe = fidelity_mod.from_mode(cfg.mode)  # raises on bad strings
+            warnings.warn(
+                "VideoSearchConfig(mode=...) is deprecated; pass "
+                "fidelity=fidelity.ideal() / fidelity.physical() instead",
+                DeprecationWarning,
+                stacklevel=3,
+            )
+            return pipe
+        return fidelity_mod.ideal()
+
+    def _sthc_for(self, pipe: FidelityPipeline) -> STHC:
+        """The pooled correlator serving one fidelity pipeline — engines
+        are keyed by the pipeline *fingerprint* (display names don't
+        split the pool), created lazily, and all share ``self.cache``."""
+        fp = pipe.fingerprint()
+        with self._pool_lock:
+            sthc = self._sthcs.get(fp)
+            if sthc is None:
+                sthc = STHC(
+                    STHCConfig(
+                        fidelity=pipe,
+                        use_pallas=self.cfg.use_pallas,
+                        osave_chunk_windows=self.cfg.chunk_windows,
+                        # serving never runs the unfused ± reference
+                        # path: drop the raw stack so each cached grating
+                        # charges only its hot-path bytes against
+                        # cache_bytes.
+                        keep_stacked=False,
+                    ),
+                    cache=self.cache,
+                )
+                self._sthcs[fp] = sthc
+        return sthc
+
     # -- tenant management -------------------------------------------------
 
     def add_tenant(
-        self, name: str, kernels: jax.Array | np.ndarray
+        self,
+        name: str,
+        kernels: jax.Array | np.ndarray,
+        fidelity: FidelityPipeline | None = None,
     ) -> "VideoSearchServer":
-        """Register a reference kernel set and record it into the cache."""
+        """Register a reference kernel set and record it into the cache.
+
+        ``fidelity`` selects this kernel set's physics pipeline (None =
+        the server default): tenants at different fidelities coexist on
+        one server, one shared cache — the cache key's pipeline
+        fingerprint keeps their gratings apart.
+        """
         kt = int(kernels.shape[-1])
         if self.cfg.window_frames <= kt - 1:
             raise ValueError(
@@ -173,14 +249,20 @@ class VideoSearchServer:
         # buffer afterwards can't desync the stored bytes from the
         # content-hash key computed below
         kernels = np.array(kernels)
+        pipe = fidelity if fidelity is not None else self._default_fidelity
+        sthc = self._sthc_for(pipe)
         signal_shape = self._signal_shape()
-        key = GratingCache.key_for(kernels, signal_shape, self.sthc.config)
+        # the key carries this tenant's pipeline fingerprint: identical
+        # kernel bytes under another fidelity hash to a different entry
+        key = GratingCache.key_for(kernels, signal_shape, sthc.config)
         ten = _Tenant(
             kernels=kernels,
             kt=kt,
             channels=int(kernels.shape[1]),
             signal_shape=signal_shape,
             key=key,
+            sthc=sthc,
+            fidelity_label=pipe.describe(),
         )
         with self._lock:
             old = self._tenants.pop(name, None)
@@ -196,6 +278,10 @@ class VideoSearchServer:
         # invalidate the lookup mid-warm
         self._fetch_grating(name, ten)
         return self
+
+    # The serving-API name for tenant registration: a tenant *is* a named
+    # kernel set (+ its fidelity pipeline) recorded into the shared cache.
+    add_kernel_set = add_tenant
 
     def remove_tenant(self, name: str) -> None:
         """Drop a tenant; free its grating unless another tenant (with
@@ -241,7 +327,7 @@ class VideoSearchServer:
         fetch must not leave an orphan grating charged against the
         shared LRU budget."""
         grating = self.cache.get_or_record(
-            self.sthc.engine,
+            ten.sthc.engine,  # the tenant's own-fidelity engine
             ten.kernels,
             # re-record at the geometry the key was hashed for, not the
             # live (mutable) cfg's current value
@@ -324,12 +410,12 @@ class VideoSearchServer:
             )
             t0 = time.time()
             grating = self._fetch_grating(tenant, ten)
-            fmap = self.sthc.engine.query_stream(grating, clips)
+            fmap = ten.sthc.engine.query_stream(grating, clips)
             fmap = jax.block_until_ready(fmap)  # honest serving latency
             dt = time.time() - t0
             # the exact plan the correlation ran under (derived from the
             # grating's recorded geometry, not the live cfg)
-            plan = self.sthc.engine.stream_plan_for(grating, clips.shape[-1])
+            plan = ten.sthc.engine.stream_plan_for(grating, clips.shape[-1])
             n_streams = clips.shape[0]
             with self._lock:
                 # the snapshot tenant may have been removed/retired during
@@ -370,6 +456,7 @@ class VideoSearchServer:
         with self._lock:
             per_tenant = {
                 name: {
+                    "fidelity": t.fidelity_label,
                     "queries": t.queries,
                     "windows": t.windows,
                     "frames": t.frames,
@@ -416,10 +503,14 @@ class HybridClassifierServer:
     """Serve the trained hybrid 3-D CNN with the STHC conv backend."""
 
     def __init__(self, params: PyTree, cfg: hybrid.HybridConfig,
-                 physical: bool = True):
+                 physical: bool = True,
+                 fidelity: FidelityPipeline | None = None):
         self.cfg = cfg
-        mode = "physical" if physical else "ideal"
-        self.sthc = STHC(STHCConfig(mode=mode))
+        if fidelity is None:
+            fidelity = (
+                fidelity_mod.physical() if physical else fidelity_mod.ideal()
+            )
+        self.sthc = STHC(STHCConfig(fidelity=fidelity))
         # record once: the kernels live in the atomic medium
         self.grating = self.sthc.record(
             params["conv_w"], (cfg.height, cfg.width, cfg.frames)
@@ -519,16 +610,21 @@ def main() -> None:
     if args.mode == "video":
         rng = np.random.RandomState(0)
         server = VideoSearchServer(frame_hw=(24, 32))
-        for name in ("events-a", "events-b"):
-            server.add_tenant(
-                name, jnp.asarray(rng.randn(4, 1, 12, 16, 8).astype(np.float32))
-            )
+        kernels = jnp.asarray(rng.randn(4, 1, 12, 16, 8).astype(np.float32))
+        # two tenants, two fidelities, one server + one shared cache
+        server.add_kernel_set("events-ideal", kernels)
+        server.add_kernel_set(
+            "events-physical", kernels, fidelity=fidelity_mod.physical()
+        )
         clip = jnp.asarray(rng.rand(2, 1, 24, 32, args.frames).astype(np.float32))
-        outs = server.search_batch([("events-a", clip), ("events-b", clip)])
+        outs = server.search_batch(
+            [("events-ideal", clip), ("events-physical", clip)]
+        )
         for out in outs:
+            fid = server.metrics()["tenants"][out["tenant"]]["fidelity"]
             print(
-                f"[{out['tenant']}] searched {args.frames} frames in "
-                f"{out['windows']} coherence windows, "
+                f"[{out['tenant']} ({fid})] searched {args.frames} frames "
+                f"in {out['windows']} coherence windows, "
                 f"latency {out['latency_s']:.3f}s"
             )
             print("  scores:", np.round(out["scores"], 2))

@@ -8,6 +8,7 @@ import numpy as np
 import pytest
 
 from repro.core import spectral_conv as sc
+from repro.core import fidelity as fid
 from repro.core.engine import GratingCache, QueryEngine
 from repro.core.sthc import STHC, STHCConfig
 from repro.kernels.stmul import ops as stmul_ops, ref as stmul_ref
@@ -27,7 +28,7 @@ def _kernels(rng, O=3, C=1, kh=7, kw=9, kt=4):
 def test_fused_equals_unfused_reference(rng):
     x = _clips(rng)
     k = _kernels(rng)
-    sthc = STHC(STHCConfig(mode="physical"))
+    sthc = STHC(STHCConfig(fidelity=fid.physical()))
     grating = sthc.record(k, x.shape[-3:])
     y_fused = sthc.engine.query(grating, x)
     y_ref = sthc.engine.query_unfused(grating, x)
@@ -39,7 +40,7 @@ def test_fused_equals_unfused_paper_geometry(rng):
     """Acceptance geometry: the paper's 30×40×8 kernels on 60×80×16 clips."""
     x = _clips(rng, B=1, H=60, W=80, T=16)
     k = _kernels(rng, O=9, kh=30, kw=40, kt=8)
-    sthc = STHC(STHCConfig(mode="physical"))
+    sthc = STHC(STHCConfig(fidelity=fid.physical()))
     grating = sthc.record(k, x.shape[-3:])
     y_fused = sthc.engine.query(grating, x)
     y_ref = sthc.engine.query_unfused(grating, x)
@@ -50,8 +51,8 @@ def test_fused_equals_unfused_paper_geometry(rng):
 def test_fused_pallas_path_matches(rng):
     x = _clips(rng)
     k = _kernels(rng)
-    ref = STHC(STHCConfig(mode="physical"))(k, x)
-    got = STHC(STHCConfig(mode="physical", use_pallas=True))(k, x)
+    ref = STHC(STHCConfig(fidelity=fid.physical()))(k, x)
+    got = STHC(STHCConfig(fidelity=fid.physical(), use_pallas=True))(k, x)
     rel = float(jnp.linalg.norm(got - ref) / jnp.linalg.norm(ref))
     assert rel <= 1e-4, rel
 
@@ -59,7 +60,7 @@ def test_fused_pallas_path_matches(rng):
 def test_ideal_fused_is_exact(rng):
     x = _clips(rng)
     k = _kernels(rng)
-    y = STHC(STHCConfig(mode="ideal"))(k, x)
+    y = STHC(STHCConfig(fidelity=fid.ideal()))(k, x)
     ref = sc.direct_correlate3d(x, k, "valid")
     np.testing.assert_allclose(y, ref, atol=1e-4 * float(jnp.max(jnp.abs(ref))))
 
@@ -83,7 +84,7 @@ def _count_ffts(jaxpr, kind: str) -> int:
 def test_fused_physical_query_computes_one_forward_fft(rng):
     x = _clips(rng)
     k = _kernels(rng)
-    sthc = STHC(STHCConfig(mode="physical"))
+    sthc = STHC(STHCConfig(fidelity=fid.physical()))
     grating = sthc.record(k, x.shape[-3:])
     fused = jax.make_jaxpr(lambda x: sthc.engine.query(grating, x))(x)
     assert _count_ffts(fused.jaxpr, "RFFT") == 1
@@ -100,7 +101,7 @@ def test_cache_hits_on_identical_kernels(rng):
     cache = GratingCache()
     x = _clips(rng)
     k = _kernels(rng)
-    sthc = STHC(STHCConfig(mode="physical"), cache=cache)
+    sthc = STHC(STHCConfig(fidelity=fid.physical()), cache=cache)
     y1 = sthc(k, x)
     y2 = sthc(k, x)
     assert cache.misses == 1 and cache.hits == 1
@@ -117,8 +118,8 @@ def test_cache_key_separates_configs(rng):
     cache = GratingCache()
     x = _clips(rng)
     k = _kernels(rng)
-    y_phys = STHC(STHCConfig(mode="physical"), cache=cache)(k, x)
-    y_ideal = STHC(STHCConfig(mode="ideal"), cache=cache)(k, x)
+    y_phys = STHC(STHCConfig(fidelity=fid.physical()), cache=cache)(k, x)
+    y_ideal = STHC(STHCConfig(fidelity=fid.ideal()), cache=cache)(k, x)
     assert cache.misses == 2 and cache.hits == 0
     assert float(jnp.max(jnp.abs(y_phys - y_ideal))) > 0
 
@@ -129,9 +130,9 @@ def test_cache_ignores_query_only_knobs(rng):
     cache = GratingCache()
     x = _clips(rng)
     k = _kernels(rng)
-    STHC(STHCConfig(mode="physical"), cache=cache)(k, x)
+    STHC(STHCConfig(fidelity=fid.physical()), cache=cache)(k, x)
     STHC(
-        STHCConfig(mode="physical", use_pallas=True, osave_chunk_windows=4),
+        STHCConfig(fidelity=fid.physical(), use_pallas=True, osave_chunk_windows=4),
         cache=cache,
     )(k, x)
     assert cache.misses == 1 and cache.hits == 1
@@ -141,7 +142,7 @@ def test_ideal_grating_holds_single_tensor(rng):
     """Ideal mode has no ± stack; long-lived serving gratings must not
     retain redundant copies (stacked is None, plus aliases effective)."""
     k = _kernels(rng)
-    g = QueryEngine(STHCConfig(mode="ideal")).record(k, (20, 24, 10))
+    g = QueryEngine(STHCConfig(fidelity=fid.ideal())).record(k, (20, 24, 10))
     assert g.stacked is None and g.minus is None
     assert g.plus is g.effective
 
@@ -150,7 +151,7 @@ def test_cache_bypassed_under_tracing(rng):
     cache = GratingCache()
     x = _clips(rng)
     k = _kernels(rng)
-    sthc = STHC(STHCConfig(mode="physical"), cache=cache)
+    sthc = STHC(STHCConfig(fidelity=fid.physical()), cache=cache)
 
     @jax.jit
     def run(k, x):
@@ -158,14 +159,14 @@ def test_cache_bypassed_under_tracing(rng):
 
     y = run(k, x)
     assert cache.misses == 0 and cache.hits == 0 and len(cache) == 0
-    ref = STHC(STHCConfig(mode="physical"))(k, x)
+    ref = STHC(STHCConfig(fidelity=fid.physical()))(k, x)
     np.testing.assert_allclose(y, ref, rtol=0, atol=1e-5 * float(jnp.max(jnp.abs(ref))))
 
 
 def test_cache_lru_eviction(rng):
     cache = GratingCache(max_entries=2)
     x = _clips(rng)
-    sthc = STHC(STHCConfig(mode="ideal"), cache=cache)
+    sthc = STHC(STHCConfig(fidelity=fid.ideal()), cache=cache)
     ks = [_kernels(np.random.RandomState(i)) for i in range(3)]
     for k in ks:
         sthc(k, x)
@@ -181,7 +182,7 @@ def test_cache_inflight_dedup_concurrent_misses(rng):
     import time as _time
 
     cache = GratingCache(max_entries=4)
-    eng = QueryEngine(STHCConfig(mode="ideal"))
+    eng = QueryEngine(STHCConfig(fidelity=fid.ideal()))
     k = _kernels(rng)
     calls = []
     orig = eng.record
@@ -260,7 +261,7 @@ def test_batched_overlap_save_equals_one_shot(T, chunk, rng):
     x = jnp.asarray(rng.rand(1, 1, 10, 12, T).astype(np.float32))
     k = jnp.asarray(rng.randn(2, 1, 3, 4, 3).astype(np.float32))
     ref = sc.direct_correlate3d(x, k, mode="valid")
-    sthc = STHC(STHCConfig(mode="ideal", osave_chunk_windows=chunk))
+    sthc = STHC(STHCConfig(fidelity=fid.ideal(), osave_chunk_windows=chunk))
     got = sthc.correlate_stream(k, x, block_t=7)
     np.testing.assert_allclose(
         got, ref, atol=2e-4 * float(jnp.max(jnp.abs(ref))) + 1e-5
@@ -271,7 +272,7 @@ def test_correlate_stream_uses_cache_and_chunks(rng):
     cache = GratingCache()
     x = jnp.asarray(rng.rand(1, 1, 10, 12, 29).astype(np.float32))
     k = jnp.asarray(rng.randn(2, 1, 3, 4, 3).astype(np.float32))
-    sthc = STHC(STHCConfig(mode="ideal", osave_chunk_windows=3), cache=cache)
+    sthc = STHC(STHCConfig(fidelity=fid.ideal(), osave_chunk_windows=3), cache=cache)
     ref = sc.direct_correlate3d(x, k, mode="valid")
     got = sthc.correlate_stream(k, x, block_t=8)
     np.testing.assert_allclose(
@@ -293,8 +294,8 @@ def test_streaming_physical_equals_one_shot_paper_geometry(T, chunk, rng):
     experiments validate."""
     x = jnp.asarray(rng.rand(1, 1, 60, 80, T).astype(np.float32))
     k = jnp.asarray(rng.randn(9, 1, 30, 40, 8).astype(np.float32))
-    ref = STHC(STHCConfig(mode="physical"))(k, x)
-    sthc = STHC(STHCConfig(mode="physical", osave_chunk_windows=chunk))
+    ref = STHC(STHCConfig(fidelity=fid.physical()))(k, x)
+    sthc = STHC(STHCConfig(fidelity=fid.physical(), osave_chunk_windows=chunk))
     got = sthc.correlate_stream(k, x, block_t=16)
     rel = float(jnp.linalg.norm(got - ref) / jnp.linalg.norm(ref))
     assert rel <= 1e-4, rel
@@ -304,9 +305,9 @@ def test_streaming_physical_small_geometry_ragged(rng):
     """Same property off the paper grid: ragged T vs block, odd shapes."""
     x = jnp.asarray(rng.rand(2, 1, 20, 24, 29).astype(np.float32))
     k = jnp.asarray(rng.randn(3, 1, 7, 9, 4).astype(np.float32))
-    ref = STHC(STHCConfig(mode="physical"))(k, x)
+    ref = STHC(STHCConfig(fidelity=fid.physical()))(k, x)
     got = STHC(
-        STHCConfig(mode="physical", osave_chunk_windows=3)
+        STHCConfig(fidelity=fid.physical(), osave_chunk_windows=3)
     ).correlate_stream(k, x, block_t=11)
     rel = float(jnp.linalg.norm(got - ref) / jnp.linalg.norm(ref))
     assert rel <= 1e-4, rel
@@ -314,7 +315,7 @@ def test_streaming_physical_small_geometry_ragged(rng):
 
 def test_query_stream_rejects_mismatched_frame_size(rng):
     k = jnp.asarray(rng.randn(2, 1, 3, 4, 3).astype(np.float32))
-    sthc = STHC(STHCConfig(mode="ideal"))
+    sthc = STHC(STHCConfig(fidelity=fid.ideal()))
     grating = sthc.record(k, (12, 12, 8))
     with pytest.raises(ValueError, match="spatial dims"):
         sthc.engine.query_stream(grating, jnp.zeros((1, 1, 16, 16, 20)))
@@ -338,10 +339,10 @@ def test_video_server_serves_physical_mode(rng):
     k = jnp.asarray(rng.randn(2, 1, 3, 4, 3).astype(np.float32))
     clip = jnp.asarray(rng.rand(1, 1, 12, 12, 20).astype(np.float32))
     server = VideoSearchServer(
-        k, (12, 12), VideoSearchConfig(window_frames=8, mode="physical")
+        k, (12, 12), VideoSearchConfig(window_frames=8, fidelity=fid.physical())
     )
     out = server.search(clip)
-    ref = STHC(STHCConfig(mode="physical"))(k, clip)
+    ref = STHC(STHCConfig(fidelity=fid.physical()))(k, clip)
     want = np.asarray(jnp.max(ref.reshape(1, 2, -1), axis=-1))
     np.testing.assert_allclose(out["scores"], want, rtol=1e-4)
 
@@ -374,9 +375,9 @@ def test_stmul_min_mxu_c_routed_from_config(rng):
     route through the engine still matches the jnp path."""
     x = _clips(rng, C=3)
     k = _kernels(rng, C=3)
-    ref = STHC(STHCConfig(mode="physical"))(k, x)
+    ref = STHC(STHCConfig(fidelity=fid.physical()))(k, x)
     got = STHC(
-        STHCConfig(mode="physical", use_pallas=True, stmul_min_mxu_c=1)
+        STHCConfig(fidelity=fid.physical(), use_pallas=True, stmul_min_mxu_c=1)
     )(k, x)
     rel = float(jnp.linalg.norm(got - ref) / jnp.linalg.norm(ref))
     assert rel <= 1e-4, rel
@@ -389,7 +390,7 @@ def test_engine_record_query_jit_friendly(rng):
     """record + query compose under jit (grating as closed-over constant)."""
     x = _clips(rng)
     k = _kernels(rng)
-    engine = QueryEngine(STHCConfig(mode="physical"))
+    engine = QueryEngine(STHCConfig(fidelity=fid.physical()))
     grating = engine.record(k, x.shape[-3:])
     eager = engine.query(grating, x)
     jitted = jax.jit(lambda x: engine.query(grating, x))(x)

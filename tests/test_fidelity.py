@@ -1,0 +1,492 @@
+"""FidelityPipeline redesign: pinned bit-equivalence against the
+pre-redesign mode paths, the deprecated-mode shim, stage-subset
+semantics, fingerprint-keyed mixed-fidelity caching, per-tenant
+mixed-fidelity serving, and the stmul tile-size knobs."""
+
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import atomic, fidelity as fid, optics, pseudo_negative
+from repro.core import spectral_conv as sc
+from repro.core.engine import GratingCache, QueryEngine
+from repro.core.sthc import STHC, STHCConfig
+
+
+def _paper_data(rng, B=1, T=16):
+    x = jnp.asarray(rng.rand(B, 1, 60, 80, T).astype(np.float32))
+    k = jnp.asarray(rng.randn(9, 1, 30, 40, 8).astype(np.float32))
+    return x, k
+
+
+def _small_data(rng, B=2, T=10):
+    x = jnp.asarray(rng.rand(B, 1, 20, 24, T).astype(np.float32))
+    k = jnp.asarray(rng.randn(3, 1, 7, 9, 4).astype(np.float32))
+    return x, k
+
+
+# -- pinned equivalence: presets ≡ the pre-redesign mode paths ---------------
+# The references below are verbatim replicas of the seed engine's two
+# `mode` branches (record + fused query), so the pipeline redesign is
+# pinned bit-for-bit against the code it replaced.
+
+
+def _legacy_physical(kernels, x, *, slm_bits=8, atoms=None,
+                     storage_interval_s=0.0, compensate_pulse=True):
+    atoms = atoms or atomic.AtomicConfig()
+    ker_shape = kernels.shape[-3:]
+    fft_shape = sc.fft_shape_for(x.shape[-3:], ker_shape)
+    out_shape = sc.valid_shape(x.shape[-3:], ker_shape)
+    k_plus, k_minus = pseudo_negative.split(kernels)
+    scale = jnp.max(jnp.abs(kernels), axis=(1, 2, 3, 4), keepdims=True)
+    scale = jnp.where(scale > 0, scale, 1.0)
+    decay = atomic.t2_tap_weights(ker_shape[-1], atoms, storage_interval_s)
+    q = lambda k: optics.quantize_unit(k / scale, slm_bits) * decay
+    kt = int(ker_shape[-1])
+    h_t = atomic.photon_echo_transfer(kt, atoms)
+    p_t = optics.temporal_pulse_spectrum(kt)
+    h_t = h_t * p_t
+    if compensate_pulse:
+        h_t = h_t / jnp.maximum(p_t, 1e-3)
+
+    def band(k):
+        spec = jnp.fft.fft(k, axis=-1) * h_t
+        return jnp.real(jnp.fft.ifft(spec, axis=-1))
+
+    g_plus = sc.make_grating(band(q(k_plus)), fft_shape)
+    g_minus = sc.make_grating(band(q(k_minus)), fft_shape)
+    gain = atomic.echo_efficiency(atoms, storage_interval_s)
+    effective = (g_plus - g_minus) * scale * gain
+    xe = jnp.maximum(x, 0.0)
+    xs = jnp.max(xe, axis=(1, 2, 3, 4), keepdims=True)
+    xs = jnp.where(xs > 0, xs, 1.0)
+    enc = optics.quantize_unit(xe / xs, slm_bits)
+    return sc.query_grating(enc, effective, fft_shape, out_shape) * xs
+
+
+def _legacy_ideal(kernels, x):
+    ker_shape = kernels.shape[-3:]
+    fft_shape = sc.fft_shape_for(x.shape[-3:], ker_shape)
+    out_shape = sc.valid_shape(x.shape[-3:], ker_shape)
+    grating = sc.make_grating(kernels, fft_shape)
+    return sc.query_grating(x, grating, fft_shape, out_shape)
+
+
+def test_physical_preset_bitmatches_legacy_path_paper_geometry(rng):
+    x, k = _paper_data(rng)
+    got = STHC(STHCConfig(fidelity=fid.physical()))(k, x)
+    want = _legacy_physical(k, x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_physical_preset_bitmatches_legacy_uncompensated(rng):
+    x, k = _small_data(rng)
+    got = STHC(STHCConfig(fidelity=fid.physical(compensate_pulse=False)))(k, x)
+    want = _legacy_physical(k, x, compensate_pulse=False)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_ideal_preset_bitmatches_legacy_path_paper_geometry(rng):
+    x, k = _paper_data(rng)
+    got = STHC(STHCConfig(fidelity=fid.ideal()))(k, x)
+    want = _legacy_ideal(k, x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("preset", ["ideal", "physical"])
+def test_streaming_preset_bitmatches_mode_shim(preset, rng):
+    """The pinned streaming acceptance: the preset and the deprecated
+    mode alias drive the overlap-save path to bit-identical outputs at
+    the paper geometry (and the physical stream equals the one-shot
+    legacy reference to float tolerance, as before the redesign)."""
+    x = jnp.asarray(rng.rand(1, 1, 60, 80, 33).astype(np.float32))
+    k = jnp.asarray(rng.randn(9, 1, 30, 40, 8).astype(np.float32))
+    pipe = fid.ideal() if preset == "ideal" else fid.physical()
+    got = STHC(
+        STHCConfig(fidelity=pipe, osave_chunk_windows=4)
+    ).correlate_stream(k, x, block_t=16)
+    with pytest.deprecated_call():
+        shim_cfg = STHCConfig(mode=preset, osave_chunk_windows=4)
+    shim = STHC(shim_cfg).correlate_stream(k, x, block_t=16)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(shim))
+    if preset == "physical":
+        ref = _legacy_physical(k, x)
+        rel = float(jnp.linalg.norm(got - ref) / jnp.linalg.norm(ref))
+        assert rel <= 1e-4, rel
+
+
+# -- the deprecated mode shim -------------------------------------------------
+
+
+def test_mode_shim_warns_and_maps_to_presets(rng):
+    x, k = _small_data(rng)
+    with pytest.deprecated_call():
+        shim = STHCConfig(mode="physical")
+    assert shim.fidelity.fingerprint() == fid.physical().fingerprint()
+    with pytest.deprecated_call():
+        shim_i = STHCConfig(mode="ideal")
+    assert shim_i.fidelity.fingerprint() == fid.ideal().fingerprint()
+    y_shim = STHC(shim)(k, x)
+    y_new = STHC(STHCConfig(fidelity=fid.physical()))(k, x)
+    np.testing.assert_array_equal(np.asarray(y_shim), np.asarray(y_new))
+
+
+def test_mode_shim_honors_compensate_pulse():
+    with pytest.deprecated_call():
+        cfg = STHCConfig(mode="physical", compensate_pulse=False)
+    assert (
+        cfg.fidelity.fingerprint()
+        == fid.physical(compensate_pulse=False).fingerprint()
+    )
+
+
+def test_invalid_mode_still_rejected():
+    with pytest.raises(ValueError, match="mode"):
+        STHCConfig(mode="Ideal")
+
+
+def test_conflicting_mode_and_fidelity_rejected():
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        with pytest.raises(ValueError, match="disagree"):
+            STHCConfig(mode="physical", fidelity=fid.ideal())
+        # agreeing mode + fidelity is allowed (idempotent migration)
+        cfg = STHCConfig(mode="ideal", fidelity=fid.ideal())
+    assert cfg.fidelity.fingerprint() == fid.ideal().fingerprint()
+
+
+def test_compensate_pulse_requires_mode_alias():
+    """The legacy knob must not be silently ignored without the mode
+    alias — explicit pipeline or defaulted, the stage parameter
+    governs."""
+    with pytest.raises(ValueError, match="PulseCompensate"):
+        STHCConfig(fidelity=fid.physical(), compensate_pulse=False)
+    with pytest.raises(ValueError, match="PulseCompensate"):
+        STHCConfig(compensate_pulse=False)  # no mode, no pipeline
+
+
+def test_default_config_is_ideal_and_quiet():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)  # none expected
+        cfg = STHCConfig()
+    assert cfg.fidelity.fingerprint() == fid.ideal().fingerprint()
+
+
+# -- pipeline construction & fingerprints ------------------------------------
+
+
+def test_pipeline_rejects_duplicates_and_non_stages():
+    with pytest.raises(ValueError, match="duplicate"):
+        fid.FidelityPipeline((fid.SLMQuantize(), fid.SLMQuantize(4)))
+    with pytest.raises(TypeError, match="Stage"):
+        fid.FidelityPipeline(("slm",))
+
+
+def test_fingerprint_excludes_name_and_separates_params():
+    a = fid.pipeline(fid.SLMQuantize(), name="one")
+    b = fid.pipeline(fid.SLMQuantize(), name="two")
+    assert a.fingerprint() == b.fingerprint()
+    assert a.describe() == "one" and b.describe() == "two"
+    c = fid.pipeline(fid.SLMQuantize(bits=4))
+    assert c.fingerprint() != a.fingerprint()
+    assert fid.ideal().fingerprint() != fid.physical().fingerprint()
+
+
+def test_pipeline_sorts_into_canonical_order():
+    """Equal stage sets fingerprint identically however listed — the
+    property that makes ablation stacks share cache entries with the
+    presets they converge to."""
+    scrambled = fid.pipeline(
+        fid.PulseCompensate(), fid.EchoGain(), fid.T2Apodize(),
+        fid.IHBEnvelope(), fid.SLMQuantize(), fid.PseudoNegative(),
+    )
+    assert scrambled.fingerprint() == fid.physical().fingerprint()
+    final = fid.ablation_stacks()[-1][1]
+    assert final.fingerprint() == fid.physical().fingerprint()
+
+
+def test_ablation_stacks_shape():
+    stacks = fid.ablation_stacks()
+    assert stacks[0][0] == "digital" and len(stacks[0][1]) == 0
+    assert len(stacks) == 7  # digital + one per stage
+    for i in range(1, len(stacks)):
+        assert len(stacks[i][1]) == i  # cumulative: one stage per rung
+
+
+# -- stage-subset semantics ----------------------------------------------------
+
+
+def test_pseudo_negative_alone_is_lossless(rng):
+    """± encoding without quantization is exactly lossless (linearity of
+    correlation): the paper's decomposition charges its cost to the
+    interaction with SLMQuantize, not to the split itself."""
+    x, k = _small_data(rng)
+    ref = sc.direct_correlate3d(x, k, "valid")
+    got = STHC(STHCConfig(fidelity=fid.pipeline(fid.PseudoNegative())))(k, x)
+    np.testing.assert_allclose(
+        got, ref, atol=2e-4 * float(jnp.max(jnp.abs(ref))) + 1e-5
+    )
+
+
+def test_quantize_only_isolates_slm_error(rng):
+    x, k = _small_data(rng)
+    ref = sc.direct_correlate3d(x, k, "valid")
+    e = lambda y: float(jnp.linalg.norm(y - ref) / jnp.linalg.norm(ref))
+    err_q = e(STHC(STHCConfig(fidelity=fid.pipeline(fid.SLMQuantize())))(k, x))
+    err_phys = e(STHC(STHCConfig(fidelity=fid.physical()))(k, x))
+    assert 0 < err_q < err_phys  # one stage: real but smaller degradation
+
+
+def test_unfused_reference_per_pipeline(rng):
+    """query_unfused serves every pipeline: the ± two-query reference
+    when a stack exists, the fused path when there is nothing to
+    unfuse (no PseudoNegative stage)."""
+    x, k = _small_data(rng)
+    for pipe in (
+        fid.physical(),
+        fid.pipeline(fid.PseudoNegative()),  # ± without an SLM model
+        fid.pipeline(fid.SLMQuantize()),  # encode without ±
+        fid.ideal(),
+    ):
+        sthc = STHC(STHCConfig(fidelity=pipe), cache=GratingCache())
+        g = sthc.record(k, x.shape[-3:])
+        fused = sthc.engine.query(g, x)
+        unfused = sthc.engine.query_unfused(g, x)
+        rel = float(
+            jnp.linalg.norm(fused - unfused)
+            / jnp.maximum(jnp.linalg.norm(unfused), 1e-12)
+        )
+        assert rel <= 1e-4, (pipe.describe(), rel)
+
+
+def test_stacked_dropped_raises_only_with_pseudo_negative(rng):
+    x, k = _small_data(rng)
+    g_pn = QueryEngine(
+        STHCConfig(fidelity=fid.physical(), keep_stacked=False)
+    ).record(k, x.shape[-3:])
+    assert g_pn.pseudo_negative and g_pn.stacked is None
+    with pytest.raises(ValueError, match="stacked"):
+        QueryEngine(STHCConfig(fidelity=fid.physical())).query_unfused(g_pn, x)
+    g_q = QueryEngine(
+        STHCConfig(fidelity=fid.pipeline(fid.SLMQuantize()), keep_stacked=False)
+    ).record(k, x.shape[-3:])
+    assert not g_q.pseudo_negative
+    # nothing was folded: the fused path is the reference, no raise
+    QueryEngine(
+        STHCConfig(fidelity=fid.pipeline(fid.SLMQuantize()))
+    ).query_unfused(g_q, x)
+
+
+def test_quantize_signed_properties():
+    x = jnp.asarray([-1.0, -0.5, 0.0, 0.3, 1.0])
+    q = optics.quantize_signed(x, 8)
+    np.testing.assert_allclose(np.asarray(q)[[0, 2, 4]], [-1.0, 0.0, 1.0])
+    assert float(jnp.max(jnp.abs(q - x))) <= 0.5 / 255 + 1e-6
+    np.testing.assert_allclose(
+        np.asarray(optics.quantize_signed(-x, 8)), -np.asarray(q)
+    )
+
+
+# -- mixed-fidelity caching (satellite): fingerprint-keyed entries ------------
+
+
+def test_same_kernels_two_pipelines_distinct_entries(rng):
+    """Same kernel bytes under two pipelines: two keys, two misses, no
+    cross-fidelity hits — then a pure hit per pipeline on re-query."""
+    cache = GratingCache()
+    x, k = _small_data(rng)
+    ideal = STHC(STHCConfig(fidelity=fid.ideal()), cache=cache)
+    phys = STHC(STHCConfig(fidelity=fid.physical()), cache=cache)
+    y_i, y_p = ideal(k, x), phys(k, x)
+    assert cache.misses == 2 and cache.hits == 0 and len(cache) == 2
+    ideal(k, x)
+    phys(k, x)
+    assert cache.misses == 2 and cache.hits == 2
+    assert float(jnp.max(jnp.abs(y_i - y_p))) > 0  # different physics
+
+
+def test_mixed_fidelity_byte_budget_counts_each_fingerprint_once(rng):
+    """Byte accounting under mixed fidelities: every fingerprint's entry
+    charges its own nbytes exactly once (keep_stacked=False included),
+    and the LRU byte budget evicts per entry, not per fidelity."""
+    x, k = _small_data(rng)
+    sig = x.shape[-3:]
+    probe_cfgs = [
+        STHCConfig(fidelity=fid.ideal()),
+        STHCConfig(fidelity=fid.physical(), keep_stacked=False),
+        STHCConfig(fidelity=fid.pipeline(fid.SLMQuantize())),
+    ]
+    sizes = [QueryEngine(c).record(k, sig).nbytes for c in probe_cfgs]
+    # stripped physical gratings must charge hot-path bytes only
+    assert sizes[1] == sizes[0] == sizes[2]
+
+    # budget fits exactly two entries: recording all three evicts the LRU
+    cache = GratingCache(max_entries=64, max_bytes=int(sizes[0] * 2.5))
+    for cfg in probe_cfgs:
+        STHC(cfg, cache=cache).record(k, sig)
+    stats = cache.stats()
+    assert stats["entries"] == 2 and stats["evictions"] == 1
+    assert stats["bytes"] == 2 * sizes[0] <= cache.max_bytes
+    # the evicted (ideal) fingerprint re-records as a miss; the resident
+    # two still hit
+    misses = stats["misses"]
+    STHC(probe_cfgs[2], cache=cache).record(k, sig)
+    assert cache.stats()["hits"] == 1
+    STHC(probe_cfgs[0], cache=cache).record(k, sig)
+    assert cache.stats()["misses"] == misses + 1
+
+
+def test_keep_stacked_splits_keys_only_with_pseudo_negative(rng):
+    """keep_stacked changes what object is stored only when a ± stack
+    exists: physical pipelines split on it, stack-free pipelines must
+    share one entry across the knob."""
+    x, k = _small_data(rng)
+    sig = x.shape[-3:]
+    cache = GratingCache()
+    STHC(STHCConfig(fidelity=fid.physical()), cache=cache).record(k, sig)
+    STHC(
+        STHCConfig(fidelity=fid.physical(), keep_stacked=False), cache=cache
+    ).record(k, sig)
+    assert cache.misses == 2 and len(cache) == 2
+    cache.clear()
+    STHC(STHCConfig(fidelity=fid.ideal()), cache=cache).record(k, sig)
+    STHC(
+        STHCConfig(fidelity=fid.ideal(), keep_stacked=False), cache=cache
+    ).record(k, sig)
+    assert cache.misses == 1 and cache.hits == 1 and len(cache) == 1
+
+
+# -- per-tenant mixed-fidelity serving (acceptance) ---------------------------
+
+
+def test_one_server_serves_two_fidelities_through_one_cache(rng):
+    """The acceptance property: one VideoSearchServer, two tenants at
+    different fidelities (same kernel bytes), one shared GratingCache —
+    per-tenant results match the matching single-fidelity correlator,
+    stats attribute per tenant, and no cross-fidelity cache hits."""
+    from repro.launch.serve import VideoSearchConfig, VideoSearchServer
+
+    k = jnp.asarray(rng.randn(2, 1, 3, 4, 3).astype(np.float32))
+    clip = jnp.asarray(rng.rand(1, 1, 12, 12, 20).astype(np.float32))
+    server = VideoSearchServer(
+        frame_hw=(12, 12), cfg=VideoSearchConfig(window_frames=8)
+    )
+    server.add_kernel_set("ideal-tenant", k)  # server default: ideal
+    server.add_kernel_set("phys-tenant", k, fidelity=fid.physical())
+    assert server.cache.stats()["entries"] == 2  # same bytes, two keys
+
+    outs = server.search_batch(
+        [("ideal-tenant", clip), ("phys-tenant", clip), ("ideal-tenant", clip)]
+    )
+    ref_i = STHC(STHCConfig(fidelity=fid.ideal()))(k, clip)
+    ref_p = STHC(STHCConfig(fidelity=fid.physical()))(k, clip)
+    want_i = np.asarray(jnp.max(ref_i.reshape(1, 2, -1), axis=-1))
+    want_p = np.asarray(jnp.max(ref_p.reshape(1, 2, -1), axis=-1))
+    np.testing.assert_allclose(outs[0]["scores"], want_i, rtol=1e-4)
+    np.testing.assert_allclose(outs[1]["scores"], want_p, rtol=1e-4)
+    np.testing.assert_allclose(outs[2]["scores"], want_i, rtol=1e-4)
+    assert float(np.max(np.abs(want_i - want_p))) > 0
+
+    m = server.metrics()
+    assert m["tenants"]["ideal-tenant"]["fidelity"] == "ideal"
+    assert m["tenants"]["phys-tenant"]["fidelity"] == "physical"
+    assert m["tenants"]["ideal-tenant"]["queries"] == 2
+    assert m["tenants"]["phys-tenant"]["queries"] == 1
+    stats = m["cache"]
+    assert stats["entries"] == 2 and stats["misses"] == 2
+    # one fetch per (tenant, shape) group — both ideal requests stack
+    # into one streaming correlation — and each hit its own fidelity's
+    # entry (no re-records: misses stayed at the two warm-ups)
+    assert stats["hits"] == 2
+
+
+def test_metrics_label_survives_engine_pooling(rng):
+    """Engines pool by fingerprint (names excluded), but metrics must
+    report each tenant's pipeline label *as registered* — not the first
+    registrant's name for every same-physics tenant."""
+    from repro.launch.serve import VideoSearchConfig, VideoSearchServer
+
+    k = jnp.asarray(rng.randn(2, 1, 3, 4, 3).astype(np.float32))
+    server = VideoSearchServer(
+        frame_hw=(12, 12), cfg=VideoSearchConfig(window_frames=8)
+    )
+    server.add_kernel_set(
+        "a", k, fidelity=fid.pipeline(fid.SLMQuantize(), name="quant-a")
+    )
+    server.add_kernel_set(
+        "b", k, fidelity=fid.pipeline(fid.SLMQuantize(), name="quant-b")
+    )
+    m = server.metrics()
+    assert m["tenants"]["a"]["fidelity"] == "quant-a"
+    assert m["tenants"]["b"]["fidelity"] == "quant-b"
+    # same physics: one pooled engine, one shared cache entry
+    assert m["cache"]["entries"] == 1
+
+
+def test_server_mode_alias_still_works(rng):
+    from repro.launch.serve import VideoSearchConfig, VideoSearchServer
+
+    k = jnp.asarray(rng.randn(2, 1, 3, 4, 3).astype(np.float32))
+    clip = jnp.asarray(rng.rand(1, 1, 12, 12, 20).astype(np.float32))
+    with pytest.deprecated_call():
+        server = VideoSearchServer(
+            k, (12, 12),
+            VideoSearchConfig(window_frames=8, mode="physical"),
+        )
+    out = server.search(clip)
+    ref = STHC(STHCConfig(fidelity=fid.physical()))(k, clip)
+    want = np.asarray(jnp.max(ref.reshape(1, 2, -1), axis=-1))
+    np.testing.assert_allclose(out["scores"], want, rtol=1e-4)
+
+
+def test_server_rejects_conflicting_mode_and_fidelity():
+    from repro.launch.serve import VideoSearchConfig, VideoSearchServer
+
+    with pytest.raises(ValueError, match="not both"):
+        VideoSearchServer(
+            frame_hw=(12, 12),
+            cfg=VideoSearchConfig(mode="ideal", fidelity=fid.physical()),
+        )
+
+
+# -- stmul tile-size knobs (satellite) ----------------------------------------
+
+
+@pytest.mark.parametrize("tiles", [(2, 3, 128), (1, 1, 256)])
+def test_stmul_tile_sizes_from_config(tiles, rng):
+    """STHCConfig.stmul_block_* reach the kernel: off-default tiles
+    change the grid, never the semantics."""
+    bB, bO, bF = tiles
+    x, k = _small_data(rng)
+    ref = STHC(STHCConfig(fidelity=fid.physical()))(k, x)
+    got = STHC(
+        STHCConfig(
+            fidelity=fid.physical(),
+            use_pallas=True,
+            stmul_block_b=bB,
+            stmul_block_o=bO,
+            stmul_block_f=bF,
+        )
+    )(k, x)
+    rel = float(jnp.linalg.norm(got - ref) / jnp.linalg.norm(ref))
+    assert rel <= 1e-4, rel
+
+
+def test_stmul_tile_kwargs_at_ops_layer():
+    from repro.kernels.stmul import ops as stmul_ops, ref as stmul_ref
+
+    rng = np.random.RandomState(0)
+    sh = (6, 7, 5)
+    xh = jnp.asarray(
+        (rng.randn(2, 3, *sh) + 1j * rng.randn(2, 3, *sh)).astype(np.complex64)
+    )
+    g = jnp.asarray(
+        (rng.randn(4, 3, *sh) + 1j * rng.randn(4, 3, *sh)).astype(np.complex64)
+    )
+    ref = stmul_ref.spectral_mac_ref(xh, g)
+    got = stmul_ops.spectral_mac(xh, g, block_b=1, block_o=2, block_f=128)
+    np.testing.assert_allclose(
+        got, ref, atol=1e-4 * float(jnp.max(jnp.abs(ref))) + 1e-6
+    )

@@ -8,6 +8,7 @@ import numpy as np
 import pytest
 
 from repro.core import hybrid
+from repro.core import fidelity as fid
 from repro.core.engine import GratingCache, QueryEngine
 from repro.core.sthc import STHC, STHCConfig
 from repro.launch.serve import (
@@ -61,11 +62,11 @@ def test_multi_tenant_shared_cache_eviction_and_rerecord():
 
 def test_cache_byte_budget_evicts():
     """The byte-sized budget evicts independently of the entry budget."""
-    engine = QueryEngine(STHCConfig(mode="ideal"))
+    engine = QueryEngine(STHCConfig(fidelity=fid.ideal()))
     probe = engine.record(_kernels(0), (12, 12, 8))
     # room for exactly one grating, many entries allowed
     cache = GratingCache(max_entries=64, max_bytes=int(probe.nbytes * 1.5))
-    sthc = STHC(STHCConfig(mode="ideal"), cache=cache)
+    sthc = STHC(STHCConfig(fidelity=fid.ideal()), cache=cache)
     sthc.record(_kernels(1), (12, 12, 8))
     sthc.record(_kernels(2), (12, 12, 8))
     stats = cache.stats()
@@ -79,10 +80,10 @@ def test_cache_byte_budget_evicts():
 def test_oversized_grating_served_uncached_without_flushing_peers():
     """A grating larger than the whole byte budget must not evict the
     resident tenants while failing to fit — it is served uncached."""
-    engine = QueryEngine(STHCConfig(mode="ideal"))
+    engine = QueryEngine(STHCConfig(fidelity=fid.ideal()))
     small = engine.record(_kernels(0), (12, 12, 8))
     cache = GratingCache(max_entries=64, max_bytes=int(small.nbytes * 1.5))
-    sthc = STHC(STHCConfig(mode="ideal"), cache=cache)
+    sthc = STHC(STHCConfig(fidelity=fid.ideal()), cache=cache)
     sthc.record(_kernels(1), (12, 12, 8))  # resident
     big = sthc.record(_kernels(2, O=8), (16, 16, 16))  # exceeds budget alone
     assert big.nbytes > cache.max_bytes
@@ -159,7 +160,7 @@ def test_physical_serving_grating_drops_stacked():
     and still scores identically to the full-fidelity correlator."""
     server = VideoSearchServer(
         _kernels(0), (12, 12),
-        VideoSearchConfig(window_frames=8, mode="physical"),
+        VideoSearchConfig(window_frames=8, fidelity=fid.physical()),
     )
     g = server._grating("default")
     assert g.encode and g.stacked is None

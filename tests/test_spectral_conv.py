@@ -6,6 +6,7 @@ import numpy as np
 import pytest
 from _hypo import given, settings, st  # hypothesis, or deterministic fallback
 
+from repro.core import fidelity as fid
 from repro.core import spectral_conv as sc
 
 TOL = 2e-4
@@ -64,7 +65,7 @@ def test_overlap_save_equals_one_shot(t, kt, extra):
     k = _rand((2, 1, 3, 4, kt), rng)
     block_t = kt - 1 + extra
     ref = sc.direct_correlate3d(x, k, mode="valid")
-    got = STHC(STHCConfig(mode="ideal")).correlate_stream(k, x, block_t)
+    got = STHC(STHCConfig(fidelity=fid.ideal())).correlate_stream(k, x, block_t)
     np.testing.assert_allclose(got, ref, atol=TOL * float(jnp.max(jnp.abs(ref))) + 1e-5)
 
 

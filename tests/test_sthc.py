@@ -8,6 +8,7 @@ import pytest
 from _hypo import given, settings, st  # hypothesis, or deterministic fallback
 
 from repro.core import atomic, optics, pseudo_negative, spectral_conv as sc
+from repro.core import fidelity as fid
 from repro.core.sthc import STHC, STHCConfig
 
 
@@ -19,14 +20,14 @@ def _data(rng, B=2, C=1, H=20, W=24, T=10, O=3, kh=7, kw=9, kt=4):
 
 def test_ideal_mode_is_exact(rng):
     x, k = _data(rng)
-    y = STHC(STHCConfig(mode="ideal"))(k, x)
+    y = STHC(STHCConfig(fidelity=fid.ideal()))(k, x)
     ref = sc.direct_correlate3d(x, k, "valid")
     np.testing.assert_allclose(y, ref, atol=1e-4 * float(jnp.max(jnp.abs(ref))))
 
 
 def test_ideal_mode_pallas_path(rng):
     x, k = _data(rng)
-    y = STHC(STHCConfig(mode="ideal", use_pallas=True))(k, x)
+    y = STHC(STHCConfig(fidelity=fid.ideal(), use_pallas=True))(k, x)
     ref = sc.direct_correlate3d(x, k, "valid")
     np.testing.assert_allclose(y, ref, atol=1e-4 * float(jnp.max(jnp.abs(ref))))
 
@@ -34,7 +35,7 @@ def test_ideal_mode_pallas_path(rng):
 def test_physical_mode_bounded_error(rng):
     x, k = _data(rng)
     ref = sc.direct_correlate3d(x, k, "valid")
-    y = STHC(STHCConfig(mode="physical"))(k, x)
+    y = STHC(STHCConfig(fidelity=fid.physical()))(k, x)
     rel = float(jnp.linalg.norm(y - ref) / jnp.linalg.norm(ref))
     assert rel < 0.10, rel  # design-point physics ⇒ small degradation
 
@@ -45,7 +46,7 @@ def test_physical_error_monotone_in_coverage(rng):
     ref = sc.direct_correlate3d(x, k, "valid")
     errs = []
     for cov in (1.0, 2.0, 4.0, 8.0):
-        s = STHC(STHCConfig(mode="physical", atoms=atomic.AtomicConfig(coverage=cov)))
+        s = STHC(STHCConfig(fidelity=fid.physical(), atoms=atomic.AtomicConfig(coverage=cov)))
         y = s(k, x)
         errs.append(float(jnp.linalg.norm(y - ref) / jnp.linalg.norm(ref)))
     assert errs == sorted(errs, reverse=True), errs
@@ -54,10 +55,10 @@ def test_physical_error_monotone_in_coverage(rng):
 def test_short_t2_degrades(rng):
     x, k = _data(rng)
     ref = sc.direct_correlate3d(x, k, "valid")
-    good = STHC(STHCConfig(mode="physical"))(k, x)
+    good = STHC(STHCConfig(fidelity=fid.physical()))(k, x)
     bad = STHC(
         STHCConfig(
-            mode="physical",
+            fidelity=fid.physical(),
             atoms=atomic.AtomicConfig(t2_s=3 * atomic.FRAME_LOAD_TIME_S),
         )
     )(k, x)
@@ -77,10 +78,14 @@ def test_pulse_compensation_reduces_error(rng):
     for cov in (1.0, 2.0, 4.0):
         atoms = atomic.AtomicConfig(coverage=cov)
         err_comp = e(
-            STHC(STHCConfig(mode="physical", compensate_pulse=True, atoms=atoms))(k, x)
+            STHC(STHCConfig(fidelity=fid.physical(), atoms=atoms))(k, x)
         )
         err_unc = e(
-            STHC(STHCConfig(mode="physical", compensate_pulse=False, atoms=atoms))(k, x)
+            STHC(
+                STHCConfig(
+                    fidelity=fid.physical(compensate_pulse=False), atoms=atoms
+                )
+            )(k, x)
         )
         # materially different (the flag does something) and correctly ordered
         assert err_comp < 0.9 * err_unc, (cov, err_comp, err_unc)
