@@ -48,7 +48,7 @@ def stacks() -> list[tuple[str, fidelity.FidelityPipeline]]:
     return sthc_kth.fidelity_stacks()
 
 
-def run(epochs: int = 30, full_geometry: bool = True, log=print) -> list[str]:
+def run(epochs: int = 45, full_geometry: bool = True, log=print) -> list[str]:
     cfg = sthc_kth.config() if full_geometry else sthc_kth.smoke_config()
     # import here: benchmarks.accuracy pulls the optimizer stack in
     from benchmarks import accuracy
@@ -122,7 +122,7 @@ def main() -> None:
     ap.add_argument("--json-dir", default=".",
                     help="directory for BENCH_ablation.json")
     args = ap.parse_args()
-    epochs = args.epochs if args.epochs is not None else (2 if args.smoke else 30)
+    epochs = args.epochs if args.epochs is not None else (2 if args.smoke else 45)
     rows = run(epochs=epochs, full_geometry=not args.smoke, log=print)
     print("name,us_per_call,derived")
     for row in rows:

@@ -8,6 +8,9 @@
   roofline    — §Roofline summary from the dry-run records
   ablation    — §4 degradation decomposition, one fidelity stage at a
                 time (also standalone: benchmarks/ablation.py --smoke)
+  serving     — pooled cross-tenant executor vs per-tenant-sequential
+                + microbatch-scheduler load sweep (also standalone:
+                benchmarks/serving.py --smoke)
 
 ``--fast`` shrinks the accuracy benchmark geometry for CI-speed runs.
 ``--json`` additionally writes one ``BENCH_<suite>.json`` artifact per
@@ -52,6 +55,7 @@ def main() -> None:
         equivalence,
         kernels_bench,
         roofline_bench,
+        serving,
         speed,
     )
 
@@ -61,15 +65,16 @@ def main() -> None:
         "kernels": lambda: kernels_bench.run(log=_log),
         "roofline": lambda: roofline_bench.run(log=_log),
         "accuracy": lambda: accuracy.run(
-            epochs=10 if args.fast else 30,
+            epochs=10 if args.fast else 45,
             full_geometry=not args.fast,
             log=_log,
         ),
         "ablation": lambda: ablation.run(
-            epochs=2 if args.fast else 30,
+            epochs=2 if args.fast else 45,
             full_geometry=not args.fast,
             log=_log,
         ),
+        "serving": lambda: serving.run(smoke=args.fast, log=_log),
     }
     if args.only:
         keep = set(args.only.split(","))

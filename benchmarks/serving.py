@@ -1,0 +1,341 @@
+"""Cross-tenant serving benchmark — pooled executor vs the per-tenant
+sequential baseline, plus the async microbatch scheduler under offered
+load.
+
+The STHC's serving economics (paper §3, Fig. 1C) are record-once /
+stream-forever: the grating is written once and many clips diffract off
+it per second.  PR 4 extends that dataflow *across tenants*: resident
+effective gratings sharing the window FFT geometry and encode semantics
+pack into one pooled arena, and a mixed-tenant batch is answered with
+one FFT + pooled MAC + IFFT dispatch per window chunk (plus one batched
+detection readout) instead of one dispatch chain per tenant.
+
+This suite measures that claim end to end on the host:
+
+* ``serving_pooled_t{N}`` / ``serving_sequential_t{N}`` — an N-request
+  mixed-tenant batch (one stream per tenant) through
+  ``search_batch(pooled=True/False)`` at the dispatch-bound serving
+  geometry; derived columns carry windows/s and batch-latency p50/p99.
+* ``serving_pooled_vs_sequential_x`` — the headline speedup at the
+  8-request mixed-tenant batch (the acceptance row).  The pooled win is
+  dispatch-overhead amortization, so it is largest exactly where the
+  optical system lives — many small coherence windows; a compute-bound
+  large-geometry row is included for contrast (on CPU, XLA gains
+  nothing from batching raw FFT flops; on a real TPU the launch-bound
+  regime is far broader).
+* ``serving_sched_*`` — offered-load sweep through the
+  :class:`~repro.launch.serve.MicrobatchScheduler`: end-to-end latency
+  percentiles, formed batch sizes, and shed requests at increasing
+  arrival rates (admission control under overload).
+* ``serving_bf16_*`` — half-precision grating storage: cache bytes vs
+  f32 (the ~2x tenant-capacity claim) and the pooled-query score error.
+
+Run standalone (writes ``BENCH_serving.json``):
+
+    PYTHONPATH=src python benchmarks/serving.py [--smoke] [--json-dir .]
+
+or as a suite through ``benchmarks/run.py --only serving``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fidelity
+from repro.launch.serve import (
+    MicrobatchScheduler,
+    RequestRejected,
+    VideoSearchConfig,
+    VideoSearchServer,
+)
+
+# The dispatch-bound serving geometry: small frames, short coherence
+# windows — the regime where a mixed-tenant batch is dominated by
+# per-dispatch cost rather than FFT flops.
+FRAME_HW = (12, 12)
+KERNEL = (2, 1, 3, 4, 3)  # (O, C, kh, kw, kt)
+WINDOW = 8
+STREAM_T = 64
+# The compute-bound contrast geometry (batching buys nothing on CPU).
+BIG_FRAME_HW = (24, 32)
+BIG_KERNEL = (4, 1, 12, 16, 8)
+BIG_WINDOW = 16
+
+
+def _make_server(
+    n_tenants: int,
+    frame_hw=FRAME_HW,
+    kernel=KERNEL,
+    window=WINDOW,
+    chunk_windows: int = 1,
+    grating_dtype: str = "float32",
+) -> VideoSearchServer:
+    cfg = VideoSearchConfig(
+        window_frames=window,
+        chunk_windows=chunk_windows,
+        cache_entries=2 * n_tenants,
+        grating_dtype=grating_dtype,
+    )
+    server = VideoSearchServer(frame_hw=frame_hw, cfg=cfg)
+    for i in range(n_tenants):
+        k = jnp.asarray(
+            np.random.RandomState(i).randn(*kernel).astype(np.float32)
+        )
+        # mixed fidelities on one server; physical pipelines share one
+        # pool group (same encode semantics + geometry)
+        server.add_tenant(f"t{i}", k, fidelity=fidelity.physical())
+    return server
+
+
+def _requests(server: VideoSearchServer, n: int, T: int = STREAM_T):
+    h, w = server.frame_hw
+    return [
+        (
+            f"t{i % len(server.tenants)}",
+            jnp.asarray(
+                np.random.RandomState(50 + i).rand(1, 1, h, w, T).astype(
+                    np.float32
+                )
+            ),
+        )
+        for i in range(n)
+    ]
+
+
+def _bench_batch(server, reqs, reps: int) -> tuple[dict, dict]:
+    """(pooled, sequential) batch-latency stats of one request set.
+
+    The two modes run *interleaved* so host noise (this is a shared CPU)
+    hits both equally; windows/s uses the median batch latency.
+    """
+    lats: dict[bool, list[float]] = {True: [], False: []}
+    outs = None
+    for _ in range(reps):
+        for pooled in (False, True):
+            t0 = time.perf_counter()
+            outs = server.search_batch(reqs, pooled=pooled)
+            lats[pooled].append(time.perf_counter() - t0)
+    windows = sum(o["windows"] * r[1].shape[0] for o, r in zip(outs, reqs))
+
+    def stats(ls: list[float]) -> dict:
+        ls = sorted(ls)
+        med = statistics.median(ls)
+        return {
+            "windows_per_s": windows / med,
+            "p50_ms": 1e3 * med,
+            "p99_ms": 1e3 * ls[min(int(0.99 * len(ls)), len(ls) - 1)],
+        }
+
+    return stats(lats[True]), stats(lats[False])
+
+
+def _fmt(v: float) -> str:
+    # fixed-point for human-scale values, scientific for tiny ones —
+    # a %.2f would round e.g. max_rel_score_err=2.4e-03 to 0.00 in the
+    # persisted artifact and erase the metric
+    return f"{v:.2f}" if abs(v) >= 0.01 or v == 0 else f"{v:.2e}"
+
+
+def _row(name: str, us: float, derived: dict | str) -> str:
+    if isinstance(derived, dict):
+        derived = ";".join(f"{k}={_fmt(v)}" for k, v in derived.items())
+    return f"{name},{us:.0f},{derived}"
+
+
+def run(smoke: bool = False, log=print) -> list[str]:
+    rows: list[str] = []
+    reps = 5 if smoke else 25
+    tenant_counts = (2, 8) if smoke else (2, 4, 8)
+
+    # -- pooled vs per-tenant-sequential, mixed-tenant batches ----------
+    speedup_at_8 = None
+    for nt in tenant_counts:
+        server = _make_server(nt)
+        reqs = _requests(server, nt)
+        for pooled in (True, False):  # warm both paths (compile + cache)
+            server.search_batch(reqs, pooled=pooled)
+            server.search_batch(reqs, pooled=pooled)
+        pool, seq = _bench_batch(server, reqs, reps=reps)
+        rows.append(_row(f"serving_pooled_t{nt}", pool["p50_ms"] * 1e3, pool))
+        rows.append(
+            _row(f"serving_sequential_t{nt}", seq["p50_ms"] * 1e3, seq)
+        )
+        x = pool["windows_per_s"] / seq["windows_per_s"]
+        log(
+            f"{nt} tenants: pooled {pool['windows_per_s']:.0f} win/s vs "
+            f"sequential {seq['windows_per_s']:.0f} win/s ({x:.2f}x)"
+        )
+        if nt == 8:
+            speedup_at_8 = x
+            m = server.metrics()
+            rows.append(
+                _row(
+                    "serving_dispatches_t8",
+                    0,
+                    {
+                        "pooled": float(m["pooled_dispatches"]),
+                        "sequential": float(m["sequential_dispatches"]),
+                    },
+                )
+            )
+    if speedup_at_8 is not None:
+        rows.append(f"serving_pooled_vs_sequential_x,0,{speedup_at_8:.2f}x")
+
+    # compute-bound contrast geometry: batching buys nothing on a CPU
+    # backend (XLA FFT flops don't amortize), so the pooled win here is
+    # ~1x — recorded so the trajectory is honest about the regime
+    if not smoke:
+        server = _make_server(
+            8, BIG_FRAME_HW, BIG_KERNEL, BIG_WINDOW, chunk_windows=4
+        )
+        reqs = _requests(server, 8)
+        for pooled in (True, False):
+            server.search_batch(reqs, pooled=pooled)
+        pool, seq = _bench_batch(server, reqs, reps=max(reps // 3, 3))
+        rows.append(_row("serving_pooled_big_t8", pool["p50_ms"] * 1e3, pool))
+        rows.append(
+            _row("serving_sequential_big_t8", seq["p50_ms"] * 1e3, seq)
+        )
+
+    # -- async microbatch scheduler under offered load ------------------
+    n_load = 8 if smoke else 48
+    intervals = (0.0,) if smoke else (0.01, 0.002, 0.0)
+    server = _make_server(4)
+    load = _requests(server, n_load)
+    for interval in intervals:
+        with MicrobatchScheduler(
+            server, max_queue=16, max_batch=8, batch_wait_s=0.002
+        ) as sched:
+            # warm pass: same load at the same arrival interval, untimed
+            # — steady-state batches then form the same tenant/size
+            # compositions as the measured pass, paying their JIT
+            # compiles outside the measured window (steady-state serving
+            # is what the percentiles should describe)
+            warm_futs = []
+            for tenant, clip in load:
+                warm_futs.append(sched.submit(tenant, clip, block=True))
+                if interval:
+                    time.sleep(interval)
+            for f in warm_futs:
+                f.result(timeout=300)
+        with MicrobatchScheduler(
+            server, max_queue=16, max_batch=8, batch_wait_s=0.002
+        ) as sched:
+            futs = []
+            rejected = 0
+            t0 = time.perf_counter()
+            for tenant, clip in load:
+                try:
+                    futs.append(sched.submit(tenant, clip))
+                except RequestRejected:
+                    rejected += 1
+                if interval:
+                    time.sleep(interval)
+            for f in futs:
+                f.result(timeout=300)
+            elapsed = time.perf_counter() - t0
+            m = sched.metrics()
+        label = f"serving_sched_{interval * 1e3:.0f}ms"
+        rows.append(
+            _row(
+                label,
+                m["latency_p50_ms"] * 1e3,
+                {
+                    "p50_ms": m["latency_p50_ms"],
+                    "p99_ms": m["latency_p99_ms"],
+                    "mean_batch": m["mean_batch_size"],
+                    "rejected": float(rejected),
+                    "req_per_s": len(futs) / elapsed,
+                },
+            )
+        )
+        log(
+            f"offered interval {interval * 1e3:.0f}ms: p50 "
+            f"{m['latency_p50_ms']:.1f}ms p99 {m['latency_p99_ms']:.1f}ms, "
+            f"mean batch {m['mean_batch_size']:.1f}, {rejected} shed"
+        )
+
+    # -- half-precision grating storage ---------------------------------
+    srv_f32 = _make_server(4)
+    srv_bf16 = _make_server(4, grating_dtype="bfloat16")
+    reqs = _requests(srv_f32, 4)
+    out_f32 = srv_f32.search_batch(reqs)
+    out_bf16 = srv_bf16.search_batch(reqs)
+    # score-scale-normalized error: peak correlations near zero make a
+    # per-element relative metric meaningless
+    err = max(
+        float(np.max(np.abs(a["scores"] - b["scores"])))
+        / max(float(np.max(np.abs(a["scores"]))), 1e-6)
+        for a, b in zip(out_f32, out_bf16)
+    )
+    bytes_f32 = srv_f32.cache.nbytes
+    bytes_bf16 = srv_bf16.cache.nbytes
+    rows.append(
+        _row(
+            "serving_bf16_storage",
+            0,
+            {
+                "f32_cache_mb": bytes_f32 / 1e6,
+                "bf16_cache_mb": bytes_bf16 / 1e6,
+                "capacity_x": bytes_f32 / max(bytes_bf16, 1),
+                "max_rel_score_err": err,
+            },
+        )
+    )
+    log(
+        f"bf16 storage: {bytes_bf16 / 1e6:.2f} MB vs {bytes_f32 / 1e6:.2f} MB "
+        f"f32 ({bytes_f32 / max(bytes_bf16, 1):.2f}x capacity), max score "
+        f"rel err {err:.2e}"
+    )
+    return rows
+
+
+def _parse_row(row: str) -> dict:
+    name, us, derived = row.split(",", 2)
+    try:
+        us_val: float | str = float(us)
+    except ValueError:
+        us_val = us
+    return {"name": name, "us_per_call": us_val, "derived": derived}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="reduced reps / load points (the CI smoke)",
+    )
+    ap.add_argument(
+        "--json-dir", default=".", help="directory for BENCH_serving.json"
+    )
+    args = ap.parse_args()
+    rows = run(smoke=args.smoke, log=print)
+    print("name,us_per_call,derived")
+    for row in rows:
+        print(row)
+    os.makedirs(args.json_dir, exist_ok=True)
+    path = os.path.join(args.json_dir, "BENCH_serving.json")
+    with open(path, "w") as f:
+        json.dump(
+            {"suite": "serving", "rows": [_parse_row(r) for r in rows]},
+            f,
+            indent=2,
+        )
+    print(f"# wrote {path}")
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.path.insert(
+        0, os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    )
+    main()

@@ -8,6 +8,10 @@ trajectories the ROADMAP tracks:
 
   * fused vs unfused physical query latency (``BENCH_speed.json``)
   * stmul kernel v1 vs v2 latency (``BENCH_kernels.json``)
+  * pooled vs per-tenant-sequential serving at the 8-request
+    mixed-tenant batch — windows/s, batch p50/p99 and the pooled
+    speedup — plus the bf16 grating-storage capacity factor
+    (``BENCH_serving.json``)
 
 plus the derived speedup rows and, when present, the ablation
 decomposition (``BENCH_ablation.json``).
@@ -28,7 +32,10 @@ import glob
 import json
 import os
 
-# metric -> (suite, row name); the headline trajectories
+# metric -> (suite, row name[, key-in-derived]); the headline
+# trajectories.  A 3-tuple reads a ``key=value`` pair out of the row's
+# derived column (the serving suite reports several per row); a
+# ``*_ms``-keyed value feeding a ``*_us`` metric is scaled to µs.
 TRACKED = {
     "fused_query_us": ("speed", "sthc_query_fused_physical"),
     "unfused_query_us": ("speed", "sthc_query_unfused_physical"),
@@ -37,14 +44,35 @@ TRACKED = {
     "stmul_v1_us": ("kernels", "stmul_pallas_v1"),
     "stmul_v2_us": ("kernels", "stmul_pallas_v2"),
     "stmul_v1_vs_v2_x": ("kernels", "stmul_v1_vs_v2_speedup"),
+    "serving_pooled_p50_us": ("serving", "serving_pooled_t8", "p50_ms"),
+    "serving_seq_p50_us": ("serving", "serving_sequential_t8", "p50_ms"),
+    "serving_pooled_p99_us": ("serving", "serving_pooled_t8", "p99_ms"),
+    "serving_pooled_winps": (
+        "serving", "serving_pooled_t8", "windows_per_s",
+    ),
+    "serving_seq_winps": (
+        "serving", "serving_sequential_t8", "windows_per_s",
+    ),
+    "serving_pooled_vs_seq_x": (
+        "serving", "serving_pooled_vs_sequential_x",
+    ),
+    "serving_bf16_capacity_x": (
+        "serving", "serving_bf16_storage", "capacity_x",
+    ),
 }
 
 # latency pairs plotted together (left panel) and speedups (right panel)
 LATENCY_PAIRS = [
     ("fused_query_us", "unfused_query_us"),
     ("stmul_v2_us", "stmul_v1_us"),
+    ("serving_pooled_p50_us", "serving_seq_p50_us"),
 ]
-SPEEDUPS = ["fused_vs_unfused_x", "stmul_v1_vs_v2_x"]
+SPEEDUPS = [
+    "fused_vs_unfused_x",
+    "stmul_v1_vs_v2_x",
+    "serving_pooled_vs_seq_x",
+    "serving_bf16_capacity_x",
+]
 
 
 def collect(paths: list[str]) -> list[tuple[str, dict]]:
@@ -79,9 +107,22 @@ def collect(paths: list[str]) -> list[tuple[str, dict]]:
 
 
 def _value(run: dict, metric: str) -> float | None:
-    suite, row_name = TRACKED[metric]
+    spec = TRACKED[metric]
+    suite, row_name = spec[0], spec[1]
     row = run.get(suite, {}).get(row_name)
     if row is None:
+        return None
+    if len(spec) == 3:  # key=value pair inside the derived column
+        key = spec[2]
+        for part in str(row["derived"]).split(";"):
+            if part.startswith(key + "="):
+                try:
+                    v = float(part.split("=", 1)[1])
+                except ValueError:
+                    return None
+                if metric.endswith("_us") and key.endswith("_ms"):
+                    v *= 1e3
+                return v
         return None
     if metric.endswith("_us"):
         v = row["us_per_call"]

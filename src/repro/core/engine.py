@@ -36,6 +36,19 @@ grating), recomputing the identical ``rfftn(x)`` both times, and
   one per window.  Together these make the streaming output equal to
   the one-shot physical correlation (tested property).
 
+* **Pooled serving** — ``query_many`` / ``query_stream_many`` extend the
+  weight-stationary dataflow *across tenants*: resident effective
+  gratings that share FFT geometry and encode semantics are packed into
+  one ``(ΣO, C, FH, FW, FTr)`` arena (:class:`GratingPool`, memoized
+  while its members live) and a mixed-tenant clip batch is answered with
+  exactly one forward FFT, one pooled channel-contracted MAC in which
+  every clip row reads only its own tenant's O-offset slice, and one
+  inverse FFT — N same-geometry tenants pay 1 device dispatch instead of
+  N.  Optional half-precision storage (``STHCConfig.grating_dtype =
+  'bfloat16'``) keeps gratings as split-real bf16 planes (half the HBM,
+  ~2x the tenants per cache byte budget) with f32 accumulation at the
+  MAC.
+
 * **Fidelity** — the engine is *mode-agnostic*: it consumes the
   record-time and query-time transforms of the config's
   :class:`~repro.core.fidelity.FidelityPipeline` (an ordered stack of
@@ -95,7 +108,19 @@ class FusedGrating:
         hold a single tensor.
       effective: (O, C, FH, FW, FTr) complex — ``Σ_s w_s · stacked[s]``
         with the kernel de-quantization scale and echo gain folded in.
-        This is the tensor held stationary in HBM.
+        This is the tensor held stationary in HBM (f32 storage mode).
+        In half-precision storage mode (``STHCConfig.grating_dtype =
+        'bfloat16'``) it is None and the recording lives in ``eff_re`` /
+        ``eff_im`` instead; query paths go through :attr:`effective_c`,
+        which serves either layout.
+      eff_re / eff_im: split real/imag bf16 planes of the effective
+        grating — the half-precision storage layout (complex64 has no
+        narrow variant, so the planes are stored separately and up-cast
+        to f32 at the MAC: bf16 at rest, f32 accumulation in compute).
+        Half the HBM per grating, so a ``GratingCache`` byte budget
+        holds ~2x the tenants.
+      storage_dtype: 'float32' | 'bfloat16' — which layout holds the
+        effective grating.
       fft_shape / out_shape: FFT grid and valid-region crop.
       kernel_scale: (O, 1, 1, 1, 1) de-quantization scale (already
         folded into ``effective``; kept for the reference path).
@@ -116,7 +141,7 @@ class FusedGrating:
     """
 
     stacked: Array | None
-    effective: Array
+    effective: Array | None
     fft_shape: tuple[int, int, int]
     out_shape: tuple[int, int, int]
     kernel_scale: Array
@@ -125,11 +150,50 @@ class FusedGrating:
     slm_bits: int = 8
     ker_shape: tuple[int, int, int] | None = None
     pseudo_negative: bool = False
+    eff_re: Array | None = None
+    eff_im: Array | None = None
+    storage_dtype: str = "float32"
+
+    @property
+    def effective_c(self) -> Array:
+        """The query-ready complex64 effective grating, whichever layout
+        stores it.  For f32 storage this is the stored tensor itself (no
+        copy, bit-identical paths); bf16 storage up-casts the split-real
+        planes — the one place half-precision re-enters f32 compute."""
+        if self.effective is not None:
+            return self.effective
+        return lax.complex(
+            self.eff_re.astype(jnp.float32), self.eff_im.astype(jnp.float32)
+        )
+
+    @property
+    def planes(self) -> tuple[Array, Array]:
+        """(re, im) planes in the storage dtype — what the pooled arena
+        packs (bf16 gratings stay bf16 in HBM until the kernel's tile
+        up-cast; f32 gratings split lazily)."""
+        if self.effective is None:
+            return self.eff_re, self.eff_im
+        return jnp.real(self.effective), jnp.imag(self.effective)
+
+    @property
+    def n_out(self) -> int:
+        """Output channels O recorded in this grating."""
+        eff = self.effective if self.effective is not None else self.eff_re
+        return int(eff.shape[0])
+
+    @property
+    def channels(self) -> int:
+        """Input channels C the grating contracts over."""
+        eff = self.effective if self.effective is not None else self.eff_re
+        return int(eff.shape[1])
 
     @property
     def nbytes(self) -> int:
         """HBM footprint of the recorded state (cache byte accounting)."""
-        n = int(self.effective.nbytes)
+        if self.effective is not None:
+            n = int(self.effective.nbytes)
+        else:
+            n = int(self.eff_re.nbytes) + int(self.eff_im.nbytes)
         if self.stacked is not None:
             n += int(self.stacked.nbytes)
         return n
@@ -138,15 +202,158 @@ class FusedGrating:
 
     @property
     def plus(self) -> Array:
-        return self.effective if self.stacked is None else self.stacked[0]
+        return self.effective_c if self.stacked is None else self.stacked[0]
 
     @property
     def minus(self) -> Array | None:
         return None if self.stacked is None else self.stacked[1]
 
 
+@dataclasses.dataclass(frozen=True)
+class GratingPool:
+    """A packed cross-tenant arena of effective gratings (one pool group).
+
+    The serving counterpart of the paper's parallel-kernel recording:
+    every resident tenant's effective grating is stacked into one
+    ``(ΣO_pad, C, FH, FW, FTr)`` tensor held stationary on device, so a
+    mixed-tenant clip batch diffracts off *all* of them in a single
+    dispatch — each clip row reads only its own tenant's O-slice via its
+    :attr:`o_start` offset.
+
+    Attributes:
+      re / im: split real/imag planes of the arena, in the members'
+        storage dtype (bf16 gratings stay bf16 in HBM; the MAC up-casts
+        tiles to f32 — f32 accumulation either way).
+      o_start: per-member first-row offset.  Member slots are padded to
+        ``align`` rows (the Pallas grouped kernel indexes the arena in
+        O-tile units; the dense gather path uses align=1), and the arena
+        carries enough tail rows that every ``o_start[i] + n_out`` read
+        stays in bounds.
+      n_out: rows each pooled query reads/writes per request (the widest
+        member slot); per-request outputs are cropped back to their own
+        O.
+      members: strong references to the member gratings — the arena is a
+        pure repack of their planes, and pinning them keeps the
+        identity-keyed pool cache sound.
+    """
+
+    re: Array
+    im: Array
+    o_start: tuple[int, ...]
+    n_out: int
+    align: int
+    members: tuple[FusedGrating, ...]
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.re.nbytes) + int(self.im.nbytes)
+
+
+def _dedup_members(
+    gratings: list[FusedGrating],
+) -> tuple[list[FusedGrating], list[int]]:
+    """Unique member gratings (identity, first-seen order) + each
+    request's member slot — two requests for one tenant share a slice."""
+    members: list[FusedGrating] = []
+    index: dict[int, int] = {}
+    slot_of: list[int] = []
+    for g in gratings:
+        slot = index.get(id(g))
+        if slot is None:
+            slot = index[id(g)] = len(members)
+            members.append(g)
+        slot_of.append(slot)
+    return members, slot_of
+
+
+def _build_pool(members: list[FusedGrating], align: int) -> GratingPool:
+    """Pack member gratings' planes into one arena (see GratingPool)."""
+    c = members[0].channels
+    for g in members[1:]:
+        if g.channels != c:
+            raise ValueError(
+                "pool members disagree on input channels: "
+                f"{[m.channels for m in members]}"
+            )
+    res, ims, o_start = [], [], []
+    row = 0
+    n_out = 0
+    for g in members:
+        re, im = g.planes
+        slot = -(-int(re.shape[0]) // align) * align
+        if slot > re.shape[0]:
+            widths = [(0, slot - re.shape[0])] + [(0, 0)] * (re.ndim - 1)
+            re, im = jnp.pad(re, widths), jnp.pad(im, widths)
+        res.append(re)
+        ims.append(im)
+        o_start.append(row)
+        row += slot
+        n_out = max(n_out, slot)
+    tail = max(o + n_out for o in o_start) - row
+    if tail > 0:  # keep the last members' n_out-row reads in bounds
+        zeros = jnp.zeros((tail,) + res[0].shape[1:], res[0].dtype)
+        res.append(zeros)
+        ims.append(zeros)
+    re = res[0] if len(res) == 1 else jnp.concatenate(res, axis=0)
+    im = ims[0] if len(ims) == 1 else jnp.concatenate(ims, axis=0)
+    return GratingPool(
+        re=re,
+        im=im,
+        o_start=tuple(o_start),
+        n_out=n_out,
+        align=align,
+        members=tuple(members),
+    )
+
+
+def _pool_select(
+    pool_re: Array, pool_im: Array, rows: Array, n_out: int
+) -> Array:
+    """Per-row O-slices of the arena, as one complex64 tensor
+    (B, n_out, C, FH, FW, FTr): clip row b sees arena rows
+    ``[rows[b], rows[b] + n_out)``.  The planes up-cast to f32 here, so
+    bf16-stored pools accumulate in f32 at the MAC.  Window-independent:
+    streaming hoists this gather out of the overlap-save loop."""
+    arena = lax.complex(
+        pool_re.astype(jnp.float32), pool_im.astype(jnp.float32)
+    )
+    o_idx = rows[:, None] + jnp.arange(n_out, dtype=rows.dtype)[None, :]
+    return arena[o_idx]
+
+
+def _presel_query_dense(
+    x: Array,
+    sel: Array,
+    fft_shape: tuple[int, int, int],
+    out_shape: tuple[int, int, int],
+) -> Array:
+    """Pooled MAC on pre-selected per-row slices: exactly one forward
+    ``rfftn`` over the stacked clip batch, one channel-contracted MAC,
+    one ``irfftn`` (the XLA reference for the grouped Pallas kernel)."""
+    xhat = jnp.fft.rfftn(x, s=fft_shape, axes=(-3, -2, -1))
+    yhat = jnp.einsum("bcxyz,bocxyz->boxyz", xhat, sel, precision="highest")
+    y = jnp.fft.irfftn(yhat, s=fft_shape, axes=(-3, -2, -1))
+    return y[..., : out_shape[0], : out_shape[1], : out_shape[2]]
+
+
+def _pooled_query_dense(
+    x: Array,
+    pool_re: Array,
+    pool_im: Array,
+    rows: Array,
+    n_out: int,
+    fft_shape: tuple[int, int, int],
+    out_shape: tuple[int, int, int],
+) -> Array:
+    """Dense pooled query: offset-gather + einsum."""
+    sel = _pool_select(pool_re, pool_im, rows, n_out)
+    return _presel_query_dense(x, sel, fft_shape, out_shape)
+
+
 class QueryEngine:
     """Record-once / query-many executor for one :class:`STHCConfig`."""
+
+    _max_pools = 8  # LRU bound on memoized cross-tenant arenas
 
     def __init__(self, config: "STHCConfig"):
         self.config = config
@@ -159,6 +366,24 @@ class QueryEngine:
                 "ker_shape", "fft_shape", "plan", "encode", "slm_bits",
             ),
         )
+        # pooled streaming driver + the cross-tenant arena cache.  The
+        # request composition (per-row offsets, per-request splits) is
+        # *static*: steady-state serving compositions repeat call after
+        # call, and baking them into the trace removes every eager
+        # per-request op (host→device offset transfers, result slicing)
+        # from the hot path — the pooled dispatch is exactly one jitted
+        # call.  The flip side is a retrace per *novel* composition, so
+        # callers should canonicalize request order (the server sorts
+        # its tenant groups) to keep the composition space small.
+        self._stream_many_fn = jax.jit(
+            self._stream_many_impl,
+            static_argnames=(
+                "rows", "splits", "ker_shape", "fft_shape", "plan",
+                "encode", "slm_bits", "n_out",
+            ),
+        )
+        self._pools: OrderedDict[tuple, GratingPool] = OrderedDict()
+        self._pools_lock = threading.Lock()
 
     # -- record -----------------------------------------------------------
 
@@ -255,6 +480,17 @@ class QueryEngine:
             gain = stage.fold_gain(gain, ctx)
         if gain is not None:
             effective = effective * gain
+        store = getattr(cfg, "grating_dtype", "float32")
+        if store == "bfloat16":
+            # Half-precision storage: split real/imag bf16 planes (complex
+            # has no narrow dtype), up-cast at the MAC.  The raw ± stack
+            # is an f32 validation artifact, not a serving tensor — it is
+            # dropped so the grating's footprint really is half.
+            eff_re = jnp.real(effective).astype(jnp.bfloat16)
+            eff_im = jnp.imag(effective).astype(jnp.bfloat16)
+            effective, stacked = None, None
+        else:
+            eff_re = eff_im = None
         return FusedGrating(
             stacked=stacked,
             effective=effective,
@@ -266,6 +502,9 @@ class QueryEngine:
             slm_bits=bits,
             ker_shape=tuple(int(n) for n in ker_shape),
             pseudo_negative=pn,
+            eff_re=eff_re,
+            eff_im=eff_im,
+            storage_dtype=store,
         )
 
     # -- query (fused hot path) --------------------------------------------
@@ -278,11 +517,11 @@ class QueryEngine:
         """
         if not grating.encode:
             return self._query_fn()(
-                x, grating.effective, grating.fft_shape, grating.out_shape
+                x, grating.effective_c, grating.fft_shape, grating.out_shape
             )
         enc, x_scale = self._encode(x, grating.slm_bits)
         y = self._query_fn()(
-            enc, grating.effective, grating.fft_shape, grating.out_shape
+            enc, grating.effective_c, grating.fft_shape, grating.out_shape
         )
         # fused epilogue: only the per-example de-scaling remains — the ±
         # combine, kernel scale and echo gain were folded at record time.
@@ -382,7 +621,7 @@ class QueryEngine:
         plan = self.stream_plan_for(grating, x.shape[-1], chunk_windows)
         return self._stream_fn(
             x,
-            grating.effective,
+            grating.effective_c,
             ker_shape=grating.ker_shape,
             fft_shape=grating.fft_shape,
             plan=plan,
@@ -439,6 +678,276 @@ class QueryEngine:
             # de-scaling is left at query time.
             y = y * x_scale
         return y
+
+    # -- query (pooled cross-tenant batch) ----------------------------------
+
+    def query_many(
+        self, requests: "Sequence[tuple[FusedGrating, Array]]"
+    ) -> list[Array]:
+        """Answer a mixed-tenant clip batch with one dispatch per pool group.
+
+        ``requests`` is a sequence of ``(grating, x)`` pairs, each ``x``
+        a (B_i, C, H, W, T) clip batch.  Requests are grouped by (FFT
+        geometry, encode semantics, storage dtype, clip geometry); each
+        group's resident gratings are packed into one pooled
+        ``(ΣO, C, FH, FW, FTr)`` arena with per-tenant O-offsets
+        (:class:`GratingPool`, reused across calls while the member
+        gratings stay alive) and the whole group is answered with
+        exactly one forward ``rfftn`` over the stacked clips, one
+        channel-contracted MAC against the pool (each clip row reading
+        only its own tenant's O-slice, via offset-gather — or the
+        grouped Pallas ``stmul`` launch when ``use_pallas``), and one
+        inverse FFT.  A mixed-tenant load of N same-geometry tenants
+        thus pays 1 FFT+MAC+IFFT dispatch instead of N.
+
+        The gratings may come from *different* engines (mixed-fidelity
+        serving): everything record-time is already folded into each
+        effective grating, and the query-time semantics ride on the
+        grating itself (``encode`` / ``slm_bits``), so pipelines that
+        share encode semantics and geometry share one pool group.
+
+        Returns outputs in request order, each (B_i, O_i, *out_shape) —
+        equal to ``query(grating_i, x_i)`` to float tolerance.
+        """
+        groups = self._group_requests(requests)
+        results: list[Array | None] = [None] * len(requests)
+        for idxs in groups.values():
+            gratings = [requests[i][0] for i in idxs]
+            members, slot_of = _dedup_members(gratings)
+            pool = self._pool_for(members)
+            xs = [requests[i][1] for i in idxs]
+            x = xs[0] if len(xs) == 1 else jnp.concatenate(xs, axis=0)
+            rows = np.repeat(
+                [pool.o_start[slot_of[j]] for j in range(len(idxs))],
+                [int(xi.shape[0]) for xi in xs],
+            ).astype(np.int32)
+            y = self._pooled_dispatch(x, pool, rows, gratings[0])
+            b0 = 0
+            for j, i in enumerate(idxs):
+                nb = int(xs[j].shape[0])
+                results[i] = y[b0 : b0 + nb, : gratings[j].n_out]
+                b0 += nb
+        return results  # type: ignore[return-value]
+
+    def query_stream_many(
+        self,
+        requests: "Sequence[tuple[FusedGrating, Array]]",
+        *,
+        chunk_windows: int | None = None,
+    ) -> list[Array]:
+        """Pooled :meth:`query_stream`: one overlap-save pass per group.
+
+        The streaming analogue of :meth:`query_many` — mixed-tenant long
+        clips sharing the coherence-window geometry (same recorded
+        kernel/window shapes, encode semantics and stream length) stack
+        on the batch axis and every window chunk runs one pooled
+        FFT+MAC+IFFT against the group arena, instead of one overlap-
+        save pass per tenant.  Encoding stays per-example stream-global,
+        so each request's output equals ``query_stream(grating_i, x_i)``
+        to float tolerance.
+        """
+        groups = self._group_requests(requests, stream=True)
+        results: list[Array | None] = [None] * len(requests)
+        for idxs in groups.values():
+            gratings = [requests[i][0] for i in idxs]
+            g0 = gratings[0]
+            if g0.ker_shape is None:
+                raise ValueError(
+                    "grating lacks ker_shape (recorded by an older engine); "
+                    "re-record before streaming queries"
+                )
+            members, slot_of = _dedup_members(gratings)
+            pool = self._pool_for(members)
+            xs = [requests[i][1] for i in idxs]
+            kh, kw, _ = g0.ker_shape
+            oh, ow, _ = g0.out_shape
+            frame_hw = (oh + kh - 1, ow + kw - 1)
+            if tuple(xs[0].shape[-3:-1]) != frame_hw:
+                raise ValueError(
+                    f"clip spatial dims {tuple(xs[0].shape[-3:-1])} do not "
+                    f"match the recorded frame size {frame_hw}"
+                )
+            plan = self.stream_plan_for(g0, xs[0].shape[-1], chunk_windows)
+            rows, splits, b0 = [], [], 0
+            for j in range(len(idxs)):
+                nb = int(xs[j].shape[0])
+                rows.extend([pool.o_start[slot_of[j]]] * nb)
+                splits.append((b0, nb, gratings[j].n_out))
+                b0 += nb
+            outs = self._stream_many_fn(
+                tuple(xs),
+                pool.re,
+                pool.im,
+                rows=tuple(rows),
+                splits=tuple(splits),
+                ker_shape=g0.ker_shape,
+                fft_shape=g0.fft_shape,
+                plan=plan,
+                encode=g0.encode,
+                slm_bits=g0.slm_bits,
+                n_out=pool.n_out,
+            )
+            for j, i in enumerate(idxs):
+                results[i] = outs[j]
+        return results  # type: ignore[return-value]
+
+    def _group_requests(self, requests, stream: bool = False) -> dict:
+        """Pool-group the requests: same FFT geometry + encode semantics
+        + storage dtype + clip geometry can share one arena/dispatch."""
+        groups: dict[tuple, list[int]] = {}
+        for i, (g, x) in enumerate(requests):
+            if x.ndim != 5:
+                raise ValueError(
+                    f"request {i}: clips must be (B, C, H, W, T), got "
+                    f"shape {tuple(x.shape)}"
+                )
+            if int(x.shape[1]) != g.channels:
+                raise ValueError(
+                    f"request {i}: clip has {x.shape[1]} channels; the "
+                    f"grating was recorded with {g.channels}"
+                )
+            key = (
+                g.fft_shape,
+                g.out_shape,
+                g.ker_shape if stream else None,
+                bool(g.encode),
+                int(g.slm_bits) if g.encode else -1,
+                g.storage_dtype,
+                tuple(x.shape[1:]),
+                str(x.dtype),
+            )
+            groups.setdefault(key, []).append(i)
+        return groups
+
+    def _pool_align(self) -> int:
+        """O-offset alignment of the pool arena: the Pallas grouped
+        kernel indexes the arena in O-tile units, so member slots must
+        start on its ``block_o`` grid; the dense gather path needs no
+        alignment."""
+        cfg = self.config
+        if not getattr(cfg, "use_pallas", False):
+            return 1
+        from repro.kernels.stmul import kernel as stmul_kernel  # lazy
+
+        return int(
+            getattr(cfg, "stmul_block_o", None) or stmul_kernel.BLOCK_O
+        )
+
+    def _pool_for(self, members: list[FusedGrating]) -> "GratingPool":
+        """Fetch or build the packed arena for this member list.
+
+        Pools are memoized per (member identity, alignment): gratings are
+        immutable once recorded, so object identity is content identity,
+        and the entry holds strong references to its members — the arena
+        is a *stable* device buffer reused across dispatches instead of
+        being re-packed per batch.  A small LRU bound keeps retired
+        membership sets (tenant churn) from pinning dead gratings.
+        """
+        align = self._pool_align()
+        key = (tuple(id(g) for g in members), align)
+        with self._pools_lock:
+            pool = self._pools.get(key)
+            if pool is not None:
+                self._pools.move_to_end(key)
+                return pool
+        pool = _build_pool(members, align)
+        with self._pools_lock:
+            self._pools[key] = pool
+            while len(self._pools) > self._max_pools:
+                self._pools.popitem(last=False)
+        return pool
+
+    def _pooled_dispatch(
+        self, x: Array, pool: "GratingPool", rows: np.ndarray, proto: FusedGrating
+    ) -> Array:
+        """One pooled FFT+MAC+IFFT (+ the group's encode epilogue).
+
+        ``proto`` is any member grating — the group key guarantees they
+        share geometry and encode semantics."""
+        rows = jnp.asarray(rows, jnp.int32)
+        query = self._pooled_query_fn()
+        if not proto.encode:
+            return query(
+                x, pool.re, pool.im, rows, pool.n_out,
+                proto.fft_shape, proto.out_shape,
+            )
+        enc, x_scale = self._encode(x, proto.slm_bits)
+        y = query(
+            enc, pool.re, pool.im, rows, pool.n_out,
+            proto.fft_shape, proto.out_shape,
+        )
+        return y * x_scale
+
+    def _stream_many_impl(
+        self, xs, pool_re, pool_im,
+        *, rows, splits, ker_shape, fft_shape, plan, encode, slm_bits, n_out,
+    ):
+        """Pooled overlap-save body (jitted; mirrors ``_stream_impl``).
+
+        ``xs`` is the tuple of per-request clip batches (stacked in-trace
+        so the eager path dispatches nothing); ``rows`` the static
+        per-row arena offsets, ``splits`` the static per-request
+        ``(b0, nb, O_i)`` output partition."""
+        x = xs[0] if len(xs) == 1 else jnp.concatenate(xs, axis=0)
+        rows = jnp.asarray(rows, jnp.int32)
+        kh, kw, kt = ker_shape
+        H, W = x.shape[-3:-1]
+        x_scale = None
+        if encode:
+            x, x_scale = self._encode(x, slm_bits)
+        xp = jnp.pad(x, [(0, 0)] * 4 + [(0, plan.pad_t)])
+        win_out = (H - kh + 1, W - kw + 1, plan.step)
+        if getattr(self.config, "use_pallas", False):
+            query = self._pooled_query_fn()
+
+            def one_window(start):
+                win = lax.dynamic_slice_in_dim(
+                    xp, start, plan.block_t, axis=-1
+                )
+                return query(
+                    win, pool_re, pool_im, rows, n_out, fft_shape, win_out
+                )
+
+        else:
+            # dense path: the per-row arena gather is window-independent
+            # — hoist it out of the overlap-save loop so each window pays
+            # only the FFT+MAC+IFFT, not a fresh pool materialization
+            sel = _pool_select(pool_re, pool_im, rows, n_out)
+
+            def one_window(start):
+                win = lax.dynamic_slice_in_dim(
+                    xp, start, plan.block_t, axis=-1
+                )
+                return _presel_query_dense(win, sel, fft_shape, win_out)
+
+        starts = spectral_conv.window_starts(plan)
+        blocks = lax.map(lambda cs: jax.vmap(one_window)(cs), starts)
+        y = spectral_conv.stitch_windows(blocks, plan)
+        if x_scale is not None:
+            y = y * x_scale
+        return tuple(y[b0 : b0 + nb, :o] for b0, nb, o in splits)
+
+    def _pooled_query_fn(self):
+        """The per-group pooled FFT+MAC+IFFT: dense offset-gather einsum
+        by default, the grouped Pallas stmul launch under ``use_pallas``."""
+        cfg = self.config
+        if not getattr(cfg, "use_pallas", False):
+            return _pooled_query_dense
+        from repro.kernels.stmul import ops as stmul_ops  # lazy import
+
+        min_mxu_c = getattr(cfg, "stmul_min_mxu_c", None)
+        tiles = dict(
+            block_o=getattr(cfg, "stmul_block_o", None),
+            block_f=getattr(cfg, "stmul_block_f", None),
+        )
+
+        def query(x, pool_re, pool_im, rows, n_out, fft_shape, out_shape):
+            return stmul_ops.query_grating_pooled(
+                x, pool_re, pool_im, rows, n_out, fft_shape, out_shape,
+                min_mxu_c=min_mxu_c, **tiles,
+            )
+
+        return query
 
     # -- internals ---------------------------------------------------------
 
@@ -551,6 +1060,7 @@ class GratingCache:
             return None
         arr = np.asarray(kernels)
         digest = hashlib.sha1(arr.tobytes()).hexdigest()
+        store = getattr(config, "grating_dtype", "float32")
         record_cfg = (
             config.fidelity.fingerprint(),
             config.slm,
@@ -559,13 +1069,17 @@ class GratingCache:
             # record-side: changes what object is stored (± stack or not),
             # so stripped serving gratings never alias full ones — but
             # only when the pipeline splits ± channels at all; other
-            # gratings have no stack, and splitting on the knob would
-            # double-record identical ones.
+            # gratings have no stack (bf16 storage always drops it), and
+            # splitting on the knob would double-record identical ones.
             (
                 getattr(config, "keep_stacked", True)
                 if config.fidelity.has(fidelity_mod.PseudoNegative)
+                and store == "float32"
                 else True
             ),
+            # storage precision changes the stored object (and its
+            # numerics), so bf16 and f32 gratings never alias
+            store,
         )
         return (digest, arr.shape, str(arr.dtype), tuple(signal_shape), record_cfg)
 

@@ -84,6 +84,15 @@ class STHCConfig:
     # explicit ``fidelity`` pipeline, pass the stage parameter instead.
     compensate_pulse: bool = True
     fused: bool = True  # single-FFT fused query (False = two-query reference)
+    # Storage precision of the recorded effective grating: 'float32' keeps
+    # the complex64 tensor (bit-identical to every pre-knob path);
+    # 'bfloat16' stores split real/imag bf16 planes — half the HBM per
+    # grating, so a GratingCache byte budget holds ~2x the tenants — and
+    # queries up-cast to f32 at the MAC (f32 accumulation).  bf16 storage
+    # targets serving: the raw ± reference stack is dropped (as with
+    # keep_stacked=False) because the unfused reference path is an f32
+    # validation tool, not a serving path.
+    grating_dtype: str = "float32"
     cache_gratings: bool = True  # memoize record() by kernel content hash
     # Keep the raw ± gratings alongside the effective one at record time.
     # Only the unfused reference path reads them; serving sets False so a
@@ -95,6 +104,11 @@ class STHCConfig:
     osave_chunk_windows: int = 1
 
     def __post_init__(self):
+        if self.grating_dtype not in ("float32", "bfloat16"):
+            raise ValueError(
+                "grating_dtype must be 'float32' or 'bfloat16', got "
+                f"{self.grating_dtype!r}"
+            )
         if self.mode is not None:
             # validate first (raises on unknown strings), then warn
             preset = fidelity_mod.from_mode(

@@ -28,13 +28,29 @@ Two kernel generations:
   the VPU.  For small C (the paper's C=1 workload) the broadcast-MAC
   form is kept: a 1-deep matmul would waste the systolic array.
 
+Grouped (pooled cross-tenant) variant
+-------------------------------------
+``spectral_mac_grouped_pallas`` contracts a whole *pooled* grating arena
+in one launch: the gratings of every resident tenant are stacked on the
+O axis (``(ΣO_pad, C, F)``) and each query row ``b`` reads only its own
+tenant's O-slice, selected by a per-row block offset prefetched into
+SMEM (``pltpu.PrefetchScalarGridSpec`` — the offset feeds the grating
+BlockSpec's index map, so the right arena tile is DMA'd per program).
+A mixed-tenant batch of N same-geometry tenants is thus one kernel
+launch instead of N.  Arena planes may be stored bf16 (half-precision
+grating storage); tiles are up-cast to f32 in-kernel so the contraction
+accumulates in f32 either way.
+
 Tiling
 ------
 grid = (B/bB, O/bO, F/bF); each program reads
     x tile (bB, C, bF)  +  g tile (bO, C, bF)   → writes y tile (bB, bO, bF)
 with bF a multiple of 128 (lane width).  VMEM per program ≈
 (bB + bO)·C·bF·4B·2(planes) + bB·bO·bF·8B; defaults keep this ≈ 2 MiB,
-well inside the ~16 MiB VMEM budget.
+well inside the ~16 MiB VMEM budget.  The grouped variant runs one
+query row per program (bB = 1): rows of one batch may belong to
+different tenants, so the row axis cannot tile without constraining the
+scheduler to tenant-contiguous blocks.
 """
 
 from __future__ import annotations
@@ -44,6 +60,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 Array = jax.Array
 
@@ -188,3 +205,117 @@ def spectral_mac_pallas(
         interpret=interpret,
     )(xr_p, xi_p, gr_p, gi_p)
     return yr[:B, :O, :F], yi[:B, :O, :F]
+
+
+def _stmul_kernel_grouped(
+    off_ref, xr_ref, xi_ref, gr_ref, gi_ref, yr_ref, yi_ref, *, use_mxu: bool
+):
+    """One (1, bO, bF) tile of the pooled contraction.
+
+    ``off_ref`` is the prefetched per-row block-offset vector — consumed
+    by the grating BlockSpec's index map, not here.  Tiles up-cast to
+    f32 (arena planes may be bf16) so accumulation is f32 either way.
+    """
+    xr = xr_ref[...].astype(jnp.float32)  # (1, C, bF)
+    xi = xi_ref[...].astype(jnp.float32)
+    gr = gr_ref[...].astype(jnp.float32)  # (bO, C, bF)
+    gi = gi_ref[...].astype(jnp.float32)
+    t1 = _contract_c(xr, gr, use_mxu)
+    t2 = _contract_c(xi, gi, use_mxu)
+    t3 = _contract_c(xr + xi, gr + gi, use_mxu)
+    yr_ref[...] = t1 - t2
+    yi_ref[...] = t3 - t1 - t2
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_out", "block_o", "block_f", "min_mxu_c", "interpret"),
+)
+def spectral_mac_grouped_pallas(
+    xr: Array,
+    xi: Array,
+    gr: Array,
+    gi: Array,
+    o_start: Array,
+    *,
+    n_out: int,
+    block_o: int = BLOCK_O,
+    block_f: int = BLOCK_F,
+    min_mxu_c: int | None = None,
+    interpret: bool = False,
+) -> tuple[Array, Array]:
+    """Grouped/ragged spectral MAC against a pooled grating arena.
+
+        y[b, o, f] = Σ_c  x[b, c, f] · g[o_start[b] + o, c, f]
+
+    — one launch contracts every query row against its own tenant's
+    O-slice of the arena (per-row offsets via scalar prefetch).
+
+    Args:
+      xr, xi: (B, C, F) float32 query-spectrum planes.
+      gr, gi: (ΣO_pad, C, F) float32 *or bfloat16* pooled arena planes
+        (half-precision grating storage stays narrow in HBM; tiles
+        up-cast in-kernel, f32 accumulation).
+      o_start: (B,) int32 first-row offset per query row; every offset
+        must sit on the ``block_o`` grid (the arena packs member slots
+        aligned — see ``repro.core.engine.GratingPool``).
+      n_out: rows read/written per query row (the widest member slot).
+
+    Returns (yr, yi): (B, n_out, F) float32.
+    """
+    B, C, F = xr.shape
+    bO = block_o
+    bF = min(block_f, F)
+    n_pad = (-n_out) % bO
+
+    def pad_to(a, axis, mult):
+        rem = (-a.shape[axis]) % mult
+        if rem == 0:
+            return a
+        widths = [(0, 0)] * a.ndim
+        widths[axis] = (0, rem)
+        return jnp.pad(a, widths)
+
+    xr_p = pad_to(xr, 2, bF)
+    xi_p = pad_to(xi, 2, bF)
+    # row-pad the arena so the widest tile read (o_start + n_out_pad)
+    # stays in bounds even for the last member slot
+    gr_p = pad_to(pad_to(gr, 0, bO), 2, bF)
+    gi_p = pad_to(pad_to(gi, 0, bO), 2, bF)
+    if n_pad:
+        widths = [(0, n_pad)] + [(0, 0)] * (gr_p.ndim - 1)
+        gr_p = jnp.pad(gr_p, widths)
+        gi_p = jnp.pad(gi_p, widths)
+    Fp = xr_p.shape[2]
+    n_out_pad = n_out + n_pad
+
+    threshold = MIN_MXU_C if min_mxu_c is None else int(min_mxu_c)
+    kernel = functools.partial(
+        _stmul_kernel_grouped, use_mxu=C >= threshold
+    )
+    off_blocks = (o_start // bO).astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, n_out_pad // bO, Fp // bF),
+        in_specs=[
+            pl.BlockSpec((1, C, bF), lambda b, o, f, off: (b, 0, f)),
+            pl.BlockSpec((1, C, bF), lambda b, o, f, off: (b, 0, f)),
+            pl.BlockSpec((bO, C, bF), lambda b, o, f, off: (off[b] + o, 0, f)),
+            pl.BlockSpec((bO, C, bF), lambda b, o, f, off: (off[b] + o, 0, f)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bO, bF), lambda b, o, f, off: (b, o, f)),
+            pl.BlockSpec((1, bO, bF), lambda b, o, f, off: (b, o, f)),
+        ],
+    )
+    yr, yi = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, n_out_pad, Fp), jnp.float32),
+            jax.ShapeDtypeStruct((B, n_out_pad, Fp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(off_blocks, xr_p, xi_p, gr_p, gi_p)
+    return yr[:, :n_out, :F], yi[:, :n_out, :F]

@@ -87,6 +87,86 @@ def spectral_mac(
     return (yr + 1j * yi).reshape(B, O, *fshape)
 
 
+def spectral_mac_grouped(
+    xhat: Array,
+    pool_re: Array,
+    pool_im: Array,
+    o_start: Array,
+    n_out: int,
+    *,
+    min_mxu_c: int | None = None,
+    block_o: int | None = None,
+    block_f: int | None = None,
+) -> Array:
+    """Pooled cross-tenant spectral MAC via the grouped Pallas kernel.
+
+        Ŷ[b, o, f] = Σ_c  X̂[b, c, f] · Gpool[o_start[b] + o, c, f]
+
+    Args:
+      xhat: (B, C, *F) complex query spectra (the stacked mixed-tenant
+        batch).
+      pool_re / pool_im: (ΣO_pad, C, *F) split real/imag planes of the
+        pooled grating arena — float32 or bfloat16 (half-precision
+        grating storage; the kernel up-casts tiles, f32 accumulation).
+      o_start: (B,) int32 per-row first-row offsets into the arena, on
+        the ``block_o`` grid.
+      n_out: O rows produced per query row.
+
+    Returns (B, n_out, *F) complex64.
+    """
+    tiles = _tile_kwargs(None, block_o, block_f)
+    fshape = xhat.shape[2:]
+    B, C = xhat.shape[:2]
+    f = 1
+    for n in fshape:
+        f *= n
+    xf = xhat.reshape(B, C, f)
+    so = pool_re.shape[0]
+    yr, yi = _kernel.spectral_mac_grouped_pallas(
+        jnp.real(xf).astype(jnp.float32),
+        jnp.imag(xf).astype(jnp.float32),
+        pool_re.reshape(so, C, f),
+        pool_im.reshape(so, C, f),
+        jnp.asarray(o_start, jnp.int32),
+        n_out=int(n_out),
+        min_mxu_c=min_mxu_c,
+        interpret=_use_interpret(),
+        **tiles,
+    )
+    return (yr + 1j * yi).reshape(B, int(n_out), *fshape)
+
+
+def query_grating_pooled(
+    x: Array,
+    pool_re: Array,
+    pool_im: Array,
+    o_start: Array,
+    n_out: int,
+    fft_shape: tuple[int, int, int],
+    out_shape: tuple[int, int, int],
+    *,
+    min_mxu_c: int | None = None,
+    block_o: int | None = None,
+    block_f: int | None = None,
+) -> Array:
+    """Pooled counterpart of :func:`query_grating_pallas`: one forward
+    FFT over the stacked mixed-tenant batch, one grouped-kernel launch
+    against the pooled arena, one inverse FFT."""
+    xhat = jnp.fft.rfftn(x, s=fft_shape, axes=(-3, -2, -1))
+    yhat = spectral_mac_grouped(
+        xhat,
+        pool_re,
+        pool_im,
+        o_start,
+        n_out,
+        min_mxu_c=min_mxu_c,
+        block_o=block_o,
+        block_f=block_f,
+    )
+    y = jnp.fft.irfftn(yhat, s=fft_shape, axes=(-3, -2, -1))
+    return y[..., : out_shape[0], : out_shape[1], : out_shape[2]]
+
+
 def query_grating_pallas(
     x: Array,
     grating: Array,

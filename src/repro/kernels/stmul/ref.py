@@ -32,6 +32,30 @@ def spectral_mac_ref(xhat: Array, grating: Array) -> Array:
     return jnp.einsum("bc...,oc...->bo...", xhat, grating)
 
 
+def spectral_mac_grouped_ref(
+    xhat: Array, pool: Array, o_start, n_out: int
+) -> Array:
+    """Loop oracle for the grouped (pooled cross-tenant) contraction.
+
+    One :func:`spectral_mac_ref` per query row against its own O-slice
+    of the pooled arena — exactly the per-tenant dispatch loop the
+    grouped kernel replaces with a single launch.
+
+    Args:
+      xhat: (B, C, *F) complex query spectra.
+      pool: (ΣO_pad, C, *F) complex pooled arena.
+      o_start: per-row first-row offsets into the arena.
+      n_out: O rows produced per query row.
+
+    Returns (B, n_out, *F) complex.
+    """
+    outs = [
+        spectral_mac_ref(xhat[b : b + 1], pool[int(o) : int(o) + n_out])
+        for b, o in enumerate(o_start)
+    ]
+    return jnp.concatenate(outs, axis=0)
+
+
 def spectral_mac_ref_realimag(
     xr: Array, xi: Array, gr: Array, gi: Array
 ) -> tuple[Array, Array]:

@@ -7,9 +7,8 @@ Two serving modes, matching the paper's system and the LM zoo:
    *tenant* is a named reference kernel set ("what to look for"),
    recorded into one shared content-hash :class:`GratingCache` with an
    LRU budget in entries *and* grating bytes.  Long query streams are
-   pushed through the engine's coherence-window overlap-save path
-   (``QueryEngine.query_stream``).  Fidelity is **per tenant**: each
-   kernel set registers with its own
+   pushed through the engine's coherence-window overlap-save path.
+   Fidelity is **per tenant**: each kernel set registers with its own
    :class:`~repro.core.fidelity.FidelityPipeline` (``add_tenant`` /
    ``add_kernel_set``, default = the server's
    ``VideoSearchConfig.fidelity``), the server keeps one mode-agnostic
@@ -18,13 +17,37 @@ Two serving modes, matching the paper's system and the LM zoo:
    e.g. an ``ideal()`` tenant next to a full ``physical()`` tenant (or
    any stage subset) with no cross-fidelity cache hits.  Evicted
    tenants re-record transparently on their next query (a cache miss),
-   exactly like re-writing the atomic medium.  Concurrent streams
-   batch two ways: same-shape requests stack on the batch axis
-   (`search_batch`), and each stream's coherence windows run
-   ``chunk_windows`` at a time as one vmap'd batch.  `metrics()`
-   reports cache hits/misses/evictions/bytes, per-tenant fidelity, and
-   measured windows/s + frames/s against the paper's projected loader
-   rates (`core.throughput`).
+   exactly like re-writing the atomic medium.
+
+   The serving hot path is a three-stage **queue → batcher →
+   pooled-executor** architecture:
+
+   * **queue** — :class:`MicrobatchScheduler` fronts the server with a
+     *bounded* async request queue: ``submit()`` returns a future;
+     admission control sheds requests the moment the queue is full
+     (``RequestRejected`` + a rejected-request counter) or, with
+     ``block=True``, exerts backpressure on the caller.  Scheduler
+     ``metrics()`` report end-to-end latency percentiles (p50/p90/p99),
+     queue depth and shed/batch counters.
+   * **batcher** — the scheduler thread drains the queue into
+     microbatches (up to ``max_batch`` requests, waiting
+     ``batch_wait_s`` after the first arrival so a fuller batch can
+     form), grouping *across tenants* by clip shape.
+   * **pooled executor** — ``search_batch`` hands the mixed-tenant
+     microbatch to the engine's pooled path
+     (``QueryEngine.query_stream_many``): every resident tenant grating
+     sharing the window FFT geometry and encode semantics is packed
+     into one stationary ``(ΣO, C, FH, FW, FTr)`` arena, and the whole
+     batch is answered with **one** FFT + pooled spectral MAC + IFFT
+     per coherence-window chunk instead of one dispatch chain per
+     tenant (the Morph-style heterogeneous-batch win; a per-tenant
+     sequential path is kept as the benchmark baseline,
+     ``pooled=False``).
+
+   `metrics()` reports cache hits/misses/evictions/bytes, per-tenant
+   fidelity, pooled/sequential dispatch counters, and measured
+   windows/s + frames/s against the paper's projected loader rates
+   (`core.throughput`).
 
 2. **LM serving** (`LMServer`) — prefill + decode with the uniform cache
    API; used by the serve smoke tests and the decode dry-run shapes.
@@ -33,10 +56,13 @@ Two serving modes, matching the paper's system and the LM zoo:
 from __future__ import annotations
 
 import argparse
+import collections
 import dataclasses
+import queue as queue_mod
 import threading
 import time
 import warnings
+from concurrent.futures import Future
 from typing import Any, Sequence
 
 import jax
@@ -82,6 +108,15 @@ class VideoSearchConfig:
         shared *across fidelities*: keys include the pipeline
         fingerprint, so mixed-fidelity tenants never cross-hit.
       use_pallas: route the spectral MAC through the stmul kernel.
+      pooled_queries: serve mixed-tenant batches through the engine's
+        pooled cross-tenant executor (one FFT + pooled MAC + IFFT per
+        window chunk for every same-geometry tenant in the batch).
+        False = the per-tenant-sequential dispatch loop (the benchmark
+        baseline).
+      grating_dtype: storage precision of recorded gratings ('float32'
+        | 'bfloat16').  bf16 stores split-real planes at half the HBM —
+        the shared cache byte budget holds ~2x the tenants — with f32
+        accumulation at the MAC.
     """
 
     window_frames: int = 64
@@ -91,6 +126,8 @@ class VideoSearchConfig:
     cache_entries: int = 8
     cache_bytes: int | None = None
     use_pallas: bool = False
+    pooled_queries: bool = True
+    grating_dtype: str = "float32"
 
 
 @dataclasses.dataclass
@@ -163,6 +200,20 @@ class VideoSearchServer:
         # guards _tenants membership and the per-tenant counters; the
         # correlation itself runs outside (the cache has its own lock)
         self._lock = threading.Lock()
+        self._pooled_dispatches = 0
+        self._sequential_dispatches = 0
+        # batched detection readout for the pooled path: peak + argmax of
+        # every group in one jitted call (per-group eager readout is a
+        # dispatch + host sync per tenant — measurable at serving rates)
+        self._readout = jax.jit(
+            lambda fmaps: tuple(
+                (
+                    jnp.max(f.reshape(f.shape[0], f.shape[1], -1), -1),
+                    jnp.argmax(f.reshape(f.shape[0], f.shape[1], -1), -1),
+                )
+                for f in fmaps
+            )
+        )
         if kernels is not None:
             self.add_tenant("default", kernels)
 
@@ -206,6 +257,9 @@ class VideoSearchServer:
                         # charges only its hot-path bytes against
                         # cache_bytes.
                         keep_stacked=False,
+                        grating_dtype=getattr(
+                            self.cfg, "grating_dtype", "float32"
+                        ),
                     ),
                     cache=self.cache,
                 )
@@ -358,16 +412,26 @@ class VideoSearchServer:
         return out
 
     def search_batch(
-        self, requests: Sequence[tuple[str, jax.Array]]
+        self,
+        requests: Sequence[tuple[str, jax.Array]],
+        pooled: bool | None = None,
     ) -> list[dict]:
         """Schedule concurrent stream searches.
 
         Requests — ``(tenant, clip)`` pairs — are grouped by tenant and
-        stream shape; each group stacks on the batch axis and runs as
-        *one* streaming correlation, whose coherence windows ride the
-        ``chunk_windows`` vmap machinery.  Results come back in request
-        order; latency is attributed per group.
+        stream shape; each tenant-group stacks on the batch axis.  With
+        ``pooled`` (default ``cfg.pooled_queries``) all groups then go to
+        the engine's cross-tenant executor in one call
+        (``QueryEngine.query_stream_many``): tenants whose gratings
+        share the window FFT geometry and encode semantics are served
+        from one pooled arena — one FFT + pooled MAC + IFFT per window
+        chunk for the *whole mixed-tenant batch*.  ``pooled=False`` is
+        the per-tenant-sequential dispatch loop (one streaming
+        correlation per tenant-group; the benchmark baseline).  Results
+        come back in request order.
         """
+        if pooled is None:
+            pooled = getattr(self.cfg, "pooled_queries", True)
         groups: dict[tuple, list[int]] = {}
         with self._lock:  # snapshot: a racing remove_tenant can't break
             tenants = dict(self._tenants)
@@ -400,35 +464,106 @@ class VideoSearchServer:
             key = (tenant, clip.shape[1:], jnp.dtype(clip.dtype))
             groups.setdefault(key, []).append(i)
 
-        results: list[dict | None] = [None] * len(requests)
-        for (tenant, *_), idxs in groups.items():
-            ten = tenants[tenant]
-            clips = (
-                requests[idxs[0]][1]  # single request: no device copy
-                if len(idxs) == 1
-                else jnp.concatenate([requests[i][1] for i in idxs], axis=0)
-            )
+        # one stacked clip batch per tenant-group, in *canonical* group
+        # order: the pooled executor bakes the batch composition into
+        # its jitted trace, so permutations of the same tenant mix must
+        # map to one composition, not one retrace each
+        order = sorted(
+            groups.items(), key=lambda kv: (kv[0][0], str(kv[0][1:]))
+        )
+        tens = [tenants[key[0]] for key, _ in order]
+        stacks = [
+            requests[idxs[0]][1]  # single request: no device copy
+            if len(idxs) == 1
+            else jnp.concatenate([requests[i][1] for i in idxs], axis=0)
+            for _, idxs in order
+        ]
+
+        if pooled:
+            # pooled cross-tenant dispatch: fetch all gratings, then one
+            # engine call answers every same-geometry group together.
+            # The pooled executor is fidelity-agnostic (record-time
+            # physics is baked into each grating), so the server's
+            # default engine serves all tenants' gratings.
             t0 = time.time()
-            grating = self._fetch_grating(tenant, ten)
-            fmap = ten.sthc.engine.query_stream(grating, clips)
-            fmap = jax.block_until_ready(fmap)  # honest serving latency
+            gratings = [
+                self._fetch_grating(key[0], ten)
+                for (key, _), ten in zip(order, tens)
+            ]
+            fmaps = self.sthc.engine.query_stream_many(
+                list(zip(gratings, stacks))
+            )
+            # detection readout rides the batch too: one jitted call for
+            # every group's peak + argmax instead of an eager op chain
+            # (with its host sync) per tenant
+            readouts = self._readout(tuple(fmaps))
+            readouts = jax.block_until_ready(readouts)
             dt = time.time() - t0
-            # the exact plan the correlation ran under (derived from the
-            # grating's recorded geometry, not the live cfg)
-            plan = ten.sthc.engine.stream_plan_for(grating, clips.shape[-1])
-            n_streams = clips.shape[0]
             with self._lock:
+                self._pooled_dispatches += 1
+            lat = [dt] * len(order)  # every request rode the one dispatch
+            # credit the tenant busy-seconds proportionally to each
+            # group's window share: the batch paid dt *once*, and the
+            # windows/s rate must not divide by dt × n_groups
+            plans = [
+                ten.sthc.engine.stream_plan_for(g, clips.shape[-1])
+                for ten, g, clips in zip(tens, gratings, stacks)
+            ]
+            weights = [
+                p.n_blocks * int(clips.shape[0])
+                for p, clips in zip(plans, stacks)
+            ]
+            total_w = sum(weights) or 1
+            busy = [dt * w / total_w for w in weights]
+        else:
+            readouts = None
+            gratings, fmaps, plans, lat, busy = [], [], [], [], []
+            for (key, idxs), ten, clips in zip(order, tens, stacks):
+                t0 = time.time()
+                grating = self._fetch_grating(key[0], ten)
+                fmap = ten.sthc.engine.query_stream(grating, clips)
+                fmap = jax.block_until_ready(fmap)  # honest serving latency
+                dt = time.time() - t0
+                with self._lock:
+                    self._sequential_dispatches += 1
+                gratings.append(grating)
+                fmaps.append(fmap)
+                # the exact plan the correlation ran under (derived from
+                # the grating's recorded geometry, not the live cfg)
+                plans.append(
+                    ten.sthc.engine.stream_plan_for(grating, clips.shape[-1])
+                )
+                lat.append(dt)
+                busy.append(dt)
+
+        results: list[dict | None] = [None] * len(requests)
+        with self._lock:
+            for g_i, ((key, idxs), ten, clips) in enumerate(
+                zip(order, tens, stacks)
+            ):
                 # the snapshot tenant may have been removed/retired during
                 # the correlation — credit its traffic to the server-wide
                 # totals instead so metrics() never undercounts
-                tgt = ten if self._tenants.get(tenant) is ten else self._retired
+                tgt = (
+                    ten
+                    if self._tenants.get(key[0]) is ten
+                    else self._retired
+                )
+                n_streams = clips.shape[0]
                 tgt.queries += len(idxs)
-                tgt.windows += plan.n_blocks * n_streams
+                tgt.windows += plans[g_i].n_blocks * n_streams
                 tgt.frames += int(clips.shape[-1]) * n_streams
-                tgt.seconds += dt
-            flat = fmap.reshape(fmap.shape[0], fmap.shape[1], -1)
-            peak = np.asarray(jnp.max(flat, axis=-1))
-            idx = np.asarray(jnp.argmax(flat, axis=-1))
+                tgt.seconds += busy[g_i]
+        for g_i, ((key, idxs), clips) in enumerate(zip(order, stacks)):
+            tenant = key[0]
+            plan, fmap = plans[g_i], fmaps[g_i]
+            if readouts is not None:  # pooled: batched readout
+                peak = np.asarray(readouts[g_i][0])
+                idx = np.asarray(readouts[g_i][1])
+            else:  # sequential baseline: eager per-group readout
+                flat = fmap.reshape(fmap.shape[0], fmap.shape[1], -1)
+                peak = np.asarray(jnp.max(flat, axis=-1))
+                idx = np.asarray(jnp.argmax(flat, axis=-1))
             t_idx = idx % fmap.shape[-1]
             b = 0
             for i in idxs:
@@ -437,7 +572,7 @@ class VideoSearchServer:
                     "tenant": tenant,
                     "scores": peak[b : b + nb],
                     "peak_frame": t_idx[b : b + nb],
-                    "latency_s": dt,
+                    "latency_s": lat[g_i],
                     "windows": plan.n_blocks,
                 }
                 b += nb
@@ -478,9 +613,14 @@ class VideoSearchServer:
                 t["seconds"] for t in per_tenant.values()
             )
         fps = frames / seconds if seconds > 0 else 0.0
+        with self._lock:
+            pooled = self._pooled_dispatches
+            sequential = self._sequential_dispatches
         return {
             "cache": self.cache.stats(),
             "tenants": per_tenant,
+            "pooled_dispatches": pooled,
+            "sequential_dispatches": sequential,
             "queries": queries,
             "windows_total": windows,
             "frames_total": frames,
@@ -492,6 +632,300 @@ class VideoSearchServer:
             "frames_per_s_vs_slm": fps / throughput.SLM_FPS,
             "frames_per_s_vs_hmd": fps / throughput.HMD_FPS,
         }
+
+
+# ---------------------------------------------------------------------------
+# Async microbatch scheduling (queue → batcher → pooled executor)
+# ---------------------------------------------------------------------------
+
+
+class RequestRejected(RuntimeError):
+    """Admission control shed this request (the bounded queue is full)."""
+
+
+@dataclasses.dataclass
+class _Pending:
+    tenant: str
+    clip: jax.Array
+    future: Future
+    t_submit: float
+
+
+class MicrobatchScheduler:
+    """Async microbatch front end for a :class:`VideoSearchServer`.
+
+    The queue stage of the serving architecture (see the module
+    docstring): callers ``submit()`` requests and get a
+    :class:`concurrent.futures.Future`; a scheduler thread drains the
+    bounded queue into mixed-tenant microbatches and dispatches each
+    through ``server.search_batch`` — where same-geometry tenants pool
+    into single device dispatches.
+
+    * **Admission control / backpressure** — the queue holds at most
+      ``max_queue`` requests.  ``submit(block=False)`` (default) sheds
+      immediately on a full queue: the request never occupies device
+      time, the ``rejected`` counter increments, and the caller gets
+      :class:`RequestRejected` to degrade/retry against.
+      ``submit(block=True)`` instead blocks the caller until the queue
+      drains — backpressure for loaders that must not drop work.
+    * **Batch forming** — the scheduler takes the first queued request,
+      then waits up to ``batch_wait_s`` for more, collecting up to
+      ``max_batch`` requests of the *same clip shape* (requests of other
+      shapes are stashed for the next cycle, preserving arrival order
+      within a shape).  Tenants mix freely inside a batch — that is the
+      point: the pooled executor serves them in one dispatch.
+    * **Observability** — per-request end-to-end latency (submit →
+      result) is recorded in a sliding window; :meth:`metrics` reports
+      p50/p90/p99 alongside queue depth, shed/submit/complete counters
+      and the mean formed batch size.
+
+    Use as a context manager or call :meth:`close` — pending futures are
+    failed (never left hanging) on shutdown.
+    """
+
+    def __init__(
+        self,
+        server: VideoSearchServer,
+        max_queue: int = 64,
+        max_batch: int = 8,
+        batch_wait_s: float = 0.002,
+        latency_window: int = 1024,
+    ):
+        if max_queue < 1 or max_batch < 1:
+            raise ValueError("max_queue and max_batch must be >= 1")
+        self.server = server
+        self.max_batch = int(max_batch)
+        self.batch_wait_s = float(batch_wait_s)
+        self._q: queue_mod.Queue[_Pending] = queue_mod.Queue(maxsize=max_queue)
+        self._stash: collections.deque[_Pending] = collections.deque()
+        self._lock = threading.Lock()
+        self._latencies: collections.deque[float] = collections.deque(
+            maxlen=latency_window
+        )
+        self._batch_sizes: collections.deque[int] = collections.deque(
+            maxlen=latency_window
+        )
+        self.submitted = 0
+        self.completed = 0
+        self.rejected = 0
+        self.failed = 0
+        self.batches = 0
+        # serializes intake against close(): submit must never land a
+        # request after close() drained the queue (its future would hang
+        # forever).  Deliberately NOT self._lock — the batcher takes
+        # that inside _dispatch, and a submitter blocked on a full
+        # queue while holding it would deadlock the drain.
+        self._intake_lock = threading.Lock()
+        self._closed = threading.Event()
+        self._thread = threading.Thread(
+            target=self._run, name="sthc-microbatcher", daemon=True
+        )
+        self._thread.start()
+
+    # -- intake ------------------------------------------------------------
+
+    def submit(
+        self, tenant: str, clip: jax.Array, block: bool = False
+    ) -> Future:
+        """Enqueue one search; returns a future resolving to the same
+        result dict ``search_batch`` produces (plus ``queue_latency_s``,
+        the end-to-end submit→result time)."""
+        item = _Pending(tenant, clip, Future(), time.time())
+        # every put happens under the intake lock (so close() can never
+        # miss a request and leave its future hanging), but the lock is
+        # never *held across a blocking wait*: a backpressured
+        # block=True submitter polls for a slot between acquisitions,
+        # so shed-immediately submitters and close() stay responsive.
+        while True:
+            with self._intake_lock:
+                if self._closed.is_set():
+                    raise RuntimeError("scheduler is closed")
+                try:
+                    self._q.put_nowait(item)
+                    break
+                except queue_mod.Full:
+                    if not block:
+                        with self._lock:
+                            self.rejected += 1
+                        raise RequestRejected(
+                            f"request queue full ({self._q.maxsize} deep); "
+                            f"request for tenant {tenant!r} shed"
+                        ) from None
+            time.sleep(0.001)  # backpressure: wait for a slot
+        with self._lock:
+            self.submitted += 1
+        return item.future
+
+    def search(self, tenant: str, clip: jax.Array, block: bool = True) -> dict:
+        """Synchronous convenience wrapper around :meth:`submit`."""
+        return self.submit(tenant, clip, block=block).result()
+
+    # -- the batcher loop --------------------------------------------------
+
+    def _take(self, timeout: float) -> _Pending | None:
+        if self._stash:
+            return self._stash.popleft()
+        try:
+            return self._q.get(timeout=timeout)
+        except queue_mod.Empty:
+            return None
+
+    def _run(self) -> None:
+        while True:
+            if self._closed.is_set():
+                # exit promptly: anything still queued/stashed is failed
+                # by close()'s drain — shutdown must not first serve an
+                # arbitrarily deep backlog
+                return
+            item = self._take(timeout=0.05)
+            if item is None:
+                continue
+            batch = [item]
+            shape = tuple(item.clip.shape)
+            deadline = item.t_submit + self.batch_wait_s
+            # coalesce with earlier same-shape stash leftovers first —
+            # requests deferred by a shape mismatch must still get the
+            # pooled dispatch they waited for
+            kept: collections.deque[_Pending] = collections.deque()
+            while self._stash and len(batch) < self.max_batch:
+                nxt = self._stash.popleft()
+                if tuple(nxt.clip.shape) == shape:
+                    batch.append(nxt)
+                else:
+                    kept.append(nxt)
+            kept.extend(self._stash)
+            self._stash = kept
+            # then the live queue: wait out the deadline for a fuller
+            # batch, and past it take only what is already here —
+            # bounded to max_batch pulls per cycle, so a sustained
+            # other-shape stream can neither livelock this batch nor
+            # grow the stash without bound (admission control stays
+            # with the queue)
+            skipped: list[_Pending] = []
+            while (
+                len(batch) < self.max_batch
+                and len(batch) + len(skipped) < 2 * self.max_batch
+            ):
+                rem = deadline - time.time()
+                try:
+                    if rem > 0:
+                        nxt = self._q.get(timeout=rem)
+                    else:
+                        nxt = self._q.get_nowait()
+                except queue_mod.Empty:
+                    break
+                # batches form across tenants but per clip shape: the
+                # pooled executor groups by geometry anyway, and keeping
+                # one shape per microbatch keeps its dispatch singular
+                if tuple(nxt.clip.shape) == shape:
+                    batch.append(nxt)
+                else:
+                    skipped.append(nxt)
+            self._stash.extend(skipped)  # next cycle, arrival order kept
+            try:
+                self._dispatch(batch)
+            except Exception:  # noqa: BLE001 — the batcher must survive
+                # _dispatch fails futures itself; this is a belt for
+                # future-state races etc. — a dead batcher thread would
+                # hang every subsequent request
+                pass
+
+    def _dispatch(self, batch: list[_Pending]) -> None:
+        # claim each future before any work: a caller may have
+        # cancel()led a pending one, and set_result on a cancelled
+        # future raises (killing the batcher); claiming also locks out
+        # late cancels during the server call.  _execute below assumes
+        # every future it sees is already claimed (the singles retry
+        # path must not re-claim).
+        batch = [
+            p for p in batch if p.future.set_running_or_notify_cancel()
+        ]
+        if batch:
+            self._execute(batch)
+
+    def _execute(self, batch: list[_Pending]) -> None:
+        try:
+            outs = self.server.search_batch(
+                [(p.tenant, p.clip) for p in batch]
+            )
+        except Exception as exc:  # noqa: BLE001 — routed into the future
+            if len(batch) == 1:
+                batch[0].future.set_exception(exc)
+                with self._lock:
+                    self.failed += 1
+                return
+            # one bad request fails the batched call upfront (the server
+            # validates before any device work): retry singly so the
+            # good requests in the batch still complete
+            for p in batch:
+                self._execute([p])
+            return
+        now = time.time()
+        with self._lock:
+            self.batches += 1
+            self._batch_sizes.append(len(batch))
+            self.completed += len(batch)
+            for p in batch:
+                self._latencies.append(now - p.t_submit)
+        for p, out in zip(batch, outs):
+            out["queue_latency_s"] = now - p.t_submit
+            p.future.set_result(out)
+
+    # -- lifecycle / observability ----------------------------------------
+
+    def close(self) -> None:
+        """Stop the batcher; fail anything still queued."""
+        with self._intake_lock:
+            # under the intake lock: a submit() that already passed the
+            # closed check finishes its put before we proceed, so no
+            # request can land after the drain below and hang forever
+            if self._closed.is_set():
+                return
+            self._closed.set()
+        self._thread.join()
+        leftovers = list(self._stash)
+        self._stash.clear()
+        while True:
+            try:
+                leftovers.append(self._q.get_nowait())
+            except queue_mod.Empty:
+                break
+        for p in leftovers:
+            if p.future.set_running_or_notify_cancel():
+                p.future.set_exception(RuntimeError("scheduler closed"))
+                with self._lock:
+                    self.failed += 1
+
+    def __enter__(self) -> "MicrobatchScheduler":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def metrics(self) -> dict:
+        """Scheduler counters + end-to-end latency percentiles."""
+        with self._lock:
+            lats = sorted(self._latencies)
+            sizes = list(self._batch_sizes)
+            out = {
+                "queue_depth": self._q.qsize() + len(self._stash),
+                "max_queue": self._q.maxsize,
+                "submitted": self.submitted,
+                "completed": self.completed,
+                "rejected": self.rejected,
+                "failed": self.failed,
+                "batches": self.batches,
+                "mean_batch_size": (
+                    sum(sizes) / len(sizes) if sizes else 0.0
+                ),
+            }
+        for name, q in (("p50", 0.50), ("p90", 0.90), ("p99", 0.99)):
+            out[f"latency_{name}_ms"] = (
+                1e3 * lats[min(int(q * len(lats)), len(lats) - 1)]
+                if lats
+                else 0.0
+            )
+        return out
 
 
 # ---------------------------------------------------------------------------

@@ -397,3 +397,249 @@ def test_engine_record_query_jit_friendly(rng):
     np.testing.assert_allclose(
         eager, jitted, atol=1e-5 * float(jnp.max(jnp.abs(eager))) + 1e-6
     )
+
+
+# -- pooled cross-tenant executor ---------------------------------------------
+
+
+def test_query_many_matches_query_loop(rng):
+    """Pooled one-shot answers equal the per-tenant query loop: mixed O,
+    a duplicate grating (two requests, one tenant) and mixed batch
+    sizes in one call."""
+    x1, x2 = _clips(rng, B=2), _clips(rng, B=1)
+    eng = QueryEngine(STHCConfig(fidelity=fid.physical()))
+    g1 = eng.record(_kernels(rng, O=3), (20, 24, 10))
+    g2 = eng.record(_kernels(rng, O=5), (20, 24, 10))
+    outs = eng.query_many([(g1, x1), (g2, x2), (g1, x2)])
+    refs = [eng.query(g1, x1), eng.query(g2, x2), eng.query(g1, x2)]
+    for out, ref in zip(outs, refs):
+        assert out.shape == ref.shape
+        rel = float(jnp.linalg.norm(out - ref) / jnp.linalg.norm(ref))
+        assert rel <= 1e-5, rel
+
+
+def test_query_many_paper_geometry_mixed_fidelity_one_pool_group(rng):
+    """Acceptance: at the paper geometry, two tenants at *different*
+    fidelities that share encode semantics and FFT geometry occupy ONE
+    pool group — a single pooled dispatch serves both, equal to the
+    per-tenant loop."""
+    x = _clips(rng, B=1, H=60, W=80, T=16)
+    k1 = _kernels(rng, O=9, kh=30, kw=40, kt=8)
+    k2 = _kernels(rng, O=9, kh=30, kw=40, kt=8)
+    eng_phys = QueryEngine(STHCConfig(fidelity=fid.physical()))
+    sub = fid.pipeline(
+        fid.PseudoNegative(), fid.SLMQuantize(), fid.IHBEnvelope(),
+        name="sub",
+    )
+    eng_sub = QueryEngine(STHCConfig(fidelity=sub))
+    g1 = eng_phys.record(k1, (60, 80, 16))
+    g2 = eng_sub.record(k2, (60, 80, 16))
+    requests = [(g1, x), (g2, x)]
+    # same encode semantics (SLM at 8 bits) + same FFT grid -> one group
+    assert len(eng_phys._group_requests(requests)) == 1
+    outs = eng_phys.query_many(requests)
+    refs = [eng_phys.query(g1, x), eng_sub.query(g2, x)]
+    for out, ref in zip(outs, refs):
+        rel = float(jnp.linalg.norm(out - ref) / jnp.linalg.norm(ref))
+        assert rel <= 1e-5, rel
+
+
+def test_pooled_dispatch_single_forward_fft(rng):
+    """The pooled dataflow claim: one group dispatch = exactly one
+    forward FFT + one inverse FFT, however many tenants it serves."""
+    from repro.core.engine import _dedup_members
+
+    x = _clips(rng, B=2)
+    eng = QueryEngine(STHCConfig(fidelity=fid.physical()))
+    g1 = eng.record(_kernels(rng, O=3), (20, 24, 10))
+    g2 = eng.record(_kernels(rng, O=3), (20, 24, 10))
+    members, slot_of = _dedup_members([g1, g2])
+    pool = eng._pool_for(members)
+    rows = np.asarray(
+        [pool.o_start[slot_of[0]], pool.o_start[slot_of[1]]], np.int32
+    )
+    jaxpr = jax.make_jaxpr(
+        lambda x: eng._pooled_dispatch(x, pool, rows, g1)
+    )(x)
+    assert _count_ffts(jaxpr.jaxpr, "RFFT") == 1
+    assert _count_ffts(jaxpr.jaxpr, "IRFFT") == 1
+
+
+@pytest.mark.parametrize("chunk", [1, 3])
+def test_query_stream_many_matches_stream_loop(chunk, rng):
+    """Pooled streaming equals per-tenant query_stream: ragged T vs the
+    window grid, physical encoding, chunked windows."""
+    cfg = STHCConfig(fidelity=fid.physical(), osave_chunk_windows=chunk)
+    eng = QueryEngine(cfg)
+    g1 = eng.record(_kernels(rng, O=2), (20, 24, 11))
+    g2 = eng.record(_kernels(rng, O=4), (20, 24, 11))
+    x1 = jnp.asarray(rng.rand(1, 1, 20, 24, 29).astype(np.float32))
+    x2 = jnp.asarray(rng.rand(2, 1, 20, 24, 29).astype(np.float32))
+    outs = eng.query_stream_many([(g1, x1), (g2, x2)])
+    refs = [eng.query_stream(g1, x1), eng.query_stream(g2, x2)]
+    for out, ref in zip(outs, refs):
+        rel = float(jnp.linalg.norm(out - ref) / jnp.linalg.norm(ref))
+        assert rel <= 1e-5, rel
+
+
+def test_query_many_pallas_grouped_matches_dense(rng):
+    """The grouped Pallas launch and the dense gather path agree."""
+    x = _clips(rng, B=2)
+    dense = QueryEngine(STHCConfig(fidelity=fid.physical()))
+    pallas = QueryEngine(
+        STHCConfig(fidelity=fid.physical(), use_pallas=True)
+    )
+    k1, k2 = _kernels(rng, O=3), _kernels(rng, O=5)
+    gd1, gd2 = dense.record(k1, (20, 24, 10)), dense.record(k2, (20, 24, 10))
+    gp1, gp2 = pallas.record(k1, (20, 24, 10)), pallas.record(k2, (20, 24, 10))
+    outs_d = dense.query_many([(gd1, x), (gd2, x)])
+    outs_p = pallas.query_many([(gp1, x), (gp2, x)])
+    for d, p in zip(outs_d, outs_p):
+        rel = float(jnp.linalg.norm(p - d) / jnp.linalg.norm(d))
+        assert rel <= 1e-4, rel
+
+
+def test_pool_arena_reused_across_calls(rng):
+    """The packed arena is a stable buffer: repeated dispatches with the
+    same resident gratings hit one memoized GratingPool."""
+    x = _clips(rng)
+    eng = QueryEngine(STHCConfig(fidelity=fid.ideal()))
+    g1 = eng.record(_kernels(rng, O=2), (20, 24, 10))
+    g2 = eng.record(_kernels(rng, O=2), (20, 24, 10))
+    eng.query_many([(g1, x), (g2, x)])
+    pools_after_first = len(eng._pools)
+    eng.query_many([(g1, x), (g2, x)])
+    eng.query_many([(g1, x), (g2, x)])
+    assert len(eng._pools) == pools_after_first == 1
+
+
+def test_query_many_rejects_channel_mismatch(rng):
+    eng = QueryEngine(STHCConfig(fidelity=fid.ideal()))
+    g = eng.record(_kernels(rng, C=1), (20, 24, 10))
+    with pytest.raises(ValueError, match="channels"):
+        eng.query_many([(g, _clips(rng, C=3))])
+
+
+# -- grouped stmul kernel vs the v1 loop oracle --------------------------------
+
+
+@pytest.mark.parametrize("C", [1, 8])  # spans the VPU/MXU routing split
+def test_stmul_grouped_matches_loop_oracle(C):
+    """One grouped launch over a pooled arena equals the per-request v1
+    loop oracle — shared offsets included (two rows, one tenant)."""
+    rng = np.random.RandomState(C)
+    sh = (6, 7, 5)
+    B, n_out, block_o = 4, 4, 4
+    pool = (rng.randn(12, C, *sh) + 1j * rng.randn(12, C, *sh)).astype(
+        np.complex64
+    )
+    xh = jnp.asarray(
+        (rng.randn(B, C, *sh) + 1j * rng.randn(B, C, *sh)).astype(
+            np.complex64
+        )
+    )
+    o_start = np.array([0, 4, 8, 4], np.int32)  # row 3 shares tenant 1
+    ref = stmul_ref.spectral_mac_grouped_ref(
+        xh, jnp.asarray(pool), o_start, n_out
+    )
+    got = stmul_ops.spectral_mac_grouped(
+        xh,
+        jnp.asarray(pool.real),
+        jnp.asarray(pool.imag),
+        o_start,
+        n_out,
+        block_o=block_o,
+    )
+    tol = 1e-4 * float(jnp.max(jnp.abs(ref))) + 1e-6
+    np.testing.assert_allclose(got, ref, atol=tol)
+    # bf16 arena planes (half-precision grating storage): f32-accumulated
+    got_bf = stmul_ops.spectral_mac_grouped(
+        xh,
+        jnp.asarray(pool.real, jnp.bfloat16),
+        jnp.asarray(pool.imag, jnp.bfloat16),
+        o_start,
+        n_out,
+        block_o=block_o,
+    )
+    rel = float(jnp.linalg.norm(got_bf - ref) / jnp.linalg.norm(ref))
+    assert rel <= 2e-2, rel
+
+
+# -- half-precision (bf16 split-real) grating storage --------------------------
+
+
+def test_bf16_storage_halves_nbytes_and_cache_bytes(rng):
+    """STHCConfig.grating_dtype='bfloat16' stores split-real planes at
+    exactly half the serving grating's bytes, and the cache byte
+    accounting sees the halved footprint."""
+    k = _kernels(rng)
+    for pipe in (fid.ideal(), fid.physical()):
+        f32 = QueryEngine(
+            STHCConfig(fidelity=pipe, keep_stacked=False)
+        ).record(k, (20, 24, 10))
+        bf16 = QueryEngine(
+            STHCConfig(
+                fidelity=pipe, keep_stacked=False, grating_dtype="bfloat16"
+            )
+        ).record(k, (20, 24, 10))
+        assert bf16.storage_dtype == "bfloat16"
+        assert bf16.effective is None and bf16.eff_re is not None
+        assert bf16.nbytes * 2 == f32.nbytes
+    cache = GratingCache()
+    sthc = STHC(
+        STHCConfig(
+            fidelity=fid.physical(),
+            keep_stacked=False,
+            grating_dtype="bfloat16",
+        ),
+        cache=cache,
+    )
+    g = sthc.record(k, (20, 24, 10))
+    assert cache.nbytes == g.nbytes
+
+
+def test_bf16_pooled_query_close_to_f32(rng):
+    """bf16-at-rest, f32-accumulation: one-shot and pooled queries stay
+    within tolerance of the f32 grating, and the pooled bf16 answer
+    equals the per-tenant bf16 query."""
+    x = _clips(rng)
+    k = _kernels(rng)
+    f32 = QueryEngine(STHCConfig(fidelity=fid.physical()))
+    bf16 = QueryEngine(
+        STHCConfig(fidelity=fid.physical(), grating_dtype="bfloat16")
+    )
+    gf, gb = f32.record(k, (20, 24, 10)), bf16.record(k, (20, 24, 10))
+    yf, yb = f32.query(gf, x), bf16.query(gb, x)
+    rel = float(jnp.linalg.norm(yb - yf) / jnp.linalg.norm(yf))
+    assert rel <= 2e-2, rel
+    (pooled,) = bf16.query_many([(gb, x)])
+    rel = float(jnp.linalg.norm(pooled - yb) / jnp.linalg.norm(yb))
+    assert rel <= 1e-5, rel
+
+
+def test_bf16_cache_key_never_aliases_f32(rng):
+    """Same kernel bytes under the two storage dtypes are two cache
+    entries — a lookup can never serve the other precision's grating."""
+    cache = GratingCache()
+    x = _clips(rng)
+    k = _kernels(rng)
+    STHC(STHCConfig(fidelity=fid.ideal()), cache=cache)(k, x)
+    STHC(
+        STHCConfig(fidelity=fid.ideal(), grating_dtype="bfloat16"),
+        cache=cache,
+    )(k, x)
+    assert cache.misses == 2 and cache.hits == 0
+
+
+def test_default_storage_layout_unchanged(rng):
+    """grating_dtype defaults to f32: the recorded layout is the
+    pre-knob complex64 tensor (bit-identical paths), and unknown
+    dtypes are rejected loudly."""
+    g = QueryEngine(STHCConfig(fidelity=fid.physical())).record(
+        _kernels(rng), (20, 24, 10)
+    )
+    assert g.storage_dtype == "float32"
+    assert g.effective is not None and g.eff_re is None
+    assert g.effective.dtype == jnp.complex64
+    with pytest.raises(ValueError, match="grating_dtype"):
+        STHCConfig(fidelity=fid.ideal(), grating_dtype="float16")

@@ -274,3 +274,318 @@ def test_hybrid_conv_layer_stream_matches_digital():
     np.testing.assert_allclose(
         got, ref, atol=2e-4 * float(jnp.max(jnp.abs(ref))) + 1e-5
     )
+
+
+# -- pooled cross-tenant serving ----------------------------------------------
+
+
+def test_search_batch_pooled_matches_sequential_mixed_fidelity():
+    """The pooled executor and the per-tenant-sequential baseline agree
+    on a mixed-tenant, mixed-fidelity batch, and the dispatch counters
+    attribute each mode."""
+    cfg = VideoSearchConfig(window_frames=8, chunk_windows=2)
+    server = VideoSearchServer(frame_hw=(12, 12), cfg=cfg)
+    server.add_tenant("a", _kernels(0)).add_tenant("b", _kernels(1, O=3))
+    server.add_tenant("c", _kernels(2), fidelity=fid.physical())
+    reqs = [
+        ("a", _clip(1)), ("b", _clip(2)), ("c", _clip(3)), ("a", _clip(4)),
+    ]
+    pooled = server.search_batch(reqs, pooled=True)
+    seq = server.search_batch(reqs, pooled=False)
+    for p, s in zip(pooled, seq):
+        assert p["tenant"] == s["tenant"]
+        np.testing.assert_allclose(p["scores"], s["scores"], rtol=1e-4)
+        np.testing.assert_array_equal(p["peak_frame"], s["peak_frame"])
+    m = server.metrics()
+    # one pooled dispatch for the whole batch vs one per tenant-group
+    assert m["pooled_dispatches"] == 1
+    assert m["sequential_dispatches"] == 3
+    # traffic counted once per request set regardless of mode
+    assert m["queries"] == 2 * len(reqs)
+
+
+def test_search_batch_pooled_default_from_config():
+    server = VideoSearchServer(
+        _kernels(0), (12, 12),
+        VideoSearchConfig(window_frames=8, pooled_queries=True),
+    )
+    server.search(_clip(0))
+    assert server.metrics()["pooled_dispatches"] == 1
+    server2 = VideoSearchServer(
+        _kernels(0), (12, 12),
+        VideoSearchConfig(window_frames=8, pooled_queries=False),
+    )
+    server2.search(_clip(0))
+    assert server2.metrics()["sequential_dispatches"] == 1
+
+
+def test_serving_bf16_grating_storage():
+    """VideoSearchConfig.grating_dtype='bfloat16': half the cache bytes
+    of the f32 server for the same tenants, scores within tolerance."""
+    kw = dict(window_frames=8, chunk_windows=2)
+    f32 = VideoSearchServer(
+        frame_hw=(12, 12), cfg=VideoSearchConfig(**kw)
+    )
+    bf16 = VideoSearchServer(
+        frame_hw=(12, 12),
+        cfg=VideoSearchConfig(grating_dtype="bfloat16", **kw),
+    )
+    for srv in (f32, bf16):
+        srv.add_tenant("a", _kernels(0), fidelity=fid.physical())
+        srv.add_tenant("b", _kernels(1))
+    assert bf16.cache.nbytes * 2 == f32.cache.nbytes
+    out_f = f32.search(_clip(0), tenant="a")
+    out_b = bf16.search(_clip(0), tenant="a")
+    scale = float(np.max(np.abs(out_f["scores"]))) or 1.0
+    assert float(np.max(np.abs(out_f["scores"] - out_b["scores"]))) <= (
+        2e-2 * scale
+    )
+
+
+# -- async microbatch scheduler -----------------------------------------------
+
+
+def test_scheduler_batches_and_matches_search_batch():
+    """Submitted futures resolve to the same detections search_batch
+    returns, requests coalesce into microbatches, and metrics report
+    latency percentiles."""
+    from repro.launch.serve import MicrobatchScheduler
+
+    cfg = VideoSearchConfig(window_frames=8, chunk_windows=2)
+    server = VideoSearchServer(frame_hw=(12, 12), cfg=cfg)
+    server.add_tenant("a", _kernels(0)).add_tenant("b", _kernels(1))
+    reqs = [("a", _clip(1)), ("b", _clip(2)), ("a", _clip(3))]
+    want = server.search_batch(reqs)
+    with MicrobatchScheduler(
+        server, max_queue=8, max_batch=4, batch_wait_s=0.05
+    ) as sched:
+        futs = [sched.submit(t, c) for t, c in reqs]
+        outs = [f.result(timeout=60) for f in futs]
+        m = sched.metrics()
+    for out, ref in zip(outs, want):
+        assert out["tenant"] == ref["tenant"]
+        np.testing.assert_allclose(out["scores"], ref["scores"], rtol=1e-4)
+        assert out["queue_latency_s"] > 0
+    assert m["submitted"] == 3 and m["completed"] == 3
+    assert m["batches"] >= 1 and m["mean_batch_size"] > 1  # coalesced
+    assert m["latency_p50_ms"] > 0
+    assert m["latency_p99_ms"] >= m["latency_p50_ms"]
+
+
+def test_scheduler_sheds_on_full_queue():
+    """Admission control: a full bounded queue sheds instead of piling
+    up — RequestRejected + the rejected counter."""
+    import time as _time
+
+    from repro.launch.serve import MicrobatchScheduler, RequestRejected
+
+    server = VideoSearchServer(
+        _kernels(0), (12, 12), VideoSearchConfig(window_frames=8)
+    )
+    orig = server.search_batch
+
+    def slow_search_batch(reqs, pooled=None):
+        _time.sleep(0.25)  # hold the batcher busy so the queue fills
+        return orig(reqs, pooled=pooled)
+
+    server.search_batch = slow_search_batch
+    with MicrobatchScheduler(
+        server, max_queue=1, max_batch=1, batch_wait_s=0.0
+    ) as sched:
+        futs, shed = [], 0
+        for i in range(8):
+            try:
+                futs.append(sched.submit("default", _clip(i)))
+            except RequestRejected:
+                shed += 1
+        assert shed > 0
+        assert sched.metrics()["rejected"] == shed
+        for f in futs:
+            f.result(timeout=60)  # admitted requests still complete
+    assert sched.metrics()["completed"] == len(futs)
+
+
+def test_scheduler_bad_request_fails_only_its_future():
+    """One invalid request must not poison its microbatch: the good
+    requests complete, the bad future carries the error."""
+    from repro.launch.serve import MicrobatchScheduler
+
+    server = VideoSearchServer(
+        _kernels(0), (12, 12), VideoSearchConfig(window_frames=8)
+    )
+    with MicrobatchScheduler(
+        server, max_queue=8, max_batch=4, batch_wait_s=0.05
+    ) as sched:
+        good = sched.submit("default", _clip(0))
+        bad = sched.submit("nope", _clip(1))
+        good2 = sched.submit("default", _clip(2))
+        with pytest.raises(KeyError, match="unknown tenant"):
+            bad.result(timeout=60)
+        assert good.result(timeout=60)["scores"].shape == (1, 2)
+        assert good2.result(timeout=60)["scores"].shape == (1, 2)
+    assert sched.metrics()["failed"] == 1
+
+
+def test_scheduler_close_fails_pending_futures():
+    import time as _time
+
+    from repro.launch.serve import MicrobatchScheduler
+
+    server = VideoSearchServer(
+        _kernels(0), (12, 12), VideoSearchConfig(window_frames=8)
+    )
+    orig = server.search_batch
+
+    def slow_search_batch(reqs, pooled=None):
+        _time.sleep(0.3)
+        return orig(reqs, pooled=pooled)
+
+    server.search_batch = slow_search_batch
+    sched = MicrobatchScheduler(
+        server, max_queue=8, max_batch=1, batch_wait_s=0.0
+    )
+    futs = [sched.submit("default", _clip(i)) for i in range(4)]
+    sched.close()
+    with pytest.raises(RuntimeError):
+        sched.submit("default", _clip(9))
+    states = [("done" if f.done() else "pending") for f in futs]
+    assert all(s == "done" for s in states)  # resolved or failed, not hung
+
+
+# -- grating cache under concurrent tenant churn ------------------------------
+
+
+def test_grating_cache_threaded_churn_byte_accounting():
+    """Threaded add/evict/discard churn against one shared cache: the
+    byte ledger must equal the sum of resident gratings afterwards —
+    including half-priced bf16 entries — and budgets must hold."""
+    import threading
+
+    from repro.core import fidelity as fid_mod
+
+    engines = [
+        QueryEngine(
+            STHCConfig(fidelity=fid_mod.ideal(), keep_stacked=False)
+        ),
+        QueryEngine(
+            STHCConfig(
+                fidelity=fid_mod.ideal(),
+                keep_stacked=False,
+                grating_dtype="bfloat16",
+            )
+        ),
+    ]
+    kernels = [_kernels(i) for i in range(6)]
+    probe = engines[0].record(kernels[0], (12, 12, 8))
+    cache = GratingCache(max_entries=4, max_bytes=int(probe.nbytes * 3.5))
+    errors = []
+
+    def worker(wid):
+        rng = np.random.RandomState(wid)
+        try:
+            for step in range(30):
+                eng = engines[step % 2]
+                k = kernels[rng.randint(len(kernels))]
+                key = GratingCache.key_for(k, (12, 12, 8), eng.config)
+                if rng.rand() < 0.2:
+                    cache.discard(key)
+                else:
+                    g = cache.get_or_record(eng, k, (12, 12, 8), key=key)
+                    assert g.n_out == k.shape[0]
+        except Exception as exc:  # pragma: no cover - surfaced below
+            errors.append(exc)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    stats = cache.stats()
+    assert stats["entries"] <= 4
+    assert stats["bytes"] <= cache.max_bytes
+    assert stats["misses"] > 0
+    # the ledger equals the residents exactly (white-box invariant)
+    with cache._lock:
+        assert cache._nbytes == sum(
+            g.nbytes for g in cache._entries.values()
+        )
+        # bf16 residents charge exactly half their f32 twin's bytes
+        for g in cache._entries.values():
+            expected = probe.nbytes * g.n_out // probe.n_out
+            if g.storage_dtype == "bfloat16":
+                assert g.nbytes * 2 == expected
+            else:
+                assert g.nbytes == expected
+    assert not cache._inflight  # no leaked in-flight markers
+
+
+def test_video_server_threaded_tenant_churn():
+    """Concurrent add/remove/search churn on one server: no exceptions
+    besides expected unknown-tenant races, counters only grow, and
+    removing every tenant drains the cache to zero bytes."""
+    import threading
+
+    cfg = VideoSearchConfig(window_frames=8, cache_entries=3)
+    server = VideoSearchServer(frame_hw=(12, 12), cfg=cfg)
+    names = [f"t{i}" for i in range(4)]
+    errors = []
+
+    def worker(wid):
+        rng = np.random.RandomState(wid)
+        try:
+            for step in range(12):
+                name = names[rng.randint(len(names))]
+                r = rng.rand()
+                if r < 0.4:
+                    server.add_tenant(name, _kernels(rng.randint(6)))
+                elif r < 0.6:
+                    try:
+                        server.remove_tenant(name)
+                    except KeyError:
+                        pass  # raced another remover
+                else:
+                    try:
+                        server.search(_clip(step), tenant=name)
+                    except KeyError:
+                        pass  # tenant removed mid-flight
+        except Exception as exc:  # pragma: no cover - surfaced below
+            errors.append(exc)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    stats = server.cache.stats()
+    assert stats["entries"] <= cfg.cache_entries
+    for name in list(server.tenants):
+        server.remove_tenant(name)
+    stats = server.cache.stats()
+    assert stats["entries"] == 0 and stats["bytes"] == 0
+
+
+def test_scheduler_mixed_shapes_all_complete_and_coalesce():
+    """Interleaved clip shapes: deferred (stashed) requests must still
+    dispatch — and same-shape stash leftovers coalesce into one batch
+    instead of draining as singletons."""
+    from repro.launch.serve import MicrobatchScheduler
+
+    cfg = VideoSearchConfig(window_frames=8, chunk_windows=2)
+    server = VideoSearchServer(frame_hw=(12, 12), cfg=cfg)
+    server.add_tenant("a", _kernels(0)).add_tenant("b", _kernels(1))
+    with MicrobatchScheduler(
+        server, max_queue=32, max_batch=4, batch_wait_s=0.1
+    ) as sched:
+        futs = []
+        for i in range(4):  # alternate two stream lengths (shapes)
+            futs.append(sched.submit("a", _clip(i, T=20)))
+            futs.append(sched.submit("b", _clip(i, T=24)))
+        outs = [f.result(timeout=60) for f in futs]
+        m = sched.metrics()
+    assert all(o["scores"].shape == (1, 2) for o in outs)
+    assert m["completed"] == 8
+    # 8 requests of 2 shapes in <=4-deep batches: coalescing keeps the
+    # dispatch count well under one-per-request
+    assert m["batches"] <= 6
