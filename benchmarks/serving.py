@@ -23,6 +23,16 @@ This suite measures that claim end to end on the host:
   large-geometry row is included for contrast (on CPU, XLA gains
   nothing from batching raw FFT flops; on a real TPU the launch-bound
   regime is far broader).
+* ``serving_shared_dedup_t8`` / ``serving_shared_nodedup_t8`` /
+  ``serving_shared_dedup_vs_pooled_x`` — the shared-stream fan-out
+  (paper headline: many kernel banks correlated against ONE stream in
+  parallel): an 8-tenant same-clip batch with clip-dedup on vs the
+  undeduped pooled baseline — dedup collapses 8 forward FFTs into 1,
+  and the acceptance row pins the windows/s speedup (≥2×).
+* ``serving_chunked_longT`` — bounded-memory stream chunking: a stream
+  far longer than the device buffer served through the stream cursor
+  (``max_buffer_windows``) vs the unbounded one-shot pass — constant
+  peak buffer frames, exactness, and the chunking overhead.
 * ``serving_sched_*`` — offered-load sweep through the
   :class:`~repro.launch.serve.MicrobatchScheduler`: end-to-end latency
   percentiles, formed batch sizes, and shed requests at increasing
@@ -67,6 +77,15 @@ STREAM_T = 64
 BIG_FRAME_HW = (24, 32)
 BIG_KERNEL = (4, 1, 12, 16, 8)
 BIG_WINDOW = 16
+# The shared-stream fan-out geometry: multi-channel clips make the
+# forward FFT (the thing dedup collapses N→1) a first-order cost.
+SHARED_FRAME_HW = (20, 20)
+SHARED_KERNEL = (2, 4, 3, 4, 3)  # (O, C, kh, kw, kt)
+SHARED_WINDOW = 8
+SHARED_STREAM_T = 96
+# Bounded-memory chunking: a stream far longer than the device buffer.
+LONG_STREAM_T = 512
+LONG_MAX_BUFFER_WINDOWS = 8
 
 
 def _make_server(
@@ -76,12 +95,14 @@ def _make_server(
     window=WINDOW,
     chunk_windows: int = 1,
     grating_dtype: str = "float32",
+    max_buffer_windows: int | None = None,
 ) -> VideoSearchServer:
     cfg = VideoSearchConfig(
         window_frames=window,
         chunk_windows=chunk_windows,
         cache_entries=2 * n_tenants,
         grating_dtype=grating_dtype,
+        max_buffer_windows=max_buffer_windows,
     )
     server = VideoSearchServer(frame_hw=frame_hw, cfg=cfg)
     for i in range(n_tenants):
@@ -94,34 +115,42 @@ def _make_server(
     return server
 
 
-def _requests(server: VideoSearchServer, n: int, T: int = STREAM_T):
+def _requests(
+    server: VideoSearchServer, n: int, T: int = STREAM_T, channels: int = 1
+):
     h, w = server.frame_hw
     return [
         (
             f"t{i % len(server.tenants)}",
             jnp.asarray(
-                np.random.RandomState(50 + i).rand(1, 1, h, w, T).astype(
-                    np.float32
-                )
+                np.random.RandomState(50 + i)
+                .rand(1, channels, h, w, T)
+                .astype(np.float32)
             ),
         )
         for i in range(n)
     ]
 
 
-def _bench_batch(server, reqs, reps: int) -> tuple[dict, dict]:
-    """(pooled, sequential) batch-latency stats of one request set.
+def _bench_batch(
+    server, reqs, reps: int, a: dict | None = None, b: dict | None = None
+) -> tuple[dict, dict]:
+    """(a, b) batch-latency stats of one request set under two
+    ``search_batch`` kwarg sets (default: pooled vs sequential; the
+    shared-stream rows pass dedup-on vs dedup-off).
 
     The two modes run *interleaved* so host noise (this is a shared CPU)
     hits both equally; windows/s uses the median batch latency.
     """
-    lats: dict[bool, list[float]] = {True: [], False: []}
+    a = {"pooled": True} if a is None else a
+    b = {"pooled": False} if b is None else b
+    lats: dict[int, list[float]] = {0: [], 1: []}
     outs = None
     for _ in range(reps):
-        for pooled in (False, True):
+        for i, kw in ((1, b), (0, a)):
             t0 = time.perf_counter()
-            outs = server.search_batch(reqs, pooled=pooled)
-            lats[pooled].append(time.perf_counter() - t0)
+            outs = server.search_batch(reqs, **kw)
+            lats[i].append(time.perf_counter() - t0)
     windows = sum(o["windows"] * r[1].shape[0] for o, r in zip(outs, reqs))
 
     def stats(ls: list[float]) -> dict:
@@ -133,7 +162,7 @@ def _bench_batch(server, reqs, reps: int) -> tuple[dict, dict]:
             "p99_ms": 1e3 * ls[min(int(0.99 * len(ls)), len(ls) - 1)],
         }
 
-    return stats(lats[True]), stats(lats[False])
+    return stats(lats[0]), stats(lats[1])
 
 
 def _fmt(v: float) -> str:
@@ -151,7 +180,10 @@ def _row(name: str, us: float, derived: dict | str) -> str:
 
 def run(smoke: bool = False, log=print) -> list[str]:
     rows: list[str] = []
-    reps = 5 if smoke else 25
+    # smoke still takes enough reps that the gated ratio rows (the CI
+    # perf gate reads them) ride a stable median on a noisy shared
+    # runner, not a 5-sample lottery
+    reps = 9 if smoke else 25
     tenant_counts = (2, 8) if smoke else (2, 4, 8)
 
     # -- pooled vs per-tenant-sequential, mixed-tenant batches ----------
@@ -203,6 +235,118 @@ def run(smoke: bool = False, log=print) -> list[str]:
         rows.append(
             _row("serving_sequential_big_t8", seq["p50_ms"] * 1e3, seq)
         )
+
+    # -- shared-stream fan-out: 8 tenants, ONE clip ---------------------
+    # The paper's headline dataflow: many kernel banks correlated
+    # against one stream in parallel.  Clip-dedup collapses the batch's
+    # 8 identical clip rows onto one physical row reading the union of
+    # the tenants' O-slices — 1 forward FFT instead of 8.
+    server = _make_server(
+        8, SHARED_FRAME_HW, SHARED_KERNEL, SHARED_WINDOW, chunk_windows=4
+    )
+    clip = jnp.asarray(
+        np.random.RandomState(77)
+        .rand(1, SHARED_KERNEL[1], *SHARED_FRAME_HW, SHARED_STREAM_T)
+        .astype(np.float32)
+    )
+    shared_reqs = [(f"t{i}", clip) for i in range(8)]
+    for dd in (True, False):  # warm both compositions
+        server.search_batch(shared_reqs, pooled=True, dedup=dd)
+        server.search_batch(shared_reqs, pooled=True, dedup=dd)
+    # the collapse ratio of ONE deduped batch (a before/after counter
+    # delta — the cumulative engine counters span warmup and the
+    # dedup-off reps, which collapse nothing)
+    before = server.metrics()["dedup"]
+    server.search_batch(shared_reqs, pooled=True, dedup=True)
+    after = server.metrics()["dedup"]
+    ded, nod = _bench_batch(
+        server,
+        shared_reqs,
+        reps=reps,
+        a={"pooled": True, "dedup": True},
+        b={"pooled": True, "dedup": False},
+    )
+    rows.append(_row("serving_shared_dedup_t8", ded["p50_ms"] * 1e3, ded))
+    rows.append(_row("serving_shared_nodedup_t8", nod["p50_ms"] * 1e3, nod))
+    shared_x = ded["windows_per_s"] / nod["windows_per_s"]
+    rows.append(f"serving_shared_dedup_vs_pooled_x,0,{shared_x:.2f}x")
+    d = {
+        k: after[f"rows_{k}"] - before[f"rows_{k}"]
+        for k in ("offered", "dispatched", "saved")
+    }
+    rows.append(
+        _row(
+            "serving_shared_dedup_rows",
+            0,
+            {k: float(v) for k, v in d.items()},
+        )
+    )
+    log(
+        f"shared stream, 8 tenants: dedup {ded['windows_per_s']:.0f} win/s "
+        f"vs undeduped pooled {nod['windows_per_s']:.0f} win/s "
+        f"({shared_x:.2f}x; {d['saved']}/{d['offered']} clip rows "
+        "collapsed per batch)"
+    )
+
+    # -- bounded-memory stream chunking ---------------------------------
+    # A stream far longer than the device buffer, served through the
+    # stream cursor at constant peak memory vs the unbounded one-shot
+    # pass.  The win is *capacity* (constant peak buffer), so the row
+    # records the peak frames alongside the chunking overhead.
+    from repro.core import spectral_conv as _sc
+
+    long_T = LONG_STREAM_T if not smoke else LONG_STREAM_T // 2
+    bounded = _make_server(
+        1, max_buffer_windows=LONG_MAX_BUFFER_WINDOWS
+    )
+    unbounded = _make_server(1)
+    (req,) = _requests(bounded, 1, T=long_T)
+    for srv in (bounded, unbounded):
+        srv.search_batch([req])  # warm (compile + record)
+        srv.search_batch([req])
+    lat: dict[str, list[float]] = {"bounded": [], "unbounded": []}
+    outs = {}
+    # overhead_x is CI-gated: never let its median ride fewer than 6
+    # interleaved samples, even in smoke
+    for _ in range(max(reps // 2, 6)):
+        for name, srv in (("unbounded", unbounded), ("bounded", bounded)):
+            t0 = time.perf_counter()
+            outs[name] = srv.search_batch([req])
+            lat[name].append(time.perf_counter() - t0)
+    err = float(
+        np.max(
+            np.abs(outs["bounded"][0]["scores"] - outs["unbounded"][0]["scores"])
+        )
+    ) / max(float(np.max(np.abs(outs["unbounded"][0]["scores"]))), 1e-6)
+    n_windows = outs["bounded"][0]["windows"]
+    ten = bounded._tenants["t0"]
+    plan = ten.sthc.engine.stream_plan_for(
+        bounded._grating("t0"), long_T
+    )
+    cursor = _sc.StreamCursor(plan, LONG_MAX_BUFFER_WINDOWS)
+    med_b = statistics.median(lat["bounded"])
+    med_u = statistics.median(lat["unbounded"])
+    rows.append(
+        _row(
+            "serving_chunked_longT",
+            med_b * 1e6,
+            {
+                "bounded_winps": n_windows / med_b,
+                "unbounded_winps": n_windows / med_u,
+                "overhead_x": med_b / med_u,
+                "peak_buffer_frames": float(cursor.peak_buffer_frames),
+                "stream_frames": float(long_T),
+                "segments": float(len(cursor)),
+                "max_rel_score_err": err,
+            },
+        )
+    )
+    log(
+        f"chunked long-T ({long_T} frames, {len(cursor)} segments of "
+        f"<= {cursor.peak_buffer_frames} frames): "
+        f"{n_windows / med_b:.0f} win/s bounded vs {n_windows / med_u:.0f} "
+        f"unbounded ({med_b / med_u:.2f}x overhead), score rel err {err:.1e}"
+    )
 
     # -- async microbatch scheduler under offered load ------------------
     n_load = 8 if smoke else 48

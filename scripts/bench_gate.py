@@ -1,0 +1,195 @@
+"""Perf-regression gate: fresh smoke ``BENCH_*.json`` vs the committed
+baselines.
+
+CI runs the benchmark smokes per push and this gate compares the fresh
+artifacts against the baselines committed at the repo root, failing the
+build when a *key* metric regresses by more than the tolerance (default
+25 %).  The gated metrics are chosen to be **machine-portable**: ratio
+rows (pooled-vs-sequential speedup, fused-vs-unfused speedup, the
+shared-stream clip-dedup speedup, the bf16 capacity factor) and
+correctness-scale values (bf16 score error, chunked-streaming score
+error, the constant peak-buffer bound) rather than absolute latencies —
+a CI runner is not the machine the baselines were recorded on, but the
+*structure* of the win (how much the pooled path beats the sequential
+one, that bf16 really halves bytes, that chunking stays exact) should
+survive any host.
+
+Metric direction is per-spec: ``higher`` metrics fail when the fresh
+value drops more than ``tol`` below baseline; ``lower`` metrics
+(errors, overheads) fail when it rises more than ``tol`` above; ``eq``
+metrics (the peak-buffer bound) fail on any change beyond float fuzz.
+Rows missing from the fresh run fail loudly (a silently skipped gate is
+no gate); rows missing from the *baseline* are reported and skipped, so
+a PR that adds a new benchmark row does not need a same-PR baseline.
+
+Run (CI wires this after the smoke steps)::
+
+    python scripts/bench_gate.py --fresh-dir ci-bench --baseline-dir . \
+        [--tolerance 0.25]
+
+Exit code 0 = all gated metrics within tolerance, 1 = regression.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import plot_bench  # noqa: E402  (shares the BENCH_*.json row parsing)
+
+# metric name (from plot_bench.TRACKED or local SPECS) -> direction
+# higher = regression when fresh < baseline * (1 - tol)
+# lower  = regression when fresh > baseline * (1 + tol)
+# eq     = regression when |fresh - baseline| > eps (structural invariants)
+GATED = {
+    # the headline speedups — ISSUE/ROADMAP acceptance rows
+    "serving_pooled_vs_seq_x": "higher",
+    "fused_vs_unfused_x": "higher",
+    "serving_shared_dedup_x": "higher",
+    "serving_bf16_capacity_x": "higher",
+    # throughput ratio of the pooled path (windows/s is absolute, so the
+    # gate compares pooled/sequential measured on the SAME host)
+    "serving_pooled_over_seq_winps": "higher",
+    # correctness-scale values: must not drift up
+    "serving_bf16_score_err": "lower",
+    "serving_chunked_score_err": "lower",
+    "serving_chunked_overhead_x": "lower",
+    # structural invariant: the bounded-memory peak buffer is geometry,
+    # not performance — any change is a real behavior change
+    "serving_chunked_peak_frames": "eq",
+}
+
+# absolute slack added on top of the relative tolerance for "lower"
+# metrics: error metrics sit near 0 (any float fuzz would be an infinite
+# relative regression), and the chunking overhead is a small-ratio
+# timing row whose CI-runner noise floor is additive, not proportional
+ABS_SLACK = {
+    "serving_chunked_overhead_x": 0.35,
+}
+
+# gate-local metric specs (same format as plot_bench.TRACKED): metrics
+# that only the gate reads
+SPECS = {
+    "serving_bf16_score_err": (
+        "serving", "serving_bf16_storage", "max_rel_score_err",
+    ),
+    "serving_chunked_score_err": (
+        "serving", "serving_chunked_longT", "max_rel_score_err",
+    ),
+}
+
+
+def _value(run: dict, metric: str) -> float | None:
+    if metric == "serving_pooled_over_seq_winps":
+        a = plot_bench._value(run, "serving_pooled_winps")
+        b = plot_bench._value(run, "serving_seq_winps")
+        return a / b if a is not None and b not in (None, 0) else None
+    if metric in SPECS:
+        saved = plot_bench.TRACKED.get(metric)
+        plot_bench.TRACKED[metric] = SPECS[metric]
+        try:
+            return plot_bench._value(run, metric)
+        finally:
+            if saved is None:
+                del plot_bench.TRACKED[metric]
+            else:
+                plot_bench.TRACKED[metric] = saved
+    return plot_bench._value(run, metric)
+
+
+def _load_run(path: str) -> dict:
+    """{suite: {row_name: record}} for every BENCH_*.json under path."""
+    runs = plot_bench.collect([path])
+    merged: dict = {}
+    for _, run in runs:
+        merged.update(run)
+    return merged
+
+
+def gate(
+    fresh_dir: str, baseline_dir: str, tol: float, log=print
+) -> list[str]:
+    """Returns the list of failure messages (empty = gate passes)."""
+    fresh = _load_run(fresh_dir)
+    base = _load_run(baseline_dir)
+    failures: list[str] = []
+    width = max(len(m) for m in GATED) + 2
+    log(
+        f"{'metric'.ljust(width)}{'baseline':>12}{'fresh':>12}"
+        f"{'ratio':>8}  verdict"
+    )
+    for metric, direction in GATED.items():
+        b = _value(base, metric)
+        f = _value(fresh, metric)
+        if f is None:
+            # the fresh smoke MUST produce every gated row — a missing
+            # row is a broken benchmark, not a pass
+            failures.append(f"{metric}: missing from the fresh run")
+            log(f"{metric.ljust(width)}{'—':>12}{'—':>12}{'—':>8}  MISSING (fresh)")
+            continue
+        if b is None:
+            # new metric without a committed baseline yet: report, skip
+            log(
+                f"{metric.ljust(width)}{'—':>12}{f:>12.3f}{'—':>8}  "
+                "no baseline (skipped)"
+            )
+            continue
+        ratio = f / b if b else float("inf")
+        if direction == "higher":
+            ok = f >= b * (1.0 - tol)
+        elif direction == "lower":
+            # per-metric absolute slack: a 0.0 error baseline would
+            # otherwise make any nonzero fresh value an infinite
+            # relative regression, and timing-ratio noise is additive
+            ok = f <= max(
+                b * (1.0 + tol), b + ABS_SLACK.get(metric, 1e-6)
+            )
+        else:  # eq
+            ok = abs(f - b) <= 1e-6 * max(abs(b), 1.0)
+        verdict = "ok" if ok else f"REGRESSION (>{tol:.0%} {direction})"
+        log(
+            f"{metric.ljust(width)}{b:>12.3f}{f:>12.3f}{ratio:>8.2f}  "
+            f"{verdict}"
+        )
+        if not ok:
+            failures.append(
+                f"{metric}: fresh {f:.4g} vs baseline {b:.4g} "
+                f"(direction={direction}, tol={tol:.0%})"
+            )
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument(
+        "--fresh-dir",
+        required=True,
+        help="directory holding the fresh smoke BENCH_*.json artifacts",
+    )
+    ap.add_argument(
+        "--baseline-dir",
+        default=".",
+        help="directory holding the committed baseline BENCH_*.json "
+        "(default: the repo root)",
+    )
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=0.25,
+        help="allowed relative regression before the gate fails "
+        "(default 0.25 = 25%%)",
+    )
+    args = ap.parse_args()
+    failures = gate(args.fresh_dir, args.baseline_dir, args.tolerance)
+    if failures:
+        print("\nperf-regression gate FAILED:")
+        for f in failures:
+            print(f"  - {f}")
+        sys.exit(1)
+    print("\nperf-regression gate passed")
+
+
+if __name__ == "__main__":
+    main()

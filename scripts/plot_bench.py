@@ -10,7 +10,10 @@ trajectories the ROADMAP tracks:
   * stmul kernel v1 vs v2 latency (``BENCH_kernels.json``)
   * pooled vs per-tenant-sequential serving at the 8-request
     mixed-tenant batch — windows/s, batch p50/p99 and the pooled
-    speedup — plus the bf16 grating-storage capacity factor
+    speedup — plus the bf16 grating-storage capacity factor, the
+    shared-stream clip-dedup speedup (8 tenants fanning out over one
+    clip vs the undeduped pooled baseline) and the bounded-memory
+    chunking row (constant peak buffer frames, overhead vs unbounded)
     (``BENCH_serving.json``)
 
 plus the derived speedup rows and, when present, the ablation
@@ -59,6 +62,29 @@ TRACKED = {
     "serving_bf16_capacity_x": (
         "serving", "serving_bf16_storage", "capacity_x",
     ),
+    # shared-stream fan-out: 8 tenants searching ONE clip, clip-dedup
+    # (one forward FFT for the whole fan-out) vs the undeduped pooled
+    # baseline
+    "serving_shared_dedup_p50_us": (
+        "serving", "serving_shared_dedup_t8", "p50_ms",
+    ),
+    "serving_shared_nodedup_p50_us": (
+        "serving", "serving_shared_nodedup_t8", "p50_ms",
+    ),
+    "serving_shared_dedup_winps": (
+        "serving", "serving_shared_dedup_t8", "windows_per_s",
+    ),
+    "serving_shared_dedup_x": (
+        "serving", "serving_shared_dedup_vs_pooled_x",
+    ),
+    # bounded-memory stream chunking: constant peak buffer (frames) and
+    # the chunking overhead factor vs the unbounded one-shot pass
+    "serving_chunked_peak_frames": (
+        "serving", "serving_chunked_longT", "peak_buffer_frames",
+    ),
+    "serving_chunked_overhead_x": (
+        "serving", "serving_chunked_longT", "overhead_x",
+    ),
 }
 
 # latency pairs plotted together (left panel) and speedups (right panel)
@@ -66,12 +92,14 @@ LATENCY_PAIRS = [
     ("fused_query_us", "unfused_query_us"),
     ("stmul_v2_us", "stmul_v1_us"),
     ("serving_pooled_p50_us", "serving_seq_p50_us"),
+    ("serving_shared_dedup_p50_us", "serving_shared_nodedup_p50_us"),
 ]
 SPEEDUPS = [
     "fused_vs_unfused_x",
     "stmul_v1_vs_v2_x",
     "serving_pooled_vs_seq_x",
     "serving_bf16_capacity_x",
+    "serving_shared_dedup_x",
 ]
 
 

@@ -44,10 +44,20 @@ grating), recomputing the identical ``rfftn(x)`` both times, and
   exactly one forward FFT, one pooled channel-contracted MAC in which
   every clip row reads only its own tenant's O-offset slice, and one
   inverse FFT — N same-geometry tenants pay 1 device dispatch instead of
-  N.  Optional half-precision storage (``STHCConfig.grating_dtype =
-  'bfloat16'``) keeps gratings as split-real bf16 planes (half the HBM,
-  ~2x the tenants per cache byte budget) with f32 accumulation at the
-  MAC.
+  N.  **Clip-dedup** takes the fan-out the rest of the way to the
+  paper's headline dataflow (many kernels correlated against *one*
+  stream in parallel): batch rows whose clips hash content-equal
+  (:func:`clip_key`) collapse onto one physical row reading the union
+  of their tenants' O-slices, so N tenants searching the same stream
+  pay one forward FFT total, not N.  **Bounded-memory streaming**
+  (``STHCConfig.osave_max_buffer_windows``) feeds streams longer than
+  one device buffer through a
+  :class:`~repro.core.spectral_conv.StreamCursor` in fixed-size
+  T-chunks with kt−1-frame carry-over tails — constant peak memory,
+  stream-global SLM scale, output exactly equal to one-shot.  Optional
+  half-precision storage (``STHCConfig.grating_dtype = 'bfloat16'``)
+  keeps gratings as split-real bf16 planes (half the HBM, ~2x the
+  tenants per cache byte budget) with f32 accumulation at the MAC.
 
 * **Fidelity** — the engine is *mode-agnostic*: it consumes the
   record-time and query-time transforms of the config's
@@ -249,6 +259,29 @@ class GratingPool:
         return int(self.re.nbytes) + int(self.im.nbytes)
 
 
+@dataclasses.dataclass(frozen=True)
+class _DedupLayout:
+    """Row layout of one pool-group dispatch after clip-dedup.
+
+    Attributes:
+      uniq: group-local request index owning each physical clip copy
+        (first requester of that content), in dispatch batch order.
+      uniq_of: per group-local request — which physical copy serves it.
+      row_of: per physical copy — its arena start row (the union span's
+        first row).
+      o_off: per group-local request — offset of its tenant's O-slice
+        inside its physical row's span.
+      n_out: rows every physical row reads/writes (the widest span,
+        aligned to the pool's O-tile grid).
+    """
+
+    uniq: list[int]
+    uniq_of: list[int]
+    row_of: list[int]
+    o_off: list[int]
+    n_out: int
+
+
 def _dedup_members(
     gratings: list[FusedGrating],
 ) -> tuple[list[FusedGrating], list[int]]:
@@ -304,6 +337,75 @@ def _build_pool(members: list[FusedGrating], align: int) -> GratingPool:
         align=align,
         members=tuple(members),
     )
+
+
+def clip_key(x) -> tuple | None:
+    """Content fingerprint of a clip batch — the shared-stream identity.
+
+    Two requests whose clips hash equal (bytes + shape + dtype) are the
+    *same stream*: the pooled executor answers them with one forward FFT
+    over one physical copy, each tenant reading its own O-slice of the
+    union span (see :meth:`QueryEngine.query_many`).  Hashing is the
+    point, not an optimization hazard: a false "same clip" would answer
+    one tenant with another's stream, so the full buffer is digested
+    (SHA-1), never a sample.  Tracers (inside ``jit``) have no bytes to
+    hash and return None — such requests are never deduped.
+    """
+    if isinstance(x, jax.core.Tracer):
+        return None
+    arr = np.asarray(x)
+    return (
+        hashlib.sha1(arr.tobytes()).hexdigest(),
+        arr.shape,
+        str(arr.dtype),
+    )
+
+
+def _stream_scale(x) -> Array:
+    """Stream-global SLM scale (one modulator dynamic range per example
+    for the entire stream), matching ``QueryEngine._encode`` bit for
+    bit.  Computed where the stream lives: host-side for np arrays (the
+    bounded-memory serving path keeps long streams off-device), on
+    device for jax arrays."""
+    if isinstance(x, np.ndarray):
+        a = np.maximum(x, 0).reshape(x.shape[0], -1).max(axis=1)
+        a = np.where(a > 0, a, x.dtype.type(1))
+        return jnp.asarray(a.reshape(-1, 1, 1, 1, 1))
+    a = jnp.maximum(x, 0.0)
+    a = jnp.max(a, axis=(1, 2, 3, 4), keepdims=True)
+    return jnp.where(a > 0, a, 1.0)
+
+
+def clip_keys_for(arrays) -> list:
+    """Per-array clip identities, memoized by object identity within the
+    call (one hash per distinct buffer, however many requests share it).
+    The one fingerprinting loop behind both the engine's dedup grouping
+    and the server's group-key construction."""
+    memo: dict[int, tuple] = {}
+    keys = []
+    for x in arrays:
+        k = memo.get(id(x))
+        if k is None:
+            k = clip_key(x)
+            if k is not None:
+                memo[id(x)] = k
+        keys.append(k)
+    return keys
+
+
+def _pad_arena(
+    pool_re: Array, pool_im: Array, max_row: int, n_out: int
+) -> tuple[Array, Array]:
+    """Zero-pad arena rows so every ``[row, row + n_out)`` read stays in
+    bounds.  The pool's own tail covers per-member slot reads; union
+    spans (clip-dedup) can read wider than any single slot, and jnp
+    fancy-indexing would clamp out-of-bounds rows to the last member
+    silently."""
+    need = int(max_row) + int(n_out) - int(pool_re.shape[0])
+    if need <= 0:
+        return pool_re, pool_im
+    widths = [(0, need)] + [(0, 0)] * (pool_re.ndim - 1)
+    return jnp.pad(pool_re, widths), jnp.pad(pool_im, widths)
 
 
 def _pool_select(
@@ -383,7 +485,38 @@ class QueryEngine:
             ),
         )
         self._pools: OrderedDict[tuple, GratingPool] = OrderedDict()
+        # row-padded arena views for dedup union spans that overhang the
+        # pool tail: keyed (pool, rows needed) so steady-state mixed-span
+        # compositions reuse one padded device buffer instead of paying
+        # an O(arena) jnp.pad per dispatch.  Entries hold the pool
+        # (strong ref: id-keyed lookups stay sound) + the padded planes.
+        self._padded: OrderedDict[tuple, tuple] = OrderedDict()
         self._pools_lock = threading.Lock()
+        # shared-stream fan-out accounting (clip-dedup in the pooled
+        # paths): offered = clip rows requested, dispatched = physical
+        # rows after collapsing same-content clips onto shared rows.
+        self._pooled_dispatches = 0
+        self._pooled_rows_offered = 0
+        self._pooled_rows_dispatched = 0
+
+    def pool_stats(self) -> dict:
+        """Pooled-executor counters for serving metrics: how many clip
+        rows the dedup collapsed (``rows_saved``) out of those offered."""
+        with self._pools_lock:
+            offered = self._pooled_rows_offered
+            dispatched = self._pooled_rows_dispatched
+            return {
+                "dispatches": self._pooled_dispatches,
+                "rows_offered": offered,
+                "rows_dispatched": dispatched,
+                "rows_saved": offered - dispatched,
+            }
+
+    def _count_pooled(self, offered: int, dispatched: int) -> None:
+        with self._pools_lock:
+            self._pooled_dispatches += 1
+            self._pooled_rows_offered += int(offered)
+            self._pooled_rows_dispatched += int(dispatched)
 
     # -- record -----------------------------------------------------------
 
@@ -570,6 +703,7 @@ class QueryEngine:
         x: Array,
         *,
         chunk_windows: int | None = None,
+        max_buffer_windows: int | None = None,
     ) -> Array:
         """Stream clips x (B, C, H, W, T) through a window-geometry grating.
 
@@ -600,6 +734,13 @@ class QueryEngine:
             record-time frame size.
           chunk_windows: windows correlated per step as one vmap'd batch
             (default: ``config.osave_chunk_windows``).
+          max_buffer_windows: serve at most this many coherence windows
+            from one device buffer (default:
+            ``config.osave_max_buffer_windows``; None = the whole stream
+            in one buffer).  Streams needing more windows are fed
+            through a :class:`~repro.core.spectral_conv.StreamCursor` in
+            fixed-size T-chunks with kt−1-frame carry-over tails —
+            constant peak memory, output exactly equal to one-shot.
 
         Returns (B, O, H−kh+1, W−kw+1, T−kt+1).
         """
@@ -619,15 +760,53 @@ class QueryEngine:
                 f"the recorded frame size {frame_hw}"
             )
         plan = self.stream_plan_for(grating, x.shape[-1], chunk_windows)
-        return self._stream_fn(
-            x,
-            grating.effective_c,
-            ker_shape=grating.ker_shape,
-            fft_shape=grating.fft_shape,
-            plan=plan,
-            encode=grating.encode,
-            slm_bits=grating.slm_bits,
+        mbw = self._max_buffer_windows(max_buffer_windows)
+        if mbw is None or plan.n_blocks <= mbw:
+            return self._stream_fn(
+                x,
+                grating.effective_c,
+                ker_shape=grating.ker_shape,
+                fft_shape=grating.fft_shape,
+                plan=plan,
+                encode=grating.encode,
+                slm_bits=grating.slm_bits,
+            )
+        # Bounded-memory chunked streaming: the stream cursor feeds the
+        # same jitted driver fixed-size T-chunks with kt−1 carry-over
+        # tails, so peak device residency is one segment buffer no
+        # matter how long the clip.  The SLM scale stays *stream-global*
+        # (computed once over the whole clip, passed into every segment)
+        # — encoding is pointwise, so chunked output equals the one-shot
+        # correlation exactly.
+        cursor = spectral_conv.StreamCursor(plan, mbw)
+        x_scale = _stream_scale(x) if grating.encode else None
+        kt = grating.ker_shape[-1]
+        outs = []
+        for seg in cursor:
+            seg_plan = spectral_conv.stream_plan(
+                seg.frames, kt, plan.block_t, plan.chunk
+            )
+            outs.append(
+                self._stream_fn(
+                    x[..., seg.t0 : seg.t1],
+                    grating.effective_c,
+                    x_scale,
+                    ker_shape=grating.ker_shape,
+                    fft_shape=grating.fft_shape,
+                    plan=seg_plan,
+                    encode=grating.encode,
+                    slm_bits=grating.slm_bits,
+                )
+            )
+        return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=-1)
+
+    def _max_buffer_windows(self, override: int | None) -> int | None:
+        mbw = (
+            override
+            if override is not None
+            else getattr(self.config, "osave_max_buffer_windows", None)
         )
+        return None if mbw is None else max(int(mbw), 1)
 
     def stream_plan_for(
         self,
@@ -649,16 +828,31 @@ class QueryEngine:
         return spectral_conv.stream_plan(n_frames, kt, block_t, chunk_windows)
 
     def _stream_impl(
-        self, x, effective, *, ker_shape, fft_shape, plan, encode, slm_bits
+        self,
+        x,
+        effective,
+        x_scale=None,
+        *,
+        ker_shape,
+        fft_shape,
+        plan,
+        encode,
+        slm_bits,
     ):
-        """Overlap-save body (jitted; shapes/plan static, arrays traced)."""
+        """Overlap-save body (jitted; shapes/plan static, arrays traced).
+
+        ``x_scale`` carries a precomputed stream-global SLM scale when
+        ``x`` is one chunk of a longer stream (the bounded-memory
+        cursor); None means ``x`` is the whole stream and the scale is
+        derived here."""
         kh, kw, kt = ker_shape
         H, W = x.shape[-3:-1]
-        x_scale = None
         if encode:
             # stream-global SLM scale: one dynamic range per example for
             # the entire stream (see query_stream docstring).
-            x, x_scale = self._encode(x, slm_bits)
+            x, x_scale = self._encode(x, slm_bits, x_scale)
+        else:
+            x_scale = None
         xp = jnp.pad(x, [(0, 0)] * 4 + [(0, plan.pad_t)])
         win_out = (H - kh + 1, W - kw + 1, plan.step)
         query = self._query_fn()
@@ -682,7 +876,11 @@ class QueryEngine:
     # -- query (pooled cross-tenant batch) ----------------------------------
 
     def query_many(
-        self, requests: "Sequence[tuple[FusedGrating, Array]]"
+        self,
+        requests: "Sequence[tuple[FusedGrating, Array]]",
+        *,
+        clip_keys: "Sequence[tuple | None] | None" = None,
+        dedup: bool = True,
     ) -> list[Array]:
         """Answer a mixed-tenant clip batch with one dispatch per pool group.
 
@@ -700,6 +898,17 @@ class QueryEngine:
         inverse FFT.  A mixed-tenant load of N same-geometry tenants
         thus pays 1 FFT+MAC+IFFT dispatch instead of N.
 
+        **Clip-dedup (shared-stream fan-out).**  Within a group, rows
+        whose clips hash content-equal (``clip_keys``, default computed
+        via :func:`clip_key`) collapse onto *one* physical row reading
+        the union of their tenants' O-slices — the paper's headline
+        dataflow, many kernels correlated against one stream in
+        parallel: N tenants searching the same clip pay one forward FFT
+        and one MAC row instead of N.  Per-request outputs are sliced
+        from the shared row's span, equal to the undeduped answer
+        exactly (the MAC rows each tenant reads are identical).
+        ``dedup=False`` keeps the one-row-per-request baseline.
+
         The gratings may come from *different* engines (mixed-fidelity
         serving): everything record-time is already folded into each
         effective grating, and the query-time semantics ride on the
@@ -710,30 +919,118 @@ class QueryEngine:
         equal to ``query(grating_i, x_i)`` to float tolerance.
         """
         groups = self._group_requests(requests)
+        keys = self._clip_ids(requests, clip_keys, dedup)
         results: list[Array | None] = [None] * len(requests)
         for idxs in groups.values():
             gratings = [requests[i][0] for i in idxs]
             members, slot_of = _dedup_members(gratings)
             pool = self._pool_for(members)
             xs = [requests[i][1] for i in idxs]
-            x = xs[0] if len(xs) == 1 else jnp.concatenate(xs, axis=0)
-            rows = np.repeat(
-                [pool.o_start[slot_of[j]] for j in range(len(idxs))],
-                [int(xi.shape[0]) for xi in xs],
-            ).astype(np.int32)
-            y = self._pooled_dispatch(x, pool, rows, gratings[0])
-            b0 = 0
+            lay = self._dedup_layout(pool, gratings, slot_of, [keys[i] for i in idxs])
+            ux = [xs[j] for j in lay.uniq]
+            x = ux[0] if len(ux) == 1 else jnp.concatenate(ux, axis=0)
+            nbs = [int(xj.shape[0]) for xj in ux]
+            rows = np.repeat(lay.row_of, nbs).astype(np.int32)
+            self._count_pooled(sum(int(xj.shape[0]) for xj in xs), sum(nbs))
+            y = self._pooled_dispatch(
+                x, pool, rows, gratings[0], n_out=lay.n_out
+            )
+            ub0 = np.concatenate([[0], np.cumsum(nbs)])
             for j, i in enumerate(idxs):
+                b0 = int(ub0[lay.uniq_of[j]])
                 nb = int(xs[j].shape[0])
-                results[i] = y[b0 : b0 + nb, : gratings[j].n_out]
-                b0 += nb
+                oo = lay.o_off[j]
+                results[i] = y[b0 : b0 + nb, oo : oo + gratings[j].n_out]
         return results  # type: ignore[return-value]
+
+    def _clip_ids(self, requests, clip_keys, dedup) -> list:
+        """Per-request clip identities for the dedup grouping.  Callers
+        that already fingerprinted their clips (the microbatch scheduler
+        hashes at submit time) pass ``clip_keys`` through; otherwise the
+        bytes are digested here, memoized per array object within the
+        call."""
+        if not dedup:
+            return [None] * len(requests)
+        if clip_keys is not None:
+            if len(clip_keys) != len(requests):
+                raise ValueError(
+                    f"clip_keys has {len(clip_keys)} entries for "
+                    f"{len(requests)} requests"
+                )
+            return list(clip_keys)
+        return clip_keys_for([x for _, x in requests])
+
+    def _dedup_layout(
+        self,
+        pool: GratingPool,
+        gratings: list[FusedGrating],
+        slot_of: list[int],
+        keys: list,
+    ) -> "_DedupLayout":
+        """Collapse group rows with content-equal clips onto shared
+        physical rows.
+
+        Each unique clip gets one physical row whose O-window is the
+        *union span* of every member slice requested for that clip
+        (member slots pack contiguously, so the span is one aligned
+        ``[lo, lo + n_out)`` read; tenants between two requested slots
+        are computed and discarded — wasted rows are bounded by the
+        arena, and in the canonical all-tenants-one-stream batch the
+        span is exactly the whole arena).  ``n_out`` is the widest span,
+        rounded to the pool's O-tile grid for the grouped Pallas kernel;
+        rows with narrower spans read tail rows the dispatch zero-pads
+        (:func:`_pad_arena`).
+
+        One static ``n_out`` for the whole dispatch is a deliberate
+        trade-off: the MAC/gather (dense or Pallas) needs a uniform
+        per-row width, so in a *mixed* batch (one wide shared-stream
+        span next to narrow unique rows) the narrow rows compute and
+        discard up to the widest span.  With no dedup, spans equal
+        member slots and this reduces exactly to the pre-dedup
+        ``pool.n_out`` behavior; ragged per-row widths or splitting
+        wide/narrow rows into separate dispatches would cost an extra
+        FFT dispatch per batch — the thing pooling exists to avoid.
+        """
+        uniq: list[int] = []
+        uniq_of: list[int] = []
+        by_key: dict[tuple, int] = {}
+        for j, k in enumerate(keys):
+            u = by_key.get(k) if k is not None else None
+            if u is None:
+                u = len(uniq)
+                uniq.append(j)
+                if k is not None:
+                    by_key[k] = u
+            uniq_of.append(u)
+        span_lo = [None] * len(uniq)
+        span_hi = [0] * len(uniq)
+        for j, u in enumerate(uniq_of):
+            s = pool.o_start[slot_of[j]]
+            e = s + gratings[j].n_out
+            span_lo[u] = s if span_lo[u] is None else min(span_lo[u], s)
+            span_hi[u] = max(span_hi[u], e)
+        n_out = max(hi - lo for lo, hi in zip(span_lo, span_hi))
+        n_out = -(-n_out // pool.align) * pool.align
+        o_off = [
+            pool.o_start[slot_of[j]] - span_lo[uniq_of[j]]
+            for j in range(len(uniq_of))
+        ]
+        return _DedupLayout(
+            uniq=uniq,
+            uniq_of=uniq_of,
+            row_of=span_lo,
+            o_off=o_off,
+            n_out=n_out,
+        )
 
     def query_stream_many(
         self,
         requests: "Sequence[tuple[FusedGrating, Array]]",
         *,
         chunk_windows: int | None = None,
+        max_buffer_windows: int | None = None,
+        clip_keys: "Sequence[tuple | None] | None" = None,
+        dedup: bool = True,
     ) -> list[Array]:
         """Pooled :meth:`query_stream`: one overlap-save pass per group.
 
@@ -742,11 +1039,19 @@ class QueryEngine:
         kernel/window shapes, encode semantics and stream length) stack
         on the batch axis and every window chunk runs one pooled
         FFT+MAC+IFFT against the group arena, instead of one overlap-
-        save pass per tenant.  Encoding stays per-example stream-global,
-        so each request's output equals ``query_stream(grating_i, x_i)``
-        to float tolerance.
+        save pass per tenant.  Clip-dedup applies as in
+        :meth:`query_many`: requests whose streams hash content-equal
+        share one physical batch row reading the union of their O-slices
+        — N tenants fanning out over one shared stream pay one forward
+        FFT per window chunk, total.  Streams whose window count exceeds
+        ``max_buffer_windows`` (default
+        ``config.osave_max_buffer_windows``) are fed through the stream
+        cursor in fixed-size T-chunks at constant peak memory.  Encoding
+        stays per-example stream-global, so each request's output equals
+        ``query_stream(grating_i, x_i)`` to float tolerance.
         """
         groups = self._group_requests(requests, stream=True)
+        keys = self._clip_ids(requests, clip_keys, dedup)
         results: list[Array | None] = [None] * len(requests)
         for idxs in groups.values():
             gratings = [requests[i][0] for i in idxs]
@@ -759,7 +1064,7 @@ class QueryEngine:
             members, slot_of = _dedup_members(gratings)
             pool = self._pool_for(members)
             xs = [requests[i][1] for i in idxs]
-            kh, kw, _ = g0.ker_shape
+            kh, kw, kt = g0.ker_shape
             oh, ow, _ = g0.out_shape
             frame_hw = (oh + kh - 1, ow + kw - 1)
             if tuple(xs[0].shape[-3:-1]) != frame_hw:
@@ -767,26 +1072,83 @@ class QueryEngine:
                     f"clip spatial dims {tuple(xs[0].shape[-3:-1])} do not "
                     f"match the recorded frame size {frame_hw}"
                 )
+            lay = self._dedup_layout(
+                pool, gratings, slot_of, [keys[i] for i in idxs]
+            )
+            ux = [xs[j] for j in lay.uniq]
+            nbs = [int(xj.shape[0]) for xj in ux]
+            ub0 = [0]
+            for nb in nbs:
+                ub0.append(ub0[-1] + nb)
+            rows = tuple(
+                r for u, nb in enumerate(nbs) for r in [lay.row_of[u]] * nb
+            )
+            # per-REQUEST output splits: several requests may read
+            # different O-windows of one shared physical row
+            splits = tuple(
+                (
+                    ub0[lay.uniq_of[j]],
+                    int(xs[j].shape[0]),
+                    lay.o_off[j],
+                    gratings[j].n_out,
+                )
+                for j in range(len(idxs))
+            )
+            self._count_pooled(sum(int(xj.shape[0]) for xj in xs), sum(nbs))
+            # union spans can read past the arena tail: fetch the
+            # (memoized) padded view so the jitted body never gathers
+            # out of bounds
+            max_row = max(lay.row_of) if lay.row_of else 0
+            pool_re, pool_im = self._padded_arena(pool, max_row, lay.n_out)
             plan = self.stream_plan_for(g0, xs[0].shape[-1], chunk_windows)
-            rows, splits, b0 = [], [], 0
-            for j in range(len(idxs)):
-                nb = int(xs[j].shape[0])
-                rows.extend([pool.o_start[slot_of[j]]] * nb)
-                splits.append((b0, nb, gratings[j].n_out))
-                b0 += nb
-            outs = self._stream_many_fn(
-                tuple(xs),
-                pool.re,
-                pool.im,
-                rows=tuple(rows),
-                splits=tuple(splits),
+            mbw = self._max_buffer_windows(max_buffer_windows)
+            static = dict(
+                rows=rows,
+                splits=splits,
                 ker_shape=g0.ker_shape,
                 fft_shape=g0.fft_shape,
-                plan=plan,
                 encode=g0.encode,
                 slm_bits=g0.slm_bits,
-                n_out=pool.n_out,
+                n_out=lay.n_out,
             )
+            if mbw is None or plan.n_blocks <= mbw:
+                outs = self._stream_many_fn(
+                    tuple(ux), pool_re, pool_im, plan=plan, **static
+                )
+            else:
+                # bounded-memory chunked pass: stream-global SLM scales
+                # measured once, then every fixed-size segment rides the
+                # same jitted pooled driver
+                cursor = spectral_conv.StreamCursor(plan, mbw)
+                x_scale = None
+                if g0.encode:
+                    scales = [_stream_scale(xj) for xj in ux]
+                    x_scale = (
+                        scales[0]
+                        if len(scales) == 1
+                        else jnp.concatenate(scales, axis=0)
+                    )
+                seg_outs = []
+                for seg in cursor:
+                    seg_plan = spectral_conv.stream_plan(
+                        seg.frames, kt, plan.block_t, plan.chunk
+                    )
+                    seg_outs.append(
+                        self._stream_many_fn(
+                            tuple(xj[..., seg.t0 : seg.t1] for xj in ux),
+                            pool_re,
+                            pool_im,
+                            x_scale,
+                            plan=seg_plan,
+                            **static,
+                        )
+                    )
+                outs = tuple(
+                    jnp.concatenate([so[r] for so in seg_outs], axis=-1)
+                    if len(seg_outs) > 1
+                    else seg_outs[0][r]
+                    for r in range(len(splits))
+                )
             for j, i in enumerate(idxs):
                 results[i] = outs[j]
         return results  # type: ignore[return-value]
@@ -857,44 +1219,83 @@ class QueryEngine:
                 self._pools.popitem(last=False)
         return pool
 
+    def _padded_arena(
+        self, pool: "GratingPool", max_row: int, n_out: int
+    ) -> tuple[Array, Array]:
+        """The pool planes, row-padded for ``[row, row + n_out)`` reads —
+        memoized per (pool, rows needed) so recurring dedup compositions
+        reuse one padded device buffer (the un-padded common case returns
+        the pool's own planes untouched)."""
+        need = int(max_row) + int(n_out) - int(pool.re.shape[0])
+        if need <= 0:
+            return pool.re, pool.im
+        key = (id(pool), int(max_row) + int(n_out))
+        with self._pools_lock:
+            hit = self._padded.get(key)
+            if hit is not None:
+                self._padded.move_to_end(key)
+                return hit[1], hit[2]
+        re, im = _pad_arena(pool.re, pool.im, max_row, n_out)
+        with self._pools_lock:
+            self._padded[key] = (pool, re, im)
+            while len(self._padded) > self._max_pools:
+                self._padded.popitem(last=False)
+        return re, im
+
     def _pooled_dispatch(
-        self, x: Array, pool: "GratingPool", rows: np.ndarray, proto: FusedGrating
+        self,
+        x: Array,
+        pool: "GratingPool",
+        rows: np.ndarray,
+        proto: FusedGrating,
+        n_out: int | None = None,
     ) -> Array:
         """One pooled FFT+MAC+IFFT (+ the group's encode epilogue).
 
         ``proto`` is any member grating — the group key guarantees they
-        share geometry and encode semantics."""
+        share geometry and encode semantics.  ``n_out`` widens the
+        per-row read past the widest member slot when clip-dedup rows
+        cover union spans (default: the pool's slot width)."""
+        if n_out is None:
+            n_out = pool.n_out
+        max_row = int(np.max(rows)) if len(rows) else 0
+        pool_re, pool_im = self._padded_arena(pool, max_row, n_out)
         rows = jnp.asarray(rows, jnp.int32)
         query = self._pooled_query_fn()
         if not proto.encode:
             return query(
-                x, pool.re, pool.im, rows, pool.n_out,
+                x, pool_re, pool_im, rows, n_out,
                 proto.fft_shape, proto.out_shape,
             )
         enc, x_scale = self._encode(x, proto.slm_bits)
         y = query(
-            enc, pool.re, pool.im, rows, pool.n_out,
+            enc, pool_re, pool_im, rows, n_out,
             proto.fft_shape, proto.out_shape,
         )
         return y * x_scale
 
     def _stream_many_impl(
-        self, xs, pool_re, pool_im,
+        self, xs, pool_re, pool_im, x_scale=None,
         *, rows, splits, ker_shape, fft_shape, plan, encode, slm_bits, n_out,
     ):
         """Pooled overlap-save body (jitted; mirrors ``_stream_impl``).
 
-        ``xs`` is the tuple of per-request clip batches (stacked in-trace
-        so the eager path dispatches nothing); ``rows`` the static
+        ``xs`` is the tuple of per-physical-copy clip batches (stacked
+        in-trace so the eager path dispatches nothing; clip-dedup means
+        one entry may serve several requests); ``rows`` the static
         per-row arena offsets, ``splits`` the static per-request
-        ``(b0, nb, O_i)`` output partition."""
+        ``(b0, nb, o_off, O_i)`` output partition (``o_off`` slices the
+        request's O-window out of its shared row's union span).
+        ``x_scale`` carries precomputed stream-global SLM scales when
+        the clips are cursor segments of longer streams."""
         x = xs[0] if len(xs) == 1 else jnp.concatenate(xs, axis=0)
         rows = jnp.asarray(rows, jnp.int32)
         kh, kw, kt = ker_shape
         H, W = x.shape[-3:-1]
-        x_scale = None
         if encode:
-            x, x_scale = self._encode(x, slm_bits)
+            x, x_scale = self._encode(x, slm_bits, x_scale)
+        else:
+            x_scale = None
         xp = jnp.pad(x, [(0, 0)] * 4 + [(0, plan.pad_t)])
         win_out = (H - kh + 1, W - kw + 1, plan.step)
         if getattr(self.config, "use_pallas", False):
@@ -925,7 +1326,9 @@ class QueryEngine:
         y = spectral_conv.stitch_windows(blocks, plan)
         if x_scale is not None:
             y = y * x_scale
-        return tuple(y[b0 : b0 + nb, :o] for b0, nb, o in splits)
+        return tuple(
+            y[b0 : b0 + nb, oo : oo + o] for b0, nb, oo, o in splits
+        )
 
     def _pooled_query_fn(self):
         """The per-group pooled FFT+MAC+IFFT: dense offset-gather einsum
@@ -951,15 +1354,20 @@ class QueryEngine:
 
     # -- internals ---------------------------------------------------------
 
-    def _encode(self, x: Array, bits: int) -> tuple[Array, Array]:
+    def _encode(
+        self, x: Array, bits: int, x_scale: Array | None = None
+    ) -> tuple[Array, Array]:
         """SLM front end: non-negative clip, one scale per *example* — the
         channel sum at the detector means a per-channel scale could not
         be undone digitally.  ``bits`` is the grating's record-time
         resolved depth (pipeline stage override or SLM config).
-        Returns (encoded, x_scale)."""
+        ``x_scale`` overrides the derived scale when ``x`` is one chunk
+        of a longer stream whose global dynamic range was measured
+        upfront.  Returns (encoded, x_scale)."""
         x = jnp.maximum(x, 0.0)
-        x_scale = jnp.max(x, axis=(1, 2, 3, 4), keepdims=True)  # (B,1,1,1,1)
-        x_scale = jnp.where(x_scale > 0, x_scale, 1.0)
+        if x_scale is None:
+            x_scale = jnp.max(x, axis=(1, 2, 3, 4), keepdims=True)  # (B,1,...)
+            x_scale = jnp.where(x_scale > 0, x_scale, 1.0)
         return optics.quantize_unit(x / x_scale, bits), x_scale
 
     def _query_fn(self):

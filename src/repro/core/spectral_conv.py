@@ -268,6 +268,110 @@ def stream_plan(
     return StreamPlan(block_t, step, n_valid, n_blocks, chunk, n_padded, pad_t)
 
 
+@dataclasses.dataclass(frozen=True)
+class StreamSegment:
+    """One bounded-buffer slice of an overlap-save pass (pure ints).
+
+    A segment is a contiguous run of coherence windows served from one
+    fixed-size device buffer.  Consecutive segments overlap by
+    ``kt − 1`` input frames (the carry-over tail): segment boundaries
+    fall on window-start positions, so every window is computed from
+    exactly the frames a one-shot pass would read — chunked streaming is
+    equal to one-shot correlation, not an approximation.
+
+    Attributes:
+      index: segment position in the cursor order.
+      t0 / t1: input frame range ``[t0, t1)`` this segment consumes
+        (``t1`` is clipped to the stream length for the tail segment).
+      frames: ``t1 − t0`` — the device buffer this segment needs.
+      n_windows: coherence windows this segment serves.
+      out_t0: first valid-output index the segment produces; segment
+        outputs are contiguous and disjoint, so concatenating them in
+        cursor order reassembles the one-shot valid correlation.
+      n_valid: valid outputs the segment produces.
+    """
+
+    index: int
+    t0: int
+    t1: int
+    frames: int
+    n_windows: int
+    out_t0: int
+    n_valid: int
+
+
+class StreamCursor:
+    """Bounded-memory iteration plan over one overlap-save pass.
+
+    Splits a :class:`StreamPlan` of ``n_blocks`` windows into segments
+    of at most ``max_buffer_windows`` windows each, so a stream whose T
+    exceeds one device buffer is served at **constant peak memory**:
+    every segment needs at most ``(max_buffer_windows − 1) · step +
+    block_t`` input frames on device, regardless of T.  All fields are
+    Python ints — segments are static arguments of the jitted driver,
+    and every non-tail segment shares one trace (identical geometry).
+    """
+
+    def __init__(self, plan: StreamPlan, max_buffer_windows: int):
+        if max_buffer_windows < 1:
+            raise ValueError(
+                f"max_buffer_windows must be >= 1, got {max_buffer_windows}"
+            )
+        self.plan = plan
+        self.max_buffer_windows = int(max_buffer_windows)
+        kt = plan.block_t - plan.step + 1
+        T = plan.n_valid + kt - 1
+        segments: list[StreamSegment] = []
+        done = 0
+        while done < plan.n_blocks:
+            n = min(self.max_buffer_windows, plan.n_blocks - done)
+            t0 = done * plan.step
+            t1 = min(t0 + (n - 1) * plan.step + plan.block_t, T)
+            out_t0 = done * plan.step
+            n_valid = min(t1 - t0 - kt + 1, plan.n_valid - out_t0)
+            segments.append(
+                StreamSegment(
+                    index=len(segments),
+                    t0=t0,
+                    t1=t1,
+                    frames=t1 - t0,
+                    n_windows=n,
+                    out_t0=out_t0,
+                    n_valid=n_valid,
+                )
+            )
+            done += n
+        self.segments = tuple(segments)
+
+    @property
+    def peak_buffer_frames(self) -> int:
+        """Largest per-segment input buffer — the constant-memory bound."""
+        return max(s.frames for s in self.segments)
+
+    def __iter__(self):
+        return iter(self.segments)
+
+    def __len__(self) -> int:
+        return len(self.segments)
+
+
+def stream_cursor(
+    T: int,
+    kt: int,
+    block_t: int,
+    chunk_windows: int | None = None,
+    max_buffer_windows: int | None = None,
+) -> StreamCursor:
+    """Cursor over a freshly-planned overlap-save pass (pure arithmetic).
+
+    ``max_buffer_windows=None`` means one segment spanning the whole
+    stream (the unbounded one-shot driver)."""
+    plan = stream_plan(T, kt, block_t, chunk_windows)
+    if max_buffer_windows is None:
+        max_buffer_windows = plan.n_blocks
+    return StreamCursor(plan, max_buffer_windows)
+
+
 def window_starts(plan: StreamPlan) -> Array:
     """First-frame indices of every window, grouped (n_outer, chunk)."""
     return (jnp.arange(plan.n_padded) * plan.step).reshape(-1, plan.chunk)

@@ -102,8 +102,24 @@ class STHCConfig:
     # Overlap-save streaming: windows correlated per chunk (vmap'd batch).
     # 1 = strictly sequential (lowest peak memory, the seed behavior).
     osave_chunk_windows: int = 1
+    # Bounded-memory streaming: serve at most this many coherence windows
+    # from one device buffer.  Streams needing more are fed through a
+    # StreamCursor in fixed-size T-chunks with kt−1-frame carry-over
+    # tails — peak device memory stays constant no matter how long the
+    # clip, and the output equals the one-shot correlation exactly (the
+    # SLM scale stays stream-global).  None = unbounded (whole stream in
+    # one buffer, the pre-cursor behavior).
+    osave_max_buffer_windows: int | None = None
 
     def __post_init__(self):
+        if (
+            self.osave_max_buffer_windows is not None
+            and self.osave_max_buffer_windows < 1
+        ):
+            raise ValueError(
+                "osave_max_buffer_windows must be >= 1 or None, got "
+                f"{self.osave_max_buffer_windows}"
+            )
         if self.grating_dtype not in ("float32", "bfloat16"):
             raise ValueError(
                 "grating_dtype must be 'float32' or 'bfloat16', got "

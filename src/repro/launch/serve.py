@@ -3,36 +3,48 @@
 Two serving modes, matching the paper's system and the LM zoo:
 
 1. **Multi-tenant STHC video event search** (`VideoSearchServer`) — the
-   paper's deployment (Fig. 1C), record-once / stream-forever: each
-   *tenant* is a named reference kernel set ("what to look for"),
-   recorded into one shared content-hash :class:`GratingCache` with an
-   LRU budget in entries *and* grating bytes.  Long query streams are
-   pushed through the engine's coherence-window overlap-save path.
-   Fidelity is **per tenant**: each kernel set registers with its own
-   :class:`~repro.core.fidelity.FidelityPipeline` (``add_tenant`` /
-   ``add_kernel_set``, default = the server's
-   ``VideoSearchConfig.fidelity``), the server keeps one mode-agnostic
-   engine per distinct pipeline fingerprint, and the shared cache keys
-   every grating on that fingerprint — so one server instance serves
-   e.g. an ``ideal()`` tenant next to a full ``physical()`` tenant (or
-   any stage subset) with no cross-fidelity cache hits.  Evicted
-   tenants re-record transparently on their next query (a cache miss),
-   exactly like re-writing the atomic medium.
+   paper's deployment (Fig. 1C), record-once / stream-forever, and
+   since PR 5 **stream-centric** rather than request-centric: the unit
+   the hot path optimizes for is the *shared video stream* that many
+   tenants search in parallel (the paper's headline — 30×40×8-tap
+   kernel banks correlated against one stream simultaneously), not the
+   individual request.  Each *tenant* is a named reference kernel set
+   ("what to look for"), recorded into one shared content-hash
+   :class:`GratingCache` with an LRU budget in entries *and* grating
+   bytes.  Evicted tenants re-record transparently on their next query
+   (a cache miss), exactly like re-writing the atomic medium.
+
+   Tenants are heterogeneous on three axes, all coexisting on one
+   server and one shared cache:
+
+   * **fidelity** — each kernel set registers with its own
+     :class:`~repro.core.fidelity.FidelityPipeline` (``add_tenant`` /
+     ``add_kernel_set``, default = ``VideoSearchConfig.fidelity``).
+   * **device model** — ``add_tenant(..., slm=..., atoms=...)`` gives a
+     tenant its own SLM / atomic-medium configuration.  The server
+     keeps one mode-agnostic engine per distinct **(fidelity
+     fingerprint, device fingerprint)** pair, and the cache keys every
+     grating on both — no cross-fidelity or cross-device cache hits.
+   * **storage** — gratings store f32 or split-real bf16
+     (``grating_dtype``), halving the cache bytes per tenant.
 
    The serving hot path is a three-stage **queue → batcher →
-   pooled-executor** architecture:
+   pooled-executor** architecture, stream-centric at every stage:
 
    * **queue** — :class:`MicrobatchScheduler` fronts the server with a
-     *bounded* async request queue: ``submit()`` returns a future;
-     admission control sheds requests the moment the queue is full
-     (``RequestRejected`` + a rejected-request counter) or, with
-     ``block=True``, exerts backpressure on the caller.  Scheduler
-     ``metrics()`` report end-to-end latency percentiles (p50/p90/p99),
-     queue depth and shed/batch counters.
+     *bounded* async request queue: ``submit()`` returns a future and
+     fingerprints the clip bytes once (the content hash the dedup
+     rides on); admission control sheds requests the moment the queue
+     is full (``RequestRejected`` + a rejected-request counter) or,
+     with ``block=True``, exerts backpressure on the caller.
+     Scheduler ``metrics()`` report end-to-end latency percentiles
+     (p50/p90/p99), queue depth, shed/batch counters, and dedup-group
+     stats.
    * **batcher** — the scheduler thread drains the queue into
      microbatches (up to ``max_batch`` requests, waiting
      ``batch_wait_s`` after the first arrival so a fuller batch can
-     form), grouping *across tenants* by clip shape.
+     form), grouping *across tenants* by clip shape and arranging
+     same-clip requests into adjacent **dedup groups**.
    * **pooled executor** — ``search_batch`` hands the mixed-tenant
      microbatch to the engine's pooled path
      (``QueryEngine.query_stream_many``): every resident tenant grating
@@ -42,12 +54,25 @@ Two serving modes, matching the paper's system and the LM zoo:
      per coherence-window chunk instead of one dispatch chain per
      tenant (the Morph-style heterogeneous-batch win; a per-tenant
      sequential path is kept as the benchmark baseline,
-     ``pooled=False``).
+     ``pooled=False``).  Two stream-centric refinements ride the
+     pooled dispatch:
+
+     - **clip-dedup** — requests whose clips hash content-equal share
+       *one* physical batch row reading the union of their tenants'
+       O-slices, so N tenants fanning out over one shared stream pay
+       one forward FFT total instead of N
+       (``VideoSearchConfig.dedup_clips``; counters in ``metrics()``).
+     - **bounded-memory chunking** — streams whose coherence-window
+       count exceeds ``VideoSearchConfig.max_buffer_windows`` are fed
+       through a :class:`~repro.core.spectral_conv.StreamCursor` in
+       fixed-size T-chunks with kt−1-frame carry-over tails: clips
+       longer than one device buffer serve at constant peak memory,
+       exactly equal to the one-shot correlation.
 
    `metrics()` reports cache hits/misses/evictions/bytes, per-tenant
-   fidelity, pooled/sequential dispatch counters, and measured
-   windows/s + frames/s against the paper's projected loader rates
-   (`core.throughput`).
+   fidelity + device labels, pooled/sequential dispatch counters,
+   clip-dedup row savings, and measured windows/s + frames/s against
+   the paper's projected loader rates (`core.throughput`).
 
 2. **LM serving** (`LMServer`) — prefill + decode with the uniform cache
    API; used by the serve smoke tests and the decode dry-run shapes.
@@ -70,9 +95,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.core import fidelity as fidelity_mod
+from repro.core import atomic, fidelity as fidelity_mod, optics
 from repro.core import hybrid, throughput
-from repro.core.engine import GratingCache
+from repro.core.engine import GratingCache, clip_key, clip_keys_for
 from repro.core.fidelity import FidelityPipeline
 from repro.core.sthc import STHC, STHCConfig
 from repro.models import model_api
@@ -113,10 +138,22 @@ class VideoSearchConfig:
         window chunk for every same-geometry tenant in the batch).
         False = the per-tenant-sequential dispatch loop (the benchmark
         baseline).
+      dedup_clips: collapse pooled-batch rows whose clips hash
+        content-equal onto one shared physical row (the shared-stream
+        fan-out: N tenants searching the same clip pay one forward FFT
+        total).  False = one row per request (the benchmark baseline).
+      max_buffer_windows: serve at most this many coherence windows
+        from one device buffer; longer streams go through the stream
+        cursor in fixed-size T-chunks with carry-over tails (constant
+        peak memory, exact output).  None = whole stream in one buffer.
       grating_dtype: storage precision of recorded gratings ('float32'
         | 'bfloat16').  bf16 stores split-real planes at half the HBM —
         the shared cache byte budget holds ~2x the tenants — with f32
         accumulation at the MAC.
+      slm / atoms: the server's *default* device model — tenants record
+        and query through these SLM / atomic-medium configurations
+        unless they register with their own (``add_tenant(..., slm=...,
+        atoms=...)``).  None = the library defaults.
     """
 
     window_frames: int = 64
@@ -127,7 +164,11 @@ class VideoSearchConfig:
     cache_bytes: int | None = None
     use_pallas: bool = False
     pooled_queries: bool = True
+    dedup_clips: bool = True
+    max_buffer_windows: int | None = None
     grating_dtype: str = "float32"
+    slm: optics.SLMConfig | None = None
+    atoms: atomic.AtomicConfig | None = None
 
 
 @dataclasses.dataclass
@@ -153,6 +194,8 @@ class _Tenant:
     # the shared engine: two same-physics pipelines with different names
     # would report the first registrant's name for both
     fidelity_label: str = ""
+    # display label of the tenant's device model (SLM / atoms overrides)
+    device_label: str = "default"
     queries: int = 0
     windows: int = 0
     frames: int = 0
@@ -185,13 +228,14 @@ class VideoSearchServer:
         self.cache = GratingCache(
             max_entries=cfg.cache_entries, max_bytes=cfg.cache_bytes
         )
-        # one mode-agnostic engine per distinct pipeline fingerprint, all
-        # sharing the one grating cache (mixed-fidelity serving)
-        self._sthcs: dict[str, STHC] = {}
+        # one mode-agnostic engine per distinct (fidelity fingerprint,
+        # device fingerprint) pair, all sharing the one grating cache
+        # (mixed-fidelity + per-tenant-device serving)
+        self._sthcs: dict[tuple, STHC] = {}
         self._pool_lock = threading.Lock()
         self._default_fidelity = self._resolve_cfg_fidelity(cfg)
-        # the default-fidelity correlator, kept as an attribute for
-        # introspection and the LM/video demo drivers
+        # the default-fidelity/-device correlator, kept as an attribute
+        # for introspection and the LM/video demo drivers
         self.sthc = self._sthc_for(self._default_fidelity)
         self._tenants: dict[str, _Tenant] = {}
         # traffic from removed/replaced tenants — server-wide totals and
@@ -239,19 +283,52 @@ class VideoSearchServer:
             return pipe
         return fidelity_mod.ideal()
 
-    def _sthc_for(self, pipe: FidelityPipeline) -> STHC:
-        """The pooled correlator serving one fidelity pipeline — engines
-        are keyed by the pipeline *fingerprint* (display names don't
-        split the pool), created lazily, and all share ``self.cache``."""
-        fp = pipe.fingerprint()
+    def _resolve_device(
+        self,
+        slm: optics.SLMConfig | None,
+        atoms: atomic.AtomicConfig | None,
+    ) -> tuple[optics.SLMConfig, atomic.AtomicConfig]:
+        """Tenant override → server default → library default."""
+        if slm is None:
+            slm = self.cfg.slm if self.cfg.slm is not None else optics.SLMConfig()
+        if atoms is None:
+            atoms = (
+                self.cfg.atoms
+                if self.cfg.atoms is not None
+                else atomic.AtomicConfig()
+            )
+        return slm, atoms
+
+    def _sthc_for(
+        self,
+        pipe: FidelityPipeline,
+        slm: optics.SLMConfig | None = None,
+        atoms: atomic.AtomicConfig | None = None,
+    ) -> STHC:
+        """The pooled correlator serving one (fidelity, device model)
+        pair — engines are keyed by the pipeline *fingerprint* (display
+        names don't split the pool) plus the resolved SLM/atomic device
+        configs (frozen dataclasses: the device fingerprint), created
+        lazily, and all share ``self.cache``.  Tenants on different
+        device models still pool into one dispatch whenever their
+        gratings' *encode semantics* match — the engine groups by
+        (geometry, encode, slm_bits), and record-time device physics is
+        already baked into each effective grating."""
+        slm, atoms = self._resolve_device(slm, atoms)
+        key = (pipe.fingerprint(), slm, atoms)
         with self._pool_lock:
-            sthc = self._sthcs.get(fp)
+            sthc = self._sthcs.get(key)
             if sthc is None:
                 sthc = STHC(
                     STHCConfig(
                         fidelity=pipe,
+                        slm=slm,
+                        atoms=atoms,
                         use_pallas=self.cfg.use_pallas,
                         osave_chunk_windows=self.cfg.chunk_windows,
+                        osave_max_buffer_windows=getattr(
+                            self.cfg, "max_buffer_windows", None
+                        ),
                         # serving never runs the unfused ± reference
                         # path: drop the raw stack so each cached grating
                         # charges only its hot-path bytes against
@@ -263,7 +340,7 @@ class VideoSearchServer:
                     ),
                     cache=self.cache,
                 )
-                self._sthcs[fp] = sthc
+                self._sthcs[key] = sthc
         return sthc
 
     # -- tenant management -------------------------------------------------
@@ -273,6 +350,8 @@ class VideoSearchServer:
         name: str,
         kernels: jax.Array | np.ndarray,
         fidelity: FidelityPipeline | None = None,
+        slm: optics.SLMConfig | None = None,
+        atoms: atomic.AtomicConfig | None = None,
     ) -> "VideoSearchServer":
         """Register a reference kernel set and record it into the cache.
 
@@ -280,6 +359,14 @@ class VideoSearchServer:
         the server default): tenants at different fidelities coexist on
         one server, one shared cache — the cache key's pipeline
         fingerprint keeps their gratings apart.
+
+        ``slm`` / ``atoms`` give the tenant its own device model (None =
+        the server default): the tenant routes to an engine keyed on
+        (fidelity fingerprint, device fingerprint) and its cache key
+        carries both device configs, so tenants on different hardware
+        never cross-hit — yet they still pool into one dispatch whenever
+        their encode semantics (SLM bit depth) match, record-time device
+        physics being baked into each grating.
         """
         kt = int(kernels.shape[-1])
         if self.cfg.window_frames <= kt - 1:
@@ -304,11 +391,19 @@ class VideoSearchServer:
         # content-hash key computed below
         kernels = np.array(kernels)
         pipe = fidelity if fidelity is not None else self._default_fidelity
-        sthc = self._sthc_for(pipe)
+        sthc = self._sthc_for(pipe, slm, atoms)
         signal_shape = self._signal_shape()
-        # the key carries this tenant's pipeline fingerprint: identical
-        # kernel bytes under another fidelity hash to a different entry
+        # the key carries this tenant's pipeline fingerprint *and* the
+        # resolved device configs: identical kernel bytes under another
+        # fidelity or device model hash to a different entry
         key = GratingCache.key_for(kernels, signal_shape, sthc.config)
+        r_slm, r_atoms = self._resolve_device(slm, atoms)
+        device_label = (
+            "default"
+            if slm is None and atoms is None
+            else f"slm(bits={r_slm.bits})/atoms({r_atoms.ihb_profile},"
+            f"t2={r_atoms.t2_s:g}s)"
+        )
         ten = _Tenant(
             kernels=kernels,
             kt=kt,
@@ -317,6 +412,7 @@ class VideoSearchServer:
             key=key,
             sthc=sthc,
             fidelity_label=pipe.describe(),
+            device_label=device_label,
         )
         with self._lock:
             old = self._tenants.pop(name, None)
@@ -415,6 +511,8 @@ class VideoSearchServer:
         self,
         requests: Sequence[tuple[str, jax.Array]],
         pooled: bool | None = None,
+        clip_keys: Sequence[tuple | None] | None = None,
+        dedup: bool | None = None,
     ) -> list[dict]:
         """Schedule concurrent stream searches.
 
@@ -425,13 +523,21 @@ class VideoSearchServer:
         (``QueryEngine.query_stream_many``): tenants whose gratings
         share the window FFT geometry and encode semantics are served
         from one pooled arena — one FFT + pooled MAC + IFFT per window
-        chunk for the *whole mixed-tenant batch*.  ``pooled=False`` is
-        the per-tenant-sequential dispatch loop (one streaming
-        correlation per tenant-group; the benchmark baseline).  Results
-        come back in request order.
+        chunk for the *whole mixed-tenant batch* — and, with ``dedup``
+        (default ``cfg.dedup_clips``), tenant-groups whose clips hash
+        content-equal collapse onto one shared physical row (the
+        shared-stream fan-out: one forward FFT for every tenant
+        searching the same stream).  ``clip_keys`` lets the microbatch
+        scheduler pass per-request content fingerprints hashed once at
+        submit time (None = hashed here).  ``pooled=False`` is the
+        per-tenant-sequential dispatch loop (one streaming correlation
+        per tenant-group; the benchmark baseline).  Results come back
+        in request order.
         """
         if pooled is None:
             pooled = getattr(self.cfg, "pooled_queries", True)
+        if dedup is None:
+            dedup = getattr(self.cfg, "dedup_clips", True)
         groups: dict[tuple, list[int]] = {}
         with self._lock:  # snapshot: a racing remove_tenant can't break
             tenants = dict(self._tenants)
@@ -490,8 +596,27 @@ class VideoSearchServer:
                 self._fetch_grating(key[0], ten)
                 for (key, _), ten in zip(order, tens)
             ]
+            # per-group clip identities for the shared-stream dedup: a
+            # stacked group's identity is the tuple of its members'
+            # content hashes (hashed once per distinct array object —
+            # or upstream at scheduler submit time, via ``clip_keys``)
+            group_keys = None
+            if dedup:
+                if clip_keys is None:
+                    clip_keys = clip_keys_for([clip for _, clip in requests])
+                group_keys = []
+                for _, idxs in order:
+                    ks = [clip_keys[i] for i in idxs]
+                    if any(k is None for k in ks):
+                        group_keys.append(None)
+                    elif len(ks) == 1:
+                        group_keys.append(ks[0])
+                    else:
+                        group_keys.append(("stack",) + tuple(ks))
             fmaps = self.sthc.engine.query_stream_many(
-                list(zip(gratings, stacks))
+                list(zip(gratings, stacks)),
+                clip_keys=group_keys,
+                dedup=dedup,
             )
             # detection readout rides the batch too: one jitted call for
             # every group's peak + argmax instead of an eager op chain
@@ -592,6 +717,7 @@ class VideoSearchServer:
             per_tenant = {
                 name: {
                     "fidelity": t.fidelity_label,
+                    "device": t.device_label,
                     "queries": t.queries,
                     "windows": t.windows,
                     "frames": t.frames,
@@ -621,6 +747,10 @@ class VideoSearchServer:
             "tenants": per_tenant,
             "pooled_dispatches": pooled,
             "sequential_dispatches": sequential,
+            # shared-stream fan-out: clip rows the pooled executor
+            # collapsed onto shared physical rows (one FFT per stream,
+            # not per request)
+            "dedup": self.sthc.engine.pool_stats(),
             "queries": queries,
             "windows_total": windows,
             "frames_total": frames,
@@ -649,6 +779,10 @@ class _Pending:
     clip: jax.Array
     future: Future
     t_submit: float
+    # content fingerprint of the clip, hashed once in the submitter's
+    # thread (off the batcher's critical path) — the identity the
+    # shared-stream dedup groups ride on
+    clip_id: tuple | None = None
 
 
 class MicrobatchScheduler:
@@ -710,6 +844,9 @@ class MicrobatchScheduler:
         self.rejected = 0
         self.failed = 0
         self.batches = 0
+        # requests that joined an existing shared-stream dedup group
+        # (same-clip rows beyond the first in a formed batch)
+        self.dedup_grouped = 0
         # serializes intake against close(): submit must never land a
         # request after close() drained the queue (its future would hang
         # forever).  Deliberately NOT self._lock — the batcher takes
@@ -729,8 +866,18 @@ class MicrobatchScheduler:
     ) -> Future:
         """Enqueue one search; returns a future resolving to the same
         result dict ``search_batch`` produces (plus ``queue_latency_s``,
-        the end-to-end submit→result time)."""
-        item = _Pending(tenant, clip, Future(), time.time())
+        the end-to-end submit→result time).  The clip's content
+        fingerprint is hashed here, in the caller's thread, so the
+        batcher can form shared-stream dedup groups without re-reading
+        clip bytes — skipped entirely when the server's dedup is off
+        (the fingerprint would be discarded; no point paying a full
+        host copy + SHA-1 per request for it)."""
+        cfg = self.server.cfg
+        wants_dedup = getattr(cfg, "dedup_clips", True) and getattr(
+            cfg, "pooled_queries", True
+        )  # the sequential executor never reads clip keys either
+        cid = clip_key(clip) if wants_dedup else None
+        item = _Pending(tenant, clip, Future(), time.time(), cid)
         # every put happens under the intake lock (so close() can never
         # miss a request and leave its future hanging), but the lock is
         # never *held across a blocking wait*: a backpressured
@@ -823,12 +970,35 @@ class MicrobatchScheduler:
                     skipped.append(nxt)
             self._stash.extend(skipped)  # next cycle, arrival order kept
             try:
-                self._dispatch(batch)
+                self._dispatch(self._form_dedup_groups(batch))
             except Exception:  # noqa: BLE001 — the batcher must survive
                 # _dispatch fails futures itself; this is a belt for
                 # future-state races etc. — a dead batcher thread would
                 # hang every subsequent request
                 pass
+
+    def _form_dedup_groups(self, batch: list[_Pending]) -> list[_Pending]:
+        """Arrange a formed microbatch into shared-stream dedup groups:
+        requests whose clips hash content-equal become adjacent (stable
+        within a group, groups in first-arrival order), so the pooled
+        executor's row collapse is visible in the batch layout.  Rows
+        the dedup will collapse (every request beyond the first of its
+        clip) are counted for :meth:`metrics`."""
+        groups: dict[tuple, list[_Pending]] = {}
+        singles: list[_Pending] = []  # unhashable clips: never deduped
+        order: list[tuple] = []  # first-arrival group order
+        for p in batch:
+            if p.clip_id is None:
+                singles.append(p)
+                continue
+            if p.clip_id not in groups:
+                order.append(p.clip_id)
+            groups.setdefault(p.clip_id, []).append(p)
+        shared = sum(len(g) - 1 for g in groups.values())
+        if shared:
+            with self._lock:
+                self.dedup_grouped += shared
+        return [p for k in order for p in groups[k]] + singles
 
     def _dispatch(self, batch: list[_Pending]) -> None:
         # claim each future before any work: a caller may have
@@ -846,7 +1016,10 @@ class MicrobatchScheduler:
     def _execute(self, batch: list[_Pending]) -> None:
         try:
             outs = self.server.search_batch(
-                [(p.tenant, p.clip) for p in batch]
+                [(p.tenant, p.clip) for p in batch],
+                # fingerprints were hashed at submit: the executor's
+                # dedup must not re-read the clip bytes per batch
+                clip_keys=[p.clip_id for p in batch],
             )
         except Exception as exc:  # noqa: BLE001 — routed into the future
             if len(batch) == 1:
@@ -915,6 +1088,7 @@ class MicrobatchScheduler:
                 "rejected": self.rejected,
                 "failed": self.failed,
                 "batches": self.batches,
+                "dedup_grouped": self.dedup_grouped,
                 "mean_batch_size": (
                     sum(sizes) / len(sizes) if sizes else 0.0
                 ),

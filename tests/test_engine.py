@@ -643,3 +643,210 @@ def test_default_storage_layout_unchanged(rng):
     assert g.effective.dtype == jnp.complex64
     with pytest.raises(ValueError, match="grating_dtype"):
         STHCConfig(fidelity=fid.ideal(), grating_dtype="float16")
+
+
+# -- shared-stream clip-dedup + bounded-memory streaming ----------------------
+
+
+def test_query_many_clip_dedup_paper_geometry_matches_loop(rng):
+    """Acceptance: deduped shared-stream fan-out equals the per-request
+    loop to float tolerance at the paper geometry — four tenants'
+    kernel banks correlated against ONE clip in parallel (the paper's
+    headline dataflow), answered from one physical batch row reading
+    the union of their O-slices."""
+    x = _clips(rng, B=1, H=60, W=80, T=16)
+    eng = QueryEngine(STHCConfig(fidelity=fid.physical()))
+    gs = [
+        eng.record(_kernels(rng, O=3, kh=30, kw=40, kt=8), (60, 80, 16))
+        for _ in range(4)
+    ]
+    before = eng.pool_stats()
+    outs = eng.query_many([(g, x) for g in gs])
+    after = eng.pool_stats()
+    for g, out in zip(gs, outs):
+        ref = eng.query(g, x)
+        rel = float(jnp.linalg.norm(out - ref) / jnp.linalg.norm(ref))
+        assert rel <= 1e-5, rel
+    # 4 clip rows offered, 1 physical row dispatched
+    assert after["rows_offered"] - before["rows_offered"] == 4
+    assert after["rows_dispatched"] - before["rows_dispatched"] == 1
+    assert after["rows_saved"] - before["rows_saved"] == 3
+
+
+def test_query_many_dedup_is_content_addressed_not_identity(rng):
+    """Two distinct array objects with equal bytes dedup; equal shapes
+    with different bytes do not."""
+    a = rng.rand(1, 1, 20, 24, 10).astype(np.float32)
+    same = jnp.asarray(a.copy())
+    also_same = jnp.asarray(a.copy())
+    different = jnp.asarray(rng.rand(1, 1, 20, 24, 10).astype(np.float32))
+    eng = QueryEngine(STHCConfig(fidelity=fid.ideal()))
+    g1 = eng.record(_kernels(rng, O=2), (20, 24, 10))
+    g2 = eng.record(_kernels(rng, O=3), (20, 24, 10))
+    before = eng.pool_stats()
+    outs = eng.query_many([(g1, same), (g2, also_same), (g1, different)])
+    delta = {
+        k: eng.pool_stats()[k] - before[k] for k in ("rows_offered", "rows_dispatched")
+    }
+    assert delta == {"rows_offered": 3, "rows_dispatched": 2}
+    for out, (g, x) in zip(outs, [(g1, same), (g2, also_same), (g1, different)]):
+        ref = eng.query(g, x)
+        rel = float(jnp.linalg.norm(out - ref) / jnp.linalg.norm(ref))
+        assert rel <= 1e-5, rel
+
+
+def test_query_many_dedup_off_is_row_per_request(rng):
+    """dedup=False keeps the one-row-per-request baseline (the
+    benchmark's undeduped pooled mode) with identical answers."""
+    x = _clips(rng, B=1)
+    eng = QueryEngine(STHCConfig(fidelity=fid.physical()))
+    g1 = eng.record(_kernels(rng, O=2), (20, 24, 10))
+    g2 = eng.record(_kernels(rng, O=4), (20, 24, 10))
+    before = eng.pool_stats()
+    outs = eng.query_many([(g1, x), (g2, x)], dedup=False)
+    after = eng.pool_stats()
+    assert after["rows_dispatched"] - before["rows_dispatched"] == 2
+    assert after["rows_saved"] == before["rows_saved"]
+    for out, g in zip(outs, (g1, g2)):
+        ref = eng.query(g, x)
+        rel = float(jnp.linalg.norm(out - ref) / jnp.linalg.norm(ref))
+        assert rel <= 1e-5, rel
+
+
+def test_query_stream_many_clip_dedup_paper_geometry_matches_loop(rng):
+    """Acceptance (streaming): N tenants fanning out over one shared
+    stream — pooled + deduped overlap-save equals the per-request
+    query_stream loop to float tolerance at the paper's frame/kernel
+    geometry, and the whole fan-out dispatches ONE physical clip row."""
+    cfg = STHCConfig(fidelity=fid.physical(), osave_chunk_windows=2)
+    eng = QueryEngine(cfg)
+    gs = [
+        eng.record(_kernels(rng, O=3, kh=30, kw=40, kt=8), (60, 80, 16))
+        for _ in range(3)
+    ]
+    x = jnp.asarray(rng.rand(1, 1, 60, 80, 40).astype(np.float32))
+    before = eng.pool_stats()
+    outs = eng.query_stream_many([(g, x) for g in gs])
+    after = eng.pool_stats()
+    assert after["rows_offered"] - before["rows_offered"] == 3
+    assert after["rows_dispatched"] - before["rows_dispatched"] == 1
+    for g, out in zip(gs, outs):
+        ref = eng.query_stream(g, x)
+        rel = float(jnp.linalg.norm(out - ref) / jnp.linalg.norm(ref))
+        assert rel <= 1e-5, rel
+
+
+def test_query_stream_many_dedup_mixed_clips_and_batches(rng):
+    """Dedup with a mixed composition: two tenants on one shared stream
+    plus a third on its own — splits slice the right O-windows out of
+    the shared row's union span."""
+    eng = QueryEngine(STHCConfig(fidelity=fid.physical()))
+    g1 = eng.record(_kernels(rng, O=2), (20, 24, 11))
+    g2 = eng.record(_kernels(rng, O=5), (20, 24, 11))
+    shared = jnp.asarray(rng.rand(1, 1, 20, 24, 29).astype(np.float32))
+    own = jnp.asarray(rng.rand(1, 1, 20, 24, 29).astype(np.float32))
+    outs = eng.query_stream_many([(g1, shared), (g2, shared), (g2, own)])
+    refs = [
+        eng.query_stream(g1, shared),
+        eng.query_stream(g2, shared),
+        eng.query_stream(g2, own),
+    ]
+    for out, ref in zip(outs, refs):
+        assert out.shape == ref.shape
+        rel = float(jnp.linalg.norm(out - ref) / jnp.linalg.norm(ref))
+        assert rel <= 1e-5, rel
+
+
+def test_query_stream_many_dedup_pallas_matches_dense(rng):
+    """The grouped Pallas launch serves dedup union spans (aligned
+    row offsets + dispatch-time arena padding) identically to the
+    dense gather path."""
+    k1, k2 = _kernels(rng, O=2, C=2), _kernels(rng, O=3, C=2)
+    dense = QueryEngine(STHCConfig(fidelity=fid.ideal()))
+    pallas = QueryEngine(STHCConfig(fidelity=fid.ideal(), use_pallas=True))
+    gd1, gd2 = dense.record(k1, (20, 24, 10)), dense.record(k2, (20, 24, 10))
+    gp1, gp2 = pallas.record(k1, (20, 24, 10)), pallas.record(k2, (20, 24, 10))
+    x = _clips(rng, B=1, C=2, T=26)
+    outs_d = dense.query_stream_many([(gd1, x), (gd2, x)])
+    outs_p = pallas.query_stream_many([(gp1, x), (gp2, x)])
+    for d, p in zip(outs_d, outs_p):
+        rel = float(jnp.linalg.norm(p - d) / jnp.linalg.norm(d))
+        assert rel <= 1e-4, rel
+
+
+@pytest.mark.parametrize("fidelity", ["ideal", "physical"])
+def test_query_stream_chunked_cursor_equals_one_shot(fidelity, rng):
+    """Acceptance: bounded-memory chunked streaming equals the one-shot
+    (unbounded) correlation to float tolerance, at constant peak
+    buffer, for both an un-encoded and an SLM-encoded pipeline (the
+    stream-global scale must survive chunking)."""
+    pipe = fid.ideal() if fidelity == "ideal" else fid.physical()
+    eng = QueryEngine(STHCConfig(fidelity=pipe, osave_chunk_windows=2))
+    g = eng.record(_kernels(rng, O=2, kh=7, kw=9, kt=4), (20, 24, 12))
+    x = jnp.asarray(rng.rand(2, 1, 20, 24, 77).astype(np.float32))
+    one_shot = eng.query_stream(g, x)
+    chunked = eng.query_stream(g, x, max_buffer_windows=3)
+    np.testing.assert_allclose(
+        np.asarray(chunked),
+        np.asarray(one_shot),
+        atol=1e-6 * float(jnp.max(jnp.abs(one_shot))),
+    )
+    # the cursor really ran multiple bounded segments
+    plan = eng.stream_plan_for(g, x.shape[-1])
+    cursor = sc.StreamCursor(plan, 3)
+    assert len(cursor) > 1
+    assert cursor.peak_buffer_frames == 2 * plan.step + plan.block_t
+
+
+def test_query_stream_chunked_paper_geometry_long_clip(rng):
+    """Acceptance at paper geometry: a stream far longer than the
+    device buffer (max_buffer_windows windows) serves exactly equal to
+    one-shot streaming; every segment buffer stays at the constant
+    bound regardless of T."""
+    cfg = STHCConfig(fidelity=fid.physical())
+    eng = QueryEngine(cfg)
+    g = eng.record(_kernels(rng, O=2, kh=30, kw=40, kt=8), (60, 80, 16))
+    x = jnp.asarray(rng.rand(1, 1, 60, 80, 70).astype(np.float32))
+    one_shot = eng.query_stream(g, x)
+    chunked = eng.query_stream(g, x, max_buffer_windows=2)
+    np.testing.assert_allclose(
+        np.asarray(chunked),
+        np.asarray(one_shot),
+        atol=1e-6 * float(jnp.max(jnp.abs(one_shot))),
+    )
+    plan = eng.stream_plan_for(g, x.shape[-1])
+    cursor = sc.StreamCursor(plan, 2)
+    bound = plan.step + plan.block_t
+    assert all(seg.frames <= bound for seg in cursor)
+    # the bound is independent of T: a 10x longer stream plans the same
+    # per-segment buffer
+    long_plan = eng.stream_plan_for(g, 10 * x.shape[-1])
+    assert sc.StreamCursor(long_plan, 2).peak_buffer_frames <= bound
+
+
+def test_query_stream_many_chunked_matches_unchunked(rng):
+    """Pooled + deduped + chunked: the full stream-centric hot path
+    equals the unbounded pooled pass and the per-request loop."""
+    eng = QueryEngine(STHCConfig(fidelity=fid.physical()))
+    g1 = eng.record(_kernels(rng, O=2), (20, 24, 11))
+    g2 = eng.record(_kernels(rng, O=3), (20, 24, 11))
+    x = jnp.asarray(rng.rand(1, 1, 20, 24, 53).astype(np.float32))
+    unbounded = eng.query_stream_many([(g1, x), (g2, x)])
+    bounded = eng.query_stream_many(
+        [(g1, x), (g2, x)], max_buffer_windows=2
+    )
+    for u, b, g in zip(unbounded, bounded, (g1, g2)):
+        np.testing.assert_allclose(
+            np.asarray(b), np.asarray(u),
+            atol=1e-6 * float(jnp.max(jnp.abs(u))),
+        )
+        ref = eng.query_stream(g, x)
+        rel = float(jnp.linalg.norm(b - ref) / jnp.linalg.norm(ref))
+        assert rel <= 1e-5, rel
+
+
+def test_osave_max_buffer_windows_config_validation():
+    with pytest.raises(ValueError, match="osave_max_buffer_windows"):
+        STHCConfig(fidelity=fid.ideal(), osave_max_buffer_windows=0)
+    cfg = STHCConfig(fidelity=fid.ideal(), osave_max_buffer_windows=4)
+    assert cfg.osave_max_buffer_windows == 4

@@ -384,9 +384,9 @@ def test_scheduler_sheds_on_full_queue():
     )
     orig = server.search_batch
 
-    def slow_search_batch(reqs, pooled=None):
+    def slow_search_batch(reqs, pooled=None, **kw):
         _time.sleep(0.25)  # hold the batcher busy so the queue fills
-        return orig(reqs, pooled=pooled)
+        return orig(reqs, pooled=pooled, **kw)
 
     server.search_batch = slow_search_batch
     with MicrobatchScheduler(
@@ -436,9 +436,9 @@ def test_scheduler_close_fails_pending_futures():
     )
     orig = server.search_batch
 
-    def slow_search_batch(reqs, pooled=None):
+    def slow_search_batch(reqs, pooled=None, **kw):
         _time.sleep(0.3)
-        return orig(reqs, pooled=pooled)
+        return orig(reqs, pooled=pooled, **kw)
 
     server.search_batch = slow_search_batch
     sched = MicrobatchScheduler(
@@ -589,3 +589,255 @@ def test_scheduler_mixed_shapes_all_complete_and_coalesce():
     # 8 requests of 2 shapes in <=4-deep batches: coalescing keeps the
     # dispatch count well under one-per-request
     assert m["batches"] <= 6
+
+
+# -- per-tenant device models -------------------------------------------------
+
+
+def test_per_tenant_device_models_route_and_cache_separately():
+    """add_tenant(..., slm=..., atoms=...): same kernel bytes under two
+    device models occupy two engines and two cache entries (no
+    cross-device hits), and each tenant's answers match a single-tenant
+    server built wholly at that device model."""
+    from repro.core import atomic, optics
+
+    k = _kernels(0)
+    clip = _clip(0, T=24)
+    cfg = VideoSearchConfig(window_frames=8, fidelity=fid.physical())
+    server = VideoSearchServer(frame_hw=(12, 12), cfg=cfg)
+    server.add_tenant("stock", k)
+    server.add_tenant("coarse", k, slm=optics.SLMConfig(bits=4))
+    server.add_tenant(
+        "slow-atoms", k, atoms=atomic.AtomicConfig(t2_s=2e-3)
+    )
+    # three engines (three device fingerprints), three cache entries for
+    # one set of kernel bytes
+    assert len(server._sthcs) == 3
+    assert server.cache.stats()["entries"] == 3
+
+    outs = server.search_batch(
+        [("stock", clip), ("coarse", clip), ("slow-atoms", clip)]
+    )
+    # oracle: one server per device model, default-configured otherwise
+    for name, slm, atoms in (
+        ("stock", None, None),
+        ("coarse", optics.SLMConfig(bits=4), None),
+        ("slow-atoms", None, atomic.AtomicConfig(t2_s=2e-3)),
+    ):
+        solo = VideoSearchServer(
+            frame_hw=(12, 12),
+            cfg=VideoSearchConfig(
+                window_frames=8, fidelity=fid.physical(), slm=slm, atoms=atoms
+            ),
+        )
+        solo.add_tenant("only", k)
+        ref = solo.search(clip, tenant="only")
+        got = next(o for o in outs if o["tenant"] == name)
+        np.testing.assert_allclose(got["scores"], ref["scores"], rtol=1e-5)
+
+    m = server.metrics()
+    assert m["tenants"]["stock"]["device"] == "default"
+    assert "bits=4" in m["tenants"]["coarse"]["device"]
+    assert "t2=0.002" in m["tenants"]["slow-atoms"]["device"]
+
+
+def test_device_tenants_pool_when_encode_semantics_match():
+    """Record-time device physics (atoms) is baked into the grating, so
+    a custom-atoms tenant still pools into the default tenants' single
+    dispatch; a different SLM bit depth changes encode semantics and
+    keeps its own group — both still answer correctly."""
+    from repro.core import atomic, optics
+
+    cfg = VideoSearchConfig(window_frames=8, fidelity=fid.physical())
+    server = VideoSearchServer(frame_hw=(12, 12), cfg=cfg)
+    server.add_tenant("a", _kernels(0))
+    server.add_tenant("b", _kernels(1), atoms=atomic.AtomicConfig(t2_s=2e-3))
+    server.add_tenant("c", _kernels(2), slm=optics.SLMConfig(bits=4))
+    clip = _clip(1, T=24)
+    reqs = [("a", clip), ("b", clip), ("c", clip)]
+    pooled = server.search_batch(reqs, pooled=True)
+    seq = server.search_batch(reqs, pooled=False)
+    for p, s in zip(pooled, seq):
+        np.testing.assert_allclose(p["scores"], s["scores"], rtol=1e-5)
+        np.testing.assert_array_equal(p["peak_frame"], s["peak_frame"])
+    # a+b share one pool group (same 8-bit encode); c is its own: the
+    # dedup collapsed a+b's shared clip onto one physical row
+    d = server.metrics()["dedup"]
+    assert d["rows_offered"] == 3 and d["rows_dispatched"] == 2
+
+
+# -- shared-stream clip-dedup through the server ------------------------------
+
+
+def test_search_batch_shared_clip_dedup_counters_and_equivalence():
+    """The acceptance path end to end: N tenants searching ONE clip
+    through search_batch — deduped pooled answers equal the sequential
+    per-tenant loop, and metrics report the collapsed rows."""
+    server = VideoSearchServer(
+        frame_hw=(12, 12), cfg=VideoSearchConfig(window_frames=8)
+    )
+    for i in range(4):
+        server.add_tenant(f"t{i}", _kernels(i))
+    clip = _clip(2, T=32)
+    reqs = [(f"t{i}", clip) for i in range(4)]
+    pooled = server.search_batch(reqs, pooled=True)
+    seq = server.search_batch(reqs, pooled=False)
+    for p, s in zip(pooled, seq):
+        np.testing.assert_allclose(p["scores"], s["scores"], rtol=1e-5)
+        np.testing.assert_array_equal(p["peak_frame"], s["peak_frame"])
+    d = server.metrics()["dedup"]
+    assert d["rows_offered"] == 4
+    assert d["rows_dispatched"] == 1
+    assert d["rows_saved"] == 3
+    # dedup off: the undeduped pooled baseline still matches
+    undeduped = server.search_batch(reqs, pooled=True, dedup=False)
+    for u, s in zip(undeduped, seq):
+        np.testing.assert_allclose(u["scores"], s["scores"], rtol=1e-5)
+    d2 = server.metrics()["dedup"]
+    assert d2["rows_dispatched"] - d["rows_dispatched"] == 4  # no collapse
+
+
+def test_search_batch_long_stream_chunked_matches_unbounded():
+    """max_buffer_windows: a stream needing many more windows than the
+    device buffer answers identically to the unbounded server."""
+    k = _kernels(0)
+    clip = _clip(3, T=96)
+    bounded = VideoSearchServer(
+        frame_hw=(12, 12),
+        cfg=VideoSearchConfig(window_frames=8, max_buffer_windows=2),
+    )
+    unbounded = VideoSearchServer(
+        frame_hw=(12, 12), cfg=VideoSearchConfig(window_frames=8)
+    )
+    for srv in (bounded, unbounded):
+        srv.add_tenant("events", k)
+    out_b = bounded.search(clip, tenant="events")
+    out_u = unbounded.search(clip, tenant="events")
+    np.testing.assert_allclose(out_b["scores"], out_u["scores"], rtol=1e-6)
+    np.testing.assert_array_equal(out_b["peak_frame"], out_u["peak_frame"])
+    assert out_b["windows"] == out_u["windows"]
+
+
+# -- microbatch scheduler: dedup groups under close/cancel races ---------------
+
+
+def test_scheduler_forms_dedup_groups_and_counts():
+    """Same-clip requests across tenants land in one microbatch dedup
+    group: the scheduler counter and the engine row counters agree."""
+    from repro.launch.serve import MicrobatchScheduler
+
+    server = VideoSearchServer(
+        frame_hw=(12, 12), cfg=VideoSearchConfig(window_frames=8)
+    )
+    for i in range(3):
+        server.add_tenant(f"t{i}", _kernels(i))
+    clip = _clip(4, T=24)
+    with MicrobatchScheduler(
+        server, max_queue=8, max_batch=8, batch_wait_s=0.05
+    ) as sched:
+        futs = [sched.submit(f"t{i}", clip, block=True) for i in range(3)]
+        outs = [f.result(timeout=120) for f in futs]
+    for out, i in zip(outs, range(3)):
+        assert out["tenant"] == f"t{i}"
+    m = sched.metrics()
+    assert m["completed"] == 3
+    # at least two same-clip rows joined an existing dedup group (all
+    # three when the batcher coalesced one batch)
+    assert m["dedup_grouped"] >= 2
+    assert server.metrics()["dedup"]["rows_saved"] >= 2
+
+
+def test_scheduler_cancel_mid_dedup_group_does_not_poison_siblings():
+    """Close/cancel race on the dedup-group path: requests sharing one
+    clip where one future is cancelled before dispatch — the cancelled
+    request must drop out of the batch while its same-clip siblings
+    complete with correct results."""
+    import threading
+    import time as _time
+
+    from repro.launch.serve import MicrobatchScheduler
+
+    server = VideoSearchServer(
+        frame_hw=(12, 12), cfg=VideoSearchConfig(window_frames=8)
+    )
+    for i in range(3):
+        server.add_tenant(f"t{i}", _kernels(i))
+    clip = _clip(5, T=24)
+    ref = {
+        f"t{i}": server.search(clip, tenant=f"t{i}")["scores"]
+        for i in range(3)
+    }
+
+    orig = server.search_batch
+    release = threading.Event()
+
+    def gated_search_batch(reqs, pooled=None, **kw):
+        release.wait(timeout=30)  # hold the first batch until cancelled
+        return orig(reqs, pooled=pooled, **kw)
+
+    server.search_batch = gated_search_batch
+    with MicrobatchScheduler(
+        server, max_queue=8, max_batch=1, batch_wait_s=0.0
+    ) as sched:
+        # batch 1 (size 1) occupies the batcher behind the gate; the
+        # three same-clip requests queue up as the next dedup group
+        blocker = sched.submit("t0", _clip(6, T=24))
+        _time.sleep(0.05)
+        futs = [sched.submit(f"t{i}", clip) for i in range(3)]
+        assert futs[1].cancel()  # cancel a dedup-group member pre-dispatch
+        release.set()
+        assert futs[0].result(timeout=120)["tenant"] == "t0"
+        assert futs[2].result(timeout=120)["tenant"] == "t2"
+        np.testing.assert_allclose(
+            futs[0].result()["scores"], ref["t0"], rtol=1e-5
+        )
+        np.testing.assert_allclose(
+            futs[2].result()["scores"], ref["t2"], rtol=1e-5
+        )
+        blocker.result(timeout=120)
+        with pytest.raises(Exception):  # cancelled future never resolves
+            futs[1].result(timeout=5)
+        # the scheduler survives: a fresh same-clip request still serves
+        again = sched.submit("t1", clip, block=True)
+        np.testing.assert_allclose(
+            again.result(timeout=120)["scores"], ref["t1"], rtol=1e-5
+        )
+    m = sched.metrics()
+    assert m["completed"] >= 4
+
+
+def test_scheduler_close_fails_queued_dedup_group():
+    """close() with a whole dedup group still queued: every member's
+    future resolves (failed, not hung), including the shared-clip
+    siblings."""
+    import threading
+    import time as _time
+
+    from repro.launch.serve import MicrobatchScheduler
+
+    server = VideoSearchServer(
+        _kernels(0), (12, 12), VideoSearchConfig(window_frames=8)
+    )
+    orig = server.search_batch
+    release = threading.Event()
+
+    def gated_search_batch(reqs, pooled=None, **kw):
+        release.wait(timeout=30)
+        return orig(reqs, pooled=pooled, **kw)
+
+    server.search_batch = gated_search_batch
+    sched = MicrobatchScheduler(
+        server, max_queue=8, max_batch=1, batch_wait_s=0.0
+    )
+    clip = _clip(7, T=24)
+    blocker = sched.submit("default", _clip(8, T=24))
+    _time.sleep(0.05)
+    futs = [sched.submit("default", clip) for _ in range(3)]
+    closer = threading.Thread(target=sched.close)
+    closer.start()
+    _time.sleep(0.05)
+    release.set()
+    closer.join(timeout=30)
+    assert not closer.is_alive()
+    for f in futs + [blocker]:
+        assert f.done()  # resolved or failed, never hung

@@ -134,3 +134,72 @@ def test_spectral_flops_advantage():
 
     wl = ConvWorkload()  # 30×40×8 kernels on 60×80×16 clips
     assert wl.spectral_advantage() > 5.0, wl.spectral_advantage()
+
+
+# -- bounded-memory stream cursor (pure windowing arithmetic) -----------------
+
+
+@settings(max_examples=16, deadline=None)
+@given(
+    t=st.integers(8, 90),
+    kt=st.integers(2, 6),
+    extra=st.integers(1, 9),
+    mbw=st.integers(1, 7),
+)
+def test_stream_cursor_partitions_windows(t, kt, extra, mbw):
+    """Cursor segments partition the plan's windows and valid outputs
+    exactly: window counts sum to n_blocks, per-segment valid outputs
+    tile [0, n_valid) contiguously and disjointly, and consecutive
+    segments overlap by exactly kt−1 input frames (the carry-over
+    tail)."""
+    if t < kt:
+        t = kt + t
+    block_t = kt - 1 + extra
+    cursor = sc.stream_cursor(t, kt, block_t, max_buffer_windows=mbw)
+    plan = cursor.plan
+    segs = list(cursor)
+    assert sum(s.n_windows for s in segs) == plan.n_blocks
+    assert segs[0].t0 == 0 and segs[0].out_t0 == 0
+    out_next = 0
+    for i, s in enumerate(segs):
+        assert s.n_windows <= mbw
+        assert s.out_t0 == out_next
+        out_next += s.n_valid
+        assert s.frames == s.t1 - s.t0 <= cursor.peak_buffer_frames
+        if i > 0:
+            prev = segs[i - 1]
+            # segment input ranges overlap by the carry-over tail: the
+            # next segment re-reads the kt−1 frames that straddle the
+            # boundary windows (clipped at the stream tail)
+            assert s.t0 == prev.t0 + prev.n_windows * plan.step
+            assert prev.t1 - s.t0 == kt - 1  # exactly the carry-over
+    assert out_next == plan.n_valid
+    assert segs[-1].t1 <= t
+    # the constant-memory bound: every segment fits the fixed buffer
+    bound = (min(mbw, plan.n_blocks) - 1) * plan.step + plan.block_t
+    assert cursor.peak_buffer_frames <= bound
+
+
+def test_stream_cursor_single_segment_when_unbounded():
+    cursor = sc.stream_cursor(40, 3, 10, max_buffer_windows=None)
+    assert len(cursor) == 1
+    (seg,) = cursor
+    assert seg.t0 == 0 and seg.n_windows == cursor.plan.n_blocks
+    assert seg.n_valid == cursor.plan.n_valid
+
+
+def test_stream_cursor_rejects_bad_budget():
+    plan = sc.stream_plan(40, 3, 10)
+    with pytest.raises(ValueError, match="max_buffer_windows"):
+        sc.StreamCursor(plan, 0)
+
+
+def test_stream_cursor_segment_plans_are_consistent():
+    """Each segment re-planned at its own frame count yields exactly its
+    window/valid counts — the invariant the engine's chunked driver
+    relies on (segment sub-plans never disagree with the cursor)."""
+    cursor = sc.stream_cursor(67, 4, 12, chunk_windows=2, max_buffer_windows=3)
+    for seg in cursor:
+        sub = sc.stream_plan(seg.frames, 4, 12, 2)
+        assert sub.n_blocks == seg.n_windows
+        assert sub.n_valid == seg.n_valid
