@@ -1,0 +1,438 @@
+"""Chaos/availability benchmark — the serving stack under an injected
+fault storm.
+
+The serving-resilience layer (PR 6) promises that under faults —
+transient dispatch exceptions, NaN-poisoned payloads, latency spikes,
+cache eviction races, corrupted resident gratings — **every submitted
+future resolves** with a result or a typed error (zero hangs), poisoned
+rows quarantine individually instead of taking the pooled batch down,
+and the degradation ladder trips pooled → sequential and recovers.
+This suite measures those claims end to end and asserts them (the
+``--smoke`` CI job is the availability gate's teeth):
+
+* ``chaos_storm`` — N requests through the
+  :class:`~repro.launch.serve.MicrobatchScheduler` while a
+  :class:`~repro.distributed.fault.ChaosInjector` storms every seam
+  (stochastic dispatch exceptions retried under the seeded backoff,
+  cache-fetch latency spikes, forced evictions mid-flight) and a churn
+  thread add/remove-races a spare tenant against in-flight dispatches.
+  Every 8th request carries a deterministic NaN-poisoned clip, so the
+  availability denominator is stable run to run:
+  ``availability_pct`` = healthy results delivered (the poisoned ones
+  resolve ``TenantQuarantined`` — typed, not hung),
+  ``resolution_pct`` = futures resolved either way (must be 100), plus
+  p99 latency under the storm and the retry/quarantine/deadline
+  counters.  A zero-deadline probe asserts the typed
+  ``DeadlineExceeded`` lifecycle.
+* ``chaos_breaker`` — 100 %-rate pooled-dispatch faults: the pooled
+  breaker must trip (requests keep completing on the sequential rung),
+  then — fault healed — recover through a half-open probe back to
+  pooled.  Trips/recoveries are asserted, not just reported.
+* ``chaos_degraded`` — windows/s of the degraded (sequential) rung vs
+  the healthy pooled path, interleaved on the same host:
+  ``degraded_vs_healthy`` is the gated machine-portable ratio (how much
+  capacity survives a pooled-path outage).
+* ``chaos_integrity`` — a resident grating is corrupted in place; with
+  ``verify_gratings`` the next fetch must detect the checksum mismatch
+  (``integrity_failures``) and self-heal by re-recording.
+
+Run standalone (writes ``BENCH_chaos.json``)::
+
+    PYTHONPATH=src python benchmarks/chaos.py [--smoke] [--json-dir .]
+
+or as a suite through ``benchmarks/run.py --only chaos``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+import threading
+import time
+from concurrent.futures import TimeoutError as FutureTimeoutError
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fidelity
+from repro.distributed.fault import ChaosInjector, ChaosRule
+from repro.launch.resilience import (
+    DeadlineExceeded,
+    DegradationLadder,
+    RetryPolicy,
+    ServingError,
+    TenantQuarantined,
+)
+from repro.launch.serve import (
+    MicrobatchScheduler,
+    VideoSearchConfig,
+    VideoSearchServer,
+)
+
+# dispatch-bound serving geometry (matches benchmarks/serving.py): the
+# storm exercises the scheduling/resilience layer, not FFT flops
+FRAME_HW = (12, 12)
+KERNEL = (2, 1, 3, 4, 3)  # (O, C, kh, kw, kt)
+WINDOW = 8
+STREAM_T = 48
+POISON_EVERY = 8  # deterministic NaN clips: stable availability%
+
+
+def _make_server(n_tenants: int, verify: bool = True) -> VideoSearchServer:
+    cfg = VideoSearchConfig(
+        window_frames=WINDOW,
+        chunk_windows=1,
+        cache_entries=2 * n_tenants + 2,
+        verify_gratings=verify,
+    )
+    server = VideoSearchServer(frame_hw=FRAME_HW, cfg=cfg)
+    for i in range(n_tenants):
+        k = np.random.RandomState(i).randn(*KERNEL).astype(np.float32)
+        server.add_tenant(f"t{i}", jnp.asarray(k), fidelity=fidelity.physical())
+    return server
+
+
+def _clip(seed: int, poison: bool = False) -> jnp.ndarray:
+    arr = (
+        np.random.RandomState(100 + seed)
+        .rand(1, KERNEL[1], *FRAME_HW, STREAM_T)
+        .astype(np.float32)
+    )
+    if poison:
+        arr[0, 0, 0, 0, :] = np.nan  # NaN-emitting stage / corrupt frame
+    return jnp.asarray(arr)
+
+
+def _warm(server: VideoSearchServer, n_tenants: int) -> None:
+    """Compile both ladder rungs + the readout before any timing/storm."""
+    reqs = [(f"t{i}", _clip(i)) for i in range(n_tenants)]
+    for pooled in (True, False):
+        server.search_batch(reqs, pooled=pooled)
+        server.search_batch(reqs, pooled=pooled)
+
+
+def _fmt(v: float) -> str:
+    return f"{v:.2f}" if abs(v) >= 0.01 or v == 0 else f"{v:.2e}"
+
+
+def _row(name: str, us: float, derived: dict) -> str:
+    kv = ";".join(f"{k}={_fmt(v)}" for k, v in derived.items())
+    return f"{name},{us:.0f},{kv}"
+
+
+# -- the fault storm --------------------------------------------------------
+
+
+def _storm(smoke: bool, log) -> str:
+    n_req = 24 if smoke else 64
+    n_tenants = 4
+    server = _make_server(n_tenants)
+    _warm(server, n_tenants)
+
+    def _evict_one():
+        # forced mid-flight eviction: the LRU entry vanishes under the
+        # executor; the next fetch transparently re-records
+        with server.cache._lock:
+            keys = list(server.cache._entries)
+        if keys:
+            server.cache.discard(keys[0])
+
+    chaos = ChaosInjector(
+        rules=[
+            ChaosRule("dispatch", "raise", rate=0.12),
+            ChaosRule("cache_fetch", "latency", rate=0.15, delay_s=0.002),
+            ChaosRule("cache_fetch", "call", rate=0.08, action=_evict_one),
+            ChaosRule("encode", "latency", rate=0.10, delay_s=0.001),
+        ],
+        seed=0,
+    )
+    server.chaos = chaos
+
+    stop = threading.Event()
+
+    def _churn():
+        # eviction race: a spare tenant (never queried) registering and
+        # deregistering against the in-flight dedup-group dispatches
+        k = np.random.RandomState(99).randn(*KERNEL).astype(np.float32)
+        while not stop.is_set():
+            server.add_tenant("churn", jnp.asarray(k), fidelity=fidelity.physical())
+            time.sleep(0.002)
+            try:
+                server.remove_tenant("churn")
+            except KeyError:
+                pass
+            time.sleep(0.002)
+
+    churner = threading.Thread(target=_churn, daemon=True)
+    ok = quarantined = typed_failed = unresolved = 0
+    with MicrobatchScheduler(
+        server,
+        max_queue=2 * n_req,
+        max_batch=4,
+        batch_wait_s=0.001,
+        default_deadline_s=120.0,
+        retry=RetryPolicy(max_retries=6, base_s=0.001, cap_s=0.01, seed=0),
+        ladder=DegradationLadder(failure_threshold=3, recovery_s=0.05),
+    ) as sched:
+        churner.start()
+        t0 = time.perf_counter()
+        futs = []
+        for i in range(n_req):
+            poison = (i % POISON_EVERY) == POISON_EVERY - 1
+            futs.append(
+                sched.submit(
+                    f"t{i % n_tenants}", _clip(i, poison=poison), block=True
+                )
+            )
+        for f in futs:
+            try:
+                f.result(timeout=180)
+                ok += 1
+            except TenantQuarantined:
+                quarantined += 1
+            except ServingError:
+                typed_failed += 1
+            except FutureTimeoutError:
+                unresolved += 1  # a hang — the thing that must not exist
+            except Exception:
+                typed_failed += 1  # untyped — counted against availability
+        elapsed = time.perf_counter() - t0
+        # deadline lifecycle probe: an already-expired deadline resolves
+        # with the typed error — it never hangs and never burns a dispatch
+        probe = sched.submit("t0", _clip(0), block=True, deadline_s=0.0)
+        try:
+            probe.result(timeout=60)
+            deadline_typed = False
+        except DeadlineExceeded:
+            deadline_typed = True
+        m = sched.metrics()
+    stop.set()
+    churner.join(timeout=10)
+    server.chaos = None
+
+    resolved = ok + quarantined + typed_failed
+    availability = 100.0 * ok / n_req
+    resolution = 100.0 * resolved / n_req
+    n_poison = sum(
+        1 for i in range(n_req) if (i % POISON_EVERY) == POISON_EVERY - 1
+    )
+    cache = server.metrics()["cache"]
+    log(
+        f"storm: {n_req} requests, {ok} ok / {quarantined} quarantined / "
+        f"{typed_failed} typed failures / {unresolved} unresolved — "
+        f"availability {availability:.1f}%, resolution {resolution:.1f}%, "
+        f"{m['retries']} retries, {chaos.stats()['total_injected']} faults "
+        f"injected, p99 {m['latency_p99_ms']:.1f}ms"
+    )
+    # the availability suite's contract — asserted, not just reported
+    assert unresolved == 0, f"{unresolved} futures never resolved (hang)"
+    assert resolution == 100.0, "every future must resolve"
+    assert quarantined == n_poison, (
+        f"expected {n_poison} quarantined poisoned rows, got {quarantined}"
+    )
+    assert deadline_typed, "expired deadline must raise DeadlineExceeded"
+    return _row(
+        "chaos_storm",
+        elapsed * 1e6,
+        {
+            "availability_pct": availability,
+            "resolution_pct": resolution,
+            "p99_ms": m["latency_p99_ms"],
+            "quarantined": float(quarantined),
+            "retries": float(m["retries"]),
+            "deadline_missed": float(m["deadline_missed"]),
+            "faults_injected": float(chaos.stats()["total_injected"]),
+            "integrity_failures": float(cache["integrity_failures"]),
+        },
+    )
+
+
+# -- breaker trip + recovery ------------------------------------------------
+
+
+def _breaker(log) -> str:
+    server = _make_server(2)
+    _warm(server, 2)
+    chaos = ChaosInjector(
+        [ChaosRule("dispatch", "raise", rate=1.0, mode="pooled")], seed=1
+    )
+    server.chaos = chaos
+    ladder = DegradationLadder(failure_threshold=2, recovery_s=0.15)
+    degraded_served = 0
+    recovered = False
+    with MicrobatchScheduler(
+        server,
+        max_batch=2,
+        batch_wait_s=0.0,
+        retry=RetryPolicy(max_retries=1, base_s=1e-4, cap_s=1e-3, seed=0),
+        ladder=ladder,
+    ) as sched:
+        # every pooled dispatch faults: the breaker must trip and the
+        # requests must still complete on the sequential rung
+        for i in range(50):
+            sched.submit("t0", _clip(7), block=True).result(timeout=120)
+            degraded_served += 1
+            if ladder.breakers["pooled"].state == "open":
+                break
+        trips = ladder.breakers["pooled"].snapshot()["trips"]
+        assert trips >= 1, "pooled breaker never tripped under 100% faults"
+        # heal the fault, wait out the recovery window: the next dispatch
+        # is the half-open probe and must close the breaker
+        chaos.rules.clear()
+        time.sleep(0.2)
+        for i in range(20):
+            sched.submit("t1", _clip(8), block=True).result(timeout=120)
+            if ladder.breakers["pooled"].state == "closed":
+                recovered = True
+                break
+            time.sleep(0.05)
+        snap = ladder.breakers["pooled"].snapshot()
+        final_mode = sched.metrics()["mode"]
+    server.chaos = None
+    log(
+        f"breaker: tripped after {degraded_served} degraded-served "
+        f"request(s) (trips={snap['trips']}), recovered={recovered} "
+        f"(recoveries={snap['recoveries']}), final mode {final_mode!r}"
+    )
+    assert recovered and snap["recoveries"] >= 1, "breaker never recovered"
+    assert final_mode == "pooled", f"final mode {final_mode!r} != 'pooled'"
+    return _row(
+        "chaos_breaker",
+        0,
+        {
+            "trips": float(snap["trips"]),
+            "recoveries": float(snap["recoveries"]),
+            "degraded_served": float(degraded_served),
+            "recovered": 1.0,
+        },
+    )
+
+
+# -- degraded-rung capacity -------------------------------------------------
+
+
+def _degraded(smoke: bool, log) -> str:
+    """Windows/s of the sequential (degraded) rung vs healthy pooled,
+    interleaved so host noise hits both equally — the machine-portable
+    'how much capacity survives a pooled outage' ratio."""
+    n_tenants = 4
+    server = _make_server(n_tenants, verify=False)  # the healthy hot path
+    _warm(server, n_tenants)
+    reqs = [(f"t{i}", _clip(20 + i)) for i in range(n_tenants)]
+    reps = 7 if smoke else 15
+    lats: dict[bool, list[float]] = {True: [], False: []}
+    outs = None
+    for _ in range(reps):
+        for pooled in (False, True):
+            t0 = time.perf_counter()
+            outs = server.search_batch(reqs, pooled=pooled)
+            lats[pooled].append(time.perf_counter() - t0)
+    windows = sum(o["windows"] for o in outs)
+    healthy = windows / statistics.median(lats[True])
+    degraded = windows / statistics.median(lats[False])
+    ratio = degraded / healthy
+    log(
+        f"degraded rung: {degraded:.0f} win/s sequential vs "
+        f"{healthy:.0f} win/s pooled ({ratio:.2f}x of healthy capacity)"
+    )
+    return _row(
+        "chaos_degraded",
+        0,
+        {
+            "healthy_winps": healthy,
+            "degraded_winps": degraded,
+            "degraded_vs_healthy": ratio,
+        },
+    )
+
+
+# -- cache integrity self-heal ----------------------------------------------
+
+
+def _integrity(log) -> str:
+    server = _make_server(1)  # verify_gratings=True
+    (out,) = server.search_batch([("t0", _clip(30))])
+    assert not isinstance(out, ServingError)
+    # corrupt the resident grating in place (bit rot / raced mutation)
+    with server.cache._lock:
+        grating = next(iter(server.cache._entries.values()))
+    if grating.effective is not None:
+        grating.effective = grating.effective * jnp.nan
+    else:
+        grating.eff_re = grating.eff_re * jnp.float32("nan")
+    (out2,) = server.search_batch([("t0", _clip(30))])
+    stats = server.cache.stats()
+    healed = not isinstance(out2, ServingError) and bool(
+        np.isfinite(out2["scores"]).all()
+    )
+    log(
+        f"integrity: {stats['integrity_failures']} checksum mismatch(es) "
+        f"detected, re-recorded and served finite scores: {healed}"
+    )
+    assert stats["integrity_failures"] >= 1, (
+        "corrupted grating not detected by the fetch checksum"
+    )
+    return _row(
+        "chaos_integrity",
+        0,
+        {
+            "integrity_failures": float(stats["integrity_failures"]),
+            "healed": 1.0 if healed else 0.0,
+        },
+    )
+
+
+def run(smoke: bool = False, log=print) -> list[str]:
+    rows = [
+        _storm(smoke, log),
+        _breaker(log),
+        _degraded(smoke, log),
+        _integrity(log),
+    ]
+    return rows
+
+
+def _parse_row(row: str) -> dict:
+    name, us, derived = row.split(",", 2)
+    try:
+        us_val: float | str = float(us)
+    except ValueError:
+        us_val = us
+    return {"name": name, "us_per_call": us_val, "derived": derived}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="reduced storm size (the CI chaos-smoke job)",
+    )
+    ap.add_argument(
+        "--json-dir", default=".", help="directory for BENCH_chaos.json"
+    )
+    args = ap.parse_args()
+    rows = run(smoke=args.smoke, log=print)
+    print("name,us_per_call,derived")
+    for row in rows:
+        print(row)
+    os.makedirs(args.json_dir, exist_ok=True)
+    path = os.path.join(args.json_dir, "BENCH_chaos.json")
+    with open(path, "w") as f:
+        json.dump(
+            {"suite": "chaos", "rows": [_parse_row(r) for r in rows]},
+            f,
+            indent=2,
+        )
+    print(f"# wrote {path}")
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.path.insert(
+        0, os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    )
+    main()

@@ -11,6 +11,9 @@
   serving     — pooled cross-tenant executor vs per-tenant-sequential
                 + microbatch-scheduler load sweep (also standalone:
                 benchmarks/serving.py --smoke)
+  chaos       — availability under an injected fault storm: typed-error
+                resolution, breaker trip/recover, degraded-rung capacity
+                (also standalone: benchmarks/chaos.py --smoke)
 
 ``--fast`` shrinks the accuracy benchmark geometry for CI-speed runs.
 ``--json`` additionally writes one ``BENCH_<suite>.json`` artifact per
@@ -52,6 +55,7 @@ def main() -> None:
     from benchmarks import (
         ablation,
         accuracy,
+        chaos,
         equivalence,
         kernels_bench,
         roofline_bench,
@@ -75,6 +79,7 @@ def main() -> None:
             log=_log,
         ),
         "serving": lambda: serving.run(smoke=args.fast, log=_log),
+        "chaos": lambda: chaos.run(smoke=args.fast, log=_log),
     }
     if args.only:
         keep = set(args.only.split(","))

@@ -15,6 +15,9 @@ trajectories the ROADMAP tracks:
     clip vs the undeduped pooled baseline) and the bounded-memory
     chunking row (constant peak buffer frames, overhead vs unbounded)
     (``BENCH_serving.json``)
+  * availability under the injected fault storm — healthy-request
+    fraction, future-resolution invariant, storm p99 and the
+    degraded-rung capacity ratio (``BENCH_chaos.json``)
 
 plus the derived speedup rows and, when present, the ablation
 decomposition (``BENCH_ablation.json``).
@@ -85,6 +88,20 @@ TRACKED = {
     "serving_chunked_overhead_x": (
         "serving", "serving_chunked_longT", "overhead_x",
     ),
+    # chaos suite: availability under the injected fault storm, the
+    # resolution invariant (every submitted future resolves), storm p99
+    # and how much capacity the sequential rung keeps when the pooled
+    # path is forced open
+    "chaos_availability_pct": (
+        "chaos", "chaos_storm", "availability_pct",
+    ),
+    "chaos_resolution_pct": (
+        "chaos", "chaos_storm", "resolution_pct",
+    ),
+    "chaos_storm_p99_us": ("chaos", "chaos_storm", "p99_ms"),
+    "chaos_degraded_vs_healthy_x": (
+        "chaos", "chaos_degraded", "degraded_vs_healthy",
+    ),
 }
 
 # latency pairs plotted together (left panel) and speedups (right panel)
@@ -100,6 +117,7 @@ SPEEDUPS = [
     "serving_pooled_vs_seq_x",
     "serving_bf16_capacity_x",
     "serving_shared_dedup_x",
+    "chaos_degraded_vs_healthy_x",
 ]
 
 

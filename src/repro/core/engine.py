@@ -1403,6 +1403,18 @@ class QueryEngine:
 # ---------------------------------------------------------------------------
 
 
+def _grating_checksum(grating: FusedGrating) -> float:
+    """Content checksum of a recorded grating: Σ|re| + Σ|im| over the
+    stored planes, accumulated in f32.  One device reduction + host
+    sync; NaN poisoning or bit rot moves (or NaNs) the sum, and the
+    NaN-safe comparison in ``GratingCache`` treats NaN as a mismatch."""
+    re, im = grating.planes
+    total = jnp.sum(jnp.abs(re.astype(jnp.float32))) + jnp.sum(
+        jnp.abs(im.astype(jnp.float32))
+    )
+    return float(total)
+
+
 class _InFlight:
     """Per-key record-in-progress marker: waiters block on ``event`` and
     pick up ``grating`` even when the result was not admitted to the
@@ -1444,14 +1456,27 @@ class GratingCache:
     are exposed via :meth:`stats` for the serving metrics.
     """
 
-    def __init__(self, max_entries: int = 8, max_bytes: int | None = None):
+    def __init__(
+        self,
+        max_entries: int = 8,
+        max_bytes: int | None = None,
+        verify: bool = False,
+    ):
         self.max_entries = max_entries
         self.max_bytes = max_bytes
+        # verify: checksum every hit against the sum recorded at
+        # insertion; a mismatch (bit rot / NaN corruption / raced
+        # mutation) discards the entry and the fetch falls through to a
+        # fresh record — a self-healing cache.  Off by default: each
+        # verified hit costs one device reduction + host sync.
+        self.verify = verify
         self.hits = 0
         self.misses = 0
         self.evictions = 0
         self.shared = 0  # waiter served an in-flight result never admitted
+        self.integrity_failures = 0  # checksum mismatches (verify=True)
         self._entries: OrderedDict[tuple, FusedGrating] = OrderedDict()
+        self._sums: dict[tuple, float] = {}  # insertion-time checksums
         self._nbytes = 0
         self._lock = threading.Lock()
         # per-key in-flight record markers: concurrent misses for one key
@@ -1520,14 +1545,35 @@ class GratingCache:
         while True:
             with self._lock:
                 hit = self._entries.get(key)
-                if hit is not None:
+                expect = self._sums.get(key)
+                if hit is not None and not self.verify:
                     self.hits += 1
                     self._entries.move_to_end(key)
                     return hit
-                pending = self._inflight.get(key)
-                if pending is None:
-                    self._inflight[key] = pending = _InFlight()
-                    break  # this thread records
+                pending = None
+                if hit is None:
+                    pending = self._inflight.get(key)
+                    if pending is None:
+                        self._inflight[key] = pending = _InFlight()
+                        break  # this thread records
+            if hit is not None:
+                # verify outside the lock: the checksum is a device
+                # reduction + host sync, far too slow to serialize peers
+                if self._checksum_ok(hit, expect):
+                    with self._lock:
+                        if self._entries.get(key) is hit:
+                            self.hits += 1
+                            self._entries.move_to_end(key)
+                    return hit
+                # corrupted in residence: drop the entry and loop back
+                # to a fresh record — a self-healing fetch
+                with self._lock:
+                    if self._entries.get(key) is hit:
+                        self._entries.pop(key)
+                        self._sums.pop(key, None)
+                        self._nbytes -= hit.nbytes
+                        self.integrity_failures += 1
+                continue
             # another thread is recording this key: wait, then either
             # take the cached entry (re-check above), share the
             # recorder's result even when it wasn't admitted (oversized /
@@ -1547,6 +1593,9 @@ class GratingCache:
                 return pending.grating
         try:
             grating = engine.record(kernels, signal_shape)
+            # checksum before taking the lock (device reduction); only
+            # needed when hits will verify against it
+            chk = _grating_checksum(grating) if self.verify else None
             pending.grating = grating  # share with waiters even if not admitted
             with self._lock:
                 self.misses += 1
@@ -1563,10 +1612,14 @@ class GratingCache:
                     return grating
                 if key in self._entries:  # raced with another recorder
                     self._nbytes -= self._entries.pop(key).nbytes
+                    self._sums.pop(key, None)
                 self._entries[key] = grating
+                if chk is not None:
+                    self._sums[key] = chk
                 self._nbytes += grating.nbytes
                 while self._entries and self._over_budget():
-                    _, evicted = self._entries.popitem(last=False)
+                    evicted_key, evicted = self._entries.popitem(last=False)
+                    self._sums.pop(evicted_key, None)
                     self._nbytes -= evicted.nbytes
                     self.evictions += 1
         finally:
@@ -1574,6 +1627,17 @@ class GratingCache:
                 self._inflight.pop(key, None)
             pending.event.set()
         return grating
+
+    @staticmethod
+    def _checksum_ok(grating: FusedGrating, expect: float | None) -> bool:
+        """NaN-safe checksum comparison: a NaN fresh sum (poisoned
+        planes) must read as a mismatch, so compare with ``<=`` rather
+        than ``!=``.  ``expect`` is None for entries inserted before
+        verification was enabled — nothing to compare against."""
+        if expect is None:
+            return True
+        fresh = _grating_checksum(grating)
+        return abs(fresh - expect) <= 1e-3 * max(abs(expect), 1.0)
 
     def discard(self, key: tuple | None) -> bool:
         """Explicitly invalidate one entry (tenant removal) — frees its
@@ -1584,6 +1648,7 @@ class GratingCache:
             grating = self._entries.pop(key, None)
             if grating is None:
                 return False
+            self._sums.pop(key, None)
             self._nbytes -= grating.nbytes
             return True
 
@@ -1609,6 +1674,8 @@ class GratingCache:
                 "bytes": self._nbytes,
                 "max_entries": self.max_entries,
                 "max_bytes": self.max_bytes,
+                "verify": self.verify,
+                "integrity_failures": self.integrity_failures,
             }
 
     def __len__(self) -> int:
@@ -1617,11 +1684,13 @@ class GratingCache:
     def clear(self) -> None:
         with self._lock:
             self._entries.clear()
+            self._sums.clear()
             self._nbytes = 0
             self.hits = 0
             self.misses = 0
             self.evictions = 0
             self.shared = 0
+            self.integrity_failures = 0
 
 
 _DEFAULT_CACHE = GratingCache()

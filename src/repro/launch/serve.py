@@ -74,6 +74,56 @@ Two serving modes, matching the paper's system and the LM zoo:
    clip-dedup row savings, and measured windows/s + frames/s against
    the paper's projected loader rates (`core.throughput`).
 
+   **Failure semantics** (PR 6, the serving-resilience layer — see
+   :mod:`repro.launch.resilience` for the primitives):
+
+   * *Error taxonomy* — every failure a future can resolve with is a
+     typed :class:`~repro.launch.resilience.ServingError` carrying the
+     ``tenant`` and ``batch_id`` it happened in:
+     ``RequestRejected`` (admission control shed the request),
+     ``DeadlineExceeded`` (deadline passed before a result was ready),
+     ``TenantQuarantined`` (signal-integrity guard isolated this
+     tenant's rows from a pooled batch), ``BatchExecutionError``
+     (dispatch failed after retries; root cause in ``__cause__``), and
+     ``SchedulerClosed`` (shutdown resolved a queued request).
+     Caller errors (``ValueError`` / ``KeyError`` / ``TypeError`` from
+     request validation) pass through unwrapped — they would fail
+     identically on every retry and every ladder rung.
+   * *Request lifecycle* — ``submit(..., deadline_s=...)`` attaches a
+     deadline (default ``MicrobatchScheduler(default_deadline_s=...)``,
+     None = no deadline); it is enforced at dispatch (expired requests
+     are pruned before burning device time), across the retry loop, and
+     — the backstop — by a **watchdog thread** that resolves any
+     still-pending future at its deadline.  Every submitted future
+     resolves with a result or a typed error: no hangs, ever.
+     Transient failures (``exc.transient`` truthy, e.g. an injected
+     chaos fault) are retried under a seeded decorrelated-jitter
+     backoff (``RetryPolicy``, deterministic schedule per dispatch).
+   * *Degradation ladder* — dispatch modes ``pooled → sequential →
+     single``, the first two behind per-mode circuit breakers
+     (``failure_threshold`` consecutive failures trip open →
+     ``recovery_s`` later a half-open probe → success closes).  While
+     the pooled path's breaker is open the scheduler serves every batch
+     in the degraded mode — requests keep completing, slower — and
+     recovers to pooled automatically.  ``metrics()`` reports the
+     current ``mode``, per-breaker state + trip/recovery counters
+     (``ladder``), ``deadline_missed``, ``retries``, ``quarantined``,
+     and ``watchdog_expired``.
+   * *Signal integrity* — the server finite-checks every request's
+     correlation scores before delivery (``guard_scores``): a NaN/Inf
+     row quarantines *that tenant's request* (``TenantQuarantined``)
+     while the rest of the pooled batch delivers bitwise-identical to a
+     fault-free run.  ``verify_gratings`` adds a content checksum to
+     every cache fetch: a corrupted resident grating is discarded and
+     transparently re-recorded (off by default — it costs a device
+     reduction per fetch — and enabled by the chaos suite).
+   * *Chaos* — ``server.chaos`` accepts a
+     :class:`~repro.distributed.fault.ChaosInjector`; the hot path
+     fires its seams (``cache_fetch``, ``encode``, ``dispatch``,
+     ``readout``) so `benchmarks/chaos.py` can storm the stack with
+     exceptions, NaN payloads, latency spikes, and eviction races.
+     With no injector attached each seam is one attribute check.
+
 2. **LM serving** (`LMServer`) — prefill + decode with the uniform cache
    API; used by the serve smoke tests and the decode dry-run shapes.
 """
@@ -100,6 +150,21 @@ from repro.core import hybrid, throughput
 from repro.core.engine import GratingCache, clip_key, clip_keys_for
 from repro.core.fidelity import FidelityPipeline
 from repro.core.sthc import STHC, STHCConfig
+from repro.launch.resilience import (
+    BatchExecutionError,
+    DeadlineExceeded,
+    DegradationLadder,
+    RequestRejected,
+    RetryPolicy,
+    SchedulerClosed,
+    ServingError,
+    TenantQuarantined,
+    Watchdog,
+    is_transient,
+    is_validation_error,
+    resolve_exception,
+    resolve_result,
+)
 from repro.models import model_api
 
 PyTree = Any
@@ -154,6 +219,16 @@ class VideoSearchConfig:
         and query through these SLM / atomic-medium configurations
         unless they register with their own (``add_tenant(..., slm=...,
         atoms=...)``).  None = the library defaults.
+      guard_scores: finite-check every request's correlation scores
+        before delivery; a NaN/Inf row resolves that request with
+        ``TenantQuarantined`` instead of poisoning the pooled batch.
+        The check runs on the already-host-materialized peak arrays —
+        no extra device work.
+      verify_gratings: checksum-verify every grating fetched from the
+        shared cache against the sum recorded at insertion; a mismatch
+        (bit rot, NaN corruption, eviction race) discards the entry and
+        transparently re-records.  Off by default: it costs one device
+        reduction + host sync per fetch (the chaos suite turns it on).
     """
 
     window_frames: int = 64
@@ -169,6 +244,8 @@ class VideoSearchConfig:
     grating_dtype: str = "float32"
     slm: optics.SLMConfig | None = None
     atoms: atomic.AtomicConfig | None = None
+    guard_scores: bool = True
+    verify_gratings: bool = False
 
 
 @dataclasses.dataclass
@@ -226,8 +303,14 @@ class VideoSearchServer:
         self.cfg = cfg = cfg if cfg is not None else VideoSearchConfig()
         self.frame_hw = tuple(frame_hw)
         self.cache = GratingCache(
-            max_entries=cfg.cache_entries, max_bytes=cfg.cache_bytes
+            max_entries=cfg.cache_entries,
+            max_bytes=cfg.cache_bytes,
+            verify=getattr(cfg, "verify_gratings", False),
         )
+        # optional ChaosInjector (distributed.fault); when attached the
+        # hot path fires its seams — when None each seam is one attr check
+        self.chaos = None
+        self._quarantined = 0
         # one mode-agnostic engine per distinct (fidelity fingerprint,
         # device fingerprint) pair, all sharing the one grating cache
         # (mixed-fidelity + per-tenant-device serving)
@@ -476,6 +559,8 @@ class VideoSearchServer:
         while we recorded, drop the now-unreferenced entry — a raced
         fetch must not leave an orphan grating charged against the
         shared LRU budget."""
+        if self.chaos is not None:
+            self.chaos.on("cache_fetch")
         grating = self.cache.get_or_record(
             ten.sthc.engine,  # the tenant's own-fidelity engine
             ten.kernels,
@@ -503,8 +588,13 @@ class VideoSearchServer:
 
         Detection = per-kernel max correlation over space-time + argmax
         frame (the photon-echo peak position in the window).
+
+        Raises :class:`TenantQuarantined` if the signal-integrity guard
+        rejected this request's scores (see ``search_batch``).
         """
         (out,) = self.search_batch([(tenant, clip)])
+        if isinstance(out, ServingError):
+            raise out
         return out
 
     def search_batch(
@@ -533,6 +623,15 @@ class VideoSearchServer:
         per-tenant-sequential dispatch loop (one streaming correlation
         per tenant-group; the benchmark baseline).  Results come back
         in request order.
+
+        With ``cfg.guard_scores`` (default on) each request's scores
+        are finite-checked before delivery: a NaN/Inf row yields a
+        :class:`TenantQuarantined` *instance* in that request's result
+        slot (row-level isolation — the other requests in the pooled
+        batch deliver bitwise-identical to a fault-free run).  Callers
+        going through :meth:`search` or the scheduler see it raised /
+        set on the future; direct callers must check
+        ``isinstance(out, ServingError)``.
         """
         if pooled is None:
             pooled = getattr(self.cfg, "pooled_queries", True)
@@ -584,6 +683,8 @@ class VideoSearchServer:
             else jnp.concatenate([requests[i][1] for i in idxs], axis=0)
             for _, idxs in order
         ]
+        if self.chaos is not None:  # chaos seam: batch encode/stacking
+            self.chaos.on("encode", mode="pooled" if pooled else "sequential")
 
         if pooled:
             # pooled cross-tenant dispatch: fetch all gratings, then one
@@ -613,6 +714,8 @@ class VideoSearchServer:
                         group_keys.append(ks[0])
                     else:
                         group_keys.append(("stack",) + tuple(ks))
+            if self.chaos is not None:  # chaos seam: pooled dispatch
+                self.chaos.on("dispatch", mode="pooled")
             fmaps = self.sthc.engine.query_stream_many(
                 list(zip(gratings, stacks)),
                 clip_keys=group_keys,
@@ -646,6 +749,8 @@ class VideoSearchServer:
             for (key, idxs), ten, clips in zip(order, tens, stacks):
                 t0 = time.time()
                 grating = self._fetch_grating(key[0], ten)
+                if self.chaos is not None:  # chaos seam: sequential path
+                    self.chaos.on("dispatch", mode="sequential")
                 fmap = ten.sthc.engine.query_stream(grating, clips)
                 fmap = jax.block_until_ready(fmap)  # honest serving latency
                 dt = time.time() - t0
@@ -679,6 +784,7 @@ class VideoSearchServer:
                 tgt.windows += plans[g_i].n_blocks * n_streams
                 tgt.frames += int(clips.shape[-1]) * n_streams
                 tgt.seconds += busy[g_i]
+        guard = getattr(self.cfg, "guard_scores", True)
         for g_i, ((key, idxs), clips) in enumerate(zip(order, stacks)):
             tenant = key[0]
             plan, fmap = plans[g_i], fmaps[g_i]
@@ -689,17 +795,36 @@ class VideoSearchServer:
                 flat = fmap.reshape(fmap.shape[0], fmap.shape[1], -1)
                 peak = np.asarray(jnp.max(flat, axis=-1))
                 idx = np.asarray(jnp.argmax(flat, axis=-1))
+            if self.chaos is not None:  # chaos seam: detection readout
+                peak = self.chaos.on(
+                    "readout",
+                    mode="pooled" if readouts is not None else "sequential",
+                    payload=peak,
+                )
             t_idx = idx % fmap.shape[-1]
             b = 0
             for i in idxs:
                 nb = requests[i][1].shape[0]
-                results[i] = {
-                    "tenant": tenant,
-                    "scores": peak[b : b + nb],
-                    "peak_frame": t_idx[b : b + nb],
-                    "latency_s": lat[g_i],
-                    "windows": plan.n_blocks,
-                }
+                scores = peak[b : b + nb]
+                # signal-integrity guard on the already-host-resident
+                # peaks: one NaN/Inf row quarantines one request, the
+                # rest of the pooled batch delivers untouched
+                if guard and not np.isfinite(scores).all():
+                    with self._lock:
+                        self._quarantined += 1
+                    results[i] = TenantQuarantined(  # type: ignore[call-overload]
+                        f"non-finite correlation scores for tenant "
+                        f"{tenant!r}; request quarantined",
+                        tenant=tenant,
+                    )
+                else:
+                    results[i] = {
+                        "tenant": tenant,
+                        "scores": scores,
+                        "peak_frame": t_idx[b : b + nb],
+                        "latency_s": lat[g_i],
+                        "windows": plan.n_blocks,
+                    }
                 b += nb
         return results  # type: ignore[return-value]
 
@@ -742,11 +867,15 @@ class VideoSearchServer:
         with self._lock:
             pooled = self._pooled_dispatches
             sequential = self._sequential_dispatches
+        with self._lock:
+            quarantined = self._quarantined
         return {
             "cache": self.cache.stats(),
             "tenants": per_tenant,
             "pooled_dispatches": pooled,
             "sequential_dispatches": sequential,
+            # requests the signal-integrity guard isolated (NaN/Inf rows)
+            "quarantined": quarantined,
             # shared-stream fan-out: clip rows the pooled executor
             # collapsed onto shared physical rows (one FFT per stream,
             # not per request)
@@ -769,12 +898,13 @@ class VideoSearchServer:
 # ---------------------------------------------------------------------------
 
 
-class RequestRejected(RuntimeError):
-    """Admission control shed this request (the bounded queue is full)."""
+# RequestRejected (and the rest of the typed ServingError taxonomy) now
+# lives in repro.launch.resilience; re-imported above so existing
+# ``from repro.launch.serve import RequestRejected`` callers keep working.
 
 
-@dataclasses.dataclass
-class _Pending:
+@dataclasses.dataclass(eq=False)  # identity semantics: the clip field
+class _Pending:  # would make field-wise == ambiguous (array truthiness)
     tenant: str
     clip: jax.Array
     future: Future
@@ -783,6 +913,8 @@ class _Pending:
     # thread (off the batcher's critical path) — the identity the
     # shared-stream dedup groups ride on
     clip_id: tuple | None = None
+    # absolute wall-clock deadline (time.time() frame); None = none
+    deadline: float | None = None
 
 
 class MicrobatchScheduler:
@@ -812,6 +944,19 @@ class MicrobatchScheduler:
       result) is recorded in a sliding window; :meth:`metrics` reports
       p50/p90/p99 alongside queue depth, shed/submit/complete counters
       and the mean formed batch size.
+    * **Resilience** (see the module docstring's *Failure semantics*) —
+      deadlines (``default_deadline_s`` / per-request ``deadline_s``)
+      enforced at dispatch, across retries, and by a watchdog thread
+      that resolves any overdue future with ``DeadlineExceeded``;
+      transient dispatch failures retried under a seeded decorrelated-
+      jitter ``RetryPolicy``; repeated failures trip the
+      ``DegradationLadder``'s per-mode circuit breakers, degrading
+      pooled → sequential → single-request dispatch and recovering via
+      half-open probes.  (The ``pooled`` rung honors the server's
+      ``cfg.pooled_queries`` — it is "the server's preferred path", not
+      an override.)  Every future resolves with a result or a typed
+      ``ServingError``; queued futures are resolved with
+      ``SchedulerClosed`` on shutdown.
 
     Use as a context manager or call :meth:`close` — pending futures are
     failed (never left hanging) on shutdown.
@@ -824,12 +969,19 @@ class MicrobatchScheduler:
         max_batch: int = 8,
         batch_wait_s: float = 0.002,
         latency_window: int = 1024,
+        default_deadline_s: float | None = None,
+        retry: RetryPolicy | None = None,
+        ladder: DegradationLadder | None = None,
+        watchdog_interval_s: float = 0.02,
     ):
         if max_queue < 1 or max_batch < 1:
             raise ValueError("max_queue and max_batch must be >= 1")
         self.server = server
         self.max_batch = int(max_batch)
         self.batch_wait_s = float(batch_wait_s)
+        self.default_deadline_s = default_deadline_s
+        self.retry = retry if retry is not None else RetryPolicy()
+        self.ladder = ladder if ladder is not None else DegradationLadder()
         self._q: queue_mod.Queue[_Pending] = queue_mod.Queue(maxsize=max_queue)
         self._stash: collections.deque[_Pending] = collections.deque()
         self._lock = threading.Lock()
@@ -847,6 +999,10 @@ class MicrobatchScheduler:
         # requests that joined an existing shared-stream dedup group
         # (same-clip rows beyond the first in a formed batch)
         self.dedup_grouped = 0
+        self.deadline_missed = 0
+        self.retries = 0
+        self.quarantined = 0
+        self._batch_seq = 0  # batcher-thread only
         # serializes intake against close(): submit must never land a
         # request after close() drained the queue (its future would hang
         # forever).  Deliberately NOT self._lock — the batcher takes
@@ -858,11 +1014,22 @@ class MicrobatchScheduler:
             target=self._run, name="sthc-microbatcher", daemon=True
         )
         self._thread.start()
+        # the no-hangs backstop: resolves overdue futures with
+        # DeadlineExceeded and fails everything if the batcher dies
+        self._watchdog = Watchdog(
+            interval_s=watchdog_interval_s,
+            on_expire=self._on_deadline_expired,
+            on_tick=self._check_liveness,
+        )
 
     # -- intake ------------------------------------------------------------
 
     def submit(
-        self, tenant: str, clip: jax.Array, block: bool = False
+        self,
+        tenant: str,
+        clip: jax.Array,
+        block: bool = False,
+        deadline_s: float | None = None,
     ) -> Future:
         """Enqueue one search; returns a future resolving to the same
         result dict ``search_batch`` produces (plus ``queue_latency_s``,
@@ -871,13 +1038,22 @@ class MicrobatchScheduler:
         batcher can form shared-stream dedup groups without re-reading
         clip bytes — skipped entirely when the server's dedup is off
         (the fingerprint would be discarded; no point paying a full
-        host copy + SHA-1 per request for it)."""
+        host copy + SHA-1 per request for it).
+
+        ``deadline_s`` (default ``self.default_deadline_s``; None = no
+        deadline) bounds submit → result: past it the future resolves
+        with :class:`DeadlineExceeded` — enforced at dispatch, across
+        retries, and by the watchdog thread as the backstop."""
         cfg = self.server.cfg
         wants_dedup = getattr(cfg, "dedup_clips", True) and getattr(
             cfg, "pooled_queries", True
         )  # the sequential executor never reads clip keys either
         cid = clip_key(clip) if wants_dedup else None
-        item = _Pending(tenant, clip, Future(), time.time(), cid)
+        now = time.time()
+        if deadline_s is None:
+            deadline_s = self.default_deadline_s
+        deadline = now + deadline_s if deadline_s is not None else None
+        item = _Pending(tenant, clip, Future(), now, cid, deadline)
         # every put happens under the intake lock (so close() can never
         # miss a request and leave its future hanging), but the lock is
         # never *held across a blocking wait*: a backpressured
@@ -886,7 +1062,7 @@ class MicrobatchScheduler:
         while True:
             with self._intake_lock:
                 if self._closed.is_set():
-                    raise RuntimeError("scheduler is closed")
+                    raise SchedulerClosed("scheduler is closed")
                 try:
                     self._q.put_nowait(item)
                     break
@@ -896,11 +1072,13 @@ class MicrobatchScheduler:
                             self.rejected += 1
                         raise RequestRejected(
                             f"request queue full ({self._q.maxsize} deep); "
-                            f"request for tenant {tenant!r} shed"
+                            f"request for tenant {tenant!r} shed",
+                            tenant=tenant,
                         ) from None
             time.sleep(0.001)  # backpressure: wait for a slot
         with self._lock:
             self.submitted += 1
+        self._watchdog.track(item.future, deadline, tenant)
         return item.future
 
     def search(self, tenant: str, clip: jax.Array, block: bool = True) -> dict:
@@ -1000,6 +1178,28 @@ class MicrobatchScheduler:
                 self.dedup_grouped += shared
         return [p for k in order for p in groups[k]] + singles
 
+    @staticmethod
+    def _claim(future: Future) -> bool:
+        """``set_running_or_notify_cancel`` tolerant of the watchdog
+        having already resolved the future (raises from FINISHED)."""
+        try:
+            return future.set_running_or_notify_cancel()
+        except Exception:  # noqa: BLE001 — InvalidStateError
+            return False
+
+    def _expire(self, p: _Pending, batch_id: int | None) -> None:
+        if resolve_exception(
+            p.future,
+            DeadlineExceeded(
+                f"deadline passed before dispatch for tenant {p.tenant!r}",
+                tenant=p.tenant,
+                batch_id=batch_id,
+            ),
+        ):
+            with self._lock:
+                self.deadline_missed += 1
+                self.failed += 1
+
     def _dispatch(self, batch: list[_Pending]) -> None:
         # claim each future before any work: a caller may have
         # cancel()led a pending one, and set_result on a cancelled
@@ -1007,55 +1207,149 @@ class MicrobatchScheduler:
         # late cancels during the server call.  _execute below assumes
         # every future it sees is already claimed (the singles retry
         # path must not re-claim).
-        batch = [
-            p for p in batch if p.future.set_running_or_notify_cancel()
-        ]
+        self._batch_seq += 1
+        batch_id = self._batch_seq
+        batch = [p for p in batch if self._claim(p.future)]
         if batch:
-            self._execute(batch)
+            self._execute(batch, batch_id)
 
-    def _execute(self, batch: list[_Pending]) -> None:
-        try:
-            outs = self.server.search_batch(
-                [(p.tenant, p.clip) for p in batch],
-                # fingerprints were hashed at submit: the executor's
-                # dedup must not re-read the clip bytes per batch
-                clip_keys=[p.clip_id for p in batch],
+    def _run_mode(self, mode: str, batch: list[_Pending]) -> list:
+        """One dispatch in the given ladder mode.  ``pooled`` defers to
+        the server's configured preference (``cfg.pooled_queries``);
+        ``sequential`` forces the per-tenant dispatch loop; ``single``
+        additionally drops microbatching — one server call per request,
+        the floor the ladder can always serve from."""
+        keys = [p.clip_id for p in batch]
+        reqs = [(p.tenant, p.clip) for p in batch]
+        if mode == "pooled":
+            # fingerprints were hashed at submit: the executor's dedup
+            # must not re-read the clip bytes per batch
+            return self.server.search_batch(reqs, clip_keys=keys)
+        if mode == "sequential":
+            return self.server.search_batch(reqs, pooled=False, clip_keys=keys)
+        outs = []
+        for req, key in zip(reqs, keys):
+            outs.extend(
+                self.server.search_batch([req], pooled=False, clip_keys=[key])
             )
-        except Exception as exc:  # noqa: BLE001 — routed into the future
-            if len(batch) == 1:
-                batch[0].future.set_exception(exc)
-                with self._lock:
-                    self.failed += 1
-                return
-            # one bad request fails the batched call upfront (the server
-            # validates before any device work): retry singly so the
-            # good requests in the batch still complete
+        return outs
+
+    def _execute(self, batch: list[_Pending], batch_id: int) -> None:
+        """Serve one claimed microbatch to completion: ladder-mode
+        selection, transient-failure retries under the seeded backoff,
+        deadline pruning between attempts, and typed-error resolution.
+        Every future in ``batch`` is resolved by the time this returns
+        (or already was, by the watchdog/close)."""
+        delays = self.retry.delays()
+        while True:
+            now = time.time()
+            live: list[_Pending] = []
             for p in batch:
-                self._execute([p])
+                if p.future.done():  # watchdog/cancel won the race
+                    continue
+                if p.deadline is not None and now >= p.deadline:
+                    self._expire(p, batch_id)
+                    continue
+                live.append(p)
+            if not live:
+                return
+            batch = live
+            mode = self.ladder.select()
+            try:
+                outs = self._run_mode(mode, batch)
+            except Exception as exc:  # noqa: BLE001 — routed into futures
+                # validation errors neither trip breakers nor retry: a
+                # malformed request fails every rung identically
+                if not is_validation_error(exc):
+                    self.ladder.report(mode, ok=False)
+                    if self.ladder.peek() != mode:
+                        # the ladder degraded under us: re-dispatch on the
+                        # lower rung — degradation is not a retry and must
+                        # not consume the backoff budget
+                        continue
+                    if is_transient(exc):
+                        delay = next(delays, None)
+                        if delay is not None:
+                            with self._lock:
+                                self.retries += 1
+                            time.sleep(delay)
+                            continue
+                if len(batch) > 1:
+                    # one bad request fails the batched call upfront (the
+                    # server validates before any device work): retry
+                    # singly so the good requests still complete
+                    for p in batch:
+                        self._execute([p], batch_id)
+                    return
+                p = batch[0]
+                if isinstance(exc, ServingError) or is_validation_error(exc):
+                    err: BaseException = exc  # typed/caller error: as-is
+                else:
+                    err = BatchExecutionError(
+                        f"batch {batch_id} failed in {mode!r} mode after "
+                        f"retries: {exc}",
+                        tenant=p.tenant,
+                        batch_id=batch_id,
+                    )
+                    err.__cause__ = exc
+                if resolve_exception(p.future, err):
+                    with self._lock:
+                        self.failed += 1
+                return
+            self.ladder.report(mode, ok=True)
+            self._deliver(batch, outs, batch_id)
             return
+
+    def _deliver(
+        self, batch: list[_Pending], outs: list, batch_id: int
+    ) -> None:
         now = time.time()
         with self._lock:
             self.batches += 1
             self._batch_sizes.append(len(batch))
-            self.completed += len(batch)
-            for p in batch:
-                self._latencies.append(now - p.t_submit)
         for p, out in zip(batch, outs):
+            if isinstance(out, ServingError):
+                # signal-integrity quarantine: the server isolated this
+                # row; the rest of the batch delivered untouched
+                out.tenant = out.tenant or p.tenant
+                out.batch_id = batch_id
+                if resolve_exception(p.future, out):
+                    with self._lock:
+                        self.quarantined += 1
+                        self.failed += 1
+                continue
             out["queue_latency_s"] = now - p.t_submit
-            p.future.set_result(out)
+            if resolve_result(p.future, out):
+                with self._lock:
+                    self.completed += 1
+                    self._latencies.append(now - p.t_submit)
 
     # -- lifecycle / observability ----------------------------------------
 
-    def close(self) -> None:
-        """Stop the batcher; fail anything still queued."""
+    def _on_deadline_expired(self, tenant: str | None) -> None:
+        # watchdog resolved an overdue future with DeadlineExceeded
+        with self._lock:
+            self.deadline_missed += 1
+            self.failed += 1
+
+    def _check_liveness(self) -> None:
+        # watchdog tick: a dead batcher thread would hang every queued
+        # future — close intake and resolve the backlog instead.  The
+        # batcher loop swallows everything, so this is a pure backstop.
+        if self._closed.is_set() or self._thread.is_alive():
+            return
         with self._intake_lock:
-            # under the intake lock: a submit() that already passed the
-            # closed check finishes its put before we proceed, so no
-            # request can land after the drain below and hang forever
             if self._closed.is_set():
                 return
             self._closed.set()
-        self._thread.join()
+        self._drain_and_fail(
+            lambda p: BatchExecutionError(
+                "scheduler batcher thread died", tenant=p.tenant
+            )
+        )
+
+    def _drain_and_fail(self, make_exc) -> None:
+        """Resolve everything still queued/stashed with ``make_exc(p)``."""
         leftovers = list(self._stash)
         self._stash.clear()
         while True:
@@ -1064,10 +1358,26 @@ class MicrobatchScheduler:
             except queue_mod.Empty:
                 break
         for p in leftovers:
-            if p.future.set_running_or_notify_cancel():
-                p.future.set_exception(RuntimeError("scheduler closed"))
+            if resolve_exception(p.future, make_exc(p)):
                 with self._lock:
                     self.failed += 1
+
+    def close(self) -> None:
+        """Stop the batcher; resolve anything still queued with
+        :class:`SchedulerClosed` (futures are never abandoned)."""
+        with self._intake_lock:
+            # under the intake lock: a submit() that already passed the
+            # closed check finishes its put before we proceed, so no
+            # request can land after the drain below and hang forever
+            if self._closed.is_set():
+                self._watchdog.close()
+                return
+            self._closed.set()
+        self._thread.join()
+        self._drain_and_fail(
+            lambda p: SchedulerClosed("scheduler closed", tenant=p.tenant)
+        )
+        self._watchdog.close()
 
     def __enter__(self) -> "MicrobatchScheduler":
         return self
@@ -1076,7 +1386,9 @@ class MicrobatchScheduler:
         self.close()
 
     def metrics(self) -> dict:
-        """Scheduler counters + end-to-end latency percentiles."""
+        """Scheduler counters + end-to-end latency percentiles +
+        resilience state (ladder mode, breaker snapshots, deadline/
+        retry/quarantine counters)."""
         with self._lock:
             lats = sorted(self._latencies)
             sizes = list(self._batch_sizes)
@@ -1092,6 +1404,13 @@ class MicrobatchScheduler:
                 "mean_batch_size": (
                     sum(sizes) / len(sizes) if sizes else 0.0
                 ),
+                "mode": self.ladder.peek(),
+                "ladder": self.ladder.metrics(),
+                "deadline_missed": self.deadline_missed,
+                "retries": self.retries,
+                "quarantined": self.quarantined,
+                "watchdog_expired": self._watchdog.expired,
+                "default_deadline_s": self.default_deadline_s,
             }
         for name, q in (("p50", 0.50), ("p90", 0.90), ("p99", 0.99)):
             out[f"latency_{name}_ms"] = (

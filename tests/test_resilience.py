@@ -1,0 +1,525 @@
+"""Fault-tolerant serving runtime: typed error taxonomy, deterministic
+retry backoff, circuit-breaker degradation ladder, deadline watchdog,
+signal-integrity quarantine, grating-cache checksum self-heal, and the
+seeded chaos injector (tests/test_serve.py covers the healthy paths)."""
+
+import threading
+import time
+from concurrent.futures import Future
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fidelity as fid
+from repro.core.engine import GratingCache
+from repro.core.sthc import STHC, STHCConfig
+from repro.distributed.fault import ChaosInjector, ChaosRule, InjectedFault
+from repro.launch.resilience import (
+    BatchExecutionError,
+    CircuitBreaker,
+    DeadlineExceeded,
+    DegradationLadder,
+    RequestRejected,
+    RetryPolicy,
+    SchedulerClosed,
+    ServingError,
+    TenantQuarantined,
+    Watchdog,
+    is_transient,
+    is_validation_error,
+)
+from repro.launch.serve import (
+    MicrobatchScheduler,
+    VideoSearchConfig,
+    VideoSearchServer,
+)
+
+
+def _kernels(seed, O=2, kt=3):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(rng.randn(O, 1, 3, 4, kt).astype(np.float32))
+
+
+def _clip(seed, B=1, T=20, H=12, W=12):
+    rng = np.random.RandomState(100 + seed)
+    return jnp.asarray(rng.rand(B, 1, H, W, T).astype(np.float32))
+
+
+def _server(n_tenants=2, **cfg_kw):
+    cfg = VideoSearchConfig(window_frames=8, **cfg_kw)
+    server = VideoSearchServer(frame_hw=(12, 12), cfg=cfg)
+    for i in range(n_tenants):
+        server.add_tenant(f"t{i}", _kernels(i))
+    return server
+
+
+class _FakeClock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+
+# -- primitives: backoff, breaker, ladder, watchdog ------------------------
+
+
+def test_retry_delays_deterministic_and_capped():
+    """The decorrelated-jitter schedule is a pure function of the seed:
+    identical on every delays() call, bounded by [0, cap], one delay per
+    allowed retry."""
+    pol = RetryPolicy(max_retries=5, base_s=0.001, cap_s=0.01, seed=7)
+    a, b = list(pol.delays()), list(pol.delays())
+    assert a == b and len(a) == 5
+    assert all(0.0 < d <= pol.cap_s for d in a)
+    # a different seed yields a different schedule (decorrelated jitter
+    # is stochastic across seeds, deterministic within one)
+    assert a != list(RetryPolicy(max_retries=5, cap_s=0.01, seed=8).delays())
+
+
+def test_circuit_breaker_trip_halfopen_recover():
+    clock = _FakeClock()
+    brk = CircuitBreaker(failure_threshold=3, recovery_s=1.0, clock=clock)
+    assert brk.state == "closed" and brk.allow()
+    brk.record_failure()
+    brk.record_failure()
+    assert brk.state == "closed"  # below threshold
+    brk.record_failure()
+    assert brk.state == "open" and brk.trips == 1
+    assert not brk.allow()  # inside the recovery window
+    clock.t += 1.5
+    assert brk.allow()  # past the window: admit the half-open probe
+    assert brk.state == "half_open"
+    brk.record_success()
+    assert brk.state == "closed" and brk.recoveries == 1
+    # a non-consecutive failure pattern never trips: success resets
+    brk.record_failure()
+    brk.record_success()
+    brk.record_failure()
+    brk.record_failure()
+    assert brk.state == "closed" and brk.trips == 1
+
+
+def test_circuit_breaker_halfopen_failure_reopens():
+    clock = _FakeClock()
+    brk = CircuitBreaker(failure_threshold=1, recovery_s=1.0, clock=clock)
+    brk.record_failure()
+    assert brk.state == "open"
+    clock.t += 1.0
+    assert brk.allow() and brk.state == "half_open"
+    brk.record_failure()  # the probe failed: straight back to open
+    assert brk.state == "open" and brk.trips == 2
+    snap = brk.snapshot()
+    assert snap["failures"] == 2 and snap["recoveries"] == 0
+
+
+def test_ladder_degrades_and_recovers():
+    clock = _FakeClock()
+    ladder = DegradationLadder(failure_threshold=2, recovery_s=1.0, clock=clock)
+    assert ladder.select() == "pooled"
+    ladder.report("pooled", ok=False)
+    ladder.report("pooled", ok=False)
+    assert ladder.peek() == "sequential"  # pooled breaker open
+    assert ladder.select() == "sequential"
+    # sequential fails too -> bottom rung (breaker-less: always serves)
+    ladder.report("sequential", ok=False)
+    ladder.report("sequential", ok=False)
+    assert ladder.select() == "single"
+    ladder.report("single", ok=False)  # no breaker to trip
+    assert ladder.select() == "single"
+    # recovery: the pooled probe is admitted first and heals the ladder
+    clock.t += 1.5
+    assert ladder.select() == "pooled"
+    ladder.report("pooled", ok=True)
+    assert ladder.peek() == "pooled"
+    m = ladder.metrics()
+    assert m["mode"] == "pooled"
+    assert m["breakers"]["pooled"]["recoveries"] == 1
+    assert m["breakers"]["pooled"]["trips"] == 1
+
+
+def test_error_taxonomy_fields_and_classification():
+    err = TenantQuarantined("bad rows", tenant="a", batch_id=3)
+    assert isinstance(err, ServingError) and isinstance(err, RuntimeError)
+    assert err.tenant == "a" and err.batch_id == 3
+    for cls in (RequestRejected, DeadlineExceeded, BatchExecutionError,
+                SchedulerClosed):
+        assert issubclass(cls, ServingError)
+    assert is_transient(InjectedFault("dispatch"))
+    assert not is_transient(RuntimeError("boom"))
+    assert is_validation_error(KeyError("unknown tenant"))
+    assert not is_validation_error(InjectedFault("dispatch"))
+    # chained root cause survives the typed wrapper
+    root = InjectedFault("dispatch")
+    wrapped = BatchExecutionError("gave up", tenant="a", batch_id=1)
+    wrapped.__cause__ = root
+    assert wrapped.__cause__ is root
+
+
+def test_watchdog_sweep_expires_and_drops_done():
+    clock = _FakeClock(10.0)
+    expired_tenants = []
+    dog = Watchdog(
+        interval_s=60.0,  # effectively manual: we drive sweep() ourselves
+        clock=clock,
+        on_expire=expired_tenants.append,
+    )
+    try:
+        overdue, healthy, undeadlined = Future(), Future(), Future()
+        dog.track(overdue, deadline=11.0, tenant="a")
+        dog.track(healthy, deadline=99.0, tenant="b")
+        dog.track(undeadlined, deadline=None, tenant="c")  # not registered
+        assert dog.tracked == 2
+        healthy.set_result({"ok": True})  # resolved before its deadline
+        clock.t = 12.0
+        assert dog.sweep() == 1
+        assert dog.expired == 1 and expired_tenants == ["a"]
+        with pytest.raises(DeadlineExceeded):
+            overdue.result(timeout=0)
+        assert dog.tracked == 0  # done + expired both swept
+        assert not undeadlined.done()
+    finally:
+        dog.close()
+
+
+# -- scheduler lifecycle: deadlines, retries, degradation, shutdown --------
+
+
+def test_scheduler_deadline_exceeded_is_typed():
+    """A deadline that cannot be met resolves the future with
+    DeadlineExceeded (typed, carrying the tenant) even while the batcher
+    is wedged inside a slow dispatch — the watchdog is the backstop."""
+    server = _server(1)
+    orig = server.search_batch
+    release = threading.Event()
+
+    def wedged(reqs, pooled=None, **kw):
+        release.wait(timeout=10.0)  # hold the batcher mid-dispatch
+        return orig(reqs, pooled=pooled, **kw)
+
+    server.search_batch = wedged
+    with MicrobatchScheduler(
+        server, max_queue=8, max_batch=1, batch_wait_s=0.0,
+        watchdog_interval_s=0.005,
+    ) as sched:
+        wedger = sched.submit("t0", _clip(0))
+        doomed = sched.submit("t0", _clip(1), deadline_s=0.05)
+        with pytest.raises(DeadlineExceeded) as ei:
+            doomed.result(timeout=10)
+        assert ei.value.tenant == "t0"
+        release.set()
+        wedger.result(timeout=30)  # the wedged request still completes
+        m = sched.metrics()
+    assert m["deadline_missed"] >= 1 and m["watchdog_expired"] >= 1
+    assert m["failed"] >= 1
+
+
+def test_scheduler_default_deadline_applies():
+    server = _server(1)
+    server.search_batch = lambda reqs, pooled=None, **kw: time.sleep(5)
+    with MicrobatchScheduler(
+        server, max_queue=4, max_batch=1, batch_wait_s=0.0,
+        default_deadline_s=0.05, watchdog_interval_s=0.005,
+    ) as sched:
+        fut = sched.submit("t0", _clip(0))
+        with pytest.raises(DeadlineExceeded):
+            fut.result(timeout=10)
+
+
+def test_scheduler_close_resolves_queued_futures():
+    """Shutdown never strands a future: still-queued requests resolve
+    with SchedulerClosed, and submit() after close() raises it too."""
+    server = _server(1)
+    started = threading.Event()
+    release = threading.Event()
+
+    def wedged(reqs, pooled=None, **kw):
+        started.set()
+        release.wait(timeout=10.0)
+        raise InjectedFault("dispatch")  # the in-flight one fails too
+
+    server.search_batch = wedged
+    sched = MicrobatchScheduler(
+        server, max_queue=8, max_batch=1, batch_wait_s=0.0,
+        retry=RetryPolicy(max_retries=0),
+    )
+    inflight = sched.submit("t0", _clip(0))
+    assert started.wait(timeout=10)
+    queued = [sched.submit("t0", _clip(i)) for i in range(1, 4)]
+    closer = threading.Thread(target=sched.close)
+    closer.start()
+    release.set()
+    closer.join(timeout=30)
+    assert not closer.is_alive()
+    for f in queued:
+        with pytest.raises(SchedulerClosed):
+            f.result(timeout=0)
+    # the in-flight request resolved (typed), not hung
+    with pytest.raises(ServingError):
+        inflight.result(timeout=0)
+    with pytest.raises(SchedulerClosed):
+        sched.submit("t0", _clip(9))
+    sched.close()  # idempotent
+
+
+def test_scheduler_retries_transient_fault_then_succeeds():
+    """A transient dispatch fault (truthy .transient) is retried under
+    the seeded backoff and the request completes; the retries counter
+    records the recovery work."""
+    server = _server(1)
+    orig = server.search_batch
+    fails = {"n": 2}
+
+    def flaky(reqs, pooled=None, **kw):
+        if fails["n"] > 0:
+            fails["n"] -= 1
+            raise InjectedFault("dispatch", "flaky")
+        return orig(reqs, pooled=pooled, **kw)
+
+    server.search_batch = flaky
+    with MicrobatchScheduler(
+        server, max_queue=4, max_batch=1, batch_wait_s=0.0,
+        retry=RetryPolicy(max_retries=4, base_s=1e-4, cap_s=1e-3, seed=0),
+        # threshold above the fault count: the ladder must not degrade
+        ladder=DegradationLadder(failure_threshold=5),
+    ) as sched:
+        out = sched.submit("t0", _clip(0)).result(timeout=60)
+        m = sched.metrics()
+    assert np.isfinite(out["scores"]).all()
+    assert m["retries"] == 2 and m["completed"] == 1 and m["failed"] == 0
+    assert m["mode"] == "pooled"  # breaker saw 2 < 5 consecutive failures
+
+
+def test_scheduler_degrades_to_sequential_when_pooled_path_fails():
+    """A hard pooled-path outage trips the breaker and the SAME request
+    is re-dispatched on the sequential rung — degradation is not a
+    retry and must not consume the backoff budget."""
+    server = _server(2)
+    orig = server.search_batch
+
+    def pooled_down(reqs, pooled=None, **kw):
+        if pooled is not False:  # the pooled rung passes pooled=None
+            raise InjectedFault("dispatch", "pooled path down")
+        return orig(reqs, pooled=False, **kw)
+
+    server.search_batch = pooled_down
+    with MicrobatchScheduler(
+        server, max_queue=8, max_batch=4, batch_wait_s=0.01,
+        retry=RetryPolicy(max_retries=0),  # no retry budget at all
+        ladder=DegradationLadder(failure_threshold=1, recovery_s=60.0),
+    ) as sched:
+        outs = [
+            sched.submit(f"t{i % 2}", _clip(i)).result(timeout=60)
+            for i in range(3)
+        ]
+        m = sched.metrics()
+    for out in outs:
+        assert np.isfinite(out["scores"]).all()
+    assert m["completed"] == 3 and m["failed"] == 0
+    assert m["mode"] == "sequential"
+    assert m["ladder"]["breakers"]["pooled"]["trips"] >= 1
+
+
+def test_scheduler_validation_error_passes_through_unwrapped():
+    """Caller errors are not retried, not breaker-counted, and reach
+    the caller as-is (KeyError for an unknown tenant)."""
+    server = _server(1)
+    with MicrobatchScheduler(
+        server, max_queue=4, max_batch=2, batch_wait_s=0.01
+    ) as sched:
+        bad = sched.submit("nope", _clip(0))
+        with pytest.raises(KeyError, match="unknown tenant"):
+            bad.result(timeout=60)
+        m = sched.metrics()
+    assert m["failed"] == 1 and m["retries"] == 0
+    assert m["ladder"]["breakers"]["pooled"]["trips"] == 0
+
+
+# -- signal integrity: quarantine + cache checksum -------------------------
+
+
+def test_quarantine_isolates_poisoned_row_bitwise():
+    """One NaN clip in a pooled batch quarantines exactly that request;
+    the healthy requests' scores are BITWISE identical to the same batch
+    composition served with a clean fourth clip."""
+    server = _server(4)
+    healthy = [("t0", _clip(0)), ("t1", _clip(1)), ("t2", _clip(2))]
+    clean4 = _clip(3)
+    poisoned4 = np.array(clean4, copy=True)
+    poisoned4[0, 0, 0, 0, :] = np.nan
+    ref = server.search_batch(healthy + [("t3", jnp.asarray(clean4))])
+    out = server.search_batch(healthy + [("t3", jnp.asarray(poisoned4))])
+    for r, o in zip(ref[:3], out[:3]):
+        assert np.array_equal(np.asarray(r["scores"]), np.asarray(o["scores"]))
+    assert isinstance(out[3], TenantQuarantined)
+    assert out[3].tenant == "t3"
+    assert server.metrics()["quarantined"] == 1
+    # the single-request front door raises the typed error
+    with pytest.raises(TenantQuarantined):
+        server.search(jnp.asarray(poisoned4), tenant="t3")
+
+
+def test_scheduler_routes_quarantine_into_the_one_future():
+    server = _server(2)
+    bad = np.array(_clip(0), copy=True)
+    bad[0, 0, 0, 0, :] = np.nan
+    with MicrobatchScheduler(
+        server, max_queue=8, max_batch=4, batch_wait_s=0.05
+    ) as sched:
+        good = sched.submit("t0", _clip(1))
+        doomed = sched.submit("t1", jnp.asarray(bad))
+        assert np.isfinite(good.result(timeout=60)["scores"]).all()
+        with pytest.raises(TenantQuarantined) as ei:
+            doomed.result(timeout=60)
+        assert ei.value.tenant == "t1"
+        m = sched.metrics()
+    assert m["quarantined"] == 1 and m["completed"] == 1
+
+
+def test_guard_scores_off_restores_raw_delivery():
+    server = _server(1, guard_scores=False)
+    bad = np.array(_clip(0), copy=True)
+    bad[0, 0, 0, 0, :] = np.nan
+    out = server.search_batch([("t0", jnp.asarray(bad))])[0]
+    assert isinstance(out, dict)  # no quarantine: raw NaNs delivered
+    assert not np.isfinite(out["scores"]).all()
+
+
+def test_cache_verify_detects_corruption_and_self_heals():
+    """Corrupting a resident grating is caught by the fetch checksum:
+    the entry is dropped, transparently re-recorded, and the fresh
+    entry is clean; integrity_failures counts the detection."""
+    cache = GratingCache(max_entries=4, verify=True)
+    sthc = STHC(STHCConfig(fidelity=fid.ideal()), cache=cache)
+    sthc.record(_kernels(0), (12, 12, 8))
+    key = next(iter(cache._entries))
+    entry = cache._entries[key]
+    # bit-rot stand-in: NaN-poison the resident storage plane in place
+    if entry.effective is not None:
+        entry.effective = entry.effective * jnp.nan
+    else:
+        entry.eff_re = entry.eff_re * jnp.nan
+    g2 = sthc.record(_kernels(0), (12, 12, 8))  # fetch -> detect -> heal
+    assert cache.stats()["integrity_failures"] == 1
+    assert cache.stats()["misses"] == 2  # the self-heal re-record
+    re, im = g2.planes
+    assert bool(jnp.isfinite(re).all()) and bool(jnp.isfinite(im).all())
+    assert cache._entries[key] is g2  # the healed entry is resident
+
+
+def test_cache_verify_off_by_default_and_free():
+    cache = GratingCache(max_entries=2)
+    assert cache.stats()["verify"] is False
+    assert cache.stats()["integrity_failures"] == 0
+
+
+# -- chaos injector --------------------------------------------------------
+
+
+def test_chaos_injector_is_seed_deterministic():
+    def run(seed):
+        chaos = ChaosInjector(
+            [ChaosRule("dispatch", "raise", rate=0.3)], seed=seed
+        )
+        fired = []
+        for i in range(50):
+            try:
+                chaos.on("dispatch")
+                fired.append(0)
+            except InjectedFault:
+                fired.append(1)
+        return fired, chaos.stats()
+
+    a, sa = run(seed=3)
+    b, sb = run(seed=3)
+    c, _ = run(seed=4)
+    assert a == b and sa == sb
+    assert a != c  # different seed, different storm
+    assert sa["events"]["dispatch"] == 50
+    assert sa["injected"]["dispatch/raise"] == sum(a) == sa["total_injected"]
+
+
+def test_chaos_at_indices_fire_once_and_mode_filters():
+    evicted = []
+    chaos = ChaosInjector(
+        [
+            ChaosRule("cache_fetch", "call", at=(2,), action=lambda: evicted.append(1)),
+            ChaosRule("dispatch", "raise", at=(1,), mode="pooled"),
+        ],
+        seed=0,
+    )
+    for _ in range(5):
+        chaos.on("cache_fetch")
+    assert evicted == [1]  # index 2 fired exactly once
+    chaos.on("dispatch", mode="sequential")  # event 1, wrong mode: no fire
+    chaos.on("dispatch", mode="pooled")  # event 2: index 1 already passed
+    assert chaos.stats()["injected"].get("dispatch/raise") is None
+
+
+def test_chaos_nan_rule_poisons_a_copy():
+    chaos = ChaosInjector([ChaosRule("readout", "nan", at=(1,))], seed=0)
+    peak = np.ones((3, 2), dtype=np.float32)
+    out = chaos.on("readout", payload=peak)
+    assert np.isfinite(peak).all()  # caller's array untouched
+    assert np.isnan(out).any() and np.isnan(out).sum() == 2  # one row
+
+
+# -- concurrency: eviction races under tenant churn ------------------------
+
+
+def test_tenant_churn_race_leaves_no_orphan_cache_entries():
+    """Threads hammer add/remove/search while the shared cache evicts;
+    afterwards every cache entry maps to a live tenant and the verify
+    checksum table stays in lockstep with the entry table."""
+    cfg = VideoSearchConfig(
+        window_frames=8, cache_entries=3, verify_gratings=True
+    )
+    server = VideoSearchServer(frame_hw=(12, 12), cfg=cfg)
+    for i in range(3):
+        server.add_tenant(f"base{i}", _kernels(i))
+    stop = threading.Event()
+    errors = []
+
+    def churn(tid):
+        name = f"churn{tid}"
+        k = 0
+        while not stop.is_set():
+            try:
+                server.add_tenant(name, _kernels(10 + tid + k))
+                server.search(_clip(tid), tenant=name)
+                server.remove_tenant(name)
+                k += 1
+            except KeyError:
+                pass  # lost a remove/search race with ourselves: fine
+            except Exception as exc:  # noqa: BLE001
+                errors.append(exc)
+                return
+
+    def searcher():
+        while not stop.is_set():
+            try:
+                server.search(_clip(0), tenant="base0")
+                server.search(_clip(1), tenant="base2")
+            except Exception as exc:  # noqa: BLE001
+                errors.append(exc)
+                return
+
+    threads = [threading.Thread(target=churn, args=(i,)) for i in range(2)]
+    threads.append(threading.Thread(target=searcher))
+    for t in threads:
+        t.start()
+    time.sleep(1.5)
+    stop.set()
+    for t in threads:
+        t.join(timeout=30)
+        assert not t.is_alive()
+    assert not errors, errors
+    live_keys = {t.key for t in server._tenants.values()}
+    with server.cache._lock:
+        cached = set(server.cache._entries)
+        sums = set(server.cache._sums)
+    assert cached <= live_keys  # no orphan gratings survive the churn
+    assert sums <= cached  # checksum table never outlives its entries
+    stats = server.cache.stats()
+    assert stats["entries"] <= 3 and stats["bytes"] >= 0
