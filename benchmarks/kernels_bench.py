@@ -102,6 +102,36 @@ def run(log=print) -> list[str]:
             f"stmul_v2_tiles_b{bB}o{bO}f{bF},{t*1e6:.0f},maxerr={err:.1e}"
         )
 
+    # fused detection-readout tile sweep (block_o, block_l) around the
+    # shipped defaults (8, 512) at serving scale: a (B, O, L) score
+    # slab the size of one window chunk's flattened correlation
+    # outputs.  Same contract as the stmul tile sweeps — interpret-mode
+    # timings are semantics checks, the rows exist so a real-TPU run
+    # can pick `STHCConfig.readout_block_o/_l` straight from this table
+    # — plus the bitwise pin: every tiling must reproduce the lexsort
+    # oracle exactly (the tiled merge is exact, not approximate).
+    Bk, Ok, Lk, Kk = 2, 9, 90 * 120, 4
+    vals = jnp.asarray(rng.randn(Bk, Ok, Lk).astype(np.float32))
+    gidx = jnp.arange(Lk, dtype=jnp.int32)
+    s_ref, i_ref = stmul_ref.topk_readout_ref(
+        vals, jnp.broadcast_to(gidx, vals.shape), Kk
+    )
+    dense_fn = lambda v: stmul_ops.topk_readout(v, gidx, Kk, use_pallas=False)
+    t_dense = _time(dense_fn, vals)
+    sd, idd = dense_fn(vals)
+    mism = int(jnp.sum(sd != s_ref)) + int(jnp.sum(idd != i_ref))
+    rows.append(f"readout_dense,{t_dense*1e6:.0f},mismatches={mism}")
+    for bO, bL in ((8, 512), (4, 256), (2, 2048)):
+        fn = lambda v, t=(bO, bL): stmul_ops.topk_readout(
+            v, gidx, Kk, use_pallas=True, block_o=t[0], block_l=t[1]
+        )
+        t = _time(fn, vals)
+        sp, ip = fn(vals)
+        mism = int(jnp.sum(sp != s_ref)) + int(jnp.sum(ip != i_ref))
+        rows.append(
+            f"readout_tiles_o{bO}l{bL},{t*1e6:.0f},mismatches={mism}"
+        )
+
     # conv3d at C3D scale (3×3×3, 64ch)
     x = jnp.asarray(rng.randn(1, 16, 14, 14, 8).astype(np.float32))
     w = jnp.asarray(rng.randn(16, 16, 3, 3, 3).astype(np.float32))

@@ -96,6 +96,7 @@ def _make_server(
     chunk_windows: int = 1,
     grating_dtype: str = "float32",
     max_buffer_windows: int | None = None,
+    fused_readout: bool = True,
 ) -> VideoSearchServer:
     cfg = VideoSearchConfig(
         window_frames=window,
@@ -103,6 +104,7 @@ def _make_server(
         cache_entries=2 * n_tenants,
         grating_dtype=grating_dtype,
         max_buffer_windows=max_buffer_windows,
+        fused_readout=fused_readout,
     )
     server = VideoSearchServer(frame_hw=frame_hw, cfg=cfg)
     for i in range(n_tenants):
@@ -178,8 +180,13 @@ def _row(name: str, us: float, derived: dict | str) -> str:
     return f"{name},{us:.0f},{derived}"
 
 
-def run(smoke: bool = False, log=print) -> list[str]:
+def run(smoke: bool = False, log=print, readout: str = "fused") -> list[str]:
+    """``readout`` selects the *default* detection path every row serves
+    through ('fused' | 'stitched') — the CI bench matrix runs the smoke
+    once per leg.  The ``serving_fused_readout_longT`` row always
+    measures both paths explicitly (it is the comparison)."""
     rows: list[str] = []
+    fused_default = readout != "stitched"
     # smoke still takes enough reps that the gated ratio rows (the CI
     # perf gate reads them) ride a stable median on a noisy shared
     # runner, not a 5-sample lottery
@@ -189,7 +196,7 @@ def run(smoke: bool = False, log=print) -> list[str]:
     # -- pooled vs per-tenant-sequential, mixed-tenant batches ----------
     speedup_at_8 = None
     for nt in tenant_counts:
-        server = _make_server(nt)
+        server = _make_server(nt, fused_readout=fused_default)
         reqs = _requests(server, nt)
         for pooled in (True, False):  # warm both paths (compile + cache)
             server.search_batch(reqs, pooled=pooled)
@@ -225,7 +232,8 @@ def run(smoke: bool = False, log=print) -> list[str]:
     # ~1x — recorded so the trajectory is honest about the regime
     if not smoke:
         server = _make_server(
-            8, BIG_FRAME_HW, BIG_KERNEL, BIG_WINDOW, chunk_windows=4
+            8, BIG_FRAME_HW, BIG_KERNEL, BIG_WINDOW, chunk_windows=4,
+            fused_readout=fused_default,
         )
         reqs = _requests(server, 8)
         for pooled in (True, False):
@@ -242,7 +250,8 @@ def run(smoke: bool = False, log=print) -> list[str]:
     # 8 identical clip rows onto one physical row reading the union of
     # the tenants' O-slices — 1 forward FFT instead of 8.
     server = _make_server(
-        8, SHARED_FRAME_HW, SHARED_KERNEL, SHARED_WINDOW, chunk_windows=4
+        8, SHARED_FRAME_HW, SHARED_KERNEL, SHARED_WINDOW, chunk_windows=4,
+        fused_readout=fused_default,
     )
     clip = jnp.asarray(
         np.random.RandomState(77)
@@ -297,9 +306,10 @@ def run(smoke: bool = False, log=print) -> list[str]:
 
     long_T = LONG_STREAM_T if not smoke else LONG_STREAM_T // 2
     bounded = _make_server(
-        1, max_buffer_windows=LONG_MAX_BUFFER_WINDOWS
+        1, max_buffer_windows=LONG_MAX_BUFFER_WINDOWS,
+        fused_readout=fused_default,
     )
-    unbounded = _make_server(1)
+    unbounded = _make_server(1, fused_readout=fused_default)
     (req,) = _requests(bounded, 1, T=long_T)
     for srv in (bounded, unbounded):
         srv.search_batch([req])  # warm (compile + record)
@@ -348,10 +358,93 @@ def run(smoke: bool = False, log=print) -> list[str]:
         f"unbounded ({med_b / med_u:.2f}x overhead), score rel err {err:.1e}"
     )
 
+    # -- fused in-kernel detection readout over a long stream -----------
+    # The acceptance row: an 8-tenant pool over a firehose-length stream
+    # (bounded-memory cursor on), fused readout vs the stitched-volume
+    # path.  The fused win is *output-side peak memory*: the stitched
+    # path materializes every request's (B, O, H', W', T') volume; the
+    # fused path holds one window chunk's scores (they die inside the
+    # chunk reduction) plus the (rows, O, K) running states.  Peak
+    # output-side bytes are computed from the serving plan's geometry —
+    # the exact shapes each path allocates — windows/s is measured
+    # interleaved, and exactness (fused scores/frames bitwise equal to
+    # stitched) is recorded and CI-gated.
+    fused_srv = _make_server(
+        8, chunk_windows=4, max_buffer_windows=LONG_MAX_BUFFER_WINDOWS
+    )
+    stitched_srv = _make_server(
+        8, chunk_windows=4, max_buffer_windows=LONG_MAX_BUFFER_WINDOWS,
+        fused_readout=False,
+    )
+    fan_reqs = _requests(fused_srv, 8, T=long_T)
+    for srv in (fused_srv, stitched_srv):
+        srv.search_batch(fan_reqs)  # warm (compile + record)
+        srv.search_batch(fan_reqs)
+    flat: dict[str, list[float]] = {"fused": [], "stitched": []}
+    fouts = {}
+    for _ in range(max(reps // 2, 6)):
+        for name, srv in (("stitched", stitched_srv), ("fused", fused_srv)):
+            t0 = time.perf_counter()
+            fouts[name] = srv.search_batch(fan_reqs)
+            flat[name].append(time.perf_counter() - t0)
+    exact_err = max(
+        float(np.max(np.abs(a["scores"] - b["scores"])))
+        for a, b in zip(fouts["fused"], fouts["stitched"])
+    )
+    frame_mismatch = sum(
+        int(np.sum(a["peak_frame"] != b["peak_frame"]))
+        for a, b in zip(fouts["fused"], fouts["stitched"])
+    )
+    # peak output-side bytes, from the plan the batch actually ran under
+    grating = fused_srv._grating("t0")
+    plan = fused_srv._tenants["t0"].sthc.engine.stream_plan_for(
+        grating, long_T
+    )
+    hp, wp = grating.out_shape[0], grating.out_shape[1]
+    n_out = KERNEL[0]
+    n_rows = len(fan_reqs)  # distinct clips: one physical row each
+    stitched_bytes = n_rows * n_out * hp * wp * plan.n_valid * 4
+    n_chunks = -(-plan.n_blocks // plan.chunk)
+    fused_bytes = (
+        n_rows * n_out * hp * wp * (plan.chunk * plan.step) * 4
+        + n_chunks * n_rows * n_out * 1 * 8  # (score f32 + index i32) * K=1
+    )
+    mem_x = stitched_bytes / fused_bytes
+    n_windows = sum(o["windows"] for o in fouts["fused"])
+    med_f = statistics.median(flat["fused"])
+    med_s = statistics.median(flat["stitched"])
+    winps_x = (n_windows / med_f) / (n_windows / med_s)
+    rows.append(
+        _row(
+            "serving_fused_readout_longT",
+            med_f * 1e6,
+            {
+                "fused_winps": n_windows / med_f,
+                "stitched_winps": n_windows / med_s,
+                "winps_x": winps_x,
+                "stitched_out_mb": stitched_bytes / 1e6,
+                "fused_out_mb": fused_bytes / 1e6,
+                "mem_x": mem_x,
+                "exact_score_err": exact_err,
+                "frame_mismatches": float(frame_mismatch),
+                "stream_frames": float(long_T),
+                "tenants": 8.0,
+            },
+        )
+    )
+    log(
+        f"fused readout long-T (8 tenants, {long_T} frames): "
+        f"{n_windows / med_f:.0f} win/s fused vs {n_windows / med_s:.0f} "
+        f"stitched ({winps_x:.2f}x), peak output bytes "
+        f"{fused_bytes / 1e6:.2f} MB vs {stitched_bytes / 1e6:.2f} MB "
+        f"({mem_x:.1f}x smaller), exact err {exact_err:.1e}, "
+        f"{frame_mismatch} frame mismatches"
+    )
+
     # -- async microbatch scheduler under offered load ------------------
     n_load = 8 if smoke else 48
     intervals = (0.0,) if smoke else (0.01, 0.002, 0.0)
-    server = _make_server(4)
+    server = _make_server(4, fused_readout=fused_default)
     load = _requests(server, n_load)
     for interval in intervals:
         with MicrobatchScheduler(
@@ -407,8 +500,10 @@ def run(smoke: bool = False, log=print) -> list[str]:
         )
 
     # -- half-precision grating storage ---------------------------------
-    srv_f32 = _make_server(4)
-    srv_bf16 = _make_server(4, grating_dtype="bfloat16")
+    srv_f32 = _make_server(4, fused_readout=fused_default)
+    srv_bf16 = _make_server(
+        4, grating_dtype="bfloat16", fused_readout=fused_default
+    )
     reqs = _requests(srv_f32, 4)
     out_f32 = srv_f32.search_batch(reqs)
     out_bf16 = srv_bf16.search_batch(reqs)
@@ -460,8 +555,15 @@ def main() -> None:
     ap.add_argument(
         "--json-dir", default=".", help="directory for BENCH_serving.json"
     )
+    ap.add_argument(
+        "--readout",
+        choices=("fused", "stitched"),
+        default="fused",
+        help="default readout path for the generic serving rows (the "
+        "serving_fused_readout_longT row always measures both)",
+    )
     args = ap.parse_args()
-    rows = run(smoke=args.smoke, log=print)
+    rows = run(smoke=args.smoke, log=print, readout=args.readout)
     print("name,us_per_call,derived")
     for row in rows:
         print(row)

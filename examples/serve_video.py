@@ -16,6 +16,18 @@ three times on ONE server: through the exact *ideal* correlator, the
 full *physical* model, and a quantization-only stage subset; the stream
 hides one 'running' clip among distractors all three must localize.
 
+Detection is served by the **fused in-kernel readout**
+(``VideoSearchConfig.fused_readout``, on by default): each coherence
+window chunk's correlation scores collapse in-kernel to the K best
+(score, position) pairs per reference, so the full correlation volume
+never materializes — constant output-side memory at any stream length,
+bitwise equal to the stitched volume's max/argmax.  Related knobs:
+``readout_topk`` reports the K best detections per reference
+(``topk_scores`` / ``topk_frames`` in the result), ``readout_block_o`` /
+``readout_block_l`` tune the Pallas readout tiles on real hardware, and
+``search(..., return_volume=True)`` opts one call back into the stitched
+volume when the caller needs the raw correlation map.
+
 The production front door is the **async microbatch scheduler**
 (queue → batcher → pooled executor): callers submit requests and get
 futures, the scheduler coalesces concurrent mixed-tenant requests into
@@ -91,6 +103,27 @@ def main() -> None:
     ok = 12 - SPEC.frames // 2 <= run_peak <= 23
     print(f"'running' reference localizes the running segment "
           f"(frames 12-23): peak {run_peak} -> {'OK' if ok else 'MISS'}")
+
+    # the scores above came from the fused readout (no correlation
+    # volume was ever built); opting one call back into the stitched
+    # volume shows they are bitwise the volume's max — and a top-3
+    # server reports the runner-up detections per reference
+    vol_out = server.search(stream, tenant="actions", return_volume=True)
+    exact = bool(np.array_equal(out["scores"], vol_out["scores"]))
+    print(f"fused readout == stitched volume max: {exact} "
+          f"(a {'x'.join(str(d) for d in vol_out['volume'].shape)} "
+          f"volume avoided per search; the gap grows with stream "
+          f"length and references)")
+    topk_server = VideoSearchServer(
+        frame_hw=(SPEC.height, SPEC.width),
+        cfg=VideoSearchConfig(
+            window_frames=24, chunk_windows=2, readout_topk=3
+        ),
+    )
+    topk_server.add_kernel_set("actions", refs)
+    t3 = topk_server.search(stream, tenant="actions")
+    frames3 = ", ".join(str(f) for f in t3["topk_frames"][0][3])
+    print(f"top-3 'running' detections peak at frames [{frames3}]")
 
     # the same stream through all three fidelities *concurrently*, via
     # the async microbatch front end: submit returns futures, the

@@ -18,6 +18,11 @@ Metric direction is per-spec: ``higher`` metrics fail when the fresh
 value drops more than ``tol`` below baseline; ``lower`` metrics
 (errors, overheads) fail when it rises more than ``tol`` above; ``eq``
 metrics (the peak-buffer bound) fail on any change beyond float fuzz.
+A few metrics additionally carry **absolute floors** (``FLOORS``) —
+acceptance invariants like the fused-readout memory shrink (≥4×) and
+throughput parity (≥0.95×) that must hold outright, not merely not
+regress; the committed baseline is held to the raw floor, the fresh
+run to floor − slack.
 Rows missing from the *baseline* are reported and skipped, so a PR that
 adds a new benchmark row does not need a same-PR baseline.  Rows
 missing from the *fresh* run are loud WARNINGS by default — CI runs the
@@ -63,6 +68,16 @@ GATED = {
     # structural invariant: the bounded-memory peak buffer is geometry,
     # not performance — any change is a real behavior change
     "serving_chunked_peak_frames": "eq",
+    # fused in-kernel detection readout: the throughput ratio is
+    # same-host, and exactness is bitwise — fused scores/frames must
+    # equal the stitched volume's max/argmax, so the error row is
+    # structurally 0.  The memory shrink is gated by its absolute
+    # FLOOR only: it grows with stream length, and the CI smoke runs a
+    # shorter stream than the committed full-run baseline, so a
+    # baseline-relative check would structurally fail.
+    "serving_fused_winps_x": "higher",
+    "serving_fused_exact_err": "lower",
+    "serving_fused_frame_mismatches": "eq",
     # chaos/availability suite: healthy fraction under the fault storm
     # (the poisoned-clip count is deterministic, so this is stable),
     # the resolution invariant (every future resolves — 100, always),
@@ -80,6 +95,20 @@ ABS_SLACK = {
     "serving_chunked_overhead_x": 0.35,
 }
 
+# absolute floors — acceptance invariants the committed artifact must
+# carry regardless of what any baseline says: metric -> (floor, fresh
+# slack).  The BASELINE value is held to the raw floor (the committed
+# JSON records the claimed win); the FRESH value gets the additive
+# slack, because timing ratios on a shared CI runner are noisy while
+# the analytic memory ratio is not.
+FLOORS = {
+    # ISSUE acceptance: ≥4× lower peak output-side memory at the
+    # long-stream serving row...
+    "serving_fused_mem_x": (4.0, 0.0),
+    # ...at ≥0.95× the stitched path's windows/s
+    "serving_fused_winps_x": (0.95, 0.10),
+}
+
 # gate-local metric specs (same format as plot_bench.TRACKED): metrics
 # that only the gate reads
 SPECS = {
@@ -88,6 +117,12 @@ SPECS = {
     ),
     "serving_chunked_score_err": (
         "serving", "serving_chunked_longT", "max_rel_score_err",
+    ),
+    "serving_fused_exact_err": (
+        "serving", "serving_fused_readout_longT", "exact_score_err",
+    ),
+    "serving_fused_frame_mismatches": (
+        "serving", "serving_fused_readout_longT", "frame_mismatches",
     ),
     "chaos_availability_pct": (
         "chaos", "chaos_storm", "availability_pct",
@@ -196,6 +231,33 @@ def gate(
                 f"{metric}: fresh {f:.4g} vs baseline {b:.4g} "
                 f"(direction={direction}, tol={tol:.0%})"
             )
+    # absolute floors: acceptance invariants, not baseline-relative —
+    # the committed baseline must carry the claimed win at the raw
+    # floor, the fresh run at floor − slack (CI-runner timing noise)
+    for metric, (floor, slack) in FLOORS.items():
+        for tag, run, s in (("baseline", base, 0.0), ("fresh", fresh, slack)):
+            v = _value(run, metric)
+            if v is None:
+                if tag == "fresh" and strict:
+                    failures.append(
+                        f"{metric} [{tag} floor]: missing from the fresh run"
+                    )
+                log(
+                    f"{metric.ljust(width)}{'—':>12}{'—':>12}{'—':>8}  "
+                    f"floor >= {floor - s:.2f} ({tag}): missing"
+                    f"{' — FAILED (strict)' if tag == 'fresh' and strict else ' (skipped)'}"
+                )
+                continue
+            ok = v >= floor - s
+            log(
+                f"{metric.ljust(width)}{floor - s:>12.3f}{v:>12.3f}"
+                f"{'—':>8}  floor ({tag}): {'ok' if ok else 'FAILED'}"
+            )
+            if not ok:
+                failures.append(
+                    f"{metric} [{tag} floor]: {v:.4g} below the absolute "
+                    f"floor {floor - s:.4g}"
+                )
     if missing_fresh:
         log(
             f"WARNING: {len(missing_fresh)} gated metric(s) absent from "

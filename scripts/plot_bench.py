@@ -12,8 +12,10 @@ trajectories the ROADMAP tracks:
     mixed-tenant batch — windows/s, batch p50/p99 and the pooled
     speedup — plus the bf16 grating-storage capacity factor, the
     shared-stream clip-dedup speedup (8 tenants fanning out over one
-    clip vs the undeduped pooled baseline) and the bounded-memory
+    clip vs the undeduped pooled baseline), the bounded-memory
     chunking row (constant peak buffer frames, overhead vs unbounded)
+    and the fused detection-readout row (peak output-side memory vs
+    the stitched volume, throughput ratio, exactness)
     (``BENCH_serving.json``)
   * availability under the injected fault storm — healthy-request
     fraction, future-resolution invariant, storm p99 and the
@@ -88,6 +90,28 @@ TRACKED = {
     "serving_chunked_overhead_x": (
         "serving", "serving_chunked_longT", "overhead_x",
     ),
+    # fused in-kernel detection readout over the long stream: peak
+    # output-side memory shrink vs the stitched-volume path, the
+    # throughput ratio (≈1 expected — the win is memory, not speed) and
+    # the two absolute memory footprints
+    "serving_fused_mem_x": (
+        "serving", "serving_fused_readout_longT", "mem_x",
+    ),
+    "serving_fused_winps_x": (
+        "serving", "serving_fused_readout_longT", "winps_x",
+    ),
+    "serving_fused_winps": (
+        "serving", "serving_fused_readout_longT", "fused_winps",
+    ),
+    "serving_stitched_winps": (
+        "serving", "serving_fused_readout_longT", "stitched_winps",
+    ),
+    "serving_fused_out_mb": (
+        "serving", "serving_fused_readout_longT", "fused_out_mb",
+    ),
+    "serving_stitched_out_mb": (
+        "serving", "serving_fused_readout_longT", "stitched_out_mb",
+    ),
     # chaos suite: availability under the injected fault storm, the
     # resolution invariant (every submitted future resolves), storm p99
     # and how much capacity the sequential rung keeps when the pooled
@@ -117,6 +141,8 @@ SPEEDUPS = [
     "serving_pooled_vs_seq_x",
     "serving_bf16_capacity_x",
     "serving_shared_dedup_x",
+    "serving_fused_mem_x",
+    "serving_fused_winps_x",
     "chaos_degraded_vs_healthy_x",
 ]
 

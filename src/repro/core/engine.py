@@ -452,6 +452,115 @@ def _pooled_query_dense(
     return _presel_query_dense(x, sel, fft_shape, out_shape)
 
 
+# ---------------------------------------------------------------------------
+# Fused detection readout — the streaming top-K state
+# ---------------------------------------------------------------------------
+
+# Sentinel for an unfilled/poisoned top-K slot (int32 max, matching
+# kernels.stmul.kernel.TOPK_EMPTY_IDX without importing Pallas eagerly).
+TOPK_EMPTY_IDX = 2**31 - 1
+
+
+@dataclasses.dataclass(frozen=True)
+class TopKDetections:
+    """The fused-readout running state: per (clip row, output kernel),
+    the K best correlation peaks of a stream — all a detection consumer
+    needs, at O(K) memory instead of the O(H'·W'·T') stitched volume.
+
+    ``index`` holds each peak's global flat position in the C-order
+    ``(H', W', T'valid)`` valid-output volume, so ``peak_scores()[...,0]``
+    / ``index[..., 0]`` equal ``volume.reshape(B, O, -1).max(-1)`` /
+    ``argmax(-1)`` bitwise (ties resolve to the smallest flat index —
+    argmax's first-occurrence rule).  ``TOPK_EMPTY_IDX`` marks a slot
+    with no detection (K exceeded the volume, or the row's scores were
+    NaN-poisoned — the scores stay NaN for the serving guard).  int32
+    positions bound the addressable volume at 2³¹ elements (≈ 2.7M
+    frames at the paper's 31×25 window); beyond that, shard the stream.
+
+    Slicing rows/kernels commutes with the reduction, so dedup
+    union-span states slice per request exactly like volumes do.
+    """
+
+    scores: Array  # (B, O, K) float32, descending
+    index: Array  # (B, O, K) int32 global flat positions
+    out_shape: tuple[int, int, int]  # (H', W', T'valid) of the stream
+
+    @property
+    def k(self) -> int:
+        return int(self.scores.shape[-1])
+
+    def peak_scores(self) -> Array:
+        """(B, O) — bitwise ``max`` of the stitched volume."""
+        return self.scores[..., 0]
+
+    def peak_index(self) -> Array:
+        """(B, O) — bitwise ``argmax`` of the flattened stitched volume."""
+        return self.index[..., 0]
+
+    def positions(self) -> tuple[Array, Array, Array]:
+        """Decompose ``index`` into (t, h, w) int32 arrays, each
+        (B, O, K).  ``t`` is the stream frame of the peak (the
+        photon-echo peak position) — ``index % T'``, matching the
+        serving contract."""
+        Hp, Wp, Tv = self.out_shape
+        t = self.index % Tv
+        hw = self.index // Tv
+        return t, hw // Wp, hw % Wp
+
+    def __getitem__(self, sl) -> "TopKDetections":
+        return TopKDetections(self.scores[sl], self.index[sl], self.out_shape)
+
+
+def _rebase_topk_index(
+    idx: Array, nv_local: int, t0: int, nv_total: int
+) -> Array:
+    """Rebase segment-local flat positions into the stream-global volume.
+
+    A cursor segment reduces over its own ``(H', W', nv_local)`` grid;
+    globally the same element sits at temporal offset ``t0``.  The local
+    order (hw, t) is preserved (``t0 + t < nv_total`` for every valid
+    element), so in-segment tie-breaks taken on local indices agree with
+    the global total order — the rebased merge is exact.  Sentinel slots
+    stay sentinels."""
+    big = jnp.asarray(TOPK_EMPTY_IDX, idx.dtype)
+    hw = idx // nv_local
+    t = idx % nv_local
+    return jnp.where(idx == big, big, hw * nv_total + t0 + t)
+
+
+def _merge_topk_states(
+    states: "list[tuple[Array, Array]]", k: int
+) -> tuple[Array, Array]:
+    """Exact associative merge of (scores, index) top-K states — one
+    ``topk_select`` over the concatenated candidates (pure jnp; bitwise
+    equal regardless of grouping or order)."""
+    from repro.kernels.stmul import kernel as stmul_kernel  # lazy
+
+    s = jnp.concatenate([st[0] for st in states], axis=-1)
+    i = jnp.concatenate([st[1] for st in states], axis=-1)
+    return stmul_kernel.topk_select(s, i, int(k))
+
+
+def _segments_rebase_merge(
+    seg_s, seg_i, *, k: int, nv_locals: tuple, t0s: tuple, nv_total: int
+) -> tuple[Array, Array]:
+    """Rebase every cursor segment's local top-K state into the
+    stream-global index space and merge, as ONE traced computation.
+
+    Done eagerly this is dozens of tiny host dispatches per request
+    (4 ops per segment rebase + the concat/select merge), which at
+    firehose segment counts costs more than the correlation itself —
+    jitted, the whole tail collapses to a single launch over the tiny
+    (B, O, K) states.  Segment geometry (local valid counts, global
+    offsets) is static so the trace is shared across requests and
+    batches with the same cursor layout."""
+    states = [
+        (s, _rebase_topk_index(i, nv, t0, nv_total))
+        for s, i, nv, t0 in zip(seg_s, seg_i, nv_locals, t0s)
+    ]
+    return _merge_topk_states(states, int(k))
+
+
 class QueryEngine:
     """Record-once / query-many executor for one :class:`STHCConfig`."""
 
@@ -483,6 +592,29 @@ class QueryEngine:
                 "rows", "splits", "ker_shape", "fft_shape", "plan",
                 "encode", "slm_bits", "n_out",
             ),
+        )
+        # fused-readout overlap-save drivers: same window loop, but each
+        # chunk collapses to a (rows, K) top-K state in the epilogue —
+        # the (B, O, H', W', T') volume never materializes (readout_k on
+        # query_stream / query_stream_many)
+        self._stream_topk_fn = jax.jit(
+            self._stream_topk_impl,
+            static_argnames=(
+                "ker_shape", "fft_shape", "plan", "encode", "slm_bits", "k",
+            ),
+        )
+        self._stream_many_topk_fn = jax.jit(
+            self._stream_many_topk_impl,
+            static_argnames=(
+                "rows", "splits", "ker_shape", "fft_shape", "plan",
+                "encode", "slm_bits", "n_out", "k",
+            ),
+        )
+        # cross-segment state tail (rebase + merge) as one launch — the
+        # cursor path's per-request epilogue
+        self._seg_merge_fn = jax.jit(
+            _segments_rebase_merge,
+            static_argnames=("k", "nv_locals", "t0s", "nv_total"),
         )
         self._pools: OrderedDict[tuple, GratingPool] = OrderedDict()
         # row-padded arena views for dedup union spans that overhang the
@@ -704,7 +836,8 @@ class QueryEngine:
         *,
         chunk_windows: int | None = None,
         max_buffer_windows: int | None = None,
-    ) -> Array:
+        readout_k: int | None = None,
+    ) -> "Array | TopKDetections":
         """Stream clips x (B, C, H, W, T) through a window-geometry grating.
 
         The overlap-save driver for every streaming consumer —
@@ -741,8 +874,18 @@ class QueryEngine:
             through a :class:`~repro.core.spectral_conv.StreamCursor` in
             fixed-size T-chunks with kt−1-frame carry-over tails —
             constant peak memory, output exactly equal to one-shot.
+          readout_k: fuse the detection readout into the overlap-save
+            epilogue: every window chunk collapses to the K best
+            (score, position) pairs per (row, kernel) in-kernel, and
+            only that tiny state crosses chunks and cursor segments
+            (associative merge) — the stitched volume never
+            materializes.  Returns a :class:`TopKDetections` whose
+            ``peak_scores()`` / ``peak_index()`` equal the stitched
+            volume's ``max`` / ``argmax`` bitwise.  None (default)
+            returns the full correlation volume.
 
-        Returns (B, O, H−kh+1, W−kw+1, T−kt+1).
+        Returns (B, O, H−kh+1, W−kw+1, T−kt+1), or
+        :class:`TopKDetections` when ``readout_k`` is set.
         """
         if grating.ker_shape is None:
             raise ValueError(
@@ -761,43 +904,62 @@ class QueryEngine:
             )
         plan = self.stream_plan_for(grating, x.shape[-1], chunk_windows)
         mbw = self._max_buffer_windows(max_buffer_windows)
+        fused = readout_k is not None
+        stream_fn = self._stream_topk_fn if fused else self._stream_fn
+        static = dict(
+            ker_shape=grating.ker_shape,
+            fft_shape=grating.fft_shape,
+            encode=grating.encode,
+            slm_bits=grating.slm_bits,
+        )
+        if fused:
+            static["k"] = int(readout_k)
+        out_shape = (oh, ow, plan.n_valid)
         if mbw is None or plan.n_blocks <= mbw:
-            return self._stream_fn(
-                x,
-                grating.effective_c,
-                ker_shape=grating.ker_shape,
-                fft_shape=grating.fft_shape,
-                plan=plan,
-                encode=grating.encode,
-                slm_bits=grating.slm_bits,
-            )
+            out = stream_fn(x, grating.effective_c, plan=plan, **static)
+            if fused:
+                return TopKDetections(out[0], out[1], out_shape)
+            return out
         # Bounded-memory chunked streaming: the stream cursor feeds the
         # same jitted driver fixed-size T-chunks with kt−1 carry-over
         # tails, so peak device residency is one segment buffer no
         # matter how long the clip.  The SLM scale stays *stream-global*
         # (computed once over the whole clip, passed into every segment)
         # — encoding is pointwise, so chunked output equals the one-shot
-        # correlation exactly.
+        # correlation exactly.  Fused readout carries only the (rows, K)
+        # state across segments (local positions rebased into the
+        # stream-global volume; the merge is associative, so chunked ==
+        # one-shot top-K bitwise).
         cursor = spectral_conv.StreamCursor(plan, mbw)
         x_scale = _stream_scale(x) if grating.encode else None
         kt = grating.ker_shape[-1]
-        outs = []
+        outs, nv_locals, t0s = [], [], []
         for seg in cursor:
             seg_plan = spectral_conv.stream_plan(
                 seg.frames, kt, plan.block_t, plan.chunk
             )
-            outs.append(
-                self._stream_fn(
-                    x[..., seg.t0 : seg.t1],
-                    grating.effective_c,
-                    x_scale,
-                    ker_shape=grating.ker_shape,
-                    fft_shape=grating.fft_shape,
-                    plan=seg_plan,
-                    encode=grating.encode,
-                    slm_bits=grating.slm_bits,
-                )
+            out = stream_fn(
+                x[..., seg.t0 : seg.t1],
+                grating.effective_c,
+                x_scale,
+                plan=seg_plan,
+                **static,
             )
+            nv_locals.append(seg_plan.n_valid)
+            t0s.append(seg.out_t0)
+            outs.append(out)
+        if fused:
+            # rebase + merge as one jitted tail call (per-segment eager
+            # ops would dominate at firehose segment counts)
+            s, i = self._seg_merge_fn(
+                tuple(o[0] for o in outs),
+                tuple(o[1] for o in outs),
+                k=int(readout_k),
+                nv_locals=tuple(nv_locals),
+                t0s=tuple(t0s),
+                nv_total=plan.n_valid,
+            )
+            return TopKDetections(s, i, out_shape)
         return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=-1)
 
     def _max_buffer_windows(self, override: int | None) -> int | None:
@@ -872,6 +1034,117 @@ class QueryEngine:
             # de-scaling is left at query time.
             y = y * x_scale
         return y
+
+    # -- query (fused detection readout) ------------------------------------
+
+    def _readout_fn(self):
+        """The per-chunk top-K reduction: the tiled Pallas readout
+        kernel under ``use_pallas``, else one dense ``topk_select`` —
+        identical selection math, so both paths emit bitwise-equal
+        states.  Tile overrides ride ``config.readout_block_o/_l``."""
+        cfg = self.config
+        from repro.kernels.stmul import ops as stmul_ops  # lazy import
+
+        use_pallas = bool(getattr(cfg, "use_pallas", False))
+        tiles = dict(
+            block_o=getattr(cfg, "readout_block_o", None),
+            block_l=getattr(cfg, "readout_block_l", None),
+        )
+
+        def readout(vals, gidx, k):
+            return stmul_ops.topk_readout(
+                vals, gidx, k, use_pallas=use_pallas, **tiles
+            )
+
+        return readout
+
+    def _chunk_topk(self, win, starts, plan, win_out, x_scale, readout, k):
+        """Collapse one window chunk's correlation outputs to the
+        (B, O, k) running state.
+
+        ``win`` is (chunk, B, O, H', W', step) — the only volume-shaped
+        buffer the fused path ever holds; it dies here.  Each element's
+        global flat position in the C-order (H', W', n_valid) stream
+        volume is synthesized from iotas (windows are disjoint spans of
+        the valid time axis: t = start + t_local), pad outputs past
+        ``n_valid`` are masked to −inf / the empty sentinel, and the
+        de-scaling is applied *before* the reduction so scores are
+        bitwise what the stitched path would have produced."""
+        Hp, Wp, step = win_out
+        nv = plan.n_valid
+        if x_scale is not None:
+            win = win * x_scale[None]  # (B,1,1,1,1) under the chunk axis
+        t_glob = starts[:, None] + jax.lax.broadcasted_iota(
+            jnp.int32, (plan.chunk, step), 1
+        )  # (chunk, step)
+        hw = jax.lax.broadcasted_iota(
+            jnp.int32, (Hp, Wp), 0
+        ) * Wp + jax.lax.broadcasted_iota(jnp.int32, (Hp, Wp), 1)
+        gidx = hw[None, :, :, None] * nv + t_glob[:, None, None, :]
+        valid = t_glob < nv  # chunk-fill windows / padded tail frames
+        gidx = jnp.where(
+            valid[:, None, None, :], gidx, TOPK_EMPTY_IDX
+        )  # (chunk, Hp, Wp, step)
+        win = jnp.where(
+            valid[:, None, None, None, None, :], win, -jnp.inf
+        )
+        B, O = win.shape[1], win.shape[2]
+        # rows-major flatten, chunk folded into the score axis: one
+        # readout launch per chunk
+        flat = jnp.moveaxis(win, 0, 2).reshape(B, O, -1)
+        return readout(flat, gidx.reshape(-1), k)
+
+    def _stream_topk_impl(
+        self,
+        x,
+        effective,
+        x_scale=None,
+        *,
+        ker_shape,
+        fft_shape,
+        plan,
+        encode,
+        slm_bits,
+        k,
+    ):
+        """Fused-readout overlap-save body (jitted): the window loop of
+        ``_stream_impl`` with the stitch replaced by a per-chunk top-K
+        reduction.  Peak output-side memory is one chunk's windows plus
+        the (n_chunks, B, O, k) states; the final cross-chunk merge is
+        one more exact ``topk_select`` over those tiny states.  Returns
+        (scores, index), positions local to this call's valid range."""
+        kh, kw, kt = ker_shape
+        H, W = x.shape[-3:-1]
+        if encode:
+            x, x_scale = self._encode(x, slm_bits, x_scale)
+        else:
+            x_scale = None
+        xp = jnp.pad(x, [(0, 0)] * 4 + [(0, plan.pad_t)])
+        win_out = (H - kh + 1, W - kw + 1, plan.step)
+        query = self._query_fn()
+        readout = self._readout_fn()
+
+        def one_window(start):
+            win = lax.dynamic_slice_in_dim(xp, start, plan.block_t, axis=-1)
+            return query(win, effective, fft_shape, win_out)
+
+        def one_chunk(cs):
+            win = jax.vmap(one_window)(cs)
+            return self._chunk_topk(
+                win, cs, plan, win_out, x_scale, readout, k
+            )
+
+        starts = spectral_conv.window_starts(plan)
+        chunk_s, chunk_i = lax.map(one_chunk, starts)  # (n_outer, B, O, k)
+        return self._fold_chunk_states(chunk_s, chunk_i, k)
+
+    @staticmethod
+    def _fold_chunk_states(chunk_s, chunk_i, k):
+        """(n_outer, B, O, k) per-chunk states → one exact (B, O, k)
+        top-K: concatenate along the candidate axis and re-select."""
+        s = jnp.moveaxis(chunk_s, 0, -2).reshape(*chunk_s.shape[1:-1], -1)
+        i = jnp.moveaxis(chunk_i, 0, -2).reshape(*chunk_i.shape[1:-1], -1)
+        return _merge_topk_states([(s, i)], k)
 
     # -- query (pooled cross-tenant batch) ----------------------------------
 
@@ -1031,7 +1304,8 @@ class QueryEngine:
         max_buffer_windows: int | None = None,
         clip_keys: "Sequence[tuple | None] | None" = None,
         dedup: bool = True,
-    ) -> list[Array]:
+        readout_k: int | None = None,
+    ) -> "list[Array] | list[TopKDetections]":
         """Pooled :meth:`query_stream`: one overlap-save pass per group.
 
         The streaming analogue of :meth:`query_many` — mixed-tenant long
@@ -1049,6 +1323,14 @@ class QueryEngine:
         cursor in fixed-size T-chunks at constant peak memory.  Encoding
         stays per-example stream-global, so each request's output equals
         ``query_stream(grating_i, x_i)`` to float tolerance.
+
+        ``readout_k`` fuses the detection readout into the pooled
+        epilogue (see :meth:`query_stream`): each request gets a
+        :class:`TopKDetections` instead of a volume, and the pooled
+        ``(B, ΣO, H', W', T')`` buffer — the serving memory ceiling at
+        large tenant pools — never materializes; only (rows, K) states
+        cross window chunks and cursor segments.  Bitwise equal to
+        reducing the stitched volumes, dedup union-slice rows included.
         """
         groups = self._group_requests(requests, stream=True)
         keys = self._clip_ids(requests, clip_keys, dedup)
@@ -1111,10 +1393,22 @@ class QueryEngine:
                 slm_bits=g0.slm_bits,
                 n_out=lay.n_out,
             )
+            fused = readout_k is not None
+            many_fn = (
+                self._stream_many_topk_fn if fused else self._stream_many_fn
+            )
+            if fused:
+                static["k"] = int(readout_k)
+            oh, ow, _ = g0.out_shape
+            stream_out = (oh, ow, plan.n_valid)
             if mbw is None or plan.n_blocks <= mbw:
-                outs = self._stream_many_fn(
+                outs = many_fn(
                     tuple(ux), pool_re, pool_im, plan=plan, **static
                 )
+                if fused:
+                    outs = tuple(
+                        TopKDetections(s, ix, stream_out) for s, ix in outs
+                    )
             else:
                 # bounded-memory chunked pass: stream-global SLM scales
                 # measured once, then every fixed-size segment rides the
@@ -1128,27 +1422,48 @@ class QueryEngine:
                         if len(scales) == 1
                         else jnp.concatenate(scales, axis=0)
                     )
-                seg_outs = []
+                seg_outs, nv_locals, t0s = [], [], []
                 for seg in cursor:
                     seg_plan = spectral_conv.stream_plan(
                         seg.frames, kt, plan.block_t, plan.chunk
                     )
-                    seg_outs.append(
-                        self._stream_many_fn(
-                            tuple(xj[..., seg.t0 : seg.t1] for xj in ux),
-                            pool_re,
-                            pool_im,
-                            x_scale,
-                            plan=seg_plan,
-                            **static,
-                        )
+                    so = many_fn(
+                        tuple(xj[..., seg.t0 : seg.t1] for xj in ux),
+                        pool_re,
+                        pool_im,
+                        x_scale,
+                        plan=seg_plan,
+                        **static,
                     )
-                outs = tuple(
-                    jnp.concatenate([so[r] for so in seg_outs], axis=-1)
-                    if len(seg_outs) > 1
-                    else seg_outs[0][r]
-                    for r in range(len(splits))
-                )
+                    nv_locals.append(seg_plan.n_valid)
+                    t0s.append(seg.out_t0)
+                    seg_outs.append(so)
+                if fused:
+                    # one jitted rebase+merge tail per request: local
+                    # positions land in the stream-global volume and the
+                    # (rows, K) states fold, without per-segment eager
+                    # dispatch overhead
+                    outs = tuple(
+                        TopKDetections(
+                            *self._seg_merge_fn(
+                                tuple(so[r][0] for so in seg_outs),
+                                tuple(so[r][1] for so in seg_outs),
+                                k=int(readout_k),
+                                nv_locals=tuple(nv_locals),
+                                t0s=tuple(t0s),
+                                nv_total=plan.n_valid,
+                            ),
+                            stream_out,
+                        )
+                        for r in range(len(splits))
+                    )
+                else:
+                    outs = tuple(
+                        jnp.concatenate([so[r] for so in seg_outs], axis=-1)
+                        if len(seg_outs) > 1
+                        else seg_outs[0][r]
+                        for r in range(len(splits))
+                    )
             for j, i in enumerate(idxs):
                 results[i] = outs[j]
         return results  # type: ignore[return-value]
@@ -1288,6 +1603,29 @@ class QueryEngine:
         request's O-window out of its shared row's union span).
         ``x_scale`` carries precomputed stream-global SLM scales when
         the clips are cursor segments of longer streams."""
+        one_window, win_out, x_scale = self._pooled_osave_setup(
+            xs, pool_re, pool_im, x_scale,
+            rows=rows, ker_shape=ker_shape, fft_shape=fft_shape,
+            plan=plan, encode=encode, slm_bits=slm_bits, n_out=n_out,
+        )
+        starts = spectral_conv.window_starts(plan)
+        blocks = lax.map(lambda cs: jax.vmap(one_window)(cs), starts)
+        y = spectral_conv.stitch_windows(blocks, plan)
+        if x_scale is not None:
+            y = y * x_scale
+        return tuple(
+            y[b0 : b0 + nb, oo : oo + o] for b0, nb, oo, o in splits
+        )
+
+    def _pooled_osave_setup(
+        self, xs, pool_re, pool_im, x_scale,
+        *, rows, ker_shape, fft_shape, plan, encode, slm_bits, n_out,
+    ):
+        """Shared front half of the pooled overlap-save bodies: stack
+        the per-copy clips, encode (stream-global scale), pad the time
+        axis and build the per-window pooled query closure (grouped
+        Pallas launch under ``use_pallas``, hoisted-gather einsum
+        otherwise).  Returns (one_window, win_out, x_scale)."""
         x = xs[0] if len(xs) == 1 else jnp.concatenate(xs, axis=0)
         rows = jnp.asarray(rows, jnp.int32)
         kh, kw, kt = ker_shape
@@ -1321,13 +1659,40 @@ class QueryEngine:
                 )
                 return _presel_query_dense(win, sel, fft_shape, win_out)
 
+        return one_window, win_out, x_scale
+
+    def _stream_many_topk_impl(
+        self, xs, pool_re, pool_im, x_scale=None,
+        *, rows, splits, ker_shape, fft_shape, plan, encode, slm_bits,
+        n_out, k,
+    ):
+        """Fused-readout pooled overlap-save body (jitted): the window
+        loop of ``_stream_many_impl`` with the stitch replaced by the
+        per-chunk top-K reduction — the pooled ``(B, n_out, H', W', T')``
+        volume (the serving memory ceiling at large tenant pools) never
+        materializes.  Per-request slicing commutes with the per-(row,
+        kernel) reduction, so dedup union-span states split exactly like
+        volumes.  Returns a tuple of (scores, index) per request,
+        positions local to this call's valid range."""
+        one_window, win_out, x_scale = self._pooled_osave_setup(
+            xs, pool_re, pool_im, x_scale,
+            rows=rows, ker_shape=ker_shape, fft_shape=fft_shape,
+            plan=plan, encode=encode, slm_bits=slm_bits, n_out=n_out,
+        )
+        readout = self._readout_fn()
+
+        def one_chunk(cs):
+            win = jax.vmap(one_window)(cs)
+            return self._chunk_topk(
+                win, cs, plan, win_out, x_scale, readout, k
+            )
+
         starts = spectral_conv.window_starts(plan)
-        blocks = lax.map(lambda cs: jax.vmap(one_window)(cs), starts)
-        y = spectral_conv.stitch_windows(blocks, plan)
-        if x_scale is not None:
-            y = y * x_scale
+        chunk_s, chunk_i = lax.map(one_chunk, starts)
+        s, i = self._fold_chunk_states(chunk_s, chunk_i, k)
         return tuple(
-            y[b0 : b0 + nb, oo : oo + o] for b0, nb, oo, o in splits
+            (s[b0 : b0 + nb, oo : oo + o], i[b0 : b0 + nb, oo : oo + o])
+            for b0, nb, oo, o in splits
         )
 
     def _pooled_query_fn(self):

@@ -78,6 +78,13 @@ class STHCConfig:
     stmul_block_b: int | None = None
     stmul_block_o: int | None = None
     stmul_block_f: int | None = None
+    # Fused-readout kernel tile sizes (None = kernel defaults
+    # READOUT_BLOCK_O/READOUT_BLOCK_L); swept in kernels_bench like the
+    # stmul_block_* knobs.  Only consulted when the engine runs a fused
+    # top-K readout (query_stream*(readout_k=...)); the Pallas readout
+    # variant rides the same ``use_pallas`` switch as the MAC.
+    readout_block_o: int | None = None
+    readout_block_l: int | None = None
     storage_interval_s: float = 0.0  # T_Q − T_P (echo-efficiency factor)
     # DEPRECATED alongside ``mode``: with the deprecated alias it selects
     # the physical preset's PulseCompensate(compensate=...) stage; with an

@@ -76,6 +76,20 @@ BLOCK_F = 512  # lanes; multiple of 128
 # needs no code change.
 MIN_MXU_C = 8
 
+# Fused-readout (top-K reduction) tile defaults — the epilogue kernel
+# that collapses a correlation window chunk to a tiny (rows, K) running
+# state.  ``READOUT_BLOCK_L`` is the lane tile over the flattened
+# (windows × H' × W' × step) score axis; surfaced as
+# ``STHCConfig.readout_block_o`` / ``readout_block_l`` and swept in
+# ``benchmarks/kernels_bench.py``.
+READOUT_BLOCK_O = 8
+READOUT_BLOCK_L = 512
+
+# Sentinel index for an unfilled top-K slot (K exceeded the number of
+# finite candidates, or the candidate set was NaN-poisoned).  Also the
+# pad value for index tiles, so padding can never win a tie-break.
+TOPK_EMPTY_IDX = 2**31 - 1  # jnp.iinfo(int32).max
+
 
 def _stmul_kernel_v1(xr_ref, xi_ref, gr_ref, gi_ref, yr_ref, yi_ref):
     """One (bB, bO, bF) output tile; accumulate over the full C axis.
@@ -319,3 +333,159 @@ def spectral_mac_grouped_pallas(
         interpret=interpret,
     )(off_blocks, xr_p, xi_p, gr_p, gi_p)
     return yr[:, :n_out, :F], yi[:, :n_out, :F]
+
+
+# ---------------------------------------------------------------------------
+# Fused detection readout: top-K reduction of correlation scores
+# ---------------------------------------------------------------------------
+#
+# The serving epilogue: instead of stitching per-window correlation
+# outputs into the full (B, O, H', W', T') volume and reducing it on the
+# host path, each window chunk is collapsed in-kernel to the K best
+# (score, position) pairs per (row, output-kernel).  The running state is
+# tiny — (B, O, K) floats + int32 positions — and merging two states is
+# another top-K select, so the reduction is associative: chunked,
+# re-chunked and one-shot streams produce bit-identical detections.
+
+
+def topk_select(vals: Array, gidx: Array, k: int) -> tuple[Array, Array]:
+    """Top-k along the last axis with a *total* order: score descending,
+    then global index ascending (ties go to the smallest index — exactly
+    ``argmax``'s first-occurrence rule for k = 1).
+
+    Pure jnp, shared verbatim by the Pallas readout kernel, the dense
+    (no-Pallas) engine path and the cross-chunk/segment state merges, so
+    every route produces bitwise-equal states.  Because the order is
+    total (indices are unique), hierarchical selection is exact:
+    ``topk(A ∪ B) == topk(topk(A) ∪ topk(B))``.
+
+    NaN scores propagate: ``jnp.max`` returns NaN, the equality mask
+    then matches nothing, and the slot's index degrades to the
+    ``TOPK_EMPTY_IDX`` sentinel — a poisoned chunk yields NaN state
+    scores for the signal-integrity guard to quarantine, never a
+    silently wrong detection.
+
+    Args:
+      vals: (..., L) float32 scores.
+      gidx: (..., L) int32 global positions, unique along the axis
+        (``TOPK_EMPTY_IDX`` marks padding, paired with −inf scores).
+      k: static number of survivors.
+
+    Returns (scores, index): (..., k) each, sorted by the total order.
+    """
+    out_s, out_i = [], []
+    big = jnp.asarray(TOPK_EMPTY_IDX, gidx.dtype)
+    neg = jnp.asarray(-jnp.inf, vals.dtype)
+    L = vals.shape[-1]
+    # unique per-slot positions for the knock-out mask: gidx values are
+    # unique for real entries but the TOPK_EMPTY_IDX sentinel (padding /
+    # NaN-degraded slots) is not, and masking by value would wipe every
+    # sentinel slot at once — merged states would then diverge from the
+    # one-shot reduction on poisoned rows.
+    pos = jax.lax.broadcasted_iota(jnp.int32, vals.shape, vals.ndim - 1)
+    for _ in range(int(k)):
+        m = jnp.max(vals, axis=-1, keepdims=True)
+        hit = vals == m  # empty for NaN m: the slot saturates, no mask
+        # smallest global index among the maximal positions; a −inf max
+        # means the row is exhausted (k exceeded the candidates) — the
+        # slot reports the empty sentinel, not a stale index
+        sel = jnp.min(jnp.where(hit, gidx, big), axis=-1, keepdims=True)
+        sel = jnp.where(m == neg, big, sel)
+        out_s.append(m)
+        out_i.append(sel)
+        p = jnp.min(
+            jnp.where(hit & (gidx == sel), pos, L), axis=-1, keepdims=True
+        )
+        vals = jnp.where(pos == p, neg, vals)
+    return jnp.concatenate(out_s, -1), jnp.concatenate(out_i, -1)
+
+
+def _topk_readout_kernel(v_ref, i_ref, s_ref, ix_ref, *, k: int):
+    """One (1, bO, bL) score tile → the (1, bO, K) running state.
+
+    Grid is (B, O/bO, L/bL) with L innermost; the output block is
+    revisited across the L steps, so the state accumulates in-register:
+    the first tile initializes it, every later tile merges its own
+    top-k in (one more ``topk_select`` over 2K candidates).
+    """
+    vals = v_ref[0].astype(jnp.float32)  # (bO, bL)
+    gidx = jnp.broadcast_to(i_ref[...], vals.shape)  # (1, bL) → (bO, bL)
+    ts, ti = topk_select(vals, gidx, k)
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        s_ref[0] = ts
+        ix_ref[0] = ti
+
+    @pl.when(pl.program_id(2) != 0)
+    def _merge():
+        ms, mi = topk_select(
+            jnp.concatenate([s_ref[0], ts], axis=-1),
+            jnp.concatenate([ix_ref[0], ti], axis=-1),
+            k,
+        )
+        s_ref[0] = ms
+        ix_ref[0] = mi
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "block_o", "block_l", "interpret")
+)
+def topk_readout_pallas(
+    vals: Array,
+    gidx: Array,
+    *,
+    k: int,
+    block_o: int = READOUT_BLOCK_O,
+    block_l: int = READOUT_BLOCK_L,
+    interpret: bool = False,
+) -> tuple[Array, Array]:
+    """Fused detection readout: per-(row, kernel) top-k of a score axis.
+
+    Args:
+      vals: (B, O, L) float32 — a window chunk's correlation scores,
+        flattened over (windows, H', W', step); padding must carry −inf.
+      gidx: (L,) int32 — each element's global flat position in the
+        stream's (H', W', T'valid) volume (shared by every (b, o) row);
+        ``TOPK_EMPTY_IDX`` marks padding.
+      k: state width (static).
+      block_o / block_l: O/L tile sizes; L tiles stream through one
+        resident output block per (b, o-block).
+
+    Returns (scores, index): (B, O, k) f32 / int32, descending score,
+    ascending-index tie-break — bitwise equal to ``topk_select`` over
+    the whole axis.
+    """
+    B, O, L = vals.shape
+    bO = min(int(block_o), O)
+    bL = min(int(block_l), L)
+    o_pad = (-O) % bO
+    l_pad = (-L) % bL
+    if o_pad or l_pad:
+        vals = jnp.pad(
+            vals, [(0, 0), (0, o_pad), (0, l_pad)],
+            constant_values=-jnp.inf,
+        )
+    if l_pad:
+        gidx = jnp.pad(gidx, [(0, l_pad)], constant_values=TOPK_EMPTY_IDX)
+    Op, Lp = O + o_pad, L + l_pad
+
+    grid = (B, Op // bO, Lp // bL)
+    s, ix = pl.pallas_call(
+        functools.partial(_topk_readout_kernel, k=int(k)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bO, bL), lambda b, o, l: (b, o, l)),
+            pl.BlockSpec((1, bL), lambda b, o, l: (0, l)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bO, k), lambda b, o, l: (b, o, 0)),
+            pl.BlockSpec((1, bO, k), lambda b, o, l: (b, o, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Op, int(k)), jnp.float32),
+            jax.ShapeDtypeStruct((B, Op, int(k)), jnp.int32),
+        ],
+        interpret=interpret,
+    )(vals.astype(jnp.float32), gidx.reshape(1, Lp).astype(jnp.int32))
+    return s[:, :O], ix[:, :O]

@@ -167,6 +167,67 @@ def query_grating_pooled(
     return y[..., : out_shape[0], : out_shape[1], : out_shape[2]]
 
 
+def topk_readout(
+    vals: Array,
+    gidx: Array,
+    k: int,
+    *,
+    use_pallas: bool = True,
+    block_o: int | None = None,
+    block_l: int | None = None,
+) -> tuple[Array, Array]:
+    """Fused detection readout: reduce a flattened score axis to the K
+    best (score, global position) pairs per (row, kernel).
+
+    The serving epilogue of the streaming correlator: a window chunk's
+    correlation scores never leave the reduction as a volume — only the
+    tiny (B, O, K) running state does.  Selection order is total (score
+    descending, index ascending), so states merge associatively via
+    :func:`merge_topk` and chunked == one-shot exactly.
+
+    Args:
+      vals: (B, O, L) float32 scores (padding must carry −inf).
+      gidx: (L,) int32 global flat positions
+        (``kernel.TOPK_EMPTY_IDX`` marks padding).
+      k: state width.
+      use_pallas: route through the tiled Pallas readout kernel
+        (interpret mode off-TPU); False runs the same ``topk_select``
+        math as one dense jnp reduction — both are bitwise-equal.
+      block_o / block_l: Pallas tile overrides (None = kernel defaults
+        ``READOUT_BLOCK_O`` / ``READOUT_BLOCK_L``).
+
+    Returns (scores, index): (B, O, k) f32 / int32.
+    """
+    if use_pallas:
+        tiles = {}
+        if block_o is not None:
+            tiles["block_o"] = int(block_o)
+        if block_l is not None:
+            tiles["block_l"] = int(block_l)
+        return _kernel.topk_readout_pallas(
+            vals, gidx, k=int(k), interpret=_use_interpret(), **tiles
+        )
+    return _kernel.topk_select(
+        vals, jnp.broadcast_to(gidx, vals.shape).astype(jnp.int32), int(k)
+    )
+
+
+def merge_topk(
+    states: "list[tuple[Array, Array]]", k: int
+) -> tuple[Array, Array]:
+    """Associative merge of top-K running states.
+
+    ``states`` is a sequence of (scores, index) pairs, each
+    (..., K_i); the result is the exact top-k of the union — the merge
+    the engine applies across window chunks and across stream-cursor
+    segments (and the property the tests pin: any re-chunking or
+    permutation of the states yields a bitwise-identical result).
+    """
+    s = jnp.concatenate([st[0] for st in states], axis=-1)
+    i = jnp.concatenate([st[1] for st in states], axis=-1)
+    return _kernel.topk_select(s, i, int(k))
+
+
 def query_grating_pallas(
     x: Array,
     grating: Array,

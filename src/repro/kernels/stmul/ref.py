@@ -56,6 +56,35 @@ def spectral_mac_grouped_ref(
     return jnp.concatenate(outs, axis=0)
 
 
+def topk_readout_ref(
+    vals: Array, gidx: Array, k: int
+) -> tuple[Array, Array]:
+    """Sort-based oracle for the fused detection readout.
+
+    Selects, per leading row, the k best (score, position) pairs under
+    the total order *score descending, global index ascending* — the
+    tie-break that makes ``argmax``'s first-occurrence rule the k = 1
+    special case and the hierarchical (tiled / chunked / segmented)
+    reduction exact.  One ``lexsort`` per call: the validation path the
+    iterative-max kernel is pinned against.
+
+    Args:
+      vals: (..., L) float32 scores.
+      gidx: (L,) or (..., L) int32 global positions (unique per row).
+      k: survivors per row.
+
+    Returns (scores, index): (..., k).
+    """
+    gidx = jnp.broadcast_to(gidx, vals.shape)
+    # lexsort: last key is primary — ascending -score (= descending
+    # score), then ascending index among equal scores
+    order = jnp.lexsort((gidx, -vals), axis=-1)[..., : int(k)]
+    return (
+        jnp.take_along_axis(vals, order, axis=-1),
+        jnp.take_along_axis(gidx, order, axis=-1),
+    )
+
+
 def spectral_mac_ref_realimag(
     xr: Array, xi: Array, gr: Array, gi: Array
 ) -> tuple[Array, Array]:

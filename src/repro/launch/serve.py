@@ -54,7 +54,7 @@ Two serving modes, matching the paper's system and the LM zoo:
      per coherence-window chunk instead of one dispatch chain per
      tenant (the Morph-style heterogeneous-batch win; a per-tenant
      sequential path is kept as the benchmark baseline,
-     ``pooled=False``).  Two stream-centric refinements ride the
+     ``pooled=False``).  Three stream-centric refinements ride the
      pooled dispatch:
 
      - **clip-dedup** — requests whose clips hash content-equal share
@@ -66,8 +66,32 @@ Two serving modes, matching the paper's system and the LM zoo:
        count exceeds ``VideoSearchConfig.max_buffer_windows`` are fed
        through a :class:`~repro.core.spectral_conv.StreamCursor` in
        fixed-size T-chunks with kt−1-frame carry-over tails: clips
-       longer than one device buffer serve at constant peak memory,
-       exactly equal to the one-shot correlation.
+       longer than one device buffer serve at constant *input*-side
+       memory, exactly equal to the one-shot correlation.
+     - **fused detection readout** (``fused_readout``, default on) —
+       the *output* side goes constant-memory too: the per-tenant
+       peak / top-K (score, position) reduction is folded into the
+       overlap-save epilogue (``readout_k`` on the engine's streaming
+       drivers, backed by the tiled ``topk_readout`` kernel in
+       ``kernels/stmul``), so each window chunk collapses in-kernel to
+       a tiny ``(rows, K)`` running state and the stitched
+       ``(B, O, H', W', T')`` correlation volume — the old memory
+       ceiling at large tenant pools × long streams — never
+       materializes on the serving path.
+
+   **Per-path memory model** (what materializes where): the input side
+   holds one cursor segment (``max_buffer_windows`` coherence windows);
+   the output side holds, *stitched*, the full
+   ``rows × O × H' × W' × T'`` volume (grows linearly with stream
+   length and pool size — kept for ``return_volume=True`` and as the
+   fused path's equivalence oracle) vs, *fused*, one window chunk's
+   ``rows × O × H' × W' × (chunk·step)`` scores that die inside the
+   chunk reduction plus ``rows × O × K`` running states.  The running
+   states merge associatively across chunks and cursor segments under
+   a total selection order (score desc, earliest position first), so
+   the fused result is **bitwise** the stitched volume's max / argmax /
+   top-K — an arbitrarily long stream with hundreds of resident
+   kernels serves at O(chunk) memory end to end.
 
    `metrics()` reports cache hits/misses/evictions/bytes, per-tenant
    fidelity + device labels, pooled/sequential dispatch counters,
@@ -147,7 +171,12 @@ import numpy as np
 from repro import configs
 from repro.core import atomic, fidelity as fidelity_mod, optics
 from repro.core import hybrid, throughput
-from repro.core.engine import GratingCache, clip_key, clip_keys_for
+from repro.core.engine import (
+    TOPK_EMPTY_IDX,
+    GratingCache,
+    clip_key,
+    clip_keys_for,
+)
 from repro.core.fidelity import FidelityPipeline
 from repro.core.sthc import STHC, STHCConfig
 from repro.launch.resilience import (
@@ -219,11 +248,34 @@ class VideoSearchConfig:
         and query through these SLM / atomic-medium configurations
         unless they register with their own (``add_tenant(..., slm=...,
         atoms=...)``).  None = the library defaults.
+      fused_readout: fold the detection readout (peak / top-K score +
+        position per tenant kernel) into the engine's overlap-save
+        epilogue: every window chunk collapses in-kernel to a tiny
+        (rows, K) running state and the ``(B, O, H', W', T')``
+        correlation volume never materializes on the serving path —
+        peak output-side memory is O(chunk), independent of stream
+        length and tenant count.  Scores/positions are bitwise what the
+        stitched volume's max/argmax would report.  False = the
+        stitched-volume path (the equivalence oracle and the benchmark
+        baseline); ``search_batch(..., return_volume=True)`` also
+        forces it for that call.
+      readout_topk: detections reported per (stream, kernel) on the
+        fused path (adds ``topk_scores`` / ``topk_frames`` to results
+        when > 1).  Selection order is total — score descending, then
+        earliest flat position — so k = 1 is exactly the stitched
+        argmax.
+      readout_block_o / readout_block_l: fused-readout kernel tile
+        overrides (None = kernel defaults), the ``stmul_block_*``-style
+        knobs for the readout launch; swept in
+        ``benchmarks/kernels_bench.py``.  Only consulted under
+        ``use_pallas``.
       guard_scores: finite-check every request's correlation scores
         before delivery; a NaN/Inf row resolves that request with
         ``TenantQuarantined`` instead of poisoning the pooled batch.
         The check runs on the already-host-materialized peak arrays —
-        no extra device work.
+        no extra device work (on the fused path a NaN anywhere in a
+        row's never-materialized volume still propagates into its
+        peak slot, so quarantine semantics are unchanged).
       verify_gratings: checksum-verify every grating fetched from the
         shared cache against the sum recorded at insertion; a mismatch
         (bit rot, NaN corruption, eviction race) discards the entry and
@@ -241,6 +293,10 @@ class VideoSearchConfig:
     pooled_queries: bool = True
     dedup_clips: bool = True
     max_buffer_windows: int | None = None
+    fused_readout: bool = True
+    readout_topk: int = 1
+    readout_block_o: int | None = None
+    readout_block_l: int | None = None
     grating_dtype: str = "float32"
     slm: optics.SLMConfig | None = None
     atoms: atomic.AtomicConfig | None = None
@@ -329,9 +385,13 @@ class VideoSearchServer:
         self._lock = threading.Lock()
         self._pooled_dispatches = 0
         self._sequential_dispatches = 0
-        # batched detection readout for the pooled path: peak + argmax of
-        # every group in one jitted call (per-group eager readout is a
-        # dispatch + host sync per tenant — measurable at serving rates)
+        # the ONE stitched-volume detection readout, shared by every
+        # entry point that still materializes volumes (fused_readout
+        # off, or return_volume=True): peak + argmax of every group in
+        # one jitted call.  Routing both the pooled and the sequential
+        # path through this single helper keeps their scores
+        # bitwise-identical (regression-tested); the fused path computes
+        # the same reduction in-kernel instead.
         self._readout = jax.jit(
             lambda fmaps: tuple(
                 (
@@ -419,6 +479,12 @@ class VideoSearchServer:
                         keep_stacked=False,
                         grating_dtype=getattr(
                             self.cfg, "grating_dtype", "float32"
+                        ),
+                        readout_block_o=getattr(
+                            self.cfg, "readout_block_o", None
+                        ),
+                        readout_block_l=getattr(
+                            self.cfg, "readout_block_l", None
                         ),
                     ),
                     cache=self.cache,
@@ -583,16 +649,26 @@ class VideoSearchServer:
 
     # -- query -------------------------------------------------------------
 
-    def search(self, clip: jax.Array, tenant: str = "default") -> dict:
+    def search(
+        self,
+        clip: jax.Array,
+        tenant: str = "default",
+        return_volume: bool = False,
+    ) -> dict:
         """clip: (B, C, H, W, T) long stream.  Returns detections.
 
         Detection = per-kernel max correlation over space-time + argmax
-        frame (the photon-echo peak position in the window).
+        frame (the photon-echo peak position in the window).  One call
+        is exactly a one-request ``search_batch`` — single-request and
+        pooled entry points share every readout path, so scores are
+        bitwise-identical across them.
 
         Raises :class:`TenantQuarantined` if the signal-integrity guard
         rejected this request's scores (see ``search_batch``).
         """
-        (out,) = self.search_batch([(tenant, clip)])
+        (out,) = self.search_batch(
+            [(tenant, clip)], return_volume=return_volume
+        )
         if isinstance(out, ServingError):
             raise out
         return out
@@ -603,6 +679,7 @@ class VideoSearchServer:
         pooled: bool | None = None,
         clip_keys: Sequence[tuple | None] | None = None,
         dedup: bool | None = None,
+        return_volume: bool = False,
     ) -> list[dict]:
         """Schedule concurrent stream searches.
 
@@ -624,6 +701,16 @@ class VideoSearchServer:
         per tenant-group; the benchmark baseline).  Results come back
         in request order.
 
+        With ``cfg.fused_readout`` (default on) the detection readout
+        is fused into the engine's overlap-save epilogue: no
+        correlation volume materializes — each dispatch returns only
+        the per-(stream, kernel) top-K states, bitwise equal to
+        reducing the stitched volume.  ``return_volume=True`` forces
+        the stitched path for this call and adds each request's
+        ``(B, O, H', W', T')`` feature-map slice to its result dict
+        under ``"volume"`` (the equivalence oracle; also the debugging
+        escape hatch).
+
         With ``cfg.guard_scores`` (default on) each request's scores
         are finite-checked before delivery: a NaN/Inf row yields a
         :class:`TenantQuarantined` *instance* in that request's result
@@ -637,6 +724,10 @@ class VideoSearchServer:
             pooled = getattr(self.cfg, "pooled_queries", True)
         if dedup is None:
             dedup = getattr(self.cfg, "dedup_clips", True)
+        fused = (
+            getattr(self.cfg, "fused_readout", True) and not return_volume
+        )
+        topk = max(1, int(getattr(self.cfg, "readout_topk", 1)))
         groups: dict[tuple, list[int]] = {}
         with self._lock:  # snapshot: a racing remove_tenant can't break
             tenants = dict(self._tenants)
@@ -716,16 +807,32 @@ class VideoSearchServer:
                         group_keys.append(("stack",) + tuple(ks))
             if self.chaos is not None:  # chaos seam: pooled dispatch
                 self.chaos.on("dispatch", mode="pooled")
-            fmaps = self.sthc.engine.query_stream_many(
-                list(zip(gratings, stacks)),
-                clip_keys=group_keys,
-                dedup=dedup,
-            )
-            # detection readout rides the batch too: one jitted call for
-            # every group's peak + argmax instead of an eager op chain
-            # (with its host sync) per tenant
-            readouts = self._readout(tuple(fmaps))
-            readouts = jax.block_until_ready(readouts)
+            if fused:
+                # fused readout: the pooled dispatch itself returns the
+                # per-request top-K states — no volume, no separate
+                # readout launch
+                fmaps = None
+                dets = self.sthc.engine.query_stream_many(
+                    list(zip(gratings, stacks)),
+                    clip_keys=group_keys,
+                    dedup=dedup,
+                    readout_k=topk,
+                )
+                jax.block_until_ready(
+                    tuple((d.scores, d.index) for d in dets)
+                )
+            else:
+                dets = None
+                fmaps = self.sthc.engine.query_stream_many(
+                    list(zip(gratings, stacks)),
+                    clip_keys=group_keys,
+                    dedup=dedup,
+                )
+                # stitched detection readout rides the batch too: one
+                # jitted call for every group's peak + argmax instead of
+                # an eager op chain (with its host sync) per tenant
+                readouts = self._readout(tuple(fmaps))
+                readouts = jax.block_until_ready(readouts)
             dt = time.time() - t0
             with self._lock:
                 self._pooled_dispatches += 1
@@ -744,20 +851,29 @@ class VideoSearchServer:
             total_w = sum(weights) or 1
             busy = [dt * w / total_w for w in weights]
         else:
-            readouts = None
-            gratings, fmaps, plans, lat, busy = [], [], [], [], []
+            gratings, plans, lat, busy = [], [], [], []
+            fmaps = None if fused else []
+            dets = [] if fused else None
             for (key, idxs), ten, clips in zip(order, tens, stacks):
                 t0 = time.time()
                 grating = self._fetch_grating(key[0], ten)
                 if self.chaos is not None:  # chaos seam: sequential path
                     self.chaos.on("dispatch", mode="sequential")
-                fmap = ten.sthc.engine.query_stream(grating, clips)
-                fmap = jax.block_until_ready(fmap)  # honest serving latency
+                if fused:
+                    det = ten.sthc.engine.query_stream(
+                        grating, clips, readout_k=topk
+                    )
+                    jax.block_until_ready((det.scores, det.index))
+                    dets.append(det)
+                else:
+                    fmap = ten.sthc.engine.query_stream(grating, clips)
+                    # honest serving latency
+                    fmap = jax.block_until_ready(fmap)
+                    fmaps.append(fmap)
                 dt = time.time() - t0
                 with self._lock:
                     self._sequential_dispatches += 1
                 gratings.append(grating)
-                fmaps.append(fmap)
                 # the exact plan the correlation ran under (derived from
                 # the grating's recorded geometry, not the live cfg)
                 plans.append(
@@ -765,6 +881,13 @@ class VideoSearchServer:
                 )
                 lat.append(dt)
                 busy.append(dt)
+            if not fused:
+                # same shared readout helper as the pooled path (one
+                # jitted call; bitwise-identical scores across entry
+                # points), timed outside the per-group latency windows
+                readouts = jax.block_until_ready(
+                    self._readout(tuple(fmaps))
+                )
 
         results: list[dict | None] = [None] * len(requests)
         with self._lock:
@@ -787,28 +910,50 @@ class VideoSearchServer:
         guard = getattr(self.cfg, "guard_scores", True)
         for g_i, ((key, idxs), clips) in enumerate(zip(order, stacks)):
             tenant = key[0]
-            plan, fmap = plans[g_i], fmaps[g_i]
-            if readouts is not None:  # pooled: batched readout
+            plan = plans[g_i]
+            topk_s = topk_t = None
+            if fused:
+                # fused readout: slot 0 of the (B, O, K) state IS the
+                # stitched max/argmax (total selection order, k=1 ==
+                # first-occurrence argmax); tmod comes off the state's
+                # recorded valid-T extent — no volume anywhere
+                det = dets[g_i]
+                tmod = int(det.out_shape[-1])
+                # transfer the tiny (B, O, K) state once and slice on
+                # the host — a device-side [..., 0] would be one more
+                # dispatch per request on the hot path
+                state_s = np.asarray(det.scores)
+                state_i = np.asarray(det.index)
+                peak = state_s[..., 0]
+                idx = state_i[..., 0]
+                if topk > 1:
+                    topk_s = state_s
+                    ti = state_i
+                    # exhausted slots carry the empty sentinel: report
+                    # frame −1 rather than a garbage modulo
+                    topk_t = np.where(
+                        ti == TOPK_EMPTY_IDX, -1, ti % tmod
+                    )
+            else:
+                tmod = int(fmaps[g_i].shape[-1])
                 peak = np.asarray(readouts[g_i][0])
                 idx = np.asarray(readouts[g_i][1])
-            else:  # sequential baseline: eager per-group readout
-                flat = fmap.reshape(fmap.shape[0], fmap.shape[1], -1)
-                peak = np.asarray(jnp.max(flat, axis=-1))
-                idx = np.asarray(jnp.argmax(flat, axis=-1))
             if self.chaos is not None:  # chaos seam: detection readout
                 peak = self.chaos.on(
                     "readout",
-                    mode="pooled" if readouts is not None else "sequential",
+                    mode="pooled" if pooled else "sequential",
                     payload=peak,
                 )
-            t_idx = idx % fmap.shape[-1]
+            t_idx = idx % tmod
             b = 0
             for i in idxs:
                 nb = requests[i][1].shape[0]
                 scores = peak[b : b + nb]
                 # signal-integrity guard on the already-host-resident
                 # peaks: one NaN/Inf row quarantines one request, the
-                # rest of the pooled batch delivers untouched
+                # rest of the pooled batch delivers untouched (a NaN in
+                # a fused row propagates into its peak slot, so the
+                # check is path-independent)
                 if guard and not np.isfinite(scores).all():
                     with self._lock:
                         self._quarantined += 1
@@ -818,13 +963,19 @@ class VideoSearchServer:
                         tenant=tenant,
                     )
                 else:
-                    results[i] = {
+                    res = {
                         "tenant": tenant,
                         "scores": scores,
                         "peak_frame": t_idx[b : b + nb],
                         "latency_s": lat[g_i],
                         "windows": plan.n_blocks,
                     }
+                    if topk_s is not None:
+                        res["topk_scores"] = topk_s[b : b + nb]
+                        res["topk_frames"] = topk_t[b : b + nb]
+                    if return_volume:
+                        res["volume"] = fmaps[g_i][b : b + nb]
+                    results[i] = res
                 b += nb
         return results  # type: ignore[return-value]
 
