@@ -1,0 +1,141 @@
+#!/usr/bin/env python
+"""repro-lint CLI.
+
+Usage:
+    python scripts/lint.py [paths...]          # default: src benchmarks
+    python scripts/lint.py --format json --output ci-lint/report.json src benchmarks
+    python scripts/lint.py --changed           # only files changed vs origin/main
+    python scripts/lint.py --self-test         # seeded fixtures must fire every rule
+
+Exit status: 0 when no *unsuppressed* findings, 1 otherwise (and for a
+failed --self-test).  Pure stdlib -- no jax import, so --changed stays
+sub-second in the pre-push loop.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_REPO_ROOT, "src"))
+
+from repro.analysis import RULES, format_json, format_text, run_lint  # noqa: E402
+
+
+def _changed_files() -> list:
+    """Python files changed vs origin/main (falls back to main, then HEAD)."""
+    for base in ("origin/main", "main", "HEAD"):
+        try:
+            out = subprocess.run(
+                ["git", "diff", "--name-only", "--diff-filter=d", base, "--"],
+                cwd=_REPO_ROOT,
+                capture_output=True,
+                text=True,
+                check=True,
+            ).stdout
+        except (subprocess.CalledProcessError, OSError):
+            continue
+        files = [
+            os.path.join(_REPO_ROOT, line.strip())
+            for line in out.splitlines()
+            if line.strip().endswith(".py")
+        ]
+        return [f for f in files if os.path.exists(f) and _in_scope(f)]
+    return []
+
+
+def _in_scope(path: str) -> bool:
+    rel = os.path.relpath(path, _REPO_ROOT)
+    return rel.startswith(("src" + os.sep, "benchmarks" + os.sep))
+
+
+def _self_test() -> int:
+    """Run on the seeded-violation fixtures: every rule must fire there,
+    and every suppressed seed must stay suppressed.  Proves the CI gate
+    can actually fail."""
+    fixtures = os.path.join(_REPO_ROOT, "tests", "lint_fixtures")
+    if not os.path.isdir(fixtures):
+        print(f"repro-lint --self-test: fixture dir missing: {fixtures}")
+        return 1
+    findings = run_lint([fixtures], root=_REPO_ROOT)
+    active_rules = {f.rule for f in findings if not f.suppressed}
+    suppressed_rules = {f.rule for f in findings if f.suppressed}
+    missing_fire = sorted(set(RULES) - active_rules)
+    missing_suppress = sorted(set(RULES) - suppressed_rules)
+    ok = True
+    if missing_fire:
+        print(f"repro-lint --self-test: rules that did NOT fire: {missing_fire}")
+        ok = False
+    if missing_suppress:
+        print(
+            "repro-lint --self-test: rules without a working suppression "
+            f"seed: {missing_suppress}"
+        )
+        ok = False
+    print(
+        f"repro-lint --self-test: {len(active_rules)}/{len(RULES)} rules fired, "
+        f"{len(suppressed_rules)}/{len(RULES)} suppression seeds held "
+        f"({'OK' if ok else 'FAIL'})"
+    )
+    return 0 if ok else 1
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(prog="repro-lint", description=__doc__)
+    parser.add_argument("paths", nargs="*", help="files or directories (default: src benchmarks)")
+    parser.add_argument("--format", choices=("text", "json"), default="text")
+    parser.add_argument("--output", help="write the report to this file instead of stdout")
+    parser.add_argument(
+        "--changed",
+        action="store_true",
+        help="lint only in-scope .py files changed vs origin/main",
+    )
+    parser.add_argument(
+        "--self-test",
+        action="store_true",
+        help="lint the seeded-violation fixtures; fail unless every rule fires",
+    )
+    parser.add_argument(
+        "--show-suppressed",
+        action="store_true",
+        help="include suppressed findings in text output",
+    )
+    args = parser.parse_args(argv)
+
+    if args.self_test:
+        return _self_test()
+
+    if args.changed:
+        paths = _changed_files()
+        if not paths:
+            print("repro-lint: no changed in-scope files")
+            return 0
+    else:
+        paths = args.paths or [
+            os.path.join(_REPO_ROOT, "src"),
+            os.path.join(_REPO_ROOT, "benchmarks"),
+        ]
+
+    findings = run_lint(paths, root=_REPO_ROOT)
+    if args.format == "json":
+        report = format_json(findings)
+    else:
+        report = format_text(findings, verbose_suppressed=args.show_suppressed)
+    if args.output:
+        os.makedirs(os.path.dirname(args.output) or ".", exist_ok=True)
+        with open(args.output, "w", encoding="utf-8") as fh:
+            fh.write(report + "\n")
+        # A written artifact still prints the one-line summary.
+        active = sum(1 for f in findings if not f.suppressed)
+        sup = sum(1 for f in findings if f.suppressed)
+        print(f"repro-lint: {active} finding(s), {sup} suppressed -> {args.output}")
+    else:
+        print(report)
+    return 1 if any(not f.suppressed for f in findings) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,41 @@
+"""repro-lint: repo-aware static analysis for the STHC reproduction.
+
+Three checker families over the `src/` + `benchmarks/` trees:
+
+* trace safety (TS1xx)   -- retrace/recompile + host-sync hazards in
+                            jit/pallas code (`trace_safety`)
+* lock discipline (LD2xx) -- `# guarded-by:` field annotations verified
+                            against `with self.<lock>:` scopes + a global
+                            lock-acquisition-order (ABBA) check
+                            (`lock_discipline`)
+* kernel contracts (KC3xx) -- every Pallas kernel has a ref oracle + test,
+                            BlockSpec index-map arity matches the grid,
+                            grid divisions are padded-or-asserted
+                            (`kernel_contracts`)
+
+Pure stdlib (``ast`` + ``tokenize``) -- importing this package must never
+pull in jax, so `scripts/lint.py --changed` stays sub-second.
+"""
+
+from .framework import (  # noqa: F401
+    Finding,
+    SourceFile,
+    collect_files,
+    format_json,
+    format_text,
+    run_lint,
+)
+
+RULES = {
+    "TS101": "tracer-branch",
+    "TS102": "host-call-in-jit",
+    "TS103": "static-argnames-unhashable",
+    "TS104": "dot-accum-dtype",
+    "TS105": "bf16-accum-upcast",
+    "LD201": "unguarded-write",
+    "LD202": "unguarded-rmw",
+    "LD203": "lock-order-cycle",
+    "KC301": "kernel-oracle-missing",
+    "KC302": "blockspec-arity",
+    "KC303": "grid-pad-contract",
+}

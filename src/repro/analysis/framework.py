@@ -1,0 +1,344 @@
+"""Shared machinery for repro-lint checkers.
+
+A checker is a callable.  Two registration flavours:
+
+* ``@per_file_checker`` -- ``fn(src: SourceFile) -> list[Finding]``,
+  invoked once per parsed file.
+* ``@repo_checker`` -- ``fn(files: list[SourceFile]) -> list[Finding]``,
+  invoked once with every parsed file (cross-file rules: lock-order
+  graph, kernel/ref/test pairing).
+
+Suppressions are comment-driven and line-anchored:
+
+* ``# lint: disable=TS101`` (or ``disable=TS101,LD201`` or the rule's
+  long name, or ``all``) on the *finding's* line suppresses it there.
+* ``# lint: disable-file=TS101`` anywhere in a file suppresses the rule
+  for the whole file.
+
+Suppressed findings are still collected (reporters show them dimmed /
+``"suppressed": true``) but never affect the exit code.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import json
+import os
+import re
+import tokenize
+from typing import Callable, Dict, Iterable, List, Optional, Set
+
+# Long-name aliases accepted in suppression comments, filled by
+# __init__.RULES at import time via _register_aliases().
+_RULE_ALIASES: Dict[str, str] = {}
+
+
+def _register_aliases() -> None:
+    if _RULE_ALIASES:
+        return
+    from . import RULES
+
+    for rid, name in RULES.items():
+        _RULE_ALIASES[name] = rid
+        _RULE_ALIASES[rid] = rid
+
+
+@dataclasses.dataclass
+class Finding:
+    rule: str  # "TS101"
+    path: str  # repo-relative when possible
+    line: int
+    col: int
+    message: str
+    severity: str = "error"
+    suppressed: bool = False
+
+    @property
+    def name(self) -> str:
+        from . import RULES
+
+        return RULES.get(self.rule, self.rule)
+
+    def sort_key(self):
+        return (self.path, self.line, self.col, self.rule)
+
+
+_DISABLE_RE = re.compile(r"#\s*lint:\s*disable=([\w\-,\s]+)")
+_DISABLE_FILE_RE = re.compile(r"#\s*lint:\s*disable-file=([\w\-,\s]+)")
+
+
+class SourceFile:
+    """A parsed python file + its comments and suppression tables."""
+
+    def __init__(self, path: str, text: str, display_path: Optional[str] = None):
+        self.path = path
+        self.display_path = display_path or path
+        self.text = text
+        self.lines = text.splitlines()
+        self.tree = ast.parse(text, filename=path)
+        # line -> full comment text (including '#'); a line holds at most
+        # one comment token.
+        self.comments: Dict[int, str] = {}
+        self._scan_comments()
+        self.line_disabled: Dict[int, Set[str]] = {}
+        self.file_disabled: Set[str] = set()
+        self._scan_suppressions()
+
+    def _scan_comments(self) -> None:
+        try:
+            for tok in tokenize.generate_tokens(io.StringIO(self.text).readline):
+                if tok.type == tokenize.COMMENT:
+                    self.comments[tok.start[0]] = tok.string
+        except tokenize.TokenError:
+            pass  # partial comment table beats crashing the linter
+
+    def _scan_suppressions(self) -> None:
+        _register_aliases()
+        for line, comment in self.comments.items():
+            m = _DISABLE_RE.search(comment)
+            if m:
+                rules = self._parse_rule_list(m.group(1))
+                self.line_disabled.setdefault(line, set()).update(rules)
+            m = _DISABLE_FILE_RE.search(comment)
+            if m:
+                self.file_disabled.update(self._parse_rule_list(m.group(1)))
+
+    @staticmethod
+    def _parse_rule_list(raw: str) -> Set[str]:
+        out: Set[str] = set()
+        for part in raw.split(","):
+            part = part.strip()
+            if not part:
+                continue
+            if part.lower() == "all":
+                out.add("all")
+            else:
+                out.add(_RULE_ALIASES.get(part, part))
+        return out
+
+    def is_suppressed(self, rule: str, line: int) -> bool:
+        if "all" in self.file_disabled or rule in self.file_disabled:
+            return True
+        disabled = self.line_disabled.get(line, ())
+        return "all" in disabled or rule in disabled
+
+    def comment_on(self, line: int) -> str:
+        return self.comments.get(line, "")
+
+
+PerFileChecker = Callable[[SourceFile], List[Finding]]
+RepoChecker = Callable[[List[SourceFile]], List[Finding]]
+
+_PER_FILE: List[PerFileChecker] = []
+_REPO: List[RepoChecker] = []
+
+
+def per_file_checker(fn: PerFileChecker) -> PerFileChecker:
+    _PER_FILE.append(fn)
+    return fn
+
+
+def repo_checker(fn: RepoChecker) -> RepoChecker:
+    _REPO.append(fn)
+    return fn
+
+
+def _load_checkers() -> None:
+    # Importing the modules registers their checkers.
+    from . import kernel_contracts, lock_discipline, trace_safety  # noqa: F401
+
+
+def collect_files(paths: Iterable[str], root: Optional[str] = None) -> List[str]:
+    """Expand files/directories into a sorted list of .py files."""
+    out: List[str] = []
+    for p in paths:
+        if os.path.isdir(p):
+            for dirpath, dirnames, filenames in os.walk(p):
+                dirnames[:] = sorted(
+                    d for d in dirnames if not d.startswith(".") and d != "__pycache__"
+                )
+                for fn in sorted(filenames):
+                    if fn.endswith(".py"):
+                        out.append(os.path.join(dirpath, fn))
+        elif p.endswith(".py"):
+            out.append(p)
+    # De-dup, keep deterministic order.
+    seen: Set[str] = set()
+    uniq = []
+    for p in out:
+        ap = os.path.abspath(p)
+        if ap not in seen:
+            seen.add(ap)
+            uniq.append(p)
+    return uniq
+
+
+def parse_files(file_paths: Iterable[str], root: Optional[str] = None) -> List[SourceFile]:
+    root = root or os.getcwd()
+    files: List[SourceFile] = []
+    for fp in file_paths:
+        try:
+            with open(fp, "r", encoding="utf-8") as fh:
+                text = fh.read()
+        except OSError:
+            continue
+        display = os.path.relpath(fp, root)
+        if display.startswith(".."):
+            display = fp
+        try:
+            files.append(SourceFile(fp, text, display_path=display))
+        except SyntaxError as exc:
+            files.append(_syntax_error_stub(fp, display, exc))
+    return files
+
+
+class _SyntaxErrorFile(SourceFile):
+    def __init__(self, path, display, exc):  # pylint: disable=super-init-not-called
+        self.path = path
+        self.display_path = display
+        self.text = ""
+        self.lines = []
+        self.tree = ast.Module(body=[], type_ignores=[])
+        self.comments = {}
+        self.line_disabled = {}
+        self.file_disabled = set()
+        self.error = Finding(
+            rule="E000",
+            path=display,
+            line=exc.lineno or 1,
+            col=exc.offset or 0,
+            message=f"syntax error: {exc.msg}",
+        )
+
+
+def _syntax_error_stub(path: str, display: str, exc: SyntaxError) -> SourceFile:
+    return _SyntaxErrorFile(path, display, exc)
+
+
+def run_lint(
+    paths: Iterable[str],
+    root: Optional[str] = None,
+    rules: Optional[Set[str]] = None,
+) -> List[Finding]:
+    """Lint ``paths`` (files or directories); returns all findings,
+    suppressed ones flagged."""
+    _load_checkers()
+    file_paths = collect_files(paths, root=root)
+    files = parse_files(file_paths, root=root)
+    findings: List[Finding] = []
+    for src in files:
+        err = getattr(src, "error", None)
+        if err is not None:
+            findings.append(err)
+            continue
+        for checker in _PER_FILE:
+            findings.extend(checker(src))
+    for checker in _REPO:
+        findings.extend(checker([f for f in files if getattr(f, "error", None) is None]))
+    by_path = {f.path: f for f in files}
+    for finding in findings:
+        src = _find_src(by_path, files, finding.path)
+        if src is not None and src.is_suppressed(finding.rule, finding.line):
+            finding.suppressed = True
+        if rules is not None and finding.rule not in rules:
+            finding.suppressed = True
+    findings.sort(key=Finding.sort_key)
+    return findings
+
+
+def _find_src(by_path, files, path):
+    if path in by_path:
+        return by_path[path]
+    for f in files:
+        if f.display_path == path:
+            return f
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Reporters
+# ---------------------------------------------------------------------------
+
+
+def format_text(findings: List[Finding], verbose_suppressed: bool = False) -> str:
+    lines = []
+    active = [f for f in findings if not f.suppressed]
+    shown = findings if verbose_suppressed else active
+    for f in shown:
+        tag = " (suppressed)" if f.suppressed else ""
+        lines.append(
+            f"{f.path}:{f.line}:{f.col}: {f.rule} [{f.name}] {f.message}{tag}"
+        )
+    n_sup = len(findings) - len(active)
+    lines.append(
+        f"repro-lint: {len(active)} finding(s), {n_sup} suppressed"
+    )
+    return "\n".join(lines)
+
+
+def format_json(findings: List[Finding]) -> str:
+    payload = {
+        "tool": "repro-lint",
+        "findings": [
+            {
+                "rule": f.rule,
+                "name": f.name,
+                "severity": f.severity,
+                "path": f.path,
+                "line": f.line,
+                "col": f.col,
+                "message": f.message,
+                "suppressed": f.suppressed,
+            }
+            for f in findings
+        ],
+        "counts": {
+            "active": sum(1 for f in findings if not f.suppressed),
+            "suppressed": sum(1 for f in findings if f.suppressed),
+        },
+    }
+    return json.dumps(payload, indent=2, sort_keys=True)
+
+
+# ---------------------------------------------------------------------------
+# Small AST helpers shared by checkers
+# ---------------------------------------------------------------------------
+
+
+def dotted_name(node: ast.AST) -> str:
+    """'jax.jit' for Attribute(Name('jax'), 'jit'); '' when not a plain
+    dotted path."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def call_name(call: ast.Call) -> str:
+    return dotted_name(call.func)
+
+
+def const_str_tuple(node: ast.AST) -> List[str]:
+    """Extract ('a', 'b') / ['a'] / 'a' literals used for static_argnames."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        out = []
+        for elt in node.elts:
+            if isinstance(elt, ast.Constant) and isinstance(elt.value, str):
+                out.append(elt.value)
+        return out
+    return []
+
+
+def keyword_arg(call: ast.Call, name: str) -> Optional[ast.AST]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None

@@ -1,0 +1,373 @@
+"""Pallas kernel-contract checkers (KC3xx).
+
+KC301 kernel-oracle-missing
+    Every ``kernels/<name>/kernel.py`` must ship a sibling ``ref.py``
+    oracle *and* at least one test file that imports both the
+    implementation (``ops``/``kernel``) and the ``ref`` oracle from
+    ``repro.kernels.<name>`` -- the equivalence test is the kernel's
+    correctness contract.
+
+KC302 blockspec-arity
+    Every ``pl.BlockSpec`` index-map lambda must declare exactly one
+    parameter per grid axis (plus the scalar-prefetch operands when the
+    launch uses ``pltpu.PrefetchScalarGridSpec(num_scalar_prefetch=N)``).
+    A mismatched arity mis-tiles silently in interpret mode and fails
+    cryptically on hardware.
+
+KC303 grid-pad-contract
+    Each ``A // B`` term in a launch grid must divide exactly: the
+    dividend has to be pad-derived (assigned from a ``pad_to``-style
+    call, a ``% ``-arithmetic expression, or a name carrying ``pad``),
+    or the function must carry an ``assert A % B == 0``.  Otherwise a
+    tile-size knob that does not divide the padded shape silently drops
+    the remainder rows.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+import re
+from typing import Dict, List, Optional, Set, Tuple
+
+from .framework import (
+    Finding,
+    SourceFile,
+    call_name,
+    keyword_arg,
+    per_file_checker,
+    repo_checker,
+)
+
+_LAUNCH_NAMES = {"pl.pallas_call", "pallas_call", "pallas.pallas_call"}
+_GRID_SPEC_NAMES = {
+    "pltpu.PrefetchScalarGridSpec",
+    "PrefetchScalarGridSpec",
+    "plgpu.PrefetchScalarGridSpec",
+}
+_PAD_NAME_RE = re.compile(r"pad", re.IGNORECASE)
+
+
+# ---------------------------------------------------------------------------
+# KC301 -- kernel / ref / test triple
+# ---------------------------------------------------------------------------
+
+
+@repo_checker
+def check_kernel_oracles(files: List[SourceFile]) -> List[Finding]:
+    findings: List[Finding] = []
+    for src in files:
+        norm = src.path.replace(os.sep, "/")
+        if not norm.endswith("/kernel.py"):
+            continue
+        kdir = os.path.dirname(src.path)
+        parent = os.path.basename(os.path.dirname(kdir))
+        if parent != "kernels":
+            continue
+        name = os.path.basename(kdir)
+        if not os.path.exists(os.path.join(kdir, "ref.py")):
+            findings.append(
+                Finding(
+                    rule="KC301",
+                    path=src.display_path,
+                    line=1,
+                    col=0,
+                    message=(
+                        f"kernels/{name}/kernel.py has no sibling ref.py "
+                        "oracle; every Pallas kernel needs a pure-jnp "
+                        "reference implementation"
+                    ),
+                )
+            )
+        tests_dir = _find_tests_dir(kdir)
+        if tests_dir is None:
+            continue
+        if not _tests_reference_kernel(tests_dir, name):
+            findings.append(
+                Finding(
+                    rule="KC301",
+                    path=src.display_path,
+                    line=1,
+                    col=0,
+                    message=(
+                        f"no test under {os.path.basename(tests_dir)}/ imports "
+                        f"both the implementation and ref of kernels.{name}; "
+                        "the oracle-equivalence test is the kernel's contract"
+                    ),
+                )
+            )
+    return findings
+
+
+def _find_tests_dir(start: str) -> Optional[str]:
+    d = os.path.abspath(start)
+    for _ in range(8):
+        cand = os.path.join(d, "tests")
+        if os.path.isdir(cand):
+            return cand
+        nxt = os.path.dirname(d)
+        if nxt == d:
+            break
+        d = nxt
+    return None
+
+
+def _tests_reference_kernel(tests_dir: str, name: str) -> bool:
+    marker = f"kernels.{name}"
+    for dirpath, dirnames, filenames in os.walk(tests_dir):
+        dirnames[:] = [d for d in dirnames if not d.startswith(".")]
+        for fn in filenames:
+            if not fn.endswith(".py"):
+                continue
+            try:
+                with open(os.path.join(dirpath, fn), "r", encoding="utf-8") as fh:
+                    text = fh.read()
+            except OSError:
+                continue
+            if marker not in text:
+                continue
+            has_ref, has_impl = _imports_of(text, marker)
+            if has_ref and has_impl:
+                return True
+    return False
+
+
+def _imports_of(text: str, marker: str) -> Tuple[bool, bool]:
+    try:
+        tree = ast.parse(text)
+    except SyntaxError:
+        return False, False
+    has_ref = has_impl = False
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom) and node.module and marker in node.module:
+            names = {a.name.split(".")[0] for a in node.names}
+            tail = node.module.rsplit(".", 1)[-1]
+            if "ref" in names or tail == "ref":
+                has_ref = True
+            if names & {"ops", "kernel"} or tail in ("ops", "kernel"):
+                has_impl = True
+        elif isinstance(node, ast.Import):
+            for a in node.names:
+                if marker in a.name:
+                    tail = a.name.rsplit(".", 1)[-1]
+                    if tail == "ref":
+                        has_ref = True
+                    if tail in ("ops", "kernel"):
+                        has_impl = True
+    return has_ref, has_impl
+
+
+# ---------------------------------------------------------------------------
+# KC302 / KC303 -- per-launch checks
+# ---------------------------------------------------------------------------
+
+
+@per_file_checker
+def check_launch_contracts(src: SourceFile) -> List[Finding]:
+    findings: List[Finding] = []
+    for fn in _all_functions(src.tree):
+        assigns = _assignment_map(fn)
+        asserted = _asserted_divisible(fn)
+        for call in ast.walk(fn):
+            if not isinstance(call, ast.Call):
+                continue
+            name = call_name(call)
+            if name in _GRID_SPEC_NAMES:
+                _check_one_launch(
+                    src, call, assigns, asserted, findings, is_grid_spec=True
+                )
+            elif name in _LAUNCH_NAMES and keyword_arg(call, "grid") is not None:
+                _check_one_launch(
+                    src, call, assigns, asserted, findings, is_grid_spec=False
+                )
+    return findings
+
+
+def _all_functions(tree: ast.Module):
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def _assignment_map(fn) -> Dict[str, ast.AST]:
+    """name -> RHS expression (tuple targets matched element-wise when
+    possible, otherwise the whole RHS)."""
+    out: Dict[str, ast.AST] = {}
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                _map_target(tgt, node.value, out)
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            _map_target(node.target, node.value, out)
+    return out
+
+
+def _map_target(tgt, value, out: Dict[str, ast.AST]) -> None:
+    if isinstance(tgt, ast.Name):
+        out[tgt.id] = value
+    elif isinstance(tgt, (ast.Tuple, ast.List)):
+        if isinstance(value, (ast.Tuple, ast.List)) and len(value.elts) == len(tgt.elts):
+            for t, v in zip(tgt.elts, value.elts):
+                _map_target(t, v, out)
+        else:
+            for t in tgt.elts:
+                if isinstance(t, ast.Name):
+                    out[t.id] = value
+
+
+def _asserted_divisible(fn) -> Set[str]:
+    """Unparsed dividends appearing in `assert X % Y == 0` statements."""
+    out: Set[str] = set()
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Assert):
+            continue
+        for cmp_node in ast.walk(node.test):
+            if (
+                isinstance(cmp_node, ast.Compare)
+                and len(cmp_node.ops) == 1
+                and isinstance(cmp_node.ops[0], ast.Eq)
+                and isinstance(cmp_node.left, ast.BinOp)
+                and isinstance(cmp_node.left.op, ast.Mod)
+                and isinstance(cmp_node.comparators[0], ast.Constant)
+                and cmp_node.comparators[0].value == 0
+            ):
+                out.add(ast.unparse(cmp_node.left.left))
+    return out
+
+
+def _check_one_launch(
+    src: SourceFile,
+    call: ast.Call,
+    assigns: Dict[str, ast.AST],
+    asserted: Set[str],
+    findings: List[Finding],
+    is_grid_spec: bool,
+) -> None:
+    grid_expr = keyword_arg(call, "grid")
+    if isinstance(grid_expr, ast.Name):
+        grid_expr = assigns.get(grid_expr.id)
+    if not isinstance(grid_expr, (ast.Tuple, ast.List)):
+        return
+    n_axes = len(grid_expr.elts)
+
+    # KC302: index-map lambda arity.
+    extra = 0
+    if is_grid_spec:
+        nsp = keyword_arg(call, "num_scalar_prefetch")
+        if isinstance(nsp, ast.Constant) and isinstance(nsp.value, int):
+            extra = nsp.value
+    expected = n_axes + extra
+    for spec in _block_specs(call, assigns):
+        lam = _index_map_lambda(spec)
+        if lam is None:
+            continue
+        arity = len(lam.args.posonlyargs) + len(lam.args.args)
+        if lam.args.vararg is not None:
+            continue  # *args absorbs any grid rank
+        if arity != expected:
+            findings.append(
+                Finding(
+                    rule="KC302",
+                    path=src.display_path,
+                    line=lam.lineno,
+                    col=lam.col_offset,
+                    message=(
+                        f"BlockSpec index map takes {arity} grid argument(s) "
+                        f"but the launch grid has {n_axes} axis(es)"
+                        + (f" + {extra} scalar-prefetch operand(s)" if extra else "")
+                    ),
+                )
+            )
+
+    # KC303: every `A // B` grid term must be pad-derived or asserted.
+    for elt in grid_expr.elts:
+        term = elt
+        for _ in range(3):  # normalize Name -> its assignment
+            if isinstance(term, ast.Name) and term.id in assigns:
+                term = assigns[term.id]
+            else:
+                break
+        if not (isinstance(term, ast.BinOp) and isinstance(term.op, ast.FloorDiv)):
+            continue
+        dividend = term.left
+        if _is_pad_derived(dividend, assigns, set(), depth=6):
+            continue
+        if ast.unparse(dividend) in asserted:
+            continue
+        findings.append(
+            Finding(
+                rule="KC303",
+                path=src.display_path,
+                line=elt.lineno,
+                col=elt.col_offset,
+                message=(
+                    f"grid term `{ast.unparse(elt)}` floor-divides "
+                    f"`{ast.unparse(dividend)}` which is neither pad-derived "
+                    "nor asserted divisible; a non-dividing tile size drops "
+                    "remainder rows"
+                ),
+            )
+        )
+
+
+def _block_specs(call: ast.Call, assigns: Dict[str, ast.AST]):
+    """All BlockSpec constructor calls belonging to this launch."""
+    roots: List[ast.AST] = [call]
+    for key in ("in_specs", "out_specs", "index_map", "grid_spec"):
+        v = keyword_arg(call, key)
+        if isinstance(v, ast.Name) and v.id in assigns:
+            roots.append(assigns[v.id])
+    seen: Set[int] = set()
+    for root in roots:
+        for node in ast.walk(root):
+            if (
+                isinstance(node, ast.Call)
+                and call_name(node).rsplit(".", 1)[-1] == "BlockSpec"
+                and id(node) not in seen
+            ):
+                seen.add(id(node))
+                yield node
+
+
+def _index_map_lambda(spec: ast.Call) -> Optional[ast.Lambda]:
+    v = keyword_arg(spec, "index_map")
+    if isinstance(v, ast.Lambda):
+        return v
+    for arg in spec.args:
+        if isinstance(arg, ast.Lambda):
+            return arg
+    return None
+
+
+def _is_pad_derived(
+    expr: ast.AST, assigns: Dict[str, ast.AST], visited: Set[str], depth: int
+) -> bool:
+    if depth <= 0 or expr is None:
+        return False
+    if isinstance(expr, ast.Name):
+        if _PAD_NAME_RE.search(expr.id):
+            return True
+        if expr.id in visited or expr.id not in assigns:
+            return False
+        visited.add(expr.id)
+        return _is_pad_derived(assigns[expr.id], assigns, visited, depth - 1)
+    if isinstance(expr, ast.BinOp):
+        if isinstance(expr.op, ast.Mod):
+            return True
+        return _is_pad_derived(
+            expr.left, assigns, visited, depth - 1
+        ) or _is_pad_derived(expr.right, assigns, visited, depth - 1)
+    if isinstance(expr, ast.Call):
+        name = call_name(expr)
+        if name and _PAD_NAME_RE.search(name.rsplit(".", 1)[-1]):
+            return True
+        return any(
+            _is_pad_derived(a, assigns, visited, depth - 1) for a in expr.args
+        )
+    if isinstance(expr, ast.Attribute):
+        return _is_pad_derived(expr.value, assigns, visited, depth - 1)
+    if isinstance(expr, ast.Subscript):
+        return _is_pad_derived(expr.value, assigns, visited, depth - 1)
+    if isinstance(expr, (ast.Tuple, ast.List)):
+        return any(_is_pad_derived(e, assigns, visited, depth - 1) for e in expr.elts)
+    return False

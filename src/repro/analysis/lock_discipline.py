@@ -1,0 +1,461 @@
+"""Lock-discipline checkers (LD2xx).
+
+The serving runtime (`launch/serve.py`, `launch/resilience.py`,
+`core/engine.py` caches, `distributed/fault.py`) shares mutable state
+across the submitter threads, the batcher thread and the watchdog.  The
+locking convention is made machine-checkable with two comment
+annotations:
+
+* ``self._hits = 0  # guarded-by: _lock`` on the field's ``__init__``
+  assignment declares that every later write to ``self._hits`` must
+  happen lexically inside ``with self._lock:``.
+* ``def _evict_locked(self):  # holds-lock: _lock`` on a ``def`` line
+  declares a private helper whose *callers* hold the lock (the body is
+  checked as if the lock were held).  A ``@locked("_lock")`` decorator is
+  recognized as the same declaration.
+
+LD201 unguarded-write
+    Plain assignment to a guarded field outside the guarding lock.
+
+LD202 unguarded-rmw
+    Compound read-modify-write (``+=`` or ``self.x = self.x + ...``)
+    outside the guarding lock -- the racier variant: lost updates.
+
+LD203 lock-order-cycle
+    Global lock-acquisition-order check: every lexical ``with
+    self.<lockA>:`` enclosing an acquisition of ``<lockB>`` (directly, or
+    transitively through an intra-class method call or a call on an
+    attribute whose class is known) adds the edge ``A -> B``.  A cycle in
+    the resulting graph is a potential ABBA deadlock.
+
+Annotation hygiene: a ``guarded-by``/``holds-lock`` naming an attribute
+that is not a recognized lock of the class is itself reported (LD201) so
+typos can't silently disable checking.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, List, Optional, Set, Tuple
+
+from .framework import (
+    Finding,
+    SourceFile,
+    call_name,
+    repo_checker,
+)
+
+_GUARDED_RE = re.compile(r"guarded-by:\s*([A-Za-z_][\w]*)")
+_HOLDS_RE = re.compile(r"holds-lock:\s*([A-Za-z_][\w,\s]*)")
+_LOCK_CTORS = {"Lock", "RLock", "Condition"}
+
+
+class _ClassInfo:
+    def __init__(self, name: str, node: ast.ClassDef, src: SourceFile):
+        self.name = name
+        self.node = node
+        self.src = src
+        self.locks: Set[str] = set()  # attr names holding Lock/RLock/Condition
+        self.guarded: Dict[str, str] = {}  # field attr -> lock attr
+        self.guard_lines: Dict[str, int] = {}
+        self.attr_classes: Dict[str, str] = {}  # attr name -> class name
+        self.methods: Dict[str, ast.FunctionDef] = {}
+        self.holds: Dict[str, Set[str]] = {}  # method -> lock attrs held on entry
+        for child in node.body:
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.methods[child.name] = child
+
+    def lock_fq(self, attr: str) -> str:
+        return f"{self.name}.{attr}"
+
+
+def _is_lock_ctor(value: ast.AST) -> bool:
+    if isinstance(value, ast.Call):
+        name = call_name(value)
+        return bool(name) and name.rsplit(".", 1)[-1] in _LOCK_CTORS
+    return False
+
+
+def _self_attr(node: ast.AST) -> Optional[str]:
+    if (
+        isinstance(node, ast.Attribute)
+        and isinstance(node.value, ast.Name)
+        and node.value.id == "self"
+    ):
+        return node.attr
+    return None
+
+
+def _collect_classes(files: List[SourceFile]) -> Dict[str, _ClassInfo]:
+    classes: Dict[str, _ClassInfo] = {}
+    for src in files:
+        for node in ast.walk(src.tree):
+            if isinstance(node, ast.ClassDef):
+                classes.setdefault(node.name, _ClassInfo(node.name, node, src))
+    return classes
+
+
+def _scan_class(info: _ClassInfo, classes: Dict[str, _ClassInfo], findings: List[Finding]) -> None:
+    src = info.src
+    # Field annotations + lock/attr-class discovery over the whole class
+    # body (fields are overwhelmingly declared in __init__, but reset()
+    # style declarations count too).
+    for meth in info.methods.values():
+        # `self.x = param` where __init__ annotates `param: KnownClass`
+        # resolves the attribute's class even without a constructor call.
+        param_types: Dict[str, str] = {}
+        for p in meth.args.posonlyargs + meth.args.args + meth.args.kwonlyargs:
+            if p.annotation is not None:
+                for node in ast.walk(p.annotation):
+                    if isinstance(node, ast.Name) and node.id in classes:
+                        param_types[p.arg] = node.id
+                        break
+        for stmt in ast.walk(meth):
+            if not isinstance(stmt, (ast.Assign, ast.AnnAssign)):
+                continue
+            targets = stmt.targets if isinstance(stmt, ast.Assign) else [stmt.target]
+            value = stmt.value
+            for tgt in targets:
+                attr = _self_attr(tgt)
+                if attr is None:
+                    continue
+                if value is not None and _is_lock_ctor(value):
+                    info.locks.add(attr)
+                if value is not None:
+                    cls = _ctor_class(value, classes)
+                    if cls is None:
+                        for node in ast.walk(value):
+                            if isinstance(node, ast.Name) and node.id in param_types:
+                                cls = param_types[node.id]
+                                break
+                    if cls is not None:
+                        info.attr_classes[attr] = cls
+                comment = src.comment_on(stmt.lineno)
+                m = _GUARDED_RE.search(comment)
+                if m and meth.name == "__init__":
+                    info.guarded[attr] = m.group(1)
+                    info.guard_lines[attr] = stmt.lineno
+    # holds-lock annotations: def-line comment or @locked("...") decorator.
+    for meth in info.methods.values():
+        held: Set[str] = set()
+        comment = src.comment_on(meth.lineno)
+        m = _HOLDS_RE.search(comment)
+        if m:
+            held |= {p.strip() for p in m.group(1).split(",") if p.strip()}
+        for dec in meth.decorator_list:
+            if (
+                isinstance(dec, ast.Call)
+                and call_name(dec).rsplit(".", 1)[-1] == "locked"
+                and dec.args
+                and isinstance(dec.args[0], ast.Constant)
+            ):
+                held.add(str(dec.args[0].value))
+        if held:
+            info.holds[meth.name] = held
+    # Annotation hygiene.
+    for field, lock in info.guarded.items():
+        if lock not in info.locks:
+            findings.append(
+                Finding(
+                    rule="LD201",
+                    path=src.display_path,
+                    line=info.guard_lines.get(field, info.node.lineno),
+                    col=0,
+                    message=(
+                        f"{info.name}.{field} is annotated guarded-by: {lock}, "
+                        f"but {info.name} has no lock attribute '{lock}'"
+                    ),
+                )
+            )
+    for meth_name, held in info.holds.items():
+        for lock in held:
+            if lock not in info.locks:
+                findings.append(
+                    Finding(
+                        rule="LD201",
+                        path=src.display_path,
+                        line=info.methods[meth_name].lineno,
+                        col=0,
+                        message=(
+                            f"{info.name}.{meth_name} is annotated holds-lock: "
+                            f"{lock}, but {info.name} has no lock attribute "
+                            f"'{lock}'"
+                        ),
+                    )
+                )
+
+
+def _ctor_class(value: ast.AST, classes: Dict[str, _ClassInfo]) -> Optional[str]:
+    """Class name constructed anywhere inside `value` (handles
+    `x if x is not None else GratingCache()` and `x or Cls()` forms)."""
+    for node in ast.walk(value):
+        if isinstance(node, ast.Call):
+            name = call_name(node)
+            tail = name.rsplit(".", 1)[-1] if name else ""
+            if tail in classes:
+                return tail
+    return None
+
+
+class _Event:
+    __slots__ = ("kind", "data", "held", "line")
+
+    def __init__(self, kind: str, data, held: Set[str], line: int):
+        self.kind = kind  # 'acquire' | 'call_self' | 'call_attr'
+        self.data = data
+        self.held = set(held)
+        self.line = line
+
+
+def _method_events(
+    info: _ClassInfo, meth: ast.FunctionDef, findings: List[Finding]
+) -> List[_Event]:
+    """Walk one method: emit LD201/LD202 write findings and collect
+    acquire/call events (with the lexically-held lock set) for LD203."""
+    events: List[_Event] = []
+    src = info.src
+    entry_held = set(info.holds.get(meth.name, ()))
+    check_writes = meth.name != "__init__"
+
+    def scan_calls(node: ast.AST, held: Set[str]) -> None:
+        for call in ast.walk(node):
+            if not isinstance(call, ast.Call):
+                continue
+            if isinstance(call.func, ast.Attribute):
+                recv = call.func.value
+                attr = _self_attr(call.func)
+                if attr is not None and attr in info.methods:
+                    events.append(_Event("call_self", attr, held, call.lineno))
+                    continue
+                recv_attr = _self_attr(recv)
+                if recv_attr is not None and recv_attr in info.attr_classes:
+                    events.append(
+                        _Event(
+                            "call_attr",
+                            (info.attr_classes[recv_attr], call.func.attr),
+                            held,
+                            call.lineno,
+                        )
+                    )
+            elif isinstance(call.func, ast.Name) and call.func.id in info.methods:
+                # Rare: unbound intra-class call.
+                events.append(_Event("call_self", call.func.id, held, call.lineno))
+
+    def check_write(stmt, held: Set[str]) -> None:
+        if not check_writes:
+            return
+        if isinstance(stmt, ast.Delete):
+            targets = [(t, True) for t in stmt.targets]
+        elif isinstance(stmt, ast.AugAssign):
+            targets = [(stmt.target, True)]
+        elif isinstance(stmt, (ast.Assign, ast.AnnAssign)):
+            tgts = stmt.targets if isinstance(stmt, ast.Assign) else [stmt.target]
+            value = stmt.value
+            targets = []
+            for t in tgts:
+                attr = _self_attr(t)
+                rmw = False
+                if attr is not None and value is not None:
+                    for node in ast.walk(value):
+                        if _self_attr(node) == attr:
+                            rmw = True
+                            break
+                targets.append((t, rmw))
+        else:
+            return
+        for tgt, rmw in targets:
+            # `self.x = ...` rebinds AND `self.x[k] = ...` item mutations:
+            # both race without the guarding lock.
+            item_write = False
+            if isinstance(tgt, ast.Subscript):
+                tgt = tgt.value
+                item_write = True
+                rmw = True  # container mutation is read-modify-write
+            attr = _self_attr(tgt)
+            if attr is None or attr not in info.guarded:
+                continue
+            lock = info.guarded[attr]
+            if lock in held:
+                continue
+            rule = "LD202" if rmw else "LD201"
+            kind = (
+                "item write"
+                if item_write
+                else "compound read-modify-write" if rmw else "write"
+            )
+            findings.append(
+                Finding(
+                    rule=rule,
+                    path=src.display_path,
+                    line=stmt.lineno,
+                    col=stmt.col_offset,
+                    message=(
+                        f"{kind} to {info.name}.{attr} (guarded-by: {lock}) "
+                        f"outside `with self.{lock}:` in {meth.name}()"
+                    ),
+                )
+            )
+
+    def walk(stmts, held: Set[str]) -> None:
+        for stmt in stmts:
+            if isinstance(stmt, ast.With):
+                new_held = set(held)
+                for item in stmt.items:
+                    attr = _self_attr(item.context_expr)
+                    if attr is not None and attr in info.locks:
+                        events.append(
+                            _Event("acquire", attr, held, item.context_expr.lineno)
+                        )
+                        new_held.add(attr)
+                    else:
+                        scan_calls(item.context_expr, held)
+                walk(stmt.body, new_held)
+            elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                # Nested defs run later (often on another thread); their
+                # bodies are not covered by the current lock scope.
+                walk(stmt.body, set(info.holds.get(stmt.name, ())))
+            elif isinstance(stmt, ast.If):
+                scan_calls(stmt.test, held)
+                walk(stmt.body, held)
+                walk(stmt.orelse, held)
+            elif isinstance(stmt, ast.While):
+                scan_calls(stmt.test, held)
+                walk(stmt.body, held)
+                walk(stmt.orelse, held)
+            elif isinstance(stmt, ast.For):
+                scan_calls(stmt.iter, held)
+                walk(stmt.body, held)
+                walk(stmt.orelse, held)
+            elif isinstance(stmt, ast.Try):
+                walk(stmt.body, held)
+                for handler in stmt.handlers:
+                    walk(handler.body, held)
+                walk(stmt.orelse, held)
+                walk(stmt.finalbody, held)
+            else:
+                check_write(stmt, held)
+                scan_calls(stmt, held)
+
+    walk(meth.body, entry_held)
+    return events
+
+
+@repo_checker
+def check_lock_discipline(files: List[SourceFile]) -> List[Finding]:
+    findings: List[Finding] = []
+    classes = _collect_classes(files)
+    for info in classes.values():
+        _scan_class(info, classes, findings)
+
+    # Per-method events (also emits the write findings).
+    events: Dict[Tuple[str, str], List[_Event]] = {}
+    for info in classes.values():
+        for name, meth in info.methods.items():
+            events[(info.name, name)] = _method_events(info, meth, findings)
+
+    # Transitive lock closure per (class, method).
+    closure: Dict[Tuple[str, str], Set[str]] = {k: set() for k in events}
+
+    def fq(cls: str, attr: str) -> str:
+        return f"{cls}.{attr}"
+
+    changed = True
+    iters = 0
+    while changed and iters < 32:
+        changed = False
+        iters += 1
+        for (cls, meth), evs in events.items():
+            cur = closure[(cls, meth)]
+            before = len(cur)
+            for ev in evs:
+                if ev.kind == "acquire":
+                    cur.add(fq(cls, ev.data))
+                elif ev.kind == "call_self":
+                    cur |= closure.get((cls, ev.data), set())
+                elif ev.kind == "call_attr":
+                    tgt_cls, tgt_meth = ev.data
+                    cur |= closure.get((tgt_cls, tgt_meth), set())
+            if len(cur) != before:
+                changed = True
+
+    # Edges: held -> acquired, with a witness location.
+    edges: Dict[Tuple[str, str], Tuple[str, int]] = {}
+
+    def add_edge(a: str, b: str, src: SourceFile, line: int) -> None:
+        if a == b:
+            return  # re-entrant RLock self-edge, not an ordering hazard
+        edges.setdefault((a, b), (src.display_path, line))
+
+    for (cls, meth), evs in events.items():
+        info = classes[cls]
+        for ev in evs:
+            held_fq = {fq(cls, h) for h in ev.held}
+            if not held_fq:
+                continue
+            if ev.kind == "acquire":
+                acquired = {fq(cls, ev.data)}
+            elif ev.kind == "call_self":
+                acquired = closure.get((cls, ev.data), set())
+            else:
+                acquired = closure.get(ev.data, set())
+            for h in held_fq:
+                for a in acquired:
+                    add_edge(h, a, info.src, ev.line)
+
+    findings.extend(_find_cycles(edges))
+    return findings
+
+
+def _find_cycles(edges: Dict[Tuple[str, str], Tuple[str, int]]) -> List[Finding]:
+    graph: Dict[str, Set[str]] = {}
+    for (a, b) in edges:
+        graph.setdefault(a, set()).add(b)
+        graph.setdefault(b, set())
+    findings: List[Finding] = []
+    seen_cycles: Set[Tuple[str, ...]] = set()
+
+    WHITE, GRAY, BLACK = 0, 1, 2
+    color = {n: WHITE for n in graph}
+    stack: List[str] = []
+
+    def dfs(node: str) -> None:
+        color[node] = GRAY
+        stack.append(node)
+        for nxt in sorted(graph[node]):
+            if color[nxt] == GRAY:
+                i = stack.index(nxt)
+                cycle = tuple(stack[i:]) + (nxt,)
+                canon = _canonical_cycle(cycle)
+                if canon not in seen_cycles:
+                    seen_cycles.add(canon)
+                    path, line = edges.get(
+                        (stack[-1], nxt), edges.get((nxt, stack[min(i + 1, len(stack) - 1)]), ("<graph>", 1))
+                    )
+                    findings.append(
+                        Finding(
+                            rule="LD203",
+                            path=path,
+                            line=line,
+                            col=0,
+                            message=(
+                                "lock-acquisition-order cycle (potential ABBA "
+                                "deadlock): " + " -> ".join(cycle)
+                            ),
+                        )
+                    )
+            elif color[nxt] == WHITE:
+                dfs(nxt)
+        stack.pop()
+        color[node] = BLACK
+
+    for node in sorted(graph):
+        if color[node] == WHITE:
+            dfs(node)
+    return findings
+
+
+def _canonical_cycle(cycle: Tuple[str, ...]) -> Tuple[str, ...]:
+    body = cycle[:-1]
+    i = body.index(min(body))
+    return body[i:] + body[:i]

@@ -1,0 +1,690 @@
+"""Trace-safety checkers (TS1xx).
+
+TS101 tracer-branch
+    Python ``if`` / ``while`` / conditional expressions whose test is
+    derived from a traced (non-static) parameter of a jitted or Pallas
+    function.  Shape/dtype/ndim/len() access and ``is None`` tests are
+    structural (resolved at trace time) and allowed.
+
+TS102 host-call-in-jit
+    ``np.*`` calls, ``.item()`` / ``.tolist()`` and ``float()/int()/bool()``
+    coercions applied to traced values inside jit-reachable code: each
+    forces a device sync or breaks the trace.
+
+TS103 static-argnames-unhashable
+    ``static_argnames=[...]`` / ``static_argnums=[...]`` given a list or
+    set literal.  jax hashes static args; mutable containers either fail
+    or (on older versions) silently retrace per call.
+
+TS104 dot-accum-dtype
+    dot-family contraction (``dot_general`` / ``dot`` / ``matmul`` /
+    ``tensordot`` / ``einsum``) inside a Pallas kernel without an explicit
+    ``preferred_element_type``: with sub-f32 inputs the MXU accumulates in
+    the input dtype and silently loses precision.
+
+TS105 bf16-accum-upcast
+    Arithmetic accumulation (``+=`` / binary add/sub, or a dot-family call)
+    on a value cast to bfloat16 without an ``.astype(jnp.float32)`` upcast
+    first.  bf16 is a *storage* dtype in this repo (grating planes);
+    accumulating in it violates the f32-accumulation contract.
+
+Jit roots are discovered per module:
+
+* decorators: ``@jax.jit``, ``@jit``, ``@functools.partial(jax.jit, ...)``
+* registrations: ``jax.jit(fn_or_self_method, static_argnames=...)``
+  anywhere in the module (covers ``QueryEngine.__init__``'s eagerly-built
+  drivers and server-side jitted lambdas)
+* Pallas kernels: first argument of ``pl.pallas_call`` (possibly wrapped
+  in ``functools.partial``; keyword args bound by partial and kw-only
+  params are compile-time constants, not refs)
+
+Taint then propagates through local assignments and intra-module calls
+(plain functions, ``self.`` methods, nested defs) so helpers reachable
+from a root are checked with the root's traced arguments.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from .framework import (
+    Finding,
+    SourceFile,
+    call_name,
+    const_str_tuple,
+    keyword_arg,
+    per_file_checker,
+)
+
+_JIT_NAMES = {"jax.jit", "jit", "pjit", "jax.pjit"}
+_PALLAS_CALL_NAMES = {"pl.pallas_call", "pallas_call", "pallas.pallas_call"}
+_PARTIAL_NAMES = {"functools.partial", "partial"}
+_SHAPE_ATTRS = {"shape", "ndim", "dtype", "size", "itemsize", "nbytes"}
+_STRUCTURAL_CALLS = {"len", "isinstance", "getattr", "hasattr", "type", "range"}
+_DOT_FAMILY = {"dot_general", "dot", "matmul", "tensordot", "einsum"}
+_HOST_COERCIONS = {"float", "int", "bool", "complex"}
+_HOST_METHODS = {"item", "tolist", "__array__"}
+_BF16_MARKERS = ("bfloat16", "float16")
+_F32_MARKERS = ("float32", "float64", "complex64", "complex128")
+
+
+class _Func:
+    """One analyzable function: a def (module/class/nested) or a lambda."""
+
+    def __init__(self, node, qualname: str, class_name: Optional[str]):
+        self.node = node
+        self.qualname = qualname
+        self.class_name = class_name
+        self.is_root = False
+        self.is_pallas = False
+        self.static_params: Set[str] = set()
+        # Names tainted at entry (traced params); grows via call-site
+        # propagation until fixpoint.
+        self.entry_taint: Set[str] = set()
+
+    def params(self) -> List[str]:
+        a = self.node.args
+        names = [p.arg for p in a.posonlyargs + a.args]
+        if a.vararg:
+            names.append(a.vararg.arg)
+        names += [p.arg for p in a.kwonlyargs]
+        if a.kwarg:
+            names.append(a.kwarg.arg)
+        return names
+
+    def positional_params(self) -> List[str]:
+        a = self.node.args
+        return [p.arg for p in a.posonlyargs + a.args]
+
+
+def _is_jit_expr(node: ast.AST) -> bool:
+    """True for `jax.jit` / `jit` names and `functools.partial(jax.jit, ...)`."""
+    if isinstance(node, (ast.Name, ast.Attribute)):
+        from .framework import dotted_name
+
+        return dotted_name(node) in _JIT_NAMES
+    if isinstance(node, ast.Call) and call_name(node) in _PARTIAL_NAMES:
+        return bool(node.args) and _is_jit_expr(node.args[0])
+    return False
+
+
+def _static_from_jit(node: ast.AST) -> Set[str]:
+    """static_argnames from a jit decorator/registration expression."""
+    statics: Set[str] = set()
+    if isinstance(node, ast.Call):
+        for key in ("static_argnames", "static_argnums"):
+            v = keyword_arg(node, key)
+            if v is not None:
+                statics.update(const_str_tuple(v))
+        if call_name(node) in _PARTIAL_NAMES and node.args:
+            statics.update(_static_from_jit(node.args[0]))
+    return statics
+
+
+class _Module:
+    """Function index + jit-root discovery for one file."""
+
+    def __init__(self, src: SourceFile):
+        self.src = src
+        self.funcs: Dict[Tuple[Optional[str], str], _Func] = {}
+        self.lambdas_as_roots: List[Tuple[ast.Lambda, Set[str]]] = []
+        self._index(src.tree, class_name=None, prefix="")
+        self._discover_roots(src.tree)
+
+    # -- indexing -----------------------------------------------------------
+
+    def _index(self, node: ast.AST, class_name: Optional[str], prefix: str) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                qual = prefix + child.name
+                fn = _Func(child, qual, class_name)
+                self.funcs[(class_name, child.name)] = fn
+                # Nested defs index under the same class context so
+                # self-method resolution keeps working.
+                self._index(child, class_name, qual + ".")
+            elif isinstance(child, ast.ClassDef):
+                self._index(child, child.name, child.name + ".")
+            else:
+                self._index(child, class_name, prefix)
+
+    def _lookup(self, class_name: Optional[str], name: str) -> Optional[_Func]:
+        fn = self.funcs.get((class_name, name))
+        if fn is None and class_name is not None:
+            fn = self.funcs.get((None, name))
+        return fn
+
+    # -- jit-root discovery -------------------------------------------------
+
+    def _discover_roots(self, tree: ast.Module) -> None:
+        # Decorated defs.
+        for fn in self.funcs.values():
+            for dec in fn.node.decorator_list:
+                if _is_jit_expr(dec):
+                    fn.is_root = True
+                    fn.static_params |= _static_from_jit(dec)
+        # Registration calls + pallas kernels, anywhere in the module.
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = call_name(node)
+            if name in _JIT_NAMES and node.args:
+                self._mark_jit_target(node.args[0], _static_from_jit(node))
+            elif name in _PALLAS_CALL_NAMES and node.args:
+                self._mark_pallas_kernel(node.args[0])
+
+    def _mark_jit_target(self, target: ast.AST, statics: Set[str]) -> None:
+        fn = self._resolve_func_expr(target)
+        if fn is not None:
+            fn.is_root = True
+            fn.static_params |= statics
+            return
+        if isinstance(target, ast.Lambda):
+            self.lambdas_as_roots.append((target, statics))
+
+    def _mark_pallas_kernel(self, target: ast.AST) -> None:
+        statics: Set[str] = set()
+        if isinstance(target, ast.Call) and call_name(target) in _PARTIAL_NAMES:
+            statics = {kw.arg for kw in target.keywords if kw.arg}
+            target = target.args[0] if target.args else target
+        fn = self._resolve_func_expr(target)
+        if fn is not None:
+            fn.is_root = True
+            fn.is_pallas = True
+            # kw-only params are compile-time constants bound via partial.
+            kwonly = {p.arg for p in fn.node.args.kwonlyargs}
+            fn.static_params |= statics | kwonly
+
+    def _resolve_func_expr(self, target: ast.AST) -> Optional[_Func]:
+        if isinstance(target, ast.Name):
+            return self._lookup(None, target.id) or self._first_method(target.id)
+        if isinstance(target, ast.Attribute):
+            # self._stream_impl / SomeClass.method / module.fn -- resolve by
+            # trailing attribute name within this module.
+            return self._first_method(target.attr)
+        return None
+
+    def _first_method(self, name: str) -> Optional[_Func]:
+        for (cls, fname), fn in self.funcs.items():
+            if fname == name:
+                return fn
+        return None
+
+
+@per_file_checker
+def check_trace_safety(src: SourceFile) -> List[Finding]:
+    findings: List[Finding] = []
+    module = _Module(src)
+
+    # TS103 is a flat scan: any jit-ish call with a list/set static spec.
+    for node in ast.walk(src.tree):
+        if isinstance(node, ast.Call):
+            for key in ("static_argnames", "static_argnums"):
+                v = keyword_arg(node, key)
+                if isinstance(v, (ast.List, ast.Set)):
+                    kind = "list" if isinstance(v, ast.List) else "set"
+                    findings.append(
+                        Finding(
+                            rule="TS103",
+                            path=src.display_path,
+                            line=v.lineno,
+                            col=v.col_offset,
+                            message=(
+                                f"{key} given a {kind} literal; jax hashes "
+                                "static args -- use a tuple (or a single "
+                                "string)"
+                            ),
+                        )
+                    )
+
+    # Seed taint at roots, then propagate through intra-module calls.
+    roots = [f for f in module.funcs.values() if f.is_root]
+    for fn in roots:
+        params = set(fn.params()) - fn.static_params - {"self", "cls"}
+        fn.entry_taint |= params
+
+    analyzer = _TaintAnalyzer(src, module, findings)
+    analyzer.run(roots)
+
+    for lam, statics in module.lambdas_as_roots:
+        analyzer.analyze_lambda_root(lam, statics)
+
+    # Eager (non-jit-reachable) functions still get the bf16 storage-dtype
+    # accumulation check (TS105) -- grating planes are cast outside jit.
+    for fn in module.funcs.values():
+        analyzer._analyze_function(fn)
+
+    return findings
+
+
+class _TaintAnalyzer:
+    def __init__(self, src: SourceFile, module: _Module, findings: List[Finding]):
+        self.src = src
+        self.module = module
+        self.findings = findings
+        self._reported: Set[Tuple[str, int, int]] = set()
+        self._analyzed_taint: Dict[int, Set[str]] = {}  # id(func) -> last entry taint
+
+    def run(self, roots: List[_Func]) -> None:
+        work = list(roots)
+        # Fixpoint over call-site taint propagation; each pass may taint
+        # more helper params and enqueue them.  Bounded: taints only grow.
+        for _ in range(8):
+            next_work: List[_Func] = []
+            for fn in work:
+                grown = self._analyze_function(fn)
+                next_work.extend(grown)
+            if not next_work:
+                break
+            work = next_work
+
+    # -- per-function analysis ---------------------------------------------
+
+    def _analyze_function(self, fn: _Func) -> List[_Func]:
+        prev = self._analyzed_taint.get(id(fn))
+        if prev is not None and prev >= fn.entry_taint:
+            return []
+        self._analyzed_taint[id(fn)] = set(fn.entry_taint)
+        state = _State(
+            tainted=set(fn.entry_taint),
+            bf16=set(),
+            fn=fn,
+        )
+        grown: List[_Func] = []
+        # Two passes over the body to stabilize loop-carried taint.
+        for _ in range(2):
+            for stmt in fn.node.body:
+                self._visit_stmt(stmt, state, grown, report=False)
+        for stmt in fn.node.body:
+            self._visit_stmt(stmt, state, grown, report=True)
+        return grown
+
+    def analyze_lambda_root(self, lam: ast.Lambda, statics: Set[str]) -> None:
+        fake = _Func(
+            ast.FunctionDef(
+                name="<lambda>",
+                args=lam.args,
+                body=[ast.Return(value=lam.body, lineno=lam.lineno, col_offset=0)],
+                decorator_list=[],
+                lineno=lam.lineno,
+                col_offset=lam.col_offset,
+            ),
+            "<lambda>",
+            None,
+        )
+        fake.is_root = True
+        fake.static_params = statics
+        fake.entry_taint = set(fake.params()) - statics
+        state = _State(tainted=set(fake.entry_taint), bf16=set(), fn=fake)
+        self._check_expr(lam.body, state, [], report=True)
+
+    # -- statements ---------------------------------------------------------
+
+    def _visit_stmt(self, stmt, state: "_State", grown: List[_Func], report: bool) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return  # analyzed separately when call-site taint reaches it
+        if isinstance(stmt, ast.Return):
+            if stmt.value is not None:
+                self._check_expr(stmt.value, state, grown, report)
+            return
+        if isinstance(stmt, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            self._visit_assign(stmt, state, grown, report)
+            return
+        if isinstance(stmt, (ast.If, ast.While)):
+            self._check_branch_test(stmt.test, state, grown, report)
+            for s in stmt.body + stmt.orelse:
+                self._visit_stmt(s, state, grown, report)
+            return
+        if isinstance(stmt, ast.For):
+            it_tainted = self._check_expr(stmt.iter, state, grown, report)
+            for name in _target_names(stmt.target):
+                if it_tainted:
+                    state.tainted.add(name)
+            for s in stmt.body + stmt.orelse:
+                self._visit_stmt(s, state, grown, report)
+            return
+        if isinstance(stmt, ast.With):
+            for item in stmt.items:
+                self._check_expr(item.context_expr, state, grown, report)
+            for s in stmt.body:
+                self._visit_stmt(s, state, grown, report)
+            return
+        if isinstance(stmt, ast.Try):
+            for s in stmt.body + stmt.orelse + stmt.finalbody:
+                self._visit_stmt(s, state, grown, report)
+            for handler in stmt.handlers:
+                for s in handler.body:
+                    self._visit_stmt(s, state, grown, report)
+            return
+        if isinstance(stmt, ast.Expr):
+            self._check_expr(stmt.value, state, grown, report)
+            return
+        if isinstance(stmt, (ast.Assert, ast.Raise)):
+            # Host-side asserts on tracers fail loudly at trace time --
+            # TS101 stays focused on silent control flow.
+            return
+        # Pass / Import / Global / etc.: nothing to do.
+
+    def _visit_assign(self, stmt, state: "_State", grown, report) -> None:
+        value = getattr(stmt, "value", None)
+        if value is None:
+            return
+        tainted = self._check_expr(value, state, grown, report)
+        bf16 = self._expr_bf16(value, state)
+        targets = (
+            stmt.targets if isinstance(stmt, ast.Assign) else [stmt.target]
+        )
+        if isinstance(stmt, ast.AugAssign):
+            tgt_bf16 = self._expr_bf16(stmt.target, state)
+            if isinstance(stmt.op, (ast.Add, ast.Sub, ast.Mult)) and (bf16 or tgt_bf16):
+                self._report(
+                    "TS105",
+                    stmt.lineno,
+                    stmt.col_offset,
+                    "in-place accumulation on a bfloat16-tainted value; "
+                    "upcast with .astype(jnp.float32) first",
+                    report,
+                )
+            tainted = tainted or self._expr_tainted(stmt.target, state)
+            bf16 = bf16 or tgt_bf16
+        for tgt in targets:
+            for name in _target_names(tgt):
+                if tainted:
+                    state.tainted.add(name)
+                else:
+                    state.tainted.discard(name)
+                if bf16:
+                    state.bf16.add(name)
+                else:
+                    state.bf16.discard(name)
+
+    # -- branch tests (TS101) -----------------------------------------------
+
+    def _check_branch_test(self, test, state: "_State", grown, report) -> None:
+        self._check_expr(test, state, grown, report)
+        if self._branch_allowed(test, state):
+            return
+        if self._expr_tainted(test, state):
+            self._report(
+                "TS101",
+                test.lineno,
+                test.col_offset,
+                "Python branch on a value derived from a traced parameter "
+                f"of {state.fn.qualname}(); use lax.cond/jnp.where or make "
+                "it a static argument",
+                report,
+            )
+
+    def _branch_allowed(self, test, state: "_State") -> bool:
+        """Structural tests resolved at trace time."""
+        if isinstance(test, ast.BoolOp):
+            return all(self._branch_allowed(v, state) for v in test.values)
+        if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+            return self._branch_allowed(test.operand, state)
+        if isinstance(test, ast.Compare) and all(
+            isinstance(op, (ast.Is, ast.IsNot)) for op in test.ops
+        ):
+            return True
+        if isinstance(test, ast.Call) and call_name(test) in _STRUCTURAL_CALLS:
+            return True
+        if not self._expr_tainted(test, state):
+            return True
+        return False
+
+    # -- expressions ---------------------------------------------------------
+
+    def _check_expr(self, expr, state: "_State", grown, report) -> bool:
+        """Walk an expression: emit TS102/TS104/TS105/TS101(IfExp) findings
+        and return its taint."""
+        if expr is None:
+            return False
+        if isinstance(expr, ast.IfExp):
+            self._check_branch_test(expr.test, state, grown, report)
+            t = self._check_expr(expr.body, state, grown, report)
+            f = self._check_expr(expr.orelse, state, grown, report)
+            return t or f
+        if isinstance(expr, ast.Call):
+            return self._check_call(expr, state, grown, report)
+        if isinstance(expr, ast.Lambda):
+            return False
+        for child in ast.iter_child_nodes(expr):
+            if isinstance(child, (ast.expr, ast.comprehension)):
+                if isinstance(child, ast.comprehension):
+                    self._check_expr(child.iter, state, grown, report)
+                    for cond in child.ifs:
+                        self._check_branch_test(cond, state, grown, report)
+                else:
+                    self._check_expr(child, state, grown, report)
+        return self._expr_tainted(expr, state)
+
+    def _check_call(self, call: ast.Call, state: "_State", grown, report) -> bool:
+        name = call_name(call)
+        arg_taints = [self._check_expr(a, state, grown, report) for a in call.args]
+        kw_taints = [
+            self._check_expr(kw.value, state, grown, report) for kw in call.keywords
+        ]
+        any_arg_tainted = any(arg_taints) or any(kw_taints)
+
+        # TS102: host syncs / trace breaks.
+        if name in _HOST_COERCIONS and any_arg_tainted:
+            self._report(
+                "TS102",
+                call.lineno,
+                call.col_offset,
+                f"{name}() on a traced value forces a host sync inside "
+                f"{state.fn.qualname}(); keep it on-device or make the "
+                "argument static",
+                report,
+            )
+            return False  # result is a python scalar
+        if isinstance(call.func, ast.Attribute):
+            recv_tainted = self._expr_tainted(call.func.value, state)
+            if call.func.attr in _HOST_METHODS and recv_tainted:
+                self._report(
+                    "TS102",
+                    call.lineno,
+                    call.col_offset,
+                    f".{call.func.attr}() on a traced value inside "
+                    f"{state.fn.qualname}() blocks on device transfer",
+                    report,
+                )
+                return False
+        root = name.split(".", 1)[0] if name else ""
+        if root in ("np", "numpy") and any_arg_tainted:
+            self._report(
+                "TS102",
+                call.lineno,
+                call.col_offset,
+                f"{name}() (host numpy) applied to a traced value inside "
+                f"{state.fn.qualname}(); use jnp instead",
+                report,
+            )
+
+        # TS104 / TS105: dot-family accumulation dtype.
+        tail = name.rsplit(".", 1)[-1] if name else ""
+        if tail in _DOT_FAMILY:
+            has_pref = keyword_arg(call, "preferred_element_type") is not None
+            if state.fn.is_pallas and not has_pref:
+                self._report(
+                    "TS104",
+                    call.lineno,
+                    call.col_offset,
+                    f"{tail}() inside Pallas kernel {state.fn.qualname}() "
+                    "without preferred_element_type: sub-f32 inputs "
+                    "accumulate in the input dtype",
+                    report,
+                )
+            bf16_arg = any(self._expr_bf16(a, state) for a in call.args)
+            if bf16_arg and not has_pref:
+                self._report(
+                    "TS105",
+                    call.lineno,
+                    call.col_offset,
+                    f"{tail}() on a bfloat16-tainted operand without "
+                    "preferred_element_type or an .astype(jnp.float32) "
+                    "upcast",
+                    report,
+                )
+
+        # Intra-module call: propagate taint into the callee.
+        callee = self._resolve_callee(call, state)
+        if callee is not None and not callee.is_root:
+            kw_pairs = [
+                (kw.arg, t) for kw, t in zip(call.keywords, kw_taints) if kw.arg
+            ]
+            self._propagate(call, arg_taints, kw_pairs, callee, grown)
+        if callee is not None:
+            # A helper (or jitted driver called eagerly) returns traced
+            # data only when fed traced data at THIS call site.
+            return any_arg_tainted
+
+        if name in _STRUCTURAL_CALLS:
+            return False
+        if isinstance(call.func, ast.Attribute):
+            recv_tainted = self._expr_tainted(call.func.value, state)
+            return recv_tainted or any_arg_tainted
+        return any_arg_tainted
+
+    def _resolve_callee(self, call: ast.Call, state: "_State") -> Optional[_Func]:
+        if isinstance(call.func, ast.Name):
+            return self.module._lookup(state.fn.class_name, call.func.id)
+        if (
+            isinstance(call.func, ast.Attribute)
+            and isinstance(call.func.value, ast.Name)
+            and call.func.value.id == "self"
+        ):
+            return self.module._lookup(state.fn.class_name, call.func.attr)
+        return None
+
+    def _propagate(self, call: ast.Call, arg_taints, kw_pairs, callee: _Func, grown) -> None:
+        params = callee.positional_params()
+        if params and params[0] in ("self", "cls"):
+            params = params[1:]
+        new = set()
+        for i, t in enumerate(arg_taints):
+            if t and i < len(params):
+                new.add(params[i])
+        for kw_name, t in kw_pairs:
+            if t:
+                new.add(kw_name)
+        new -= callee.static_params
+        if not new <= callee.entry_taint:
+            callee.entry_taint |= new
+            grown.append(callee)
+        elif id(callee) not in self._analyzed_taint and new:
+            grown.append(callee)
+
+    # -- pure taint / bf16 queries (no findings emitted) --------------------
+
+    def _expr_tainted(self, expr, state: "_State") -> bool:
+        if expr is None or isinstance(expr, ast.Constant):
+            return False
+        if isinstance(expr, ast.Name):
+            return expr.id in state.tainted
+        if isinstance(expr, ast.Attribute):
+            if expr.attr in _SHAPE_ATTRS:
+                return False
+            return self._expr_tainted(expr.value, state)
+        if isinstance(expr, ast.Call):
+            name = call_name(expr)
+            if name in _STRUCTURAL_CALLS or name in _HOST_COERCIONS:
+                return False
+            if isinstance(expr.func, ast.Attribute) and expr.func.attr in _HOST_METHODS:
+                return False
+            if isinstance(expr.func, ast.Attribute) and self._expr_tainted(
+                expr.func.value, state
+            ):
+                return True
+            return any(self._expr_tainted(a, state) for a in expr.args) or any(
+                self._expr_tainted(kw.value, state) for kw in expr.keywords
+            )
+        if isinstance(expr, ast.Compare):
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in expr.ops):
+                return False
+            return self._expr_tainted(expr.left, state) or any(
+                self._expr_tainted(c, state) for c in expr.comparators
+            )
+        for child in ast.iter_child_nodes(expr):
+            if isinstance(child, ast.expr) and self._expr_tainted(child, state):
+                return True
+        return False
+
+    def _expr_bf16(self, expr, state: "_State") -> bool:
+        if expr is None or isinstance(expr, ast.Constant):
+            return False
+        if isinstance(expr, ast.Name):
+            return expr.id in state.bf16
+        if isinstance(expr, ast.Call):
+            if isinstance(expr.func, ast.Attribute) and expr.func.attr == "astype":
+                dtype_repr = ast.dump(expr.args[0]) if expr.args else ""
+                if any(m in dtype_repr for m in _BF16_MARKERS):
+                    return True
+                if any(m in dtype_repr for m in _F32_MARKERS):
+                    return False  # explicit upcast cleanses
+                return False
+            # Structure-preserving ops keep the storage dtype.
+            return any(self._expr_bf16(a, state) for a in expr.args) or any(
+                self._expr_bf16(kw.value, state)
+                for kw in expr.keywords
+                if kw.arg not in ("dtype",)
+            )
+        if isinstance(expr, ast.BinOp):
+            left = self._expr_bf16(expr.left, state)
+            right = self._expr_bf16(expr.right, state)
+            if isinstance(expr.op, (ast.Add, ast.Sub)) and (left or right):
+                self._report(
+                    "TS105",
+                    expr.lineno,
+                    expr.col_offset,
+                    "binary accumulation on a bfloat16-tainted operand; "
+                    "upcast with .astype(jnp.float32) first",
+                    True,
+                )
+            return left or right
+        if isinstance(expr, (ast.Subscript, ast.Starred, ast.UnaryOp)):
+            return self._expr_bf16(
+                expr.value if not isinstance(expr, ast.UnaryOp) else expr.operand,
+                state,
+            )
+        if isinstance(expr, (ast.Tuple, ast.List)):
+            return any(self._expr_bf16(e, state) for e in expr.elts)
+        return False
+
+    # -- reporting -----------------------------------------------------------
+
+    def _report(self, rule: str, line: int, col: int, message: str, emit: bool) -> None:
+        if not emit:
+            return
+        key = (rule, line, col)
+        if key in self._reported:
+            return
+        self._reported.add(key)
+        self.findings.append(
+            Finding(
+                rule=rule,
+                path=self.src.display_path,
+                line=line,
+                col=col,
+                message=message,
+            )
+        )
+
+
+class _State:
+    def __init__(self, tainted: Set[str], bf16: Set[str], fn: _Func):
+        self.tainted = tainted
+        self.bf16 = bf16
+        self.fn = fn
+
+
+def _target_names(tgt) -> List[str]:
+    if isinstance(tgt, ast.Name):
+        return [tgt.id]
+    if isinstance(tgt, (ast.Tuple, ast.List)):
+        out = []
+        for elt in tgt.elts:
+            out.extend(_target_names(elt))
+        return out
+    if isinstance(tgt, ast.Starred):
+        return _target_names(tgt.value)
+    return []

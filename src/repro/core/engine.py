@@ -616,20 +616,20 @@ class QueryEngine:
             _segments_rebase_merge,
             static_argnames=("k", "nv_locals", "t0s", "nv_total"),
         )
-        self._pools: OrderedDict[tuple, GratingPool] = OrderedDict()
+        self._pools: OrderedDict[tuple, GratingPool] = OrderedDict()  # guarded-by: _pools_lock
         # row-padded arena views for dedup union spans that overhang the
         # pool tail: keyed (pool, rows needed) so steady-state mixed-span
         # compositions reuse one padded device buffer instead of paying
         # an O(arena) jnp.pad per dispatch.  Entries hold the pool
         # (strong ref: id-keyed lookups stay sound) + the padded planes.
-        self._padded: OrderedDict[tuple, tuple] = OrderedDict()
+        self._padded: OrderedDict[tuple, tuple] = OrderedDict()  # guarded-by: _pools_lock
         self._pools_lock = threading.Lock()
         # shared-stream fan-out accounting (clip-dedup in the pooled
         # paths): offered = clip rows requested, dispatched = physical
         # rows after collapsing same-content clips onto shared rows.
-        self._pooled_dispatches = 0
-        self._pooled_rows_offered = 0
-        self._pooled_rows_dispatched = 0
+        self._pooled_dispatches = 0  # guarded-by: _pools_lock
+        self._pooled_rows_offered = 0  # guarded-by: _pools_lock
+        self._pooled_rows_dispatched = 0  # guarded-by: _pools_lock
 
     def pool_stats(self) -> dict:
         """Pooled-executor counters for serving metrics: how many clip
@@ -720,7 +720,10 @@ class QueryEngine:
         def band(k):  # temporal transfer on the reference's own grid
             if h_t is None:
                 return k
-            spec = jnp.fft.fft(k, axis=-1) * h_t
+            # explicit trailing-axis broadcast: (O, C, kh, kw, kt) * (kt,)
+            spec = jnp.fft.fft(k, axis=-1) * h_t.reshape(
+                (1,) * (k.ndim - 1) + (-1,)
+            )
             return jnp.real(jnp.fft.ifft(spec, axis=-1))
 
         if pn:
@@ -1835,19 +1838,19 @@ class GratingCache:
         # fresh record — a self-healing cache.  Off by default: each
         # verified hit costs one device reduction + host sync.
         self.verify = verify
-        self.hits = 0
-        self.misses = 0
-        self.evictions = 0
-        self.shared = 0  # waiter served an in-flight result never admitted
-        self.integrity_failures = 0  # checksum mismatches (verify=True)
-        self._entries: OrderedDict[tuple, FusedGrating] = OrderedDict()
-        self._sums: dict[tuple, float] = {}  # insertion-time checksums
-        self._nbytes = 0
+        self.hits = 0  # guarded-by: _lock
+        self.misses = 0  # guarded-by: _lock
+        self.evictions = 0  # guarded-by: _lock
+        self.shared = 0  # in-flight results never admitted; guarded-by: _lock
+        self.integrity_failures = 0  # verify=True mismatches; guarded-by: _lock
+        self._entries: OrderedDict[tuple, FusedGrating] = OrderedDict()  # guarded-by: _lock
+        self._sums: dict[tuple, float] = {}  # insertion checksums; guarded-by: _lock
+        self._nbytes = 0  # guarded-by: _lock
         self._lock = threading.Lock()
         # per-key in-flight record markers: concurrent misses for one key
         # wait on the first recorder instead of each re-running the
         # expensive device-side record (thundering herd on a cold tenant)
-        self._inflight: dict[tuple, _InFlight] = {}
+        self._inflight: dict[tuple, _InFlight] = {}  # guarded-by: _lock
 
     @staticmethod
     def key_for(

@@ -217,7 +217,8 @@ class T2Apodize(Stage):
         decay = atomic.t2_tap_weights(
             ctx.kt, ctx.atoms, ctx.storage_interval_s
         )
-        return kernels * decay
+        # explicit trailing-axis broadcast: (O, C, kh, kw, kt) * (kt,)
+        return kernels * decay.reshape((1,) * (kernels.ndim - 1) + (-1,))
 
 
 @dataclasses.dataclass(frozen=True)

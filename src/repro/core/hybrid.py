@@ -191,8 +191,8 @@ def forward(
     y = jax.nn.relu(y)
     y = max_pool3d(y, cfg.pool_window)
     y = y.reshape(y.shape[0], -1)
-    y = jax.nn.relu(y @ params["fc1_w"] + params["fc1_b"])
-    return y @ params["fc2_w"] + params["fc2_b"]
+    y = jax.nn.relu(y @ params["fc1_w"] + params["fc1_b"][None, :])
+    return y @ params["fc2_w"] + params["fc2_b"][None, :]
 
 
 def loss_fn(

@@ -104,9 +104,9 @@ class ChaosInjector:
         self.rules: list[ChaosRule] = list(rules)
         self._rng = random.Random(seed)
         self._lock = threading.Lock()
-        self._events: collections.Counter = collections.Counter()
-        self._injected: collections.Counter = collections.Counter()
-        self._fired_at: set[tuple[int, int]] = set()  # (rule-id, event-index)
+        self._events: collections.Counter = collections.Counter()  # guarded-by: _lock
+        self._injected: collections.Counter = collections.Counter()  # guarded-by: _lock
+        self._fired_at: set[tuple[int, int]] = set()  # (rule-id, event-index); guarded-by: _lock
 
     def on(self, seam: str, mode: str | None = None, payload=None, event: int | None = None):
         """Record one seam event and apply matching rules.  Returns the

@@ -72,7 +72,12 @@ def conv3d_pallas(
                         (0, i * bOH + m, n, tt * bOT + t),
                         (C, bOH, OW, bOT),
                     )
-                    acc += jnp.tensordot(w_[:, :, m, n, t], xs, axes=(1, 0))
+                    acc += jnp.tensordot(
+                        w_[:, :, m, n, t],
+                        xs,
+                        axes=(1, 0),
+                        preferred_element_type=jnp.float32,
+                    )
         y_ref[0] = acc.astype(y_ref.dtype)
 
     y = pl.pallas_call(

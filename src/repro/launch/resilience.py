@@ -192,13 +192,13 @@ class CircuitBreaker:
         self.recovery_s = float(recovery_s)
         self._clock = clock
         self._lock = threading.Lock()
-        self._state = "closed"
-        self._consecutive = 0
-        self._opened_at = 0.0
-        self.failures = 0
-        self.successes = 0
-        self.trips = 0  # closed/half-open -> open transitions
-        self.recoveries = 0  # half-open -> closed transitions
+        self._state = "closed"  # guarded-by: _lock
+        self._consecutive = 0  # guarded-by: _lock
+        self._opened_at = 0.0  # guarded-by: _lock
+        self.failures = 0  # guarded-by: _lock
+        self.successes = 0  # guarded-by: _lock
+        self.trips = 0  # closed/half-open -> open; guarded-by: _lock
+        self.recoveries = 0  # half-open -> closed; guarded-by: _lock
 
     @property
     def state(self) -> str:
@@ -346,8 +346,8 @@ class Watchdog:
         self._on_tick = on_tick
         self._lock = threading.Lock()
         self._seq = itertools.count()
-        self._tracked: dict[int, tuple[Future, float, str | None]] = {}
-        self.expired = 0
+        self._tracked: dict[int, tuple[Future, float, str | None]] = {}  # guarded-by: _lock
+        self.expired = 0  # guarded-by: _lock
         self._closed = threading.Event()
         self._thread = threading.Thread(
             target=self._run, name="serving-watchdog", daemon=True

@@ -366,25 +366,25 @@ class VideoSearchServer:
         # optional ChaosInjector (distributed.fault); when attached the
         # hot path fires its seams — when None each seam is one attr check
         self.chaos = None
-        self._quarantined = 0
+        self._quarantined = 0  # guarded-by: _lock
         # one mode-agnostic engine per distinct (fidelity fingerprint,
         # device fingerprint) pair, all sharing the one grating cache
         # (mixed-fidelity + per-tenant-device serving)
-        self._sthcs: dict[tuple, STHC] = {}
+        self._sthcs: dict[tuple, STHC] = {}  # guarded-by: _pool_lock
         self._pool_lock = threading.Lock()
         self._default_fidelity = self._resolve_cfg_fidelity(cfg)
         # the default-fidelity/-device correlator, kept as an attribute
         # for introspection and the LM/video demo drivers
         self.sthc = self._sthc_for(self._default_fidelity)
-        self._tenants: dict[str, _Tenant] = {}
+        self._tenants: dict[str, _Tenant] = {}  # guarded-by: _lock
         # traffic from removed/replaced tenants — server-wide totals and
         # the measured-vs-projected rates must survive tenant churn
         self._retired = _Tenant(kernels=None, kt=0)
         # guards _tenants membership and the per-tenant counters; the
         # correlation itself runs outside (the cache has its own lock)
         self._lock = threading.Lock()
-        self._pooled_dispatches = 0
-        self._sequential_dispatches = 0
+        self._pooled_dispatches = 0  # guarded-by: _lock
+        self._sequential_dispatches = 0  # guarded-by: _lock
         # the ONE stitched-volume detection readout, shared by every
         # entry point that still materializes volumes (fused_readout
         # off, or return_volume=True): peak + argmax of every group in
@@ -594,16 +594,15 @@ class VideoSearchServer:
             self._discard_if_unreferenced(ten.key)
             self._retire(ten)
 
-    def _retire(self, ten: _Tenant) -> None:
-        # caller holds self._lock; fold a departing tenant's traffic into
-        # the server-wide totals so metrics() rates don't rewind
+    def _retire(self, ten: _Tenant) -> None:  # holds-lock: _lock
+        # fold a departing tenant's traffic into the server-wide totals
+        # so metrics() rates don't rewind
         self._retired.queries += ten.queries
         self._retired.windows += ten.windows
         self._retired.frames += ten.frames
         self._retired.seconds += ten.seconds
 
-    def _discard_if_unreferenced(self, key: tuple | None) -> None:
-        # caller holds self._lock
+    def _discard_if_unreferenced(self, key: tuple | None) -> None:  # holds-lock: _lock
         if key is not None and all(
             t.key != key for t in self._tenants.values()
         ):
@@ -1134,26 +1133,28 @@ class MicrobatchScheduler:
         self.retry = retry if retry is not None else RetryPolicy()
         self.ladder = ladder if ladder is not None else DegradationLadder()
         self._q: queue_mod.Queue[_Pending] = queue_mod.Queue(maxsize=max_queue)
+        # batcher-thread only (and _drain_and_fail, which runs strictly
+        # after the batcher thread is dead) — deliberately unguarded
         self._stash: collections.deque[_Pending] = collections.deque()
         self._lock = threading.Lock()
-        self._latencies: collections.deque[float] = collections.deque(
+        self._latencies: collections.deque[float] = collections.deque(  # guarded-by: _lock
             maxlen=latency_window
         )
-        self._batch_sizes: collections.deque[int] = collections.deque(
+        self._batch_sizes: collections.deque[int] = collections.deque(  # guarded-by: _lock
             maxlen=latency_window
         )
-        self.submitted = 0
-        self.completed = 0
-        self.rejected = 0
-        self.failed = 0
-        self.batches = 0
+        self.submitted = 0  # guarded-by: _lock
+        self.completed = 0  # guarded-by: _lock
+        self.rejected = 0  # guarded-by: _lock
+        self.failed = 0  # guarded-by: _lock
+        self.batches = 0  # guarded-by: _lock
         # requests that joined an existing shared-stream dedup group
         # (same-clip rows beyond the first in a formed batch)
-        self.dedup_grouped = 0
-        self.deadline_missed = 0
-        self.retries = 0
-        self.quarantined = 0
-        self._batch_seq = 0  # batcher-thread only
+        self.dedup_grouped = 0  # guarded-by: _lock
+        self.deadline_missed = 0  # guarded-by: _lock
+        self.retries = 0  # guarded-by: _lock
+        self.quarantined = 0  # guarded-by: _lock
+        self._batch_seq = 0  # guarded-by: _lock
         # serializes intake against close(): submit must never land a
         # request after close() drained the queue (its future would hang
         # forever).  Deliberately NOT self._lock — the batcher takes
@@ -1358,8 +1359,13 @@ class MicrobatchScheduler:
         # late cancels during the server call.  _execute below assumes
         # every future it sees is already claimed (the singles retry
         # path must not re-claim).
-        self._batch_seq += 1
-        batch_id = self._batch_seq
+        # repro-lint LD202: _batch_seq is written by the batcher thread
+        # only today, but metrics()/debugging read it concurrently and
+        # nothing structural stops a second dispatcher — take the counter
+        # lock like every other counter rather than rely on the comment.
+        with self._lock:
+            self._batch_seq += 1
+            batch_id = self._batch_seq
         batch = [p for p in batch if self._claim(p.future)]
         if batch:
             self._execute(batch, batch_id)
@@ -1602,8 +1608,8 @@ class HybridClassifierServer:
         y = jax.nn.relu(y)
         y = hybrid.max_pool3d(y, cfg.pool_window)
         y = y.reshape(y.shape[0], -1)
-        y = jax.nn.relu(y @ p["fc1_w"] + p["fc1_b"])
-        return y @ p["fc2_w"] + p["fc2_b"]
+        y = jax.nn.relu(y @ p["fc1_w"] + p["fc1_b"][None, :])
+        return y @ p["fc2_w"] + p["fc2_b"][None, :]
 
     def classify(self, clips: jax.Array) -> np.ndarray:
         conv = self.sthc.correlate(self.grating, clips)  # optical layer

@@ -92,11 +92,19 @@ def stacked_axes(axes_tree: PyTree) -> PyTree:
 # ---------------------------------------------------------------------------
 
 
+def expand_left(v: Array, ndim: int) -> Array:
+    """Reshape a trailing-axes parameter for explicit broadcast against a
+    rank-``ndim`` operand (the suite runs with
+    ``jax_numpy_rank_promotion='raise'``, so implicit (d,) -> (..., d)
+    promotion is an error)."""
+    return v.reshape((1,) * (ndim - v.ndim) + v.shape)
+
+
 def rms_norm(x: Array, weight: Array, eps: float = 1e-5) -> Array:
     xf = x.astype(jnp.float32)
     var = jnp.mean(xf * xf, axis=-1, keepdims=True)
     y = xf * lax.rsqrt(var + eps)
-    return (y * weight.astype(jnp.float32)).astype(x.dtype)
+    return (y * expand_left(weight.astype(jnp.float32), y.ndim)).astype(x.dtype)
 
 
 def layer_norm(x: Array, weight: Array, bias: Array, eps: float = 1e-5) -> Array:
@@ -104,7 +112,9 @@ def layer_norm(x: Array, weight: Array, bias: Array, eps: float = 1e-5) -> Array
     mu = jnp.mean(xf, axis=-1, keepdims=True)
     var = jnp.var(xf, axis=-1, keepdims=True)
     y = (xf - mu) * lax.rsqrt(var + eps)
-    return (y * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+    w = expand_left(weight.astype(jnp.float32), y.ndim)
+    b = expand_left(bias.astype(jnp.float32), y.ndim)
+    return (y * w + b).astype(x.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -122,7 +132,7 @@ def apply_rope(x: Array, positions: Array, theta: float = 10000.0) -> Array:
     """Rotary embedding.  x: (B, S, H, D); positions: (B, S) int32."""
     d = x.shape[-1]
     inv = rope_freqs(d, theta)  # (D/2,)
-    ang = positions[..., None].astype(jnp.float32) * inv  # (B, S, D/2)
+    ang = positions[..., None].astype(jnp.float32) * inv[None, None, :]  # (B, S, D/2)
     cos = jnp.cos(ang)[:, :, None, :]  # (B, S, 1, D/2)
     sin = jnp.sin(ang)[:, :, None, :]
     x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
@@ -137,8 +147,8 @@ def sinusoidal_positions(n: int, d: int) -> Array:
         jnp.arange(0, d, 2, dtype=jnp.float32) * (-math.log(10000.0) / d)
     )
     pe = jnp.zeros((n, d), jnp.float32)
-    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
-    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div[None, :]))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div[None, :]))
     return pe
 
 

@@ -149,7 +149,7 @@ def _causal_conv(xbc: Array, w: Array, b: Array) -> Array:
     pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
     y = jnp.zeros_like(xbc)
     for i in range(K):  # K = 4: unrolled shifts beat a conv op here
-        y = y + pad[:, i : i + xbc.shape[1], :] * w[None, None, :, i][0]
+        y = y + pad[:, i : i + xbc.shape[1], :] * w[None, None, :, i]
     return y + b[None, None, :]
 
 
@@ -173,7 +173,7 @@ def mamba2_block(cfg: Mamba2Config, lp: PyTree, x: Array) -> Array:
     xs = xbc[..., : cfg.d_inner]
     Bm = xbc[..., cfg.d_inner : cfg.d_inner + g * N].reshape(B, S, g, N)
     Cm = xbc[..., cfg.d_inner + g * N :].reshape(B, S, g, N)
-    dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])  # (B,S,H)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"][None, None, :])  # (B,S,H)
     A = -jnp.exp(lp["A_log"])  # (H,)
     xh = xs.reshape(B, S, H, P)
     y, _ = ssd_ops.ssd(
@@ -252,13 +252,13 @@ def _block_decode(cfg: Mamba2Config, lp: PyTree, x: Array, conv_st, ssm_st):
     # conv state: window of the last d_conv-1 inputs
     window = jnp.concatenate([conv_st, xbc[:, None, :]], axis=1)  # (B, K, Cd)
     w = lp["conv_w"].astype(cd)  # (Cd, K)
-    conv_out = jnp.einsum("bkc,ck->bc", window, w) + lp["conv_b"].astype(cd)
+    conv_out = jnp.einsum("bkc,ck->bc", window, w) + lp["conv_b"].astype(cd)[None, :]
     xbc_t = jax.nn.silu(conv_out)
     new_conv_st = window[:, 1:]
     xs = xbc_t[..., : cfg.d_inner].reshape(B, H, P)
     Bm = xbc_t[..., cfg.d_inner : cfg.d_inner + g * N].reshape(B, g, N)
     Cm = xbc_t[..., cfg.d_inner + g * N :].reshape(B, g, N)
-    dt_t = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + lp["dt_bias"])  # (B,H)
+    dt_t = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + lp["dt_bias"][None, :])  # (B,H)
     A = -jnp.exp(lp["A_log"])
     new_ssm, y = ssd_ops.ssd_decode_step(
         ssm_st, xs.astype(jnp.float32), dt_t, A, Bm.astype(jnp.float32),
@@ -316,7 +316,7 @@ def prefill(cfg: Mamba2Config, params: PyTree, tokens: Array, max_len=None):
         xs = xbc[..., : cfg.d_inner]
         Bm = xbc[..., cfg.d_inner : cfg.d_inner + g * N].reshape(B, S, g, N)
         Cm = xbc[..., cfg.d_inner + g * N :].reshape(B, S, g, N)
-        dtp = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])
+        dtp = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"][None, None, :])
         A = -jnp.exp(lp["A_log"])
         xh = xs.reshape(B, S, H, P)
         y, ssm_st = ssd_ops.ssd(

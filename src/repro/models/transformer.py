@@ -169,9 +169,9 @@ def _qkv(cfg: TransformerConfig, lp: PyTree, x: Array, positions: Array):
     k = h @ _w(cfg, lp["wk"].astype(cd), None, "kv_heads")
     v = h @ _w(cfg, lp["wv"].astype(cd), None, "kv_heads")
     if cfg.qkv_bias:
-        q = q + lp["bq"].astype(cd)
-        k = k + lp["bk"].astype(cd)
-        v = v + lp["bv"].astype(cd)
+        q = q + lp["bq"].astype(cd)[None, None, :]
+        k = k + lp["bk"].astype(cd)[None, None, :]
+        v = v + lp["bv"].astype(cd)[None, None, :]
     q = q.reshape(B, S, H, hd)
     k = k.reshape(B, S, G, hd)
     v = v.reshape(B, S, G, hd)

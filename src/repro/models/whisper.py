@@ -133,14 +133,21 @@ def _mha(cfg, ap, xq, xkv, causal, q_offset=0, kv_len=None):
     B, Sq, D = xq.shape
     H, hd = cfg.n_heads, cfg.hd
     cd = cfg.compute_dtype
-    q = (xq @ ap["wq"].astype(cd) + ap["bq"].astype(cd)).reshape(B, Sq, H, hd)
+    q = (xq @ ap["wq"].astype(cd) + ap["bq"].astype(cd)[None, None, :]).reshape(
+        B, Sq, H, hd
+    )
     k = (xkv @ ap["wk"].astype(cd)).reshape(B, -1, H, hd)
-    v = (xkv @ ap["wv"].astype(cd) + ap["bv"].astype(cd)).reshape(B, -1, H, hd)
+    v = (xkv @ ap["wv"].astype(cd) + ap["bv"].astype(cd)[None, None, :]).reshape(
+        B, -1, H, hd
+    )
     o = common.blockwise_attention(
         q, k, v, causal=causal, q_offset=q_offset, kv_len=kv_len,
         block_k=cfg.block_k,
     )
-    return o.reshape(B, Sq, H * hd) @ ap["wo"].astype(cd) + ap["bo"].astype(cd)
+    return (
+        o.reshape(B, Sq, H * hd) @ ap["wo"].astype(cd)
+        + ap["bo"].astype(cd)[None, None, :]
+    )
 
 
 def _mha_cached(cfg, ap, xq, k, v, q_offset, kv_len):
@@ -148,7 +155,9 @@ def _mha_cached(cfg, ap, xq, k, v, q_offset, kv_len):
     B, Sq, D = xq.shape
     H, hd = cfg.n_heads, cfg.hd
     cd = cfg.compute_dtype
-    q = (xq @ ap["wq"].astype(cd) + ap["bq"].astype(cd)).reshape(B, Sq, H, hd)
+    q = (xq @ ap["wq"].astype(cd) + ap["bq"].astype(cd)[None, None, :]).reshape(
+        B, Sq, H, hd
+    )
     if Sq == 1:  # single-token decode: sharded-KV friendly path
         if kv_len is None:
             kv_len = jnp.full((B,), k.shape[1], jnp.int32)
@@ -158,7 +167,10 @@ def _mha_cached(cfg, ap, xq, k, v, q_offset, kv_len):
             q, k, v, causal=False, q_offset=q_offset, kv_len=kv_len,
             block_k=cfg.block_k,
         )
-    return o.reshape(B, Sq, H * hd) @ ap["wo"].astype(cd) + ap["bo"].astype(cd)
+    return (
+        o.reshape(B, Sq, H * hd) @ ap["wo"].astype(cd)
+        + ap["bo"].astype(cd)[None, None, :]
+    )
 
 
 def _kv(cfg, ap, xkv):
@@ -166,7 +178,9 @@ def _kv(cfg, ap, xkv):
     H, hd = cfg.n_heads, cfg.hd
     cd = cfg.compute_dtype
     k = (xkv @ ap["wk"].astype(cd)).reshape(B, -1, H, hd)
-    v = (xkv @ ap["wv"].astype(cd) + ap["bv"].astype(cd)).reshape(B, -1, H, hd)
+    v = (xkv @ ap["wv"].astype(cd) + ap["bv"].astype(cd)[None, None, :]).reshape(
+        B, -1, H, hd
+    )
     return k, v
 
 
@@ -176,8 +190,8 @@ def _ln(x, p, eps):
 
 def _mlp(cfg, mp, x):
     cd = cfg.compute_dtype
-    h = jax.nn.gelu(x @ mp["w1"].astype(cd) + mp["b1"].astype(cd))
-    return h @ mp["w2"].astype(cd) + mp["b2"].astype(cd)
+    h = jax.nn.gelu(x @ mp["w1"].astype(cd) + mp["b1"].astype(cd)[None, None, :])
+    return h @ mp["w2"].astype(cd) + mp["b2"].astype(cd)[None, None, :]
 
 
 # ---------------------------------------------------------------------------

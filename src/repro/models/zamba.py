@@ -292,7 +292,7 @@ def prefill(cfg: ZambaConfig, params: PyTree, tokens: Array, max_len=None):
         xs = xbc[..., : cfg.d_inner]
         Bm = xbc[..., cfg.d_inner : cfg.d_inner + g * N].reshape(B, S, g, N)
         Cm = xbc[..., cfg.d_inner + g * N :].reshape(B, S, g, N)
-        dtp = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])
+        dtp = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"][None, None, :])
         A = -jnp.exp(lp["A_log"])
         xh = xs.reshape(B, S, H, P)
         from repro.kernels.ssd import ops as ssd_ops

@@ -1,0 +1,2 @@
+"""Seeded KC301: a kernels/<name>/kernel.py with no sibling ref.py
+oracle and no oracle-equivalence test.  Never executed."""

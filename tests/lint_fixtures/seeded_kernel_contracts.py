@@ -1,0 +1,59 @@
+"""Seeded kernel-contract violations (KC302, KC303).  Never executed."""
+
+import jax
+from jax.experimental import pallas as pl
+
+
+def _noop_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def seeded_blockspec_arity(x):
+    # KC302: 2-axis grid, but the in_spec index map declares one axis.
+    return pl.pallas_call(
+        _noop_kernel,
+        grid=(4, 4),
+        in_specs=[pl.BlockSpec((1, 1), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)
+
+
+def seeded_unpadded_grid(x, block_f):
+    # KC303: F is a raw input dim — neither pad-derived nor asserted
+    # divisible by block_f, so a non-dividing tile drops remainder rows.
+    B, F = x.shape
+    return pl.pallas_call(
+        _noop_kernel,
+        grid=(B, F // block_f),
+        in_specs=[pl.BlockSpec((1, block_f), lambda b, f: (b, f))],
+        out_specs=pl.BlockSpec((1, block_f), lambda b, f: (b, f)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)
+
+
+def padded_grid_ok(x, block_f):
+    # Contract satisfied: dividend is pad-derived.
+    B, F = x.shape
+    f_pad = (-F) % block_f
+    Fp = F + f_pad
+    return pl.pallas_call(
+        _noop_kernel,
+        grid=(B, Fp // block_f),
+        in_specs=[pl.BlockSpec((1, block_f), lambda b, f: (b, f))],
+        out_specs=pl.BlockSpec((1, block_f), lambda b, f: (b, f)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)
+
+
+def asserted_grid_ok(x, block_f):
+    # Contract satisfied: divisibility asserted.
+    B, F = x.shape
+    assert F % block_f == 0
+    return pl.pallas_call(
+        _noop_kernel,
+        grid=(B, F // block_f),
+        in_specs=[pl.BlockSpec((1, block_f), lambda b, f: (b, f))],
+        out_specs=pl.BlockSpec((1, block_f), lambda b, f: (b, f)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)

@@ -1,0 +1,30 @@
+# lint: disable-file=KC302,KC303
+"""Suppressed twin of seeded_kernel_contracts.py.  Never executed."""
+
+import jax
+from jax.experimental import pallas as pl
+
+
+def _noop_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def seeded_blockspec_arity(x):
+    return pl.pallas_call(
+        _noop_kernel,
+        grid=(4, 4),
+        in_specs=[pl.BlockSpec((1, 1), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)
+
+
+def seeded_unpadded_grid(x, block_f):
+    B, F = x.shape
+    return pl.pallas_call(
+        _noop_kernel,
+        grid=(B, F // block_f),
+        in_specs=[pl.BlockSpec((1, block_f), lambda b, f: (b, f))],
+        out_specs=pl.BlockSpec((1, block_f), lambda b, f: (b, f)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)

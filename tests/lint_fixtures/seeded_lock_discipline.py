@@ -1,0 +1,57 @@
+"""Seeded lock-discipline violations (LD201–LD203).  Never executed."""
+
+import threading
+
+
+class SeededCounters:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.hits = 0  # guarded-by: _lock
+        self.misses = 0  # guarded-by: _lock
+        self.table = {}  # guarded-by: _lock
+
+    def guarded_ok(self):
+        with self._lock:
+            self.hits += 1
+            self.table["k"] = self.hits
+
+    def seeded_unguarded_write(self):
+        # LD201: plain rebind outside the lock.
+        self.misses = 0
+
+    def seeded_unguarded_rmw(self):
+        # LD202: lost-update increment outside the lock.
+        self.hits += 1
+
+    def seeded_unguarded_item_write(self):
+        # LD202: container mutation outside the lock.
+        self.table["k"] = 0
+
+    def annotated_helper(self):  # holds-lock: _lock
+        self.hits += 1  # OK: caller holds the lock by contract
+
+
+class SeededCacheAB:
+    """Takes its own lock, then calls into SeededOwnerBA -> ABBA."""
+
+    def __init__(self, owner=None):
+        self._lock = threading.Lock()
+        self.owner = owner if owner is not None else SeededOwnerBA()
+
+    def fetch(self):
+        with self._lock:
+            self.owner.admit()  # LD203: Cache._lock -> Owner._lock ...
+
+
+class SeededOwnerBA:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.cache = SeededCacheAB()
+
+    def admit(self):
+        with self._lock:
+            pass
+
+    def lookup(self):
+        with self._lock:
+            self.cache.fetch()  # ... while Owner._lock -> Cache._lock here

@@ -1,0 +1,45 @@
+# lint: disable-file=LD201,LD202,LD203
+"""Suppressed twin of seeded_lock_discipline.py.  Never executed."""
+
+import threading
+
+
+class SupCounters:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.hits = 0  # guarded-by: _lock
+        self.misses = 0  # guarded-by: _lock
+        self.table = {}  # guarded-by: _lock
+
+    def seeded_unguarded_write(self):
+        self.misses = 0
+
+    def seeded_unguarded_rmw(self):
+        self.hits += 1
+
+    def seeded_unguarded_item_write(self):
+        self.table["k"] = 0
+
+
+class SupCacheAB:
+    def __init__(self, owner=None):
+        self._lock = threading.Lock()
+        self.owner = owner if owner is not None else SupOwnerBA()
+
+    def fetch(self):
+        with self._lock:
+            self.owner.admit()
+
+
+class SupOwnerBA:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.cache = SupCacheAB()
+
+    def admit(self):
+        with self._lock:
+            pass
+
+    def lookup(self):
+        with self._lock:
+            self.cache.fetch()

@@ -1,0 +1,68 @@
+"""Seeded trace-safety violations (TS101–TS105).  Never executed."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+@jax.jit
+def seeded_tracer_branch(x, lo):
+    # TS101: Python branch on a traced value -> retrace per boolean,
+    # or a ConcretizationTypeError at best.
+    if x.sum() > 0:
+        return x + lo
+    while lo > 0:
+        lo = lo - 1
+    return x
+
+
+@jax.jit
+def seeded_host_calls(x):
+    # TS102: host syncs inside a jitted function.
+    v = float(x)
+    w = np.abs(x)
+    u = x.item()
+    return v, w, u
+
+
+def seeded_static_list(fn):
+    # TS103: list-typed static_argnames (unhashable).
+    return jax.jit(fn, static_argnames=["n", "mode"])
+
+
+def _seeded_dot_kernel(x_ref, g_ref, o_ref):
+    # TS104: dot inside a Pallas kernel without preferred_element_type.
+    o_ref[...] = jnp.dot(x_ref[...], g_ref[...])
+
+
+def seeded_launch(x, g):
+    return pl.pallas_call(
+        _seeded_dot_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x, g)
+
+
+def seeded_bf16_accum(plane):
+    # TS105: accumulation on a bf16 storage plane without upcast.
+    lo = plane.astype(jnp.bfloat16)
+    acc = lo + lo
+    acc += lo
+    return acc
+
+
+def seeded_taint_through_helper(x):
+    # TS101 via intra-module propagation: helper branches on the traced
+    # argument the jitted root feeds it.
+    return _helper_branches(x)
+
+
+def _helper_branches(y):
+    if y.mean() > 0.5:
+        return y * 2
+    return y
+
+
+seeded_registered = jax.jit(seeded_taint_through_helper)

@@ -1,0 +1,47 @@
+# lint: disable-file=TS101,TS102,TS103,TS104,TS105
+"""Suppressed twin of seeded_trace_safety.py: identical violations, all
+silenced by the file-level disable above.  Never executed."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+@jax.jit
+def seeded_tracer_branch(x, lo):
+    if x.sum() > 0:
+        return x + lo
+    while lo > 0:
+        lo = lo - 1
+    return x
+
+
+@jax.jit
+def seeded_host_calls(x):
+    v = float(x)
+    w = np.abs(x)
+    u = x.item()
+    return v, w, u
+
+
+def seeded_static_list(fn):
+    return jax.jit(fn, static_argnames=["n", "mode"])
+
+
+def _seeded_dot_kernel(x_ref, g_ref, o_ref):
+    o_ref[...] = jnp.dot(x_ref[...], g_ref[...])
+
+
+def seeded_launch(x, g):
+    return pl.pallas_call(
+        _seeded_dot_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x, g)
+
+
+def seeded_bf16_accum(plane):
+    lo = plane.astype(jnp.bfloat16)
+    acc = lo + lo
+    acc += lo
+    return acc

@@ -43,7 +43,9 @@ def _legacy_physical(kernels, x, *, slm_bits=8, atoms=None,
     scale = jnp.max(jnp.abs(kernels), axis=(1, 2, 3, 4), keepdims=True)
     scale = jnp.where(scale > 0, scale, 1.0)
     decay = atomic.t2_tap_weights(ker_shape[-1], atoms, storage_interval_s)
-    q = lambda k: optics.quantize_unit(k / scale, slm_bits) * decay
+    q = lambda k: (
+        optics.quantize_unit(k / scale, slm_bits) * decay[None, None, None, None, :]
+    )
     kt = int(ker_shape[-1])
     h_t = atomic.photon_echo_transfer(kt, atoms)
     p_t = optics.temporal_pulse_spectrum(kt)
@@ -52,7 +54,7 @@ def _legacy_physical(kernels, x, *, slm_bits=8, atoms=None,
         h_t = h_t / jnp.maximum(p_t, 1e-3)
 
     def band(k):
-        spec = jnp.fft.fft(k, axis=-1) * h_t
+        spec = jnp.fft.fft(k, axis=-1) * h_t[None, None, None, None, :]
         return jnp.real(jnp.fft.ifft(spec, axis=-1))
 
     g_plus = sc.make_grating(band(q(k_plus)), fft_shape)
