@@ -36,11 +36,28 @@ This suite measures those claims end to end and asserts them (the
   ``verify_gratings`` the next fetch must detect the checksum mismatch
   (``integrity_failures``) and self-heal by re-recording.
 
+The replica rows (PR 9) lift the same contract one level up, to a
+:class:`~repro.launch.replica.ReplicaSet` where whole replicas die:
+
+* ``replica_storm`` — 1 of 3 replicas killed mid-load: 100 % of the
+  submitted futures must still resolve (zero hangs, zero lost futures),
+  availability across the storm must hold ≥ 95 %, and a replacement
+  replica warm-restarted from the durable tenant manifest must serve
+  scores bitwise-equal to the survivors — all asserted here and gated
+  by ``scripts/bench_gate.py`` in the ``replica-chaos`` CI job.
+* ``replica_hedge`` — one replica runs with injected straggler latency;
+  the p99 with hedging on vs off is the gated ``hedge_p99_gain``.
+* ``replica_flap`` — a replica's heartbeats stall and recover in a loop
+  under load: flaps are counted, every future resolves.
+
 Run standalone (writes ``BENCH_chaos.json``)::
 
     PYTHONPATH=src python benchmarks/chaos.py [--smoke] [--json-dir .]
+        [--only chaos|replica]
 
-or as a suite through ``benchmarks/run.py --only chaos``.
+or as a suite through ``benchmarks/run.py --only chaos``.  ``--only``
+filters rows by name substring so the scheduler-level and replica-level
+storms can run as separate CI jobs.
 """
 
 from __future__ import annotations
@@ -384,13 +401,258 @@ def _integrity(log) -> str:
     )
 
 
-def run(smoke: bool = False, log=print) -> list[str]:
-    rows = [
-        _storm(smoke, log),
-        _breaker(log),
-        _degraded(smoke, log),
-        _integrity(log),
-    ]
+# -- replica-level storms ---------------------------------------------------
+
+
+def _build_replica_server() -> VideoSearchServer:
+    cfg = VideoSearchConfig(window_frames=WINDOW, chunk_windows=1)
+    return VideoSearchServer(frame_hw=FRAME_HW, cfg=cfg)
+
+
+def _make_replica_set(tmpdir: str | None = None, **kw):
+    from repro.launch.replica import HedgePolicy, ReplicaSet
+
+    kw.setdefault("hedge", HedgePolicy(enabled=False))
+    kw.setdefault("default_deadline_s", 120.0)
+    rs = ReplicaSet(_build_replica_server, ckpt_dir=tmpdir, **kw)
+    k = np.random.RandomState(0).randn(*KERNEL).astype(np.float32)
+    rs.add_tenant("t0", k)
+    clip = np.asarray(_clip(0))
+    for name in list(rs.monitor.states()):  # compile before any timing
+        rs._replicas[name].submit("t0", clip, block=True).result()
+    return rs
+
+
+def _replica_storm(smoke: bool, log) -> str:
+    """Kill 1 of 3 replicas mid-load; then warm-restart a replacement
+    from the durable manifest and require bitwise-equal scores.  The
+    acceptance contract of the replicated runtime — asserted here,
+    gated in CI."""
+    import tempfile
+
+    from repro.launch.replica import HedgePolicy
+
+    n_req = 24 if smoke else 60
+    with tempfile.TemporaryDirectory() as tmp:
+        rs = _make_replica_set(
+            tmpdir=os.path.join(tmp, "manifest"),
+            n_replicas=3,
+            hedge=HedgePolicy(
+                enabled=True, cold_delay_s=0.25, min_samples=10**9
+            ),
+        )
+        try:
+            # straggler latency on the victim so the kill catches work
+            # in flight (otherwise the storm never exercises failover)
+            rs._replicas["r1"].server.chaos = ChaosInjector(
+                [ChaosRule("dispatch", "latency", rate=1.0, delay_s=0.05)],
+                seed=2,
+            )
+            t0 = time.perf_counter()
+            futs = []
+            for i in range(n_req):
+                futs.append(rs.submit("t0", _clip(i % 3), block=True))
+                if i == n_req // 3:
+                    rs.kill_replica("r1")
+                time.sleep(0.001)
+            ok = typed = unresolved = 0
+            for f in futs:
+                try:
+                    f.result(timeout=180)
+                    ok += 1
+                except ServingError:
+                    typed += 1
+                except FutureTimeoutError:
+                    unresolved += 1
+            elapsed = time.perf_counter() - t0
+            m = rs.metrics()
+            availability = 100.0 * ok / n_req
+            resolution = 100.0 * (ok + typed) / n_req
+            # warm restart: rebuild the dead replica from the manifest,
+            # admitted only after the bitwise probe — then double-check
+            # end to end against a survivor
+            clip = _clip(1)
+            want = rs.search("t0", clip)
+            replacement = rs.replace_replica("r1")
+            got = replacement.submit("t0", clip, block=True).result(timeout=120)
+            bitwise = float(
+                np.array_equal(np.asarray(want["scores"]), np.asarray(got["scores"]))
+            )
+        finally:
+            rs.close()
+    log(
+        f"replica storm: {n_req} requests, 1/3 replicas killed mid-load — "
+        f"{ok} ok / {typed} typed / {unresolved} unresolved, availability "
+        f"{availability:.1f}%, {m['failovers']} failovers ({m['rescued']} "
+        f"rescued), {m['hedges']} hedges, lost={m['lost_futures']}, "
+        f"warm-restart bitwise={bitwise:.0f}"
+    )
+    # the acceptance criteria — asserted, not just reported
+    assert unresolved == 0, f"{unresolved} futures never resolved (hang)"
+    assert resolution == 100.0, "every future must resolve"
+    assert m["lost_futures"] == 0, "lost futures after the storm"
+    assert availability >= 95.0, f"availability {availability:.1f}% < 95%"
+    assert bitwise == 1.0, "warm-restarted replica diverged bitwise"
+    return _row(
+        "replica_storm",
+        elapsed * 1e6,
+        {
+            "availability_pct": availability,
+            "resolution_pct": resolution,
+            "lost_futures": float(m["lost_futures"]),
+            "failovers": float(m["failovers"]),
+            "rescued": float(m["rescued"]),
+            "warm_restart_bitwise": bitwise,
+            "p99_ms": m["latency_p99_ms"],
+        },
+    )
+
+
+def _replica_hedge(smoke: bool, log) -> str:
+    """p99 with one straggling replica, hedging off vs on — the gated
+    tail-latency claim.  The straggler injects 60 ms on every dispatch;
+    the hedge duplicates after 15 ms and the fast replica's bitwise-
+    identical answer resolves the future."""
+    from repro.launch.replica import HedgePolicy
+
+    n_req = 16 if smoke else 40
+    straggle_s = 0.06
+    p99 = {}
+    counters = {}
+    for hedged in (False, True):
+        rs = _make_replica_set(
+            n_replicas=2,
+            hedge=HedgePolicy(
+                enabled=hedged, cold_delay_s=0.015, min_samples=10**9
+            ),
+            poll_interval_s=0.003,
+        )
+        try:
+            rs._replicas["r0"].server.chaos = ChaosInjector(
+                [ChaosRule("dispatch", "latency", rate=1.0, delay_s=straggle_s)],
+                seed=3,
+            )
+            lats = []
+            for i in range(n_req):
+                t0 = time.perf_counter()
+                rs.search("t0", _clip(i % 3))
+                lats.append(time.perf_counter() - t0)
+            lats.sort()
+            p99[hedged] = 1e3 * lats[min(int(0.99 * len(lats)), len(lats) - 1)]
+            counters[hedged] = rs.metrics()
+        finally:
+            rs.close()
+    gain = p99[False] / max(p99[True], 1e-9)
+    m = counters[True]
+    log(
+        f"replica hedge: p99 {p99[False]:.1f}ms unhedged -> {p99[True]:.1f}ms "
+        f"hedged ({gain:.2f}x), {m['hedges']} hedges, {m['hedge_wins']} wins"
+    )
+    assert m["hedges"] > 0, "hedging never fired against the straggler"
+    assert m["hedge_wins"] > 0, "no hedge ever won against the straggler"
+    return _row(
+        "replica_hedge",
+        0,
+        {
+            "p99_unhedged_ms": p99[False],
+            "p99_hedged_ms": p99[True],
+            "hedge_p99_gain": gain,
+            "hedges": float(m["hedges"]),
+            "hedge_wins": float(m["hedge_wins"]),
+        },
+    )
+
+
+def _replica_flap(smoke: bool, log) -> str:
+    """A replica's heartbeats stall and recover in a loop under load:
+    the monitor counts the flaps/deaths, the rescue path re-homes work
+    from the dead intervals, and every future still resolves."""
+    n_req = 20 if smoke else 48
+    rs = _make_replica_set(
+        n_replicas=2,
+        suspect_after_s=0.03,
+        dead_after_s=0.06,
+        heartbeat_interval_s=0.005,
+        poll_interval_s=0.003,
+    )
+    stop = threading.Event()
+
+    def _flapper():
+        n = 0
+        while not stop.is_set():
+            try:
+                rs.stall_replica("r0")
+                # short stalls suspect-then-recover (a flap); every 3rd
+                # one outlives dead_after_s, so the run also exercises
+                # death, rescue and re-admission of a revived member
+                time.sleep(0.08 if n % 3 == 2 else 0.04)
+                rs.revive_replica("r0")
+            except (KeyError, ValueError):
+                return
+            n += 1
+            time.sleep(0.01)
+
+    flapper = threading.Thread(target=_flapper, daemon=True)
+    flapper.start()
+    ok = typed = unresolved = 0
+    try:
+        futs = []
+        for i in range(n_req):
+            futs.append(rs.submit("t0", _clip(i % 3), block=True))
+            time.sleep(0.01)  # stretch the load across several flaps
+        for f in futs:
+            try:
+                f.result(timeout=180)
+                ok += 1
+            except ServingError:
+                typed += 1
+            except FutureTimeoutError:
+                unresolved += 1
+        m = rs.metrics()
+    finally:
+        stop.set()
+        flapper.join(timeout=10)
+        rs.close()
+    resolution = 100.0 * (ok + typed) / n_req
+    log(
+        f"replica flap: {n_req} requests under stall/revive churn — "
+        f"{ok} ok / {typed} typed / {unresolved} unresolved, "
+        f"{m['flaps']} flaps, {m['deaths']} deaths, {m['rescued']} rescued"
+    )
+    assert unresolved == 0, f"{unresolved} futures never resolved (hang)"
+    assert resolution == 100.0, "every future must resolve under flapping"
+    assert m["lost_futures"] == 0
+    assert m["flaps"] + m["deaths"] > 0, "the churn never produced a flap"
+    return _row(
+        "replica_flap",
+        0,
+        {
+            "resolution_pct": resolution,
+            "availability_pct": 100.0 * ok / n_req,
+            "flaps": float(m["flaps"]),
+            "deaths": float(m["deaths"]),
+            "rescued": float(m["rescued"]),
+        },
+    )
+
+
+_BENCHES: list[tuple[str, object]] = [
+    ("chaos_storm", lambda smoke, log: _storm(smoke, log)),
+    ("chaos_breaker", lambda smoke, log: _breaker(log)),
+    ("chaos_degraded", lambda smoke, log: _degraded(smoke, log)),
+    ("chaos_integrity", lambda smoke, log: _integrity(log)),
+    ("replica_storm", _replica_storm),
+    ("replica_hedge", _replica_hedge),
+    ("replica_flap", _replica_flap),
+]
+
+
+def run(smoke: bool = False, log=print, only: str | None = None) -> list[str]:
+    rows = []
+    for name, fn in _BENCHES:
+        if only is not None and only not in name:
+            continue
+        rows.append(fn(smoke, log))
     return rows
 
 
@@ -413,8 +675,14 @@ def main() -> None:
     ap.add_argument(
         "--json-dir", default=".", help="directory for BENCH_chaos.json"
     )
+    ap.add_argument(
+        "--only",
+        default=None,
+        help="run only rows whose name contains this substring "
+        "('chaos' = scheduler-level rows, 'replica' = replica-level rows)",
+    )
     args = ap.parse_args()
-    rows = run(smoke=args.smoke, log=print)
+    rows = run(smoke=args.smoke, log=print, only=args.only)
     print("name,us_per_call,derived")
     for row in rows:
         print(row)

@@ -1,6 +1,7 @@
 from repro.checkpoint.checkpoint import (
     CheckpointManager,
     latest_step,
+    read_manifest,
     restore,
     restore_resharded,
     save,

@@ -2,9 +2,18 @@
 
 Guarantees that matter on a 1000-node job:
 
-* **Atomicity** — write to ``<dir>/tmp.<step>`` then ``os.rename``; a
-  crash mid-write can never corrupt the latest good checkpoint, and
-  restart logic (``latest_step``) only ever sees complete directories.
+* **Atomicity + durability** — write to ``<dir>/tmp.<step>.<pid>``,
+  fsync every payload file and the manifest, then ``os.rename`` the
+  directory into place and fsync the parent: a crash at *any* point
+  mid-save can never corrupt the latest good checkpoint — restart logic
+  (``latest_step``) only ever sees complete directories, and a rename
+  that made it to disk stays there across power loss.  Overwriting an
+  existing step parks the old directory under a ``tmp.gc.*`` name
+  before the rename (never a delete-then-rename window), so even a
+  crash mid-overwrite leaves either the old or the new step intact.
+  ``save(..., chaos=...)`` exposes the write/rename seams to a
+  :class:`~repro.distributed.fault.ChaosInjector` so the crash-window
+  claims are *tested*, not asserted (tests/test_checkpoint.py).
 * **Async** — ``CheckpointManager(async_save=True)`` snapshots the device
   arrays to host memory synchronously (cheap) and runs serialization on a
   writer thread, overlapping I/O with the next training steps.
@@ -60,8 +69,34 @@ def _unflatten_like(template: PyTree, flat: dict[str, np.ndarray]) -> PyTree:
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
-def save(ckpt_dir: str, step: int, trees: dict[str, PyTree]) -> str:
-    """Atomic synchronous save.  trees: name → pytree."""
+def _fsync_path(path: str) -> None:
+    """fsync a file (or directory) so it survives power loss, not just
+    a process crash.  Directory fsync pins the rename itself."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def save(
+    ckpt_dir: str,
+    step: int,
+    trees: dict[str, PyTree],
+    extra: dict | None = None,
+    chaos=None,
+) -> str:
+    """Atomic + durable synchronous save.  trees: name → pytree.
+
+    ``extra`` is JSON-serializable metadata stored in the manifest
+    (read back via :func:`read_manifest`) — the replica layer keeps its
+    tenant manifests here.  ``chaos`` is an optional
+    :class:`~repro.distributed.fault.ChaosInjector`; the ``ckpt_write``
+    seam fires once per payload file and ``ckpt_rename`` fires just
+    before the atomicity boundary, so crash-injection tests can kill a
+    save at the worst possible moments and assert the previous step
+    survives intact.
+    """
     os.makedirs(ckpt_dir, exist_ok=True)
     tmp = os.path.join(ckpt_dir, f"tmp.{step}.{os.getpid()}")
     final = os.path.join(ckpt_dir, f"step_{step}")
@@ -69,15 +104,43 @@ def save(ckpt_dir: str, step: int, trees: dict[str, PyTree]) -> str:
         shutil.rmtree(tmp)
     os.makedirs(tmp)
     manifest = {"step": step, "trees": list(trees)}
+    if extra is not None:
+        manifest["extra"] = extra
     for name, tree in trees.items():
+        if chaos is not None:
+            chaos.on("ckpt_write", payload=name)
         flat = _flatten_with_paths(tree)
-        np.savez(os.path.join(tmp, f"{name}.npz"), **flat)
-    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        path = os.path.join(tmp, f"{name}.npz")
+        np.savez(path, **flat)
+        _fsync_path(path)
+    mpath = os.path.join(tmp, "manifest.json")
+    with open(mpath, "w") as f:
         json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    _fsync_path(tmp)
+    if chaos is not None:
+        chaos.on("ckpt_rename", payload=step)
     if os.path.exists(final):
-        shutil.rmtree(final)
-    os.rename(tmp, final)  # atomicity boundary
+        # Park the old step rather than deleting it pre-rename: rename
+        # is atomic, rmtree is not, so there is never a window with
+        # neither old nor new step on disk.
+        trash = os.path.join(ckpt_dir, f"tmp.gc.{step}.{os.getpid()}")
+        if os.path.exists(trash):
+            shutil.rmtree(trash)
+        os.rename(final, trash)
+        os.rename(tmp, final)  # atomicity boundary
+        shutil.rmtree(trash, ignore_errors=True)
+    else:
+        os.rename(tmp, final)  # atomicity boundary
+    _fsync_path(ckpt_dir)
     return final
+
+
+def read_manifest(ckpt_dir: str, step: int) -> dict:
+    """Load the manifest JSON for a step (includes ``extra`` if saved)."""
+    with open(os.path.join(ckpt_dir, f"step_{step}", "manifest.json")) as f:
+        return json.load(f)
 
 
 def latest_step(ckpt_dir: str) -> int | None:
@@ -127,16 +190,23 @@ def restore_resharded(
 class CheckpointManager:
     """Keep-K async checkpointer with restart discovery."""
 
-    def __init__(self, ckpt_dir: str, keep: int = 3, async_save: bool = True):
+    def __init__(
+        self,
+        ckpt_dir: str,
+        keep: int = 3,
+        async_save: bool = True,
+        chaos=None,
+    ):
         self.ckpt_dir = ckpt_dir
         self.keep = keep
         self.async_save = async_save
+        self.chaos = chaos
         self._thread: threading.Thread | None = None
         self._error: BaseException | None = None
 
     # -- save ----------------------------------------------------------
 
-    def save(self, step: int, trees: dict[str, PyTree]) -> None:
+    def save(self, step: int, trees: dict[str, PyTree], extra: dict | None = None) -> None:
         self.wait()  # one in-flight save at a time
         # snapshot to host synchronously: the training loop may donate /
         # overwrite device buffers right after this call returns.
@@ -145,13 +215,13 @@ class CheckpointManager:
             for name, tree in trees.items()
         }
         if not self.async_save:
-            save(self.ckpt_dir, step, host_trees)
+            save(self.ckpt_dir, step, host_trees, extra=extra, chaos=self.chaos)
             self._gc()
             return
 
         def work():
             try:
-                save(self.ckpt_dir, step, host_trees)
+                save(self.ckpt_dir, step, host_trees, extra=extra, chaos=self.chaos)
                 self._gc()
             except BaseException as e:  # surfaced on next wait()
                 self._error = e
@@ -187,3 +257,8 @@ class CheckpointManager:
         )
         for s in steps[: -self.keep] if self.keep > 0 else []:
             shutil.rmtree(os.path.join(self.ckpt_dir, f"step_{s}"), ignore_errors=True)
+        # stale tmp.* dirs are crash debris from interrupted saves — safe
+        # to reap: a live save only ever uses its own pid-suffixed name.
+        for name in os.listdir(self.ckpt_dir):
+            if name.startswith("tmp.") and not name.endswith(f".{os.getpid()}"):
+                shutil.rmtree(os.path.join(self.ckpt_dir, name), ignore_errors=True)

@@ -1,5 +1,6 @@
 """Fault-tolerance machinery: chaos/failure injection, restart driver,
-deterministic shard reassignment (straggler mitigation).
+heartbeat-driven membership, deterministic shard reassignment
+(straggler mitigation).
 
 On a real cluster the restart driver is the job scheduler; here
 ``run_with_restarts`` plays that role so the recovery path (latest-
@@ -17,12 +18,22 @@ spike, poison a payload row with NaNs, or run an arbitrary action
 (e.g. racing an eviction).  A server with no injector attached pays a
 single attribute check — chaos is free when off.
 
+Membership: ``HeartbeatMonitor`` tracks per-member liveness from posted
+heartbeats and drives the replica lifecycle ``healthy → suspect →
+dead`` (plus the deliberate ``draining`` state) with an injectable
+clock, so transitions are deterministic in tests.  It is deliberately
+transport-agnostic: members are opaque string ids that ``beat()`` —
+thread-backed replicas today, processes on a device mesh later post the
+same beats (see ``launch/replica.py`` and docs/serving.md).
+
 Straggler mitigation: the data pipeline is a pure function of
 (step, shard) — `reassign_shards` deterministically re-partitions work
 over the live workers, so a slow/dead host's shards migrate without
 coordination state.  Combined with synchronous-SGD backup semantics
 (first `quorum` of workers to finish a step win), this is the standard
-recipe (MapReduce backup tasks / Chen et al. 2016).
+recipe (MapReduce backup tasks / Chen et al. 2016).  With a
+``previous`` assignment it additionally guarantees **minimal
+movement**: only the shards of dead workers move.
 """
 
 from __future__ import annotations
@@ -210,17 +221,196 @@ def run_with_restarts(
     raise RuntimeError("unreachable")
 
 
-def reassign_shards(num_shards: int, live_workers: list[int]) -> dict[int, list[int]]:
+def reassign_shards(
+    num_shards: int,
+    live_workers: list[int],
+    previous: dict[int, list[int]] | None = None,
+) -> dict[int, list[int]]:
     """Deterministic shard→worker map over the currently-live workers.
 
     Pure function of its inputs: every surviving worker computes the same
-    assignment with no coordination.  Shards of dead workers are spread
-    round-robin by shard index.
+    assignment with no coordination (``live_workers`` order is
+    irrelevant — the map is keyed on the *set*).
+
+    Without ``previous`` the shards spread round-robin by index (the
+    cold-start balanced layout).  With ``previous`` (the assignment in
+    force before the membership change) the re-partition is **minimal
+    movement**: a shard whose previous owner is still live stays put;
+    only orphan shards — owned by a now-dead worker, or new shards with
+    no previous owner — move, placed greedily on the least-loaded live
+    worker (ties broken by worker id, orphans in shard-index order).
+    Consequences, pinned by property test (tests/test_fault.py):
+
+    * worker death from a balanced assignment re-balances (max−min ≤ 1
+      after redistribution) while touching only the dead worker's shards;
+    * worker *join* moves nothing — stability is preferred over
+      rebalancing onto the newcomer (it picks up orphans only), so a
+      flapping worker cannot thrash the whole partition;
+    * same live set + same previous ⇒ identical output (idempotent).
     """
     if not live_workers:
         raise ValueError("no live workers")
-    workers = sorted(live_workers)
+    workers = sorted(set(live_workers))
     assignment: dict[int, list[int]] = {w: [] for w in workers}
-    for shard in range(num_shards):
-        assignment[workers[shard % len(workers)]].append(shard)
+    if previous is None:
+        for shard in range(num_shards):
+            assignment[workers[shard % len(workers)]].append(shard)
+        return assignment
+    owner: dict[int, int] = {}
+    for w in sorted(previous):
+        if w not in assignment:
+            continue  # dead worker: its shards become orphans
+        for s in previous[w]:
+            if 0 <= s < num_shards:
+                owner[s] = w
+    for s, w in owner.items():
+        assignment[w].append(s)
+    # place orphans least-loaded-first; (load, id) ordering keeps the
+    # choice deterministic under equal loads
+    for s in range(num_shards):
+        if s in owner:
+            continue
+        w = min(workers, key=lambda w: (len(assignment[w]), w))
+        assignment[w].append(s)
+    for shards in assignment.values():
+        shards.sort()
     return assignment
+
+
+# ---------------------------------------------------------------------------
+# Heartbeat-driven membership (replica lifecycle)
+# ---------------------------------------------------------------------------
+
+
+# The replica lifecycle states (docs/serving.md has the full machine):
+# healthy -> suspect -> dead is driven by heartbeat staleness; draining
+# is entered deliberately (decommission) and ends in dead.
+HEALTHY = "healthy"
+SUSPECT = "suspect"
+DEAD = "dead"
+DRAINING = "draining"
+
+
+class HeartbeatMonitor:
+    """Liveness tracking from posted heartbeats: healthy → suspect →
+    dead, with deliberate ``draining``.
+
+    Members are opaque string ids — the monitor neither spawns nor owns
+    them, so the same machinery serves thread-backed replicas now and
+    multi-process mesh workers later (ROADMAP item 2).  A member posts
+    ``beat(id)``; ``poll()`` applies the staleness thresholds under the
+    injectable ``clock`` and returns the transitions it made, invoking
+    ``on_change(member, old, new)`` for each *outside* the monitor lock
+    (callbacks may re-enter ``state()``/``members()``).
+
+    Transitions:
+
+    * no beat for ``suspect_after_s``  → healthy → suspect
+    * no beat for ``dead_after_s``     → suspect (or healthy) → dead
+    * a beat from suspect              → back to healthy (a flap)
+    * ``mark(id, DRAINING)``           → no new work; still beating
+    * dead is sticky: beats from a dead member are dropped until it is
+      re-registered (a replacement replica registers under the same id)
+    """
+
+    def __init__(
+        self,
+        suspect_after_s: float = 0.06,
+        dead_after_s: float = 0.15,
+        clock: Callable[[], float] = time.monotonic,
+        on_change: Callable[[str, str, str], None] | None = None,
+    ):
+        if dead_after_s <= suspect_after_s:
+            raise ValueError("dead_after_s must exceed suspect_after_s")
+        self.suspect_after_s = float(suspect_after_s)
+        self.dead_after_s = float(dead_after_s)
+        self._clock = clock
+        self._on_change = on_change
+        self._lock = threading.Lock()
+        self._last: dict[str, float] = {}  # guarded-by: _lock
+        self._states: dict[str, str] = {}  # guarded-by: _lock
+        self.flaps = 0  # suspect -> healthy recoveries; guarded-by: _lock
+        self.deaths = 0  # guarded-by: _lock
+
+    def register(self, member: str) -> None:
+        """(Re-)admit a member as healthy with a fresh heartbeat."""
+        now = self._clock()
+        with self._lock:
+            self._last[member] = now
+            self._states[member] = HEALTHY
+
+    def deregister(self, member: str) -> None:
+        with self._lock:
+            self._last.pop(member, None)
+            self._states.pop(member, None)
+
+    def beat(self, member: str) -> None:
+        """Record a heartbeat.  A beat flips suspect back to healthy (a
+        flap — counted); beats from dead/unknown members are dropped."""
+        now = self._clock()
+        flapped = False
+        with self._lock:
+            state = self._states.get(member)
+            if state is None or state == DEAD:
+                return
+            self._last[member] = now
+            if state == SUSPECT:
+                self._states[member] = HEALTHY
+                self.flaps += 1
+                flapped = True
+        if flapped and self._on_change is not None:
+            self._on_change(member, SUSPECT, HEALTHY)
+
+    def mark(self, member: str, state: str) -> None:
+        """Force a member's state (deliberate transitions: ``draining``
+        on decommission, ``dead`` on a known kill)."""
+        if state not in (HEALTHY, SUSPECT, DEAD, DRAINING):
+            raise ValueError(f"unknown member state {state!r}")
+        with self._lock:
+            old = self._states.get(member)
+            if old is None or old == state:
+                return
+            self._states[member] = state
+            if state == DEAD:
+                self.deaths += 1
+        if self._on_change is not None:
+            self._on_change(member, old, state)
+
+    def poll(self) -> list[tuple[str, str, str]]:
+        """Apply the staleness thresholds once; returns (and reports via
+        ``on_change``) the ``(member, old, new)`` transitions made."""
+        now = self._clock()
+        changes: list[tuple[str, str, str]] = []
+        with self._lock:
+            for member, state in list(self._states.items()):
+                if state == DEAD:
+                    continue
+                stale = now - self._last.get(member, now)
+                if stale >= self.dead_after_s:
+                    changes.append((member, state, DEAD))
+                    self._states[member] = DEAD
+                    self.deaths += 1
+                elif stale >= self.suspect_after_s and state == HEALTHY:
+                    changes.append((member, state, SUSPECT))
+                    self._states[member] = SUSPECT
+        if self._on_change is not None:
+            for member, old, new in changes:
+                self._on_change(member, old, new)
+        return changes
+
+    def state(self, member: str) -> str | None:
+        with self._lock:
+            return self._states.get(member)
+
+    def states(self) -> dict[str, str]:
+        with self._lock:
+            return dict(self._states)
+
+    def members(self, *states: str) -> list[str]:
+        """Member ids currently in any of ``states`` (sorted — callers
+        iterate deterministically)."""
+        want = states or (HEALTHY,)
+        with self._lock:
+            return sorted(
+                m for m, s in self._states.items() if s in want
+            )

@@ -15,13 +15,17 @@ so they are reusable by any request/response layer:
   (the request's deadline passed before a result was ready),
   :class:`TenantQuarantined` (signal-integrity guard isolated this
   tenant's rows from a pooled batch), :class:`BatchExecutionError`
-  (a dispatch failed after retries were exhausted), and
-  :class:`SchedulerClosed` (shutdown resolved a queued request).
+  (a dispatch failed after retries were exhausted),
+  :class:`SchedulerClosed` (shutdown resolved a queued request), and
+  :class:`ReplicaUnavailable` (the replicated serving layer found no
+  live replica to serve — or finish serving — the request).
 
 * :class:`RetryPolicy` — decorrelated-jitter exponential backoff
   (`sleep = min(cap, U(base, 3*prev))`, the AWS recipe) with a *seeded*
   RNG: :meth:`RetryPolicy.delays` yields the same schedule every time it
-  is called, so retry behavior is deterministic in tests.
+  is called, so retry behavior is deterministic in tests.  Passing the
+  request's absolute ``deadline`` truncates the schedule: no retry (or
+  hedge) is ever scheduled past the remaining deadline budget.
 
 * :class:`CircuitBreaker` / :class:`DegradationLadder` — per-execution-
   path breakers (closed → open on ``failure_threshold`` consecutive
@@ -107,6 +111,31 @@ class SchedulerClosed(ServingError):
     """Scheduler shutdown resolved this still-queued request."""
 
 
+class ReplicaUnavailable(ServingError):
+    """No live replica could serve (or finish serving) this request.
+
+    Raised by the replicated serving layer (``launch/replica.py``) when
+    dispatch finds no healthy replica, or when a request's every
+    failover attempt died with the replica that held it.  Infra-side
+    and transient by nature — a *replica set* level failure, distinct
+    from :class:`BatchExecutionError` (a dispatch that ran and failed).
+    ``replica`` names the last replica tried, when attributable.
+    """
+
+    transient = True
+
+    def __init__(
+        self,
+        message: str,
+        *,
+        tenant: str | None = None,
+        batch_id: int | None = None,
+        replica: str | None = None,
+    ):
+        super().__init__(message, tenant=tenant, batch_id=batch_id)
+        self.replica = replica
+
+
 def is_transient(exc: BaseException) -> bool:
     """Whether ``exc`` is worth retrying (a truthy ``transient`` attr)."""
     return bool(getattr(exc, "transient", False))
@@ -157,11 +186,31 @@ class RetryPolicy:
     cap_s: float = 0.05
     seed: int = 0
 
-    def delays(self) -> Iterator[float]:
+    def delays(
+        self,
+        deadline: float | None = None,
+        clock: Callable[[], float] = time.time,
+    ) -> Iterator[float]:
+        """The seeded backoff schedule, optionally truncated by a
+        deadline.
+
+        ``deadline`` is absolute in ``clock``'s frame (the scheduler
+        passes the batch's earliest request deadline on ``time.time``).
+        A delay that would complete at or past the deadline is **not**
+        yielded and the schedule ends there: no retry — and by the same
+        rule no hedge — may be scheduled past the request's remaining
+        budget; burning the tail of the budget on a sleep guarantees a
+        ``DeadlineExceeded`` that an immediate typed failure would have
+        delivered sooner.  The jitter draws are consumed identically
+        with or without a deadline, so the un-truncated prefix of the
+        schedule is the same deterministic sequence tests pin.
+        """
         rng = random.Random(self.seed)
         prev = self.base_s
         for _ in range(self.max_retries):
             prev = min(self.cap_s, rng.uniform(self.base_s, 3.0 * prev))
+            if deadline is not None and clock() + prev >= deadline:
+                return
             yield prev
 
 

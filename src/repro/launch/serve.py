@@ -99,7 +99,11 @@ Two serving modes, matching the paper's system and the LM zoo:
    the paper's projected loader rates (`core.throughput`).
 
    **Failure semantics** (PR 6, the serving-resilience layer — see
-   :mod:`repro.launch.resilience` for the primitives):
+   :mod:`repro.launch.resilience` for the primitives, and
+   ``docs/serving.md`` for the consolidated contract including the
+   replicated layer above this one: :mod:`repro.launch.replica` fronts
+   N of these servers with heartbeat-driven failover, request hedging,
+   and durable warm restart):
 
    * *Error taxonomy* — every failure a future can resolve with is a
      typed :class:`~repro.launch.resilience.ServingError` carrying the
@@ -183,6 +187,7 @@ from repro.launch.resilience import (
     BatchExecutionError,
     DeadlineExceeded,
     DegradationLadder,
+    ReplicaUnavailable,  # noqa: F401  (re-exported serving taxonomy)
     RequestRejected,
     RetryPolicy,
     SchedulerClosed,
@@ -1397,7 +1402,15 @@ class MicrobatchScheduler:
         deadline pruning between attempts, and typed-error resolution.
         Every future in ``batch`` is resolved by the time this returns
         (or already was, by the watchdog/close)."""
-        delays = self.retry.delays()
+        # retry truncation: the schedule ends once a sleep would run past
+        # the batch's earliest request deadline — sleeping into a
+        # guaranteed DeadlineExceeded wastes the budget's tail.  The min
+        # over the formed batch is conservative for later-deadline peers
+        # (they ride the same dispatch anyway).
+        deadlines = [p.deadline for p in batch if p.deadline is not None]
+        delays = self.retry.delays(
+            deadline=min(deadlines) if deadlines else None
+        )
         while True:
             now = time.time()
             live: list[_Pending] = []

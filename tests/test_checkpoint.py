@@ -75,3 +75,96 @@ def test_async_overlapping_saves_serialize(tmp_path):
         mgr.save(s, {"params": _tree(s)})  # each save waits for previous
     mgr.wait()
     assert latest_step(str(tmp_path)) == 4
+
+
+# -- durability: crash injection at the write/rename seams ------------------
+
+
+def test_manifest_extra_roundtrip(tmp_path):
+    from repro.checkpoint import read_manifest
+
+    extra = {"tenants": {"t0": {"hash": "abc"}}, "schema": 1}
+    save(str(tmp_path), 3, {"params": _tree()}, extra=extra)
+    m = read_manifest(str(tmp_path), 3)
+    assert m["step"] == 3 and m["extra"] == extra
+    # restore is unaffected by the extra payload
+    out = restore(str(tmp_path), 3, {"params": _tree()})
+    np.testing.assert_array_equal(
+        np.asarray(out["params"]["bias"]), np.asarray(_tree()["bias"])
+    )
+
+
+def test_crash_during_write_never_corrupts_latest(tmp_path):
+    """A crash while writing payload files leaves the previous step as
+    the latest complete checkpoint — the tmp dir never becomes
+    visible."""
+    from repro.distributed.fault import ChaosInjector, ChaosRule, InjectedFault
+
+    save(str(tmp_path), 1, {"params": _tree(0)})
+    chaos = ChaosInjector([ChaosRule(seam="ckpt_write", kind="raise", at=(1,))])
+    with pytest.raises(InjectedFault):
+        save(str(tmp_path), 2, {"params": _tree(1)}, chaos=chaos)
+    assert latest_step(str(tmp_path)) == 1
+    out = restore(str(tmp_path), 1, {"params": _tree()})
+    np.testing.assert_array_equal(
+        np.asarray(out["params"]["bias"]), np.asarray(_tree(0)["bias"])
+    )
+
+
+def test_crash_before_rename_never_corrupts_latest(tmp_path):
+    """A crash at the atomicity boundary (everything written + fsynced,
+    rename not yet done) still leaves only the previous step visible."""
+    from repro.distributed.fault import ChaosInjector, ChaosRule, InjectedFault
+
+    save(str(tmp_path), 1, {"params": _tree(0)})
+    chaos = ChaosInjector([ChaosRule(seam="ckpt_rename", kind="raise", at=(1,))])
+    with pytest.raises(InjectedFault):
+        save(str(tmp_path), 2, {"params": _tree(1)}, chaos=chaos)
+    assert latest_step(str(tmp_path)) == 1
+
+
+def test_crash_mid_overwrite_keeps_a_complete_step(tmp_path):
+    """Overwriting an existing step parks the old dir before the rename;
+    a crash anywhere in the overwrite leaves a complete step_N on disk
+    (old or new — never neither)."""
+    from repro.distributed.fault import ChaosInjector, ChaosRule, InjectedFault
+
+    save(str(tmp_path), 1, {"params": _tree(0)})
+    chaos = ChaosInjector([ChaosRule(seam="ckpt_rename", kind="raise", at=(1,))])
+    with pytest.raises(InjectedFault):
+        save(str(tmp_path), 1, {"params": _tree(1)}, chaos=chaos)
+    assert latest_step(str(tmp_path)) == 1
+    out = restore(str(tmp_path), 1, {"params": _tree()})
+    np.testing.assert_array_equal(  # the OLD payload survived intact
+        np.asarray(out["params"]["bias"]), np.asarray(_tree(0)["bias"])
+    )
+    # the next clean save succeeds and wins
+    save(str(tmp_path), 1, {"params": _tree(2)})
+    out = restore(str(tmp_path), 1, {"params": _tree()})
+    np.testing.assert_array_equal(
+        np.asarray(out["params"]["bias"]), np.asarray(_tree(2)["bias"])
+    )
+
+
+def test_manager_gc_reaps_stale_tmp_dirs(tmp_path):
+    """Crash debris (tmp dirs from other pids) is reaped by the next
+    manager GC pass; the live pid's own tmp is left alone."""
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    stale = os.path.join(str(tmp_path), "tmp.9.99999")
+    os.makedirs(stale)
+    mgr.save(1, {"params": _tree()})
+    assert not os.path.exists(stale)
+    assert latest_step(str(tmp_path)) == 1
+
+
+def test_manager_chaos_passthrough_surfaces_on_wait(tmp_path):
+    """An async save crashed by the injector surfaces its error on the
+    next wait() — never silently dropped."""
+    from repro.distributed.fault import ChaosInjector, ChaosRule, InjectedFault
+
+    chaos = ChaosInjector([ChaosRule(seam="ckpt_write", kind="raise", at=(1,))])
+    mgr = CheckpointManager(str(tmp_path), async_save=True, chaos=chaos)
+    mgr.save(1, {"params": _tree()})
+    with pytest.raises(InjectedFault):
+        mgr.wait()
+    assert latest_step(str(tmp_path)) is None

@@ -131,3 +131,126 @@ def test_elastic_reshard_subprocess(tmp_path):
         capture_output=True, text=True, env=env, cwd=os.getcwd(), timeout=300,
     )
     assert "ELASTIC_OK" in proc.stdout, proc.stderr[-2000:]
+
+
+# -- minimal-movement reassignment + heartbeat membership -------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    num_shards=st.integers(1, 64),
+    dead=st.sets(st.integers(0, 7), max_size=6),
+)
+def test_reassign_shards_minimal_movement_on_death(num_shards, dead):
+    """Killing workers moves ONLY the dead workers' shards: every shard
+    of a surviving worker stays exactly where it was, orphans land on
+    the least-loaded survivors, and the result stays near-balanced."""
+    workers = list(range(8))
+    before = reassign_shards(num_shards, workers)
+    live = [w for w in workers if w not in dead]
+    if not live:
+        return
+    after = reassign_shards(num_shards, live, previous=before)
+    # totality: every shard owned exactly once
+    got = sorted(s for shards in after.values() for s in shards)
+    assert got == list(range(num_shards))
+    # minimal movement: survivors keep their shards
+    for w in live:
+        assert set(before[w]) <= set(after[w])
+    moved = sum(len(after[w]) - len(before[w]) for w in live)
+    orphaned = sum(len(before[w]) for w in dead)
+    assert moved == orphaned
+    # balance from a balanced start: greedy least-loaded placement keeps
+    # the spread within one shard
+    sizes = [len(v) for v in after.values()]
+    assert max(sizes) - min(sizes) <= 1
+
+
+@settings(max_examples=30, deadline=None)
+@given(num_shards=st.integers(1, 64), joiners=st.integers(1, 4))
+def test_reassign_shards_join_moves_nothing(num_shards, joiners):
+    """A worker JOINING moves zero shards (stability beats rebalance:
+    moving a shard re-records its gratings) and reassignment with an
+    unchanged membership is idempotent."""
+    workers = list(range(6))
+    before = reassign_shards(num_shards, workers)
+    grown = workers + [100 + j for j in range(joiners)]
+    after = reassign_shards(num_shards, grown, previous=before)
+    for w in workers:
+        assert after[w] == before[w]
+    for j in range(joiners):
+        assert after[100 + j] == []
+    assert reassign_shards(num_shards, workers, previous=before) == before
+
+
+def test_heartbeat_lifecycle_fake_clock():
+    """healthy → suspect → dead under staleness; a beat from suspect
+    flaps back to healthy; dead is sticky until re-registration."""
+    from repro.distributed.fault import (
+        DEAD,
+        HEALTHY,
+        SUSPECT,
+        HeartbeatMonitor,
+    )
+
+    class Clock:
+        t = 0.0
+
+        def __call__(self):
+            return self.t
+
+    clock = Clock()
+    events = []
+    mon = HeartbeatMonitor(
+        suspect_after_s=1.0,
+        dead_after_s=3.0,
+        clock=clock,
+        on_change=lambda m, old, new: events.append((m, old, new)),
+    )
+    mon.register("a")
+    mon.register("b")
+    assert mon.poll() == [] and mon.states() == {"a": HEALTHY, "b": HEALTHY}
+
+    clock.t = 1.5  # past suspect, before dead
+    mon.beat("b")
+    assert mon.poll() == [("a", HEALTHY, SUSPECT)]
+    assert mon.state("b") == HEALTHY
+
+    clock.t = 2.0  # a beat from suspect recovers (a flap, counted)
+    mon.beat("a")
+    assert mon.state("a") == HEALTHY and mon.flaps == 1
+    assert ("a", SUSPECT, HEALTHY) in events
+
+    clock.t = 5.5  # a: stale 3.5s -> dead (skipping suspect); b: 4.0 -> dead
+    changes = mon.poll()
+    assert set(changes) == {("a", HEALTHY, DEAD), ("b", HEALTHY, DEAD)}
+    assert mon.deaths == 2
+
+    mon.beat("a")  # dead is sticky: beats dropped
+    assert mon.state("a") == DEAD
+    assert mon.members(HEALTHY) == []
+
+    mon.register("a")  # replacement re-admits under the same id
+    assert mon.state("a") == HEALTHY
+    assert mon.members(HEALTHY, DEAD) == ["a", "b"]
+
+
+def test_heartbeat_draining_and_mark_validation():
+    from repro.distributed.fault import (
+        DEAD,
+        DRAINING,
+        HEALTHY,
+        HeartbeatMonitor,
+    )
+
+    mon = HeartbeatMonitor(suspect_after_s=10.0, dead_after_s=20.0)
+    mon.register("a")
+    mon.mark("a", DRAINING)
+    assert mon.state("a") == DRAINING
+    assert mon.members(HEALTHY) == []  # no new work while draining
+    mon.mark("a", DEAD)
+    assert mon.deaths == 1
+    with pytest.raises(ValueError):
+        mon.mark("a", "zombie")
+    with pytest.raises(ValueError):
+        HeartbeatMonitor(suspect_after_s=2.0, dead_after_s=1.0)

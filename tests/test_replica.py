@@ -1,0 +1,351 @@
+"""Replicated serving: heartbeat failover, hedging, draining, and
+durable warm restart (tests/test_fault.py covers the HeartbeatMonitor
+primitive, benchmarks/chaos.py the full storm)."""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.distributed.fault import (
+    DEAD,
+    DRAINING,
+    HEALTHY,
+    ChaosInjector,
+    ChaosRule,
+)
+from repro.launch.replica import (
+    HedgePolicy,
+    ReplicaSet,
+    _TenantSpec,
+    kernel_hash,
+    load_tenant_manifest,
+)
+from repro.launch.resilience import (
+    DeadlineExceeded,
+    ReplicaUnavailable,
+    SchedulerClosed,
+    ServingError,
+)
+from repro.launch.serve import VideoSearchConfig, VideoSearchServer
+
+
+def _kernels(seed, O=2, kt=3):
+    rng = np.random.RandomState(seed)
+    return rng.randn(O, 1, 3, 4, kt).astype(np.float32)
+
+
+def _clip(seed, T=20, H=12, W=12):
+    rng = np.random.RandomState(100 + seed)
+    return rng.rand(1, 1, H, W, T).astype(np.float32)
+
+
+def _build_server():
+    return VideoSearchServer(
+        frame_hw=(12, 12), cfg=VideoSearchConfig(window_frames=8)
+    )
+
+
+def _warm(rs, tenant="t0", clip=None):
+    """Serve one clip on every replica directly, so compile latency
+    cannot masquerade as a straggler in timing-sensitive tests."""
+    clip = _clip(0) if clip is None else clip
+    for name in list(rs.monitor.states()):
+        rs._replicas[name].submit(tenant, clip, block=True).result()
+
+
+def _make_set(n=2, **kw):
+    kw.setdefault("hedge", HedgePolicy(enabled=False))
+    rs = ReplicaSet(_build_server, n_replicas=n, **kw)
+    rs.add_tenant("t0", _kernels(0))
+    return rs
+
+
+# -- dispatch + fan-out ----------------------------------------------------
+
+
+def test_tenant_fanout_serves_bitwise_identical_scores():
+    """Every replica records the same gratings and serves bitwise-equal
+    scores — the property hedging and failover rely on."""
+    with _make_set(n=3) as rs:
+        clip = _clip(1)
+        outs = [
+            rs._replicas[name].submit("t0", clip, block=True).result()
+            for name in sorted(rs.monitor.states())
+        ]
+        ref = np.asarray(outs[0]["scores"])
+        for out in outs[1:]:
+            np.testing.assert_array_equal(ref, np.asarray(out["scores"]))
+        # the front end serves the same answer
+        got = rs.search("t0", clip)
+        np.testing.assert_array_equal(ref, np.asarray(got["scores"]))
+
+
+def test_no_healthy_replica_is_typed_not_hung():
+    with _make_set(n=1) as rs:
+        rs.kill_replica("r0")
+        fut = rs.submit("t0", _clip(0))
+        with pytest.raises(ReplicaUnavailable) as ei:
+            fut.result(timeout=10)
+        assert ei.value.tenant == "t0"
+        assert rs.metrics()["unroutable"] == 1
+
+
+def test_deadline_passes_through_failover_untouched():
+    """DeadlineExceeded is client-attributable: it resolves the outer
+    future as-is instead of burning failover attempts."""
+    with _make_set(n=2, default_deadline_s=0.0005) as rs:
+        _warm(rs)
+        fut = rs.submit("t0", _clip(0), block=True)
+        with pytest.raises(DeadlineExceeded):
+            fut.result(timeout=10)
+        assert rs.metrics()["failovers"] == 0
+
+
+# -- failover --------------------------------------------------------------
+
+
+def test_kill_fails_over_inflight_without_losing_futures():
+    """Killing a replica mid-flight re-homes its work: every future
+    resolves with a result, none with SchedulerClosed, and the retry
+    budget is untouched (failover is a membership event)."""
+    with _make_set(n=2) as rs:
+        _warm(rs)
+        r0 = rs._replicas["r0"]
+        r0.server.chaos = ChaosInjector(
+            [ChaosRule(seam="dispatch", kind="latency", rate=1.0, delay_s=0.25)]
+        )
+        futs = [rs.submit("t0", _clip(i % 3), block=True) for i in range(8)]
+        time.sleep(0.05)
+        rs.kill_replica("r0")
+        for f in futs:
+            f.result(timeout=30)  # raises if any resolved with an error
+        m = rs.metrics()
+        assert m["failovers"] > 0
+        assert m["completed"] == m["submitted"]
+        assert m["lost_futures"] == 0
+        # the survivors' schedulers never counted a retry for the
+        # failover (each attempt succeeded first try on its replica)
+        assert rs._replicas["r1"].metrics()["retries"] == 0
+
+
+def test_stall_triggers_heartbeat_rescue():
+    """A wedged replica (heartbeats stop, scheduler hung on latency) is
+    declared dead by staleness and its in-flight work is re-dispatched
+    by the rescue path — no inner future resolution required."""
+    with _make_set(
+        n=2, suspect_after_s=0.05, dead_after_s=0.12, poll_interval_s=0.005
+    ) as rs:
+        _warm(rs)
+        r0 = rs._replicas["r0"]
+        r0.server.chaos = ChaosInjector(
+            [ChaosRule(seam="dispatch", kind="latency", rate=1.0, delay_s=1.0)]
+        )
+        futs = [rs.submit("t0", _clip(i % 3), block=True) for i in range(6)]
+        rs.stall_replica("r0")
+        t0 = time.time()
+        for f in futs:
+            f.result(timeout=30)
+        wall = time.time() - t0
+        m = rs.metrics()
+        assert m["rescued"] > 0
+        assert m["states"]["r0"] == DEAD
+        # rescue beat the 1s chaos stall: the set did not wait for the
+        # wedged replica's inner futures
+        assert wall < 1.0, wall
+
+
+def test_revive_readmits_stalled_replica():
+    with _make_set(
+        n=2, suspect_after_s=0.03, dead_after_s=0.08, poll_interval_s=0.005
+    ) as rs:
+        rs.stall_replica("r0")
+        deadline = time.time() + 5.0
+        while rs.monitor.state("r0") != DEAD and time.time() < deadline:
+            time.sleep(0.005)
+        assert rs.monitor.state("r0") == DEAD
+        rs.revive_replica("r0")
+        assert rs.monitor.state("r0") == HEALTHY
+        # a killed replica cannot be revived — it lost its state
+        rs.kill_replica("r1")
+        with pytest.raises(ValueError):
+            rs.revive_replica("r1")
+
+
+# -- hedging ---------------------------------------------------------------
+
+
+def test_hedge_duplicates_straggler_and_first_result_wins():
+    """A straggling request is duplicated after the hedge delay; the
+    duplicate's result resolves the future long before the straggler's
+    chaos latency elapses."""
+    hedge = HedgePolicy(enabled=True, cold_delay_s=0.05, min_samples=10**9)
+    with _make_set(n=2, hedge=hedge, poll_interval_s=0.005) as rs:
+        _warm(rs)
+        slow = rs._replicas["r0"]
+        slow.server.chaos = ChaosInjector(
+            [ChaosRule(seam="dispatch", kind="latency", rate=1.0, delay_s=1.5)]
+        )
+        # aim a burst at the set; attempts landing on r0 straggle
+        futs = [rs.submit("t0", _clip(i % 3), block=True) for i in range(6)]
+        t0 = time.time()
+        for f in futs:
+            f.result(timeout=30)
+        wall = time.time() - t0
+        m = rs.metrics()
+        assert m["hedges"] > 0
+        assert m["hedge_wins"] > 0
+        assert m["completed"] == m["submitted"]
+        assert wall < 1.5, wall  # hedges beat the 1.5s straggler
+
+
+def test_hedge_bouncing_off_full_queue_never_fails_the_request():
+    """A hedge rejected at admission (queue full on every alternate
+    replica) is dropped, not surfaced: the primary attempt is still in
+    flight and resolves the outer future.  Regression test for the
+    replica storm under load — RequestRejected on a duplicate must not
+    mask a result that is about to arrive."""
+    hedge = HedgePolicy(enabled=True, cold_delay_s=0.03, min_samples=10**9)
+    with _make_set(
+        n=2,
+        hedge=hedge,
+        poll_interval_s=0.005,
+        scheduler_kwargs={
+            "max_queue": 1,
+            "max_batch": 1,
+            "batch_wait_s": 0.0,
+        },
+    ) as rs:
+        _warm(rs)
+        for name in ("r0", "r1"):
+            rs._replicas[name].server.chaos = ChaosInjector(
+                [ChaosRule(seam="dispatch", kind="latency", rate=1.0, delay_s=0.3)]
+            )
+        futs = [rs.submit("t0", _clip(i % 3), block=True) for i in range(4)]
+        for f in futs:
+            f.result(timeout=30)  # raises if a bounced hedge leaked out
+        m = rs.metrics()
+        assert m["completed"] == m["submitted"]
+        assert m["lost_futures"] == 0
+
+
+def test_hedge_respects_remaining_deadline_budget():
+    """The retry-truncation rule applied to hedges: a request whose
+    deadline has already passed is never duplicated."""
+    hedge = HedgePolicy(enabled=True, cold_delay_s=0.02, min_samples=10**9)
+    with _make_set(
+        n=2, hedge=hedge, poll_interval_s=0.005, default_deadline_s=0.01
+    ) as rs:
+        _warm(rs)
+        # straggle BOTH replicas: no request can beat the 10ms deadline,
+        # so every future must resolve DeadlineExceeded deterministically
+        for name in ("r0", "r1"):
+            rs._replicas[name].server.chaos = ChaosInjector(
+                [ChaosRule(seam="dispatch", kind="latency", rate=1.0, delay_s=0.5)]
+            )
+        futs = [rs.submit("t0", _clip(i % 3), block=True) for i in range(4)]
+        for f in futs:
+            with pytest.raises(DeadlineExceeded):
+                f.result(timeout=30)
+        # hedge delay (0.02) > deadline (0.01): every hedge would have
+        # been scheduled past the budget, so none fired
+        assert rs.metrics()["hedges"] == 0
+
+
+# -- draining --------------------------------------------------------------
+
+
+def test_drain_finishes_inflight_then_decommissions():
+    with _make_set(n=2) as rs:
+        _warm(rs)
+        futs = [rs.submit("t0", _clip(i % 3), block=True) for i in range(4)]
+        rs.drain_replica("r0", timeout_s=30.0)
+        assert rs.monitor.state("r0") is None  # deregistered, not dead
+        assert "r0" not in rs.metrics()["replicas"]
+        for f in futs:
+            f.result(timeout=30)
+        # new work routes to the survivor only
+        rs.search("t0", _clip(1))
+        assert rs.monitor.members(HEALTHY) == ["r1"]
+
+
+# -- durable manifest + warm restart ---------------------------------------
+
+
+def test_tenant_manifest_roundtrip_and_hash_guard(tmp_path):
+    spec = _TenantSpec(name="t0", kernels=_kernels(0))
+    entry = spec.manifest_entry()
+    back = _TenantSpec.from_manifest("t0", entry, spec.kernels)
+    np.testing.assert_array_equal(back.kernels, spec.kernels)
+    assert back.fidelity is None and back.slm is None and back.atoms is None
+    # corrupt bytes under the stored hash → refused
+    bad = spec.kernels.copy()
+    bad[0, 0, 0, 0, 0] += 1.0
+    with pytest.raises(ValueError, match="hash mismatch"):
+        _TenantSpec.from_manifest("t0", entry, bad)
+    # the hash covers shape and dtype, not just bytes
+    assert kernel_hash(spec.kernels) != kernel_hash(
+        spec.kernels.reshape(-1)
+    )
+
+
+def test_manifest_persists_through_checkpoint_layer(tmp_path):
+    ckpt = str(tmp_path / "manifest")
+    with _make_set(n=2, ckpt_dir=ckpt) as rs:
+        rs.add_tenant("t1", _kernels(1))
+        specs = load_tenant_manifest(ckpt)
+        assert sorted(specs) == ["t0", "t1"]
+        np.testing.assert_array_equal(specs["t1"].kernels, _kernels(1))
+
+
+def test_warm_restart_is_bitwise_and_gated_by_admission(tmp_path):
+    """A replacement replica rebuilt from the durable manifest serves
+    scores bitwise-equal to the survivors — and is only admitted to the
+    membership after proving it."""
+    ckpt = str(tmp_path / "manifest")
+    with _make_set(n=2, ckpt_dir=ckpt) as rs:
+        clip = _clip(2)
+        want = rs.search("t0", clip)
+        rs.kill_replica("r0")
+        assert rs.monitor.state("r0") == DEAD
+        replica = rs.replace_replica("r0")
+        assert rs.monitor.state("r0") == HEALTHY
+        got = replica.submit("t0", clip, block=True).result()
+        np.testing.assert_array_equal(
+            np.asarray(want["scores"]), np.asarray(got["scores"])
+        )
+
+
+def test_replace_requires_dead_replica_and_healthy_reference(tmp_path):
+    ckpt = str(tmp_path / "manifest")
+    with _make_set(n=1, ckpt_dir=ckpt) as rs:
+        with pytest.raises(ValueError, match="still live"):
+            rs.replace_replica("r0")
+        rs.kill_replica("r0")
+        # nothing healthy left to probe against: refused, not admitted
+        with pytest.raises(ReplicaUnavailable):
+            rs.replace_replica("r0")
+        assert rs.monitor.state("r0") == DEAD
+
+
+# -- shutdown --------------------------------------------------------------
+
+
+def test_close_resolves_every_inflight_future():
+    rs = _make_set(n=2)
+    _warm(rs)
+    rs._replicas["r0"].server.chaos = ChaosInjector(
+        [ChaosRule(seam="dispatch", kind="latency", rate=1.0, delay_s=0.2)]
+    )
+    rs._replicas["r1"].server.chaos = ChaosInjector(
+        [ChaosRule(seam="dispatch", kind="latency", rate=1.0, delay_s=0.2)]
+    )
+    futs = [rs.submit("t0", _clip(i % 3), block=True) for i in range(6)]
+    rs.close()
+    for f in futs:
+        try:
+            f.result(timeout=10)
+        except ServingError:
+            pass  # SchedulerClosed (or a completed straggler) — typed
+    assert all(f.done() for f in futs)
+    rs.close()  # idempotent

@@ -523,3 +523,36 @@ def test_tenant_churn_race_leaves_no_orphan_cache_entries():
     assert sums <= cached  # checksum table never outlives its entries
     stats = server.cache.stats()
     assert stats["entries"] <= 3 and stats["bytes"] >= 0
+
+
+def test_retry_delays_deadline_truncation_fake_clock():
+    """No retry may be scheduled past the remaining deadline budget: the
+    schedule ends at the first delay that would land at/after the
+    deadline, and the un-truncated prefix is the same pinned sequence
+    as the deadline-free schedule (jitter draws are consumed
+    identically either way)."""
+    policy = RetryPolicy(max_retries=5, base_s=0.01, cap_s=10.0, seed=7)
+    clock = _FakeClock(t=100.0)
+    full = list(policy.delays())
+    assert len(full) == 5
+
+    # generous deadline: full schedule, identical values
+    assert list(policy.delays(deadline=1e9, clock=clock)) == full
+
+    # deadline that admits exactly the first two delays: walk the fake
+    # clock the way the scheduler does (sleep = advance)
+    cutoff = 100.0 + full[0] + full[1] + 0.5 * full[2]
+    clock.t = 100.0
+    got = []
+    for d in policy.delays(deadline=cutoff, clock=clock):
+        got.append(d)
+        clock.t += d  # the sleep
+    assert got == full[:2]
+
+    # a deadline already in the past yields nothing
+    clock.t = 100.0
+    assert list(policy.delays(deadline=99.0, clock=clock)) == []
+
+    # boundary: a delay landing exactly ON the deadline is not taken
+    clock.t = 0.0
+    assert list(policy.delays(deadline=full[0], clock=clock)) == []
