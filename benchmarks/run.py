@@ -14,6 +14,10 @@
   chaos       — availability under an injected fault storm: typed-error
                 resolution, breaker trip/recover, degraded-rung capacity
                 (also standalone: benchmarks/chaos.py --smoke)
+  mesh        — device-mesh sharded serving: bitwise-equality audit vs
+                single-device + the 8-device scaling row (needs 8 host
+                devices; standalone benchmarks/mesh.py forces them,
+                through run.py it skips loudly on a 1-device process)
 
 ``--fast`` shrinks the accuracy benchmark geometry for CI-speed runs.
 ``--json`` additionally writes one ``BENCH_<suite>.json`` artifact per
@@ -58,6 +62,7 @@ def main() -> None:
         chaos,
         equivalence,
         kernels_bench,
+        mesh,
         roofline_bench,
         serving,
         speed,
@@ -80,6 +85,7 @@ def main() -> None:
         ),
         "serving": lambda: serving.run(smoke=args.fast, log=_log),
         "chaos": lambda: chaos.run(smoke=args.fast, log=_log),
+        "mesh": lambda: mesh.run(smoke=args.fast, log=_log),
     }
     if args.only:
         keep = set(args.only.split(","))

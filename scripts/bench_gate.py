@@ -95,6 +95,18 @@ GATED = {
     "replica_warm_restart_bitwise": "eq",
     "replica_flap_resolution_pct": "eq",
     "replica_hedge_p99_gain_x": "higher",
+    # device-mesh sharded serving (PR 10): the bitwise-equality audit —
+    # sharded scores must equal single-device EXACTLY (the committed
+    # baseline records 0.0, so ``eq`` pins fresh runs to 0.0 too, not
+    # merely "no worse") — across the stitched, fused-top-K,
+    # shared-stream-dedup, bf16 and chunked-cursor serving paths, plus
+    # the throughput-parity ratio of the sharded dispatch
+    "mesh_exact_volume_err": "eq",
+    "mesh_exact_fused_err": "eq",
+    "mesh_exact_dedup_err": "eq",
+    "mesh_exact_bf16_err": "eq",
+    "mesh_exact_chunked_err": "eq",
+    "mesh_winps_parity_x": "higher",
 }
 
 # absolute slack added on top of the relative tolerance for "lower"
@@ -125,6 +137,15 @@ FLOORS = {
     # injects a 4×-hedge-delay straggler, so even a noisy CI runner
     # clears 1.1×; the committed baseline documents the full win
     "replica_hedge_p99_gain_x": (1.1, 0.0),
+    # ISSUE 10 acceptance: the 8-device scaling row.  The per-device
+    # work shrink is ANALYTIC (from the shard-tiled packing — no
+    # timing noise, zero slack): each device must hold ≥4× less
+    # arena×batch work than the single-device pool.  The parity ratio
+    # is measured — the sharded dispatch on a 1-core CI host must keep
+    # a usable fraction of single-device windows/s (real meshes, where
+    # the 8 devices are 8 cores, turn the analytic row into speedup)
+    "mesh_per_device_work_x": (4.0, 0.0),
+    "mesh_winps_parity_x": (0.20, 0.10),
 }
 
 # gate-local metric specs (same format as plot_bench.TRACKED): metrics
@@ -169,6 +190,15 @@ SPECS = {
     "replica_hedge_p99_gain_x": (
         "chaos", "replica_hedge", "hedge_p99_gain",
     ),
+    "mesh_exact_volume_err": ("mesh", "mesh_exact_volume", "max_abs_err"),
+    "mesh_exact_fused_err": ("mesh", "mesh_exact_fused_topk", "max_abs_err"),
+    "mesh_exact_dedup_err": ("mesh", "mesh_exact_dedup", "max_abs_err"),
+    "mesh_exact_bf16_err": ("mesh", "mesh_exact_bf16", "max_abs_err"),
+    "mesh_exact_chunked_err": ("mesh", "mesh_exact_chunked", "max_abs_err"),
+    "mesh_per_device_work_x": (
+        "mesh", "mesh_scaling_d8", "per_device_work_x",
+    ),
+    "mesh_winps_parity_x": ("mesh", "mesh_scaling_d8", "winps_parity_x"),
 }
 
 

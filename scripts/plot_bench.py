@@ -126,6 +126,15 @@ TRACKED = {
     "chaos_degraded_vs_healthy_x": (
         "chaos", "chaos_degraded", "degraded_vs_healthy",
     ),
+    # device-mesh sharded serving: windows/s of the sharded vs single-
+    # device pooled dispatch, the throughput-parity ratio, and the
+    # analytic per-device work shrink from the shard-tiled arena
+    "mesh_stream_winps": ("mesh", "mesh_stream_d8", "windows_per_s"),
+    "mesh_single_winps": ("mesh", "mesh_single", "windows_per_s"),
+    "mesh_winps_parity_x": ("mesh", "mesh_scaling_d8", "winps_parity_x"),
+    "mesh_per_device_work_x": (
+        "mesh", "mesh_scaling_d8", "per_device_work_x",
+    ),
 }
 
 # latency pairs plotted together (left panel) and speedups (right panel)
@@ -144,6 +153,8 @@ SPEEDUPS = [
     "serving_fused_mem_x",
     "serving_fused_winps_x",
     "chaos_degraded_vs_healthy_x",
+    "mesh_per_device_work_x",
+    "mesh_winps_parity_x",
 ]
 
 

@@ -32,6 +32,7 @@ RULES = {
     "TS103": "static-argnames-unhashable",
     "TS104": "dot-accum-dtype",
     "TS105": "bf16-accum-upcast",
+    "TS106": "import-time-device-query",
     "LD201": "unguarded-write",
     "LD202": "unguarded-rmw",
     "LD203": "lock-order-cycle",

@@ -28,6 +28,16 @@ TS105 bf16-accum-upcast
     first.  bf16 is a *storage* dtype in this repo (grating planes);
     accumulating in it violates the f32-accumulation contract.
 
+TS106 import-time-device-query
+    ``jax.devices()`` / ``jax.device_count()`` /
+    ``jax.local_device_count()`` evaluated at import time (module or
+    class body, decorator, parameter default).  The first device query
+    initializes the backend, so a module-level call pins the device set
+    before a launcher can export ``XLA_FLAGS`` (e.g.
+    ``--xla_force_host_platform_device_count=8`` for the mesh CI leg)
+    or wire up distributed fan-out.  Query devices inside the function
+    that needs them.
+
 Jit roots are discovered per module:
 
 * decorators: ``@jax.jit``, ``@jit``, ``@functools.partial(jax.jit, ...)``
@@ -67,6 +77,36 @@ _HOST_COERCIONS = {"float", "int", "bool", "complex"}
 _HOST_METHODS = {"item", "tolist", "__array__"}
 _BF16_MARKERS = ("bfloat16", "float16")
 _F32_MARKERS = ("float32", "float64", "complex64", "complex128")
+_DEVICE_QUERY_NAMES = {
+    "jax.devices",
+    "jax.device_count",
+    "jax.local_device_count",
+}
+
+
+def _import_time_calls(node: ast.AST):
+    """Yield Call nodes under ``node`` that execute at import time.
+
+    Function and lambda *bodies* run at call time and are skipped, but
+    their decorators and parameter defaults evaluate at definition time
+    and are scanned.  Class bodies execute at import and are descended
+    into.
+    """
+    stack: List[ast.AST] = [node]
+    while stack:
+        n = stack.pop()
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            stack.extend(n.decorator_list)
+            stack.extend(n.args.defaults)
+            stack.extend(d for d in n.args.kw_defaults if d is not None)
+            continue
+        if isinstance(n, ast.Lambda):
+            stack.extend(n.args.defaults)
+            stack.extend(d for d in n.args.kw_defaults if d is not None)
+            continue
+        if isinstance(n, ast.Call):
+            yield n
+        stack.extend(ast.iter_child_nodes(n))
 
 
 class _Func:
@@ -236,6 +276,28 @@ def check_trace_safety(src: SourceFile) -> List[Finding]:
                             ),
                         )
                     )
+
+    # TS106 is a flat scan over import-time code: a device query in a
+    # module/class body (or decorator/default) initializes the backend
+    # before a launcher can set XLA_FLAGS or distributed fan-out.
+    for stmt in src.tree.body:
+        for call in _import_time_calls(stmt):
+            if call_name(call) in _DEVICE_QUERY_NAMES:
+                findings.append(
+                    Finding(
+                        rule="TS106",
+                        path=src.display_path,
+                        line=call.lineno,
+                        col=call.col_offset,
+                        message=(
+                            f"{call_name(call)}() at import time pins "
+                            "the backend/device set before XLA_FLAGS "
+                            "(e.g. host-device fan-out) can take "
+                            "effect -- query devices inside the "
+                            "function that needs them"
+                        ),
+                    )
+                )
 
     # Seed taint at roots, then propagate through intra-module calls.
     roots = [f for f in module.funcs.values() if f.is_root]

@@ -245,6 +245,12 @@ class GratingPool:
       members: strong references to the member gratings — the arena is a
         pure repack of their planes, and pinning them keeps the
         identity-keyed pool cache sound.
+      shards: number of equal-row arena shards the packing respects
+        (mesh serving).  ``shards > 1`` bins members into ``shards``
+        equal tiles of ``shard_rows`` rows each (greedy least-loaded,
+        deterministic), every member slot entirely inside one tile —
+        a tenant's O-slice lives on exactly one device of the model
+        axis, so the sharded MAC and fused readout stay psum-free.
     """
 
     re: Array
@@ -253,6 +259,12 @@ class GratingPool:
     n_out: int
     align: int
     members: tuple[FusedGrating, ...]
+    shards: int = 1
+
+    @property
+    def shard_rows(self) -> int:
+        """Arena rows per shard tile (= total rows when unsharded)."""
+        return int(self.re.shape[0]) // int(self.shards)
 
     @property
     def nbytes(self) -> int:
@@ -299,8 +311,36 @@ def _dedup_members(
     return members, slot_of
 
 
-def _build_pool(members: list[FusedGrating], align: int) -> GratingPool:
-    """Pack member gratings' planes into one arena (see GratingPool)."""
+def _bin_members(slots: list[int], shards: int) -> tuple[list[int], int]:
+    """Greedy least-loaded binning of member slot widths into ``shards``
+    equal arena tiles.
+
+    Returns (bin_of, shard_rows): each member's tile index (first-seen
+    order, ties broken by lowest tile index — deterministic, so the
+    identity-keyed pool cache stays sound) and the per-tile row count
+    (the max tile load, rounded up so every tile is the same height).
+    """
+    load = [0] * shards
+    bin_of = []
+    for s in slots:
+        b = min(range(shards), key=lambda i: (load[i], i))
+        bin_of.append(b)
+        load[b] += s
+    return bin_of, max(load) if load else 0
+
+
+def _build_pool(
+    members: list[FusedGrating], align: int, shards: int = 1
+) -> GratingPool:
+    """Pack member gratings' planes into one arena (see GratingPool).
+
+    ``shards > 1`` makes the packing mesh-aware: members are binned
+    into ``shards`` equal tiles of ``shard_rows`` rows (every tile
+    zero-padded to the same height, ``shard_rows`` a multiple of
+    ``align``), and no member slot straddles a tile boundary — slicing
+    the arena into ``shards`` row-contiguous pieces puts each tenant's
+    O-slice wholly on one model-axis device.
+    """
     c = members[0].channels
     for g in members[1:]:
         if g.channels != c:
@@ -308,25 +348,54 @@ def _build_pool(members: list[FusedGrating], align: int) -> GratingPool:
                 "pool members disagree on input channels: "
                 f"{[m.channels for m in members]}"
             )
-    res, ims, o_start = [], [], []
-    row = 0
-    n_out = 0
-    for g in members:
-        re, im = g.planes
-        slot = -(-int(re.shape[0]) // align) * align
-        if slot > re.shape[0]:
-            widths = [(0, slot - re.shape[0])] + [(0, 0)] * (re.ndim - 1)
+    planes = [g.planes for g in members]
+    slots = [
+        -(-int(re.shape[0]) // align) * align for re, _ in planes
+    ]
+    n_out = max(slots)
+
+    def padded(i: int) -> tuple[Array, Array]:
+        re, im = planes[i]
+        if slots[i] > re.shape[0]:
+            widths = [(0, slots[i] - re.shape[0])] + [(0, 0)] * (re.ndim - 1)
             re, im = jnp.pad(re, widths), jnp.pad(im, widths)
-        res.append(re)
-        ims.append(im)
-        o_start.append(row)
-        row += slot
-        n_out = max(n_out, slot)
-    tail = max(o + n_out for o in o_start) - row
-    if tail > 0:  # keep the last members' n_out-row reads in bounds
-        zeros = jnp.zeros((tail,) + res[0].shape[1:], res[0].dtype)
-        res.append(zeros)
-        ims.append(zeros)
+        return re, im
+
+    res, ims = [], []
+    feat = planes[0][0].shape[1:]
+    dtype = planes[0][0].dtype
+    if shards <= 1:
+        o_start = []
+        row = 0
+        for i in range(len(members)):
+            re, im = padded(i)
+            res.append(re)
+            ims.append(im)
+            o_start.append(row)
+            row += slots[i]
+        tail = max(o + n_out for o in o_start) - row
+        if tail > 0:  # keep the last members' n_out-row reads in bounds
+            zeros = jnp.zeros((tail,) + feat, dtype)
+            res.append(zeros)
+            ims.append(zeros)
+    else:
+        bin_of, shard_rows = _bin_members(slots, shards)
+        o_start = [0] * len(members)
+        for b in range(shards):
+            row = b * shard_rows
+            for i, tile in enumerate(bin_of):
+                if tile != b:
+                    continue
+                re, im = padded(i)
+                res.append(re)
+                ims.append(im)
+                o_start[i] = row
+                row += slots[i]
+            tail = (b + 1) * shard_rows - row
+            if tail > 0:  # equal-height tiles: zero-fill this shard
+                zeros = jnp.zeros((tail,) + feat, dtype)
+                res.append(zeros)
+                ims.append(zeros)
     re = res[0] if len(res) == 1 else jnp.concatenate(res, axis=0)
     im = ims[0] if len(ims) == 1 else jnp.concatenate(ims, axis=0)
     return GratingPool(
@@ -336,6 +405,7 @@ def _build_pool(members: list[FusedGrating], align: int) -> GratingPool:
         n_out=n_out,
         align=align,
         members=tuple(members),
+        shards=max(1, int(shards)),
     )
 
 
@@ -623,6 +693,13 @@ class QueryEngine:
         # an O(arena) jnp.pad per dispatch.  Entries hold the pool
         # (strong ref: id-keyed lookups stay sound) + the padded planes.
         self._padded: OrderedDict[tuple, tuple] = OrderedDict()  # guarded-by: _pools_lock
+        # mesh serving state: per-Mesh jitted sharded drivers and
+        # per-(pool, mesh) arena placements (planes device_put once with
+        # rows NamedSharding'd over the model axis, reused across
+        # dispatches).  A server owns one mesh per replica, so both
+        # caches stay tiny.
+        self._mesh_jits: dict = {}  # guarded-by: _pools_lock
+        self._mesh_arenas: OrderedDict[tuple, tuple] = OrderedDict()  # guarded-by: _pools_lock
         self._pools_lock = threading.Lock()
         # shared-stream fan-out accounting (clip-dedup in the pooled
         # paths): offered = clip rows requested, dispatched = physical
@@ -1157,6 +1234,7 @@ class QueryEngine:
         *,
         clip_keys: "Sequence[tuple | None] | None" = None,
         dedup: bool = True,
+        mesh=None,
     ) -> list[Array]:
         """Answer a mixed-tenant clip batch with one dispatch per pool group.
 
@@ -1191,26 +1269,54 @@ class QueryEngine:
         grating itself (``encode`` / ``slm_bits``), so pipelines that
         share encode semantics and geometry share one pool group.
 
+        ``mesh`` switches the group dispatch to the sharded executor: a
+        ``(data, model)`` :class:`jax.sharding.Mesh` (see
+        :func:`repro.launch.mesh.make_local_mesh`) shards the arena's
+        ΣO rows over the model axis and the physical clip rows over the
+        data axis — each device contracts its own arena tile against
+        its own clip rows, psum-free — and every request's answer is
+        bitwise-equal to the single-device dispatch (see docs/mesh.md).
+
         Returns outputs in request order, each (B_i, O_i, *out_shape) —
         equal to ``query(grating_i, x_i)`` to float tolerance.
         """
         groups = self._group_requests(requests)
         keys = self._clip_ids(requests, clip_keys, dedup)
         results: list[Array | None] = [None] * len(requests)
+        shards = int(mesh.shape["model"]) if mesh is not None else 1
         for idxs in groups.values():
             gratings = [requests[i][0] for i in idxs]
             members, slot_of = _dedup_members(gratings)
-            pool = self._pool_for(members)
+            pool = self._pool_for(members, shards)
             xs = [requests[i][1] for i in idxs]
-            lay = self._dedup_layout(pool, gratings, slot_of, [keys[i] for i in idxs])
+            gkeys = [keys[i] for i in idxs]
+            if mesh is not None:
+                lay = self._mesh_layout(pool, gratings, slot_of, gkeys)
+            else:
+                lay = self._dedup_layout(pool, gratings, slot_of, gkeys)
             ux = [xs[j] for j in lay.uniq]
             x = ux[0] if len(ux) == 1 else jnp.concatenate(ux, axis=0)
             nbs = [int(xj.shape[0]) for xj in ux]
             rows = np.repeat(lay.row_of, nbs).astype(np.int32)
             self._count_pooled(sum(int(xj.shape[0]) for xj in xs), sum(nbs))
-            y = self._pooled_dispatch(
-                x, pool, rows, gratings[0], n_out=lay.n_out
-            )
+            if mesh is not None:
+                proto = gratings[0]
+                pool_re, pool_im = self._mesh_arena(pool, mesh)
+                x_scale = None
+                if proto.encode:
+                    # eager, like _pooled_dispatch: jit-fusing the
+                    # encode chain with the MAC rounds differently
+                    x, x_scale = self._encode(x, int(proto.slm_bits))
+                y = self._mesh_fns(mesh)["oneshot"](
+                    x, pool_re, pool_im, x_scale,
+                    fft_shape=proto.fft_shape,
+                    out_shape=proto.out_shape,
+                    n_out=lay.n_out,
+                )
+            else:
+                y = self._pooled_dispatch(
+                    x, pool, rows, gratings[0], n_out=lay.n_out
+                )
             ub0 = np.concatenate([[0], np.cumsum(nbs)])
             for j, i in enumerate(idxs):
                 b0 = int(ub0[lay.uniq_of[j]])
@@ -1299,6 +1405,46 @@ class QueryEngine:
             n_out=n_out,
         )
 
+    def _mesh_layout(
+        self,
+        pool: GratingPool,
+        gratings: list[FusedGrating],
+        slot_of: list[int],
+        keys: list,
+    ) -> "_DedupLayout":
+        """Row layout of a mesh-sharded dispatch: full-arena fan-out.
+
+        With the arena's ΣO rows sharded over the model axis, the
+        offset-gather behind :meth:`_dedup_layout`'s union spans would
+        be a cross-shard read; instead every physical clip row computes
+        against the *entire* (sharded) arena — each model-axis device
+        contracts only its own ``shard_rows`` tile, psum-free — and a
+        request's answer is the slice of the global output at its
+        member slot's absolute ``o_start``.  Clip-dedup degenerates to
+        unique-clips-only (a shared physical row already reads every
+        tenant's slice), and the "wasted" inter-slot rows are exactly
+        the canonical all-tenants-one-stream batch
+        :meth:`_dedup_layout` documents, spread over M devices.
+        """
+        uniq: list[int] = []
+        uniq_of: list[int] = []
+        by_key: dict[tuple, int] = {}
+        for j, k in enumerate(keys):
+            u = by_key.get(k) if k is not None else None
+            if u is None:
+                u = len(uniq)
+                uniq.append(j)
+                if k is not None:
+                    by_key[k] = u
+            uniq_of.append(u)
+        return _DedupLayout(
+            uniq=uniq,
+            uniq_of=uniq_of,
+            row_of=[0] * len(uniq),
+            o_off=[pool.o_start[slot_of[j]] for j in range(len(uniq_of))],
+            n_out=int(pool.re.shape[0]),
+        )
+
     def query_stream_many(
         self,
         requests: "Sequence[tuple[FusedGrating, Array]]",
@@ -1308,6 +1454,7 @@ class QueryEngine:
         clip_keys: "Sequence[tuple | None] | None" = None,
         dedup: bool = True,
         readout_k: int | None = None,
+        mesh=None,
     ) -> "list[Array] | list[TopKDetections]":
         """Pooled :meth:`query_stream`: one overlap-save pass per group.
 
@@ -1334,10 +1481,19 @@ class QueryEngine:
         large tenant pools — never materializes; only (rows, K) states
         cross window chunks and cursor segments.  Bitwise equal to
         reducing the stitched volumes, dedup union-slice rows included.
+
+        ``mesh`` switches every group dispatch to the sharded executor
+        (see :meth:`query_many`): arena ΣO rows over the model axis,
+        physical stream rows over the data axis, the forward ``rfftn``
+        of each stream row running once on its data shard, and the MAC
+        + fused readout shard-local (psum-free).  Outputs — volumes and
+        top-K states, chunked-cursor and bf16 storage included — are
+        bitwise-equal to the single-device path.
         """
         groups = self._group_requests(requests, stream=True)
         keys = self._clip_ids(requests, clip_keys, dedup)
         results: list[Array | None] = [None] * len(requests)
+        shards = int(mesh.shape["model"]) if mesh is not None else 1
         for idxs in groups.values():
             gratings = [requests[i][0] for i in idxs]
             g0 = gratings[0]
@@ -1347,7 +1503,7 @@ class QueryEngine:
                     "re-record before streaming queries"
                 )
             members, slot_of = _dedup_members(gratings)
-            pool = self._pool_for(members)
+            pool = self._pool_for(members, shards)
             xs = [requests[i][1] for i in idxs]
             kh, kw, kt = g0.ker_shape
             oh, ow, _ = g0.out_shape
@@ -1357,9 +1513,14 @@ class QueryEngine:
                     f"clip spatial dims {tuple(xs[0].shape[-3:-1])} do not "
                     f"match the recorded frame size {frame_hw}"
                 )
-            lay = self._dedup_layout(
-                pool, gratings, slot_of, [keys[i] for i in idxs]
-            )
+            if mesh is not None:
+                lay = self._mesh_layout(
+                    pool, gratings, slot_of, [keys[i] for i in idxs]
+                )
+            else:
+                lay = self._dedup_layout(
+                    pool, gratings, slot_of, [keys[i] for i in idxs]
+                )
             ux = [xs[j] for j in lay.uniq]
             nbs = [int(xj.shape[0]) for xj in ux]
             ub0 = [0]
@@ -1380,11 +1541,24 @@ class QueryEngine:
                 for j in range(len(idxs))
             )
             self._count_pooled(sum(int(xj.shape[0]) for xj in xs), sum(nbs))
-            # union spans can read past the arena tail: fetch the
-            # (memoized) padded view so the jitted body never gathers
-            # out of bounds
-            max_row = max(lay.row_of) if lay.row_of else 0
-            pool_re, pool_im = self._padded_arena(pool, max_row, lay.n_out)
+            if mesh is not None:
+                # GSPMD mis-lowers a concatenate traced inside jit when
+                # its result feeds a shard_map input on a 2-axis mesh —
+                # each model shard receives the model-axis SUM of its
+                # rows — so the physical batch is packed eagerly here
+                # and the sharded drivers take exactly one array
+                if len(ux) > 1:
+                    ux = [jnp.concatenate(ux, axis=0)]
+                # full-arena fan-out: the shard-tiled arena is read
+                # whole (lay.n_out == its row count), so no padded view
+                # is needed; planes live on the mesh, rows on 'model'
+                pool_re, pool_im = self._mesh_arena(pool, mesh)
+            else:
+                # union spans can read past the arena tail: fetch the
+                # (memoized) padded view so the jitted body never
+                # gathers out of bounds
+                max_row = max(lay.row_of) if lay.row_of else 0
+                pool_re, pool_im = self._padded_arena(pool, max_row, lay.n_out)
             plan = self.stream_plan_for(g0, xs[0].shape[-1], chunk_windows)
             mbw = self._max_buffer_windows(max_buffer_windows)
             static = dict(
@@ -1397,9 +1571,15 @@ class QueryEngine:
                 n_out=lay.n_out,
             )
             fused = readout_k is not None
-            many_fn = (
-                self._stream_many_topk_fn if fused else self._stream_many_fn
-            )
+            if mesh is not None:
+                fns = self._mesh_fns(mesh)
+                many_fn = fns["stream_topk"] if fused else fns["stream"]
+            else:
+                many_fn = (
+                    self._stream_many_topk_fn
+                    if fused
+                    else self._stream_many_fn
+                )
             if fused:
                 static["k"] = int(readout_k)
             oh, ow, _ = g0.out_shape
@@ -1513,24 +1693,29 @@ class QueryEngine:
             getattr(cfg, "stmul_block_o", None) or stmul_kernel.BLOCK_O
         )
 
-    def _pool_for(self, members: list[FusedGrating]) -> "GratingPool":
+    def _pool_for(
+        self, members: list[FusedGrating], shards: int = 1
+    ) -> "GratingPool":
         """Fetch or build the packed arena for this member list.
 
-        Pools are memoized per (member identity, alignment): gratings are
-        immutable once recorded, so object identity is content identity,
-        and the entry holds strong references to its members — the arena
-        is a *stable* device buffer reused across dispatches instead of
-        being re-packed per batch.  A small LRU bound keeps retired
-        membership sets (tenant churn) from pinning dead gratings.
+        Pools are memoized per (member identity, alignment, shard
+        count): gratings are immutable once recorded, so object identity
+        is content identity, and the entry holds strong references to
+        its members — the arena is a *stable* device buffer reused
+        across dispatches instead of being re-packed per batch.  A small
+        LRU bound keeps retired membership sets (tenant churn) from
+        pinning dead gratings.  ``shards`` selects the mesh-aware
+        shard-tiled packing (see :func:`_build_pool`); the same member
+        set sharded differently is a different arena.
         """
         align = self._pool_align()
-        key = (tuple(id(g) for g in members), align)
+        key = (tuple(id(g) for g in members), align, int(shards))
         with self._pools_lock:
             pool = self._pools.get(key)
             if pool is not None:
                 self._pools.move_to_end(key)
                 return pool
-        pool = _build_pool(members, align)
+        pool = _build_pool(members, align, shards)
         with self._pools_lock:
             self._pools[key] = pool
             while len(self._pools) > self._max_pools:
@@ -1559,6 +1744,249 @@ class QueryEngine:
             while len(self._padded) > self._max_pools:
                 self._padded.popitem(last=False)
         return re, im
+
+    # -- mesh-sharded execution (query_many/query_stream_many mesh=) -------
+
+    def _mesh_arena(self, pool: "GratingPool", mesh) -> tuple[Array, Array]:
+        """The pool planes placed on the mesh — arena rows sharded over
+        the model axis via the serving rules' ``grating`` logical axis —
+        memoized per (pool, mesh) so the arena ships to the devices once
+        per membership, not once per dispatch.  Entries pin the pool
+        (strong ref: id-keyed lookups stay sound)."""
+        key = (id(pool), mesh)
+        with self._pools_lock:
+            hit = self._mesh_arenas.get(key)
+            if hit is not None:
+                self._mesh_arenas.move_to_end(key)
+                return hit[1], hit[2]
+        from repro.distributed import sharding as shardlib  # lazy
+
+        rules = shardlib.make_serving_rules()
+        spec = shardlib.spec_for(
+            pool.re.shape,
+            ("grating",) + (None,) * (pool.re.ndim - 1),
+            rules,
+            mesh,
+        )
+        sharding = jax.sharding.NamedSharding(mesh, spec)
+        re = jax.device_put(pool.re, sharding)
+        im = jax.device_put(pool.im, sharding)
+        with self._pools_lock:
+            self._mesh_arenas[key] = (pool, re, im)
+            while len(self._mesh_arenas) > self._max_pools:
+                self._mesh_arenas.popitem(last=False)
+        return re, im
+
+    def _mesh_fns(self, mesh) -> dict:
+        """Per-mesh jitted sharded drivers, memoized (the Mesh is
+        hashable and long-lived — a server builds one per replica)."""
+        with self._pools_lock:
+            fns = self._mesh_jits.get(mesh)
+        if fns is not None:
+            return fns
+        fns = self._make_mesh_fns(mesh)
+        with self._pools_lock:
+            fns = self._mesh_jits.setdefault(mesh, fns)
+        return fns
+
+    def _make_mesh_fns(self, mesh) -> dict:
+        """Build the sharded pooled drivers for one ``(data, model)``
+        mesh: the single-device pooled overlap-save bodies wrapped in
+        ``shard_map``, stream rows on the data axis, arena rows on the
+        model axis.
+
+        Bitwise equality with the single-device path holds by
+        construction: the shard body reuses ``_pooled_osave_setup`` /
+        ``_chunk_topk`` / ``_fold_chunk_states`` verbatim with
+        ``rows=(0,)*B_local`` over its local arena tile, so every
+        (clip row, kernel row) element runs the exact op sequence —
+        encode, one ``rfftn`` per stream row, the batched-sel MAC (or
+        grouped Pallas launch), ``irfftn``, stitch or fused top-K — the
+        unsharded driver runs; sharding only partitions the loop, it
+        reorders no reduction.  ``check_rep=False`` because
+        ``pallas_call`` has no shard_map replication rule; the bodies
+        are collective-free (each tenant's O-slice lives on exactly one
+        model shard, so no psum is ever needed)."""
+        from jax.experimental.shard_map import shard_map  # lazy
+        from jax.sharding import PartitionSpec as P  # lazy
+        from repro.distributed import sharding as shardlib  # lazy
+
+        if "data" not in mesh.shape or "model" not in mesh.shape:
+            raise ValueError(
+                "mesh must carry ('data', 'model') axes (see "
+                f"launch.mesh.make_local_mesh); got {dict(mesh.shape)}"
+            )
+        rules = shardlib.make_serving_rules()
+        dsize = int(mesh.shape["data"])
+        msize = int(mesh.shape["model"])
+
+        def specs_for(x, pool_re):
+            xspec = shardlib.spec_for(
+                x.shape, ("stream_batch",) + (None,) * (x.ndim - 1),
+                rules, mesh,
+            )
+            gspec = shardlib.spec_for(
+                pool_re.shape, ("grating",) + (None,) * (pool_re.ndim - 1),
+                rules, mesh,
+            )
+            return xspec, gspec
+
+        def pad_b(x, x_scale):
+            """Zero-pad stream rows up to the data-axis size: pad rows
+            cost compute on their shard and are sliced away by the
+            per-request splits (scale pads to 1 — encode of an all-zero
+            row divides by the same 1.0 the derived scale would use)."""
+            b = int(x.shape[0])
+            b_pad = -(-b // dsize) * dsize
+            if b_pad > b:
+                x = jnp.pad(x, [(0, b_pad - b)] + [(0, 0)] * (x.ndim - 1))
+                if x_scale is not None:
+                    x_scale = jnp.pad(
+                        x_scale,
+                        [(0, b_pad - b)] + [(0, 0)] * (x_scale.ndim - 1),
+                        constant_values=1.0,
+                    )
+            return x, x_scale
+
+        def run(body, x, pool_re, pool_im, x_scale, out_specs):
+            xspec, gspec = specs_for(x, pool_re)
+            if x_scale is None:
+                f = shard_map(
+                    lambda xl, prl, pil: body(xl, prl, pil, None),
+                    mesh=mesh,
+                    in_specs=(xspec, gspec, gspec),
+                    out_specs=out_specs,
+                    check_rep=False,
+                )
+                return f(x, pool_re, pool_im)
+            f = shard_map(
+                body,
+                mesh=mesh,
+                in_specs=(xspec, gspec, gspec, xspec),
+                out_specs=out_specs,
+                check_rep=False,
+            )
+            return f(x, pool_re, pool_im, x_scale)
+
+        def stream_many(
+            xs, pool_re, pool_im, x_scale=None, *, rows, splits,
+            ker_shape, fft_shape, plan, encode, slm_bits, n_out,
+        ):
+            # `rows` rides the signature for trace-cache parity with the
+            # single-device driver but is all-zero in mesh mode (full-
+            # arena fan-out); `n_out` is the whole arena's row count.
+            del rows
+            if len(xs) != 1:
+                raise ValueError(
+                    "sharded stream drivers take one pre-packed batch "
+                    "(an in-jit concatenate feeding shard_map "
+                    "mis-reshards on 2-axis meshes; the caller "
+                    "concatenates eagerly)"
+                )
+            x, x_scale = pad_b(xs[0], x_scale)
+            b_local = int(x.shape[0]) // dsize
+            s_local = int(n_out) // msize
+
+            def body(xl, prl, pil, xsl):
+                one_window, _, xs_l = self._pooled_osave_setup(
+                    (xl,), prl, pil, xsl,
+                    rows=(0,) * b_local, ker_shape=ker_shape,
+                    fft_shape=fft_shape, plan=plan, encode=encode,
+                    slm_bits=slm_bits, n_out=s_local,
+                )
+                starts = spectral_conv.window_starts(plan)
+                blocks = lax.map(
+                    lambda cs: jax.vmap(one_window)(cs), starts
+                )
+                y = spectral_conv.stitch_windows(blocks, plan)
+                if xs_l is not None:
+                    y = y * xs_l
+                return y
+
+            y = run(body, x, pool_re, pool_im, x_scale, P("data", "model"))
+            return tuple(
+                y[b0 : b0 + nb, oo : oo + o] for b0, nb, oo, o in splits
+            )
+
+        def stream_many_topk(
+            xs, pool_re, pool_im, x_scale=None, *, rows, splits,
+            ker_shape, fft_shape, plan, encode, slm_bits, n_out, k,
+        ):
+            del rows
+            if len(xs) != 1:
+                raise ValueError(
+                    "sharded stream drivers take one pre-packed batch "
+                    "(an in-jit concatenate feeding shard_map "
+                    "mis-reshards on 2-axis meshes; the caller "
+                    "concatenates eagerly)"
+                )
+            x, x_scale = pad_b(xs[0], x_scale)
+            b_local = int(x.shape[0]) // dsize
+            s_local = int(n_out) // msize
+            readout = self._readout_fn()
+
+            def body(xl, prl, pil, xsl):
+                one_window, win_out, xs_l = self._pooled_osave_setup(
+                    (xl,), prl, pil, xsl,
+                    rows=(0,) * b_local, ker_shape=ker_shape,
+                    fft_shape=fft_shape, plan=plan, encode=encode,
+                    slm_bits=slm_bits, n_out=s_local,
+                )
+
+                def one_chunk(cs):
+                    win = jax.vmap(one_window)(cs)
+                    return self._chunk_topk(
+                        win, cs, plan, win_out, xs_l, readout, k
+                    )
+
+                starts = spectral_conv.window_starts(plan)
+                chunk_s, chunk_i = lax.map(one_chunk, starts)
+                return self._fold_chunk_states(chunk_s, chunk_i, k)
+
+            spec = P("data", "model")
+            s, i = run(body, x, pool_re, pool_im, x_scale, (spec, spec))
+            return tuple(
+                (s[b0 : b0 + nb, oo : oo + o], i[b0 : b0 + nb, oo : oo + o])
+                for b0, nb, oo, o in splits
+            )
+
+        def oneshot(
+            x, pool_re, pool_im, x_scale=None, *, fft_shape,
+            out_shape, n_out,
+        ):
+            # runs UN-jitted: the single-device one-shot dispatch is
+            # eager op-by-op, and wrapping the sharded body in jit lets
+            # XLA contract the bf16-upcast MAC differently (FMA in the
+            # fused complex multiply) — eager shard_map keeps the same
+            # op boundaries and is bitwise-equal; encode likewise
+            # happens eagerly in the caller
+            x, x_scale = pad_b(x, x_scale)
+            del n_out  # per-shard width = the local tile's own row count
+            qfn = self._pooled_query_shard_fn()
+
+            def body(xl, prl, pil, xsl):
+                y = qfn(xl, prl, pil, fft_shape, out_shape)
+                return y if xsl is None else y * xsl
+
+            return run(body, x, pool_re, pool_im, x_scale, P("data", "model"))
+
+        return {
+            "stream": jax.jit(
+                stream_many,
+                static_argnames=(
+                    "rows", "splits", "ker_shape", "fft_shape", "plan",
+                    "encode", "slm_bits", "n_out",
+                ),
+            ),
+            "stream_topk": jax.jit(
+                stream_many_topk,
+                static_argnames=(
+                    "rows", "splits", "ker_shape", "fft_shape", "plan",
+                    "encode", "slm_bits", "n_out", "k",
+                ),
+            ),
+            "oneshot": oneshot,
+        }
 
     def _pooled_dispatch(
         self,
@@ -1715,6 +2143,38 @@ class QueryEngine:
         def query(x, pool_re, pool_im, rows, n_out, fft_shape, out_shape):
             return stmul_ops.query_grating_pooled(
                 x, pool_re, pool_im, rows, n_out, fft_shape, out_shape,
+                min_mxu_c=min_mxu_c, **tiles,
+            )
+
+        return query
+
+    def _pooled_query_shard_fn(self):
+        """Shard-local pooled FFT+MAC+IFFT for the mesh bodies: every
+        clip row reads the local arena tile whole (zero offsets) —
+        ``stmul_ops.pooled_query_shard`` under ``use_pallas``, the dense
+        offset-gather einsum at offset 0 otherwise."""
+        cfg = self.config
+        if not getattr(cfg, "use_pallas", False):
+
+            def dense(x, pool_re, pool_im, fft_shape, out_shape):
+                rows = jnp.zeros((x.shape[0],), jnp.int32)
+                return _pooled_query_dense(
+                    x, pool_re, pool_im, rows, int(pool_re.shape[0]),
+                    fft_shape, out_shape,
+                )
+
+            return dense
+        from repro.kernels.stmul import ops as stmul_ops  # lazy import
+
+        min_mxu_c = getattr(cfg, "stmul_min_mxu_c", None)
+        tiles = dict(
+            block_o=getattr(cfg, "stmul_block_o", None),
+            block_f=getattr(cfg, "stmul_block_f", None),
+        )
+
+        def query(x, pool_re, pool_im, fft_shape, out_shape):
+            return stmul_ops.pooled_query_shard(
+                x, pool_re, pool_im, fft_shape, out_shape,
                 min_mxu_c=min_mxu_c, **tiles,
             )
 

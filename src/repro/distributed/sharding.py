@@ -73,6 +73,27 @@ def make_rules(mode: str = "train", multi_pod: bool = False) -> Rules:
     return rules
 
 
+def make_serving_rules(multi_pod: bool = False) -> Rules:
+    """Sharding rules for the holographic serving path.
+
+    Two logical axes only — the pooled grating arena and the stream batch
+    are both embarrassingly parallel:
+
+      grating      → model   the pooled arena's ΣO dim; each device holds a
+                             slice of tenants' kernels, so the grouped MAC
+                             and fused readout stay shard-local (psum-free)
+      stream_batch → data    independent stream rows; the forward rfftn of
+                             each row runs on exactly one data shard
+    """
+    stream = ("pod", "data") if multi_pod else ("data",)
+    return {
+        "grating": "model",
+        "stream_batch": stream,
+        "channels": None,
+        "freq": None,
+    }
+
+
 def _axis_size(mesh: Mesh, mesh_axes) -> int:
     if mesh_axes is None:
         return 1

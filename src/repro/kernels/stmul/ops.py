@@ -167,6 +167,47 @@ def query_grating_pooled(
     return y[..., : out_shape[0], : out_shape[1], : out_shape[2]]
 
 
+def pooled_query_shard(
+    x: Array,
+    pool_re: Array,
+    pool_im: Array,
+    fft_shape: tuple[int, int, int],
+    out_shape: tuple[int, int, int],
+    *,
+    min_mxu_c: int | None = None,
+    block_o: int | None = None,
+    block_f: int | None = None,
+) -> Array:
+    """Shard-local full-arena fan-out: :func:`query_grating_pooled` with
+    every clip row reading the local arena tile *whole* (zero offsets,
+    ``n_out`` = the tile's row count).
+
+    The grouped-MAC body of the engine's mesh executor: under
+    ``shard_map`` each model-axis device holds one ``shard_rows`` tile
+    of the pooled arena and contracts it against its data-shard's clip
+    rows — no offsets cross a shard, no psum follows (each tenant's
+    O-slice lives on exactly one tile by packing).  Callers must pass
+    ``check_rep=False`` to ``shard_map``: ``pallas_call`` has no
+    replication rule, and this body is collective-free anyway.  Bitwise
+    equal to the offset-gather dispatch at the corresponding rows — the
+    per-(row, kernel, frequency) C-contraction is the same op sequence
+    regardless of the tile's row offset.
+    """
+    rows = jnp.zeros((x.shape[0],), jnp.int32)
+    return query_grating_pooled(
+        x,
+        pool_re,
+        pool_im,
+        rows,
+        int(pool_re.shape[0]),
+        fft_shape,
+        out_shape,
+        min_mxu_c=min_mxu_c,
+        block_o=block_o,
+        block_f=block_f,
+    )
+
+
 def topk_readout(
     vals: Array,
     gidx: Array,

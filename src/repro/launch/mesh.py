@@ -38,6 +38,15 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
 
 def make_local_mesh(data: int = 1, model: int = 1) -> Mesh:
     """Tiny mesh for CPU tests (1..8 host devices)."""
+    if data < 1 or model < 1:
+        raise ValueError(f"mesh axes must be >= 1, got (data={data}, model={model})")
     n = data * model
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh (data={data}, model={model}) needs {n} devices, found "
+            f"{len(devices)} — set XLA_FLAGS="
+            f'"--xla_force_host_platform_device_count={n}" before importing jax'
+        )
     return jax.make_mesh((data, model), ("data", "model"),
-                         devices=jax.devices()[:n])
+                         devices=devices[:n])

@@ -297,6 +297,17 @@ class WorkerReplica:
         with self._lock:
             return self._killed
 
+    @property
+    def mesh(self):
+        """This replica's intra-replica device mesh (None = single-
+        device).  Per-replica ownership by construction: the mesh is
+        built inside ``build_server()`` (one
+        :class:`jax.sharding.Mesh` per server, from
+        ``VideoSearchConfig.mesh_shape``), so a replacement replica
+        spun up by ``ReplicaSet.replace_replica`` gets its own fresh
+        mesh rather than sharing a dead replica's."""
+        return getattr(self.server, "mesh", None)
+
     # -- lifecycle ---------------------------------------------------------
 
     def kill(self) -> None:
@@ -321,6 +332,8 @@ class WorkerReplica:
             out["outstanding"] = self.outstanding
             out["killed"] = self._killed
         out["stalled"] = self._stalled.is_set()
+        mesh = self.mesh
+        out["mesh"] = dict(mesh.shape) if mesh is not None else None
         return out
 
 

@@ -183,6 +183,7 @@ from repro.core.engine import (
 )
 from repro.core.fidelity import FidelityPipeline
 from repro.core.sthc import STHC, STHCConfig
+from repro.launch.mesh import make_local_mesh
 from repro.launch.resilience import (
     BatchExecutionError,
     DeadlineExceeded,
@@ -286,6 +287,16 @@ class VideoSearchConfig:
         (bit rot, NaN corruption, eviction race) discards the entry and
         transparently re-records.  Off by default: it costs one device
         reduction + host sync per fetch (the chaos suite turns it on).
+      mesh_shape: ``(data, model)`` device-mesh shape for intra-replica
+        sharded serving, or None (single-device, the default).  When
+        set, the server owns one :class:`jax.sharding.Mesh` (built via
+        :func:`repro.launch.mesh.make_local_mesh` at construction — the
+        process must expose ``data*model`` devices, e.g. via
+        ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` set
+        *before* any jax import) and every pooled dispatch shards the
+        grating arena over the model axis and the stream rows over the
+        data axis (``QueryEngine.query_stream_many(mesh=...)``); scores
+        stay bitwise-equal to single-device serving.  See docs/mesh.md.
     """
 
     window_frames: int = 64
@@ -307,6 +318,29 @@ class VideoSearchConfig:
     atoms: atomic.AtomicConfig | None = None
     guard_scores: bool = True
     verify_gratings: bool = False
+    mesh_shape: tuple[int, int] | None = None
+
+    def __post_init__(self) -> None:
+        """Structural validation of the mesh request, at config time
+        (device-count fit is enforced by ``make_local_mesh`` at server
+        construction, where jax devices may legitimately be consulted)."""
+        ms = self.mesh_shape
+        if ms is None:
+            return
+        if (
+            not isinstance(ms, (tuple, list))
+            or len(ms) != 2
+            or not all(isinstance(a, int) and not isinstance(a, bool) for a in ms)
+        ):
+            raise ValueError(
+                "mesh_shape must be a (data, model) pair of ints, got "
+                f"{ms!r}"
+            )
+        if any(a < 1 for a in ms):
+            raise ValueError(
+                f"mesh_shape axes must be >= 1, got {tuple(ms)}"
+            )
+        self.mesh_shape = tuple(ms)
 
 
 @dataclasses.dataclass
@@ -363,6 +397,14 @@ class VideoSearchServer:
         # would leak cfg mutations across every server construction.
         self.cfg = cfg = cfg if cfg is not None else VideoSearchConfig()
         self.frame_hw = tuple(frame_hw)
+        # intra-replica device mesh: built once here (per-replica mesh
+        # ownership — each replica's build_server() call constructs its
+        # own server and with it its own Mesh) and threaded into every
+        # pooled dispatch.  make_local_mesh raises a descriptive error
+        # when the process exposes fewer than data*model devices.
+        self.mesh = None
+        if getattr(cfg, "mesh_shape", None) is not None:
+            self.mesh = make_local_mesh(*cfg.mesh_shape)
         self.cache = GratingCache(
             max_entries=cfg.cache_entries,
             max_bytes=cfg.cache_bytes,
@@ -821,6 +863,7 @@ class VideoSearchServer:
                     clip_keys=group_keys,
                     dedup=dedup,
                     readout_k=topk,
+                    mesh=self.mesh,
                 )
                 jax.block_until_ready(
                     tuple((d.scores, d.index) for d in dets)
@@ -831,6 +874,7 @@ class VideoSearchServer:
                     list(zip(gratings, stacks)),
                     clip_keys=group_keys,
                     dedup=dedup,
+                    mesh=self.mesh,
                 )
                 # stitched detection readout rides the batch too: one
                 # jitted call for every group's peak + argmax instead of
@@ -1029,6 +1073,15 @@ class VideoSearchServer:
             "tenants": per_tenant,
             "pooled_dispatches": pooled,
             "sequential_dispatches": sequential,
+            # intra-replica device mesh (None = single-device serving)
+            "mesh": (
+                {
+                    "shape": dict(self.mesh.shape),
+                    "devices": self.mesh.size,
+                }
+                if self.mesh is not None
+                else None
+            ),
             # requests the signal-integrity guard isolated (NaN/Inf rows)
             "quarantined": quarantined,
             # shared-stream fan-out: clip rows the pooled executor

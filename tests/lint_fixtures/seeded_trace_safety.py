@@ -1,4 +1,4 @@
-"""Seeded trace-safety violations (TS101–TS105).  Never executed."""
+"""Seeded trace-safety violations (TS101–TS106).  Never executed."""
 
 import functools
 
@@ -6,6 +6,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
+
+# TS106: device query at import time pins the backend before XLA_FLAGS
+# (e.g. forced host-device fan-out) can take effect.
+_SEEDED_N_DEVICES = jax.device_count()
 
 
 @jax.jit

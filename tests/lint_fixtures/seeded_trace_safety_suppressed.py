@@ -1,4 +1,4 @@
-# lint: disable-file=TS101,TS102,TS103,TS104,TS105
+# lint: disable-file=TS101,TS102,TS103,TS104,TS105,TS106
 """Suppressed twin of seeded_trace_safety.py: identical violations, all
 silenced by the file-level disable above.  Never executed."""
 
@@ -6,6 +6,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
+
+_SEEDED_N_DEVICES = jax.device_count()
 
 
 @jax.jit
